@@ -1,0 +1,99 @@
+//! Figure 1: training runtime by tree depth — exact vs histogram vs dynamic.
+//!
+//! Paper setup: 1M samples × 4096 features. Scaled for this testbed via
+//! SOFOREST_BENCH_N / SOFOREST_BENCH_D (defaults 40000 × 256; the shape —
+//! histograms cheap at shallow depths, exact cheap at deep depths, dynamic
+//! tracking the lower envelope — is what must reproduce).
+
+use soforest::bench::Table;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::tree::ProjectionSource;
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("SOFOREST_BENCH_N", 40_000);
+    let d = env_usize("SOFOREST_BENCH_D", 256);
+    let trees = env_usize("SOFOREST_BENCH_TREES", 2);
+    println!("# Fig 1: runtime by depth, trunk {n}x{d}, {trees} trees/strategy\n");
+
+    let data = TrunkConfig {
+        n_samples: n,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(1));
+
+    let strategies = [
+        ("exact", SplitStrategy::Exact),
+        ("histogram", SplitStrategy::Histogram),
+        ("dynamic", SplitStrategy::DynamicVectorized),
+    ];
+    let mut profiles = Vec::new();
+    for (name, strategy) in strategies {
+        let cfg = ForestConfig {
+            n_trees: trees,
+            n_threads: 1,
+            strategy,
+            instrument: true,
+            ..Default::default()
+        };
+        let out = train_forest_with_source(&data, &cfg, 7, ProjectionSource::SparseOblique);
+        println!("{name}: total {:.2}s, {} nodes", out.wall_s, out.stats.n_nodes);
+        profiles.push((name, out.stats));
+    }
+
+    let max_depth = profiles.iter().map(|(_, s)| s.by_depth.len()).max().unwrap();
+    let mut table = Table::new(&["depth", "exact_ms", "histogram_ms", "dynamic_ms", "nodes_dyn"]);
+    for depth in 0..max_depth {
+        let ms = |i: usize| -> String {
+            profiles[i]
+                .1
+                .by_depth
+                .get(depth)
+                .map_or("-".into(), |d| format!("{:.3}", d.total_ns as f64 / 1e6))
+        };
+        let nodes = profiles[2]
+            .1
+            .by_depth
+            .get(depth)
+            .map_or(0, |d| d.nodes_by_method.iter().sum::<u64>());
+        table.row(&[
+            depth.to_string(),
+            ms(0),
+            ms(1),
+            ms(2),
+            nodes.to_string(),
+        ]);
+    }
+    println!();
+    table.print();
+
+    // Shape check (paper Fig 1): histograms beat exact near the root,
+    // exact beats histograms deep down, dynamic ~tracks the minimum.
+    let sum_range = |i: usize, r: std::ops::Range<usize>| -> f64 {
+        r.filter_map(|d| profiles[i].1.by_depth.get(d))
+            .map(|d| d.total_ns as f64)
+            .sum()
+    };
+    let deep_start = 12.min(max_depth.saturating_sub(2));
+    let (ex_top, hist_top) = (sum_range(0, 0..4), sum_range(1, 0..4));
+    let (ex_deep, hist_deep) = (
+        sum_range(0, deep_start..max_depth),
+        sum_range(1, deep_start..max_depth),
+    );
+    let dyn_total = sum_range(2, 0..max_depth);
+    let best_total = sum_range(0, 0..max_depth).min(sum_range(1, 0..max_depth));
+    println!("\n# shape: top-4-depth   exact {:.1}ms vs hist {:.1}ms (hist should win)", ex_top / 1e6, hist_top / 1e6);
+    println!("# shape: deep (>={deep_start})  exact {:.1}ms vs hist {:.1}ms (exact should win)", ex_deep / 1e6, hist_deep / 1e6);
+    println!("# shape: dynamic {:.1}ms vs best-pure {:.1}ms (dynamic <= ~best)", dyn_total / 1e6, best_total / 1e6);
+}

@@ -1,0 +1,107 @@
+//! Figure 3: split-cost microbenchmarks vs node cardinality — the curves
+//! behind the §4.1 calibration. Top panel: exact (sort) vs histogram
+//! (binary-search routing) vs vectorized histogram on the CPU. Bottom
+//! panel: CPU vectorized vs accelerator (PJRT executable), when artifacts
+//! are present.
+//!
+//! Paper shapes: sort wins below a few hundred samples; histograms win
+//! above (~350–1300 crossover); the accelerator wins only at tens of
+//! thousands (~29 000 on the paper's GPU — higher here because the PJRT
+//! path re-transfers node data per call where the paper preloads the
+//! dataset on device).
+
+use soforest::accel::NodeSplitAccel;
+use soforest::bench::{measure, BenchOpts, Table};
+use soforest::calibrate::split_cost_ns;
+use soforest::rng::Pcg64;
+use soforest::split::histogram::build_boundaries;
+use soforest::split::{SplitMethod, SplitScratch};
+use std::path::Path;
+
+fn main() {
+    let opts = BenchOpts::default();
+    println!("# Fig 3 (top): per-split cost (us) vs node cardinality\n");
+    let mut table = Table::new(&["n", "sort_us", "hist_us", "vhist_us", "winner"]);
+    let mut crossover_seen = None;
+    for exp in 4..=17 {
+        let n = 1usize << exp;
+        let sort = split_cost_ns(n, SplitMethod::Exact, 256, &opts);
+        let hist = split_cost_ns(n, SplitMethod::Histogram, 256, &opts);
+        let vhist = split_cost_ns(n, SplitMethod::VectorizedHistogram, 256, &opts);
+        let winner = if sort <= hist.min(vhist) { "sort" } else if vhist <= hist { "vhist" } else { "hist" };
+        if winner != "sort" && crossover_seen.is_none() {
+            crossover_seen = Some(n);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", sort / 1e3),
+            format!("{:.2}", hist / 1e3),
+            format!("{:.2}", vhist / 1e3),
+            winner.into(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n# sort->histogram crossover ~ {} (paper: 350-1300 depending on machine)",
+        crossover_seen.map_or("none".into(), |n| n.to_string())
+    );
+
+    // Bottom panel: accelerator.
+    let artifacts = std::env::var("SOFOREST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match NodeSplitAccel::try_load(Path::new(&artifacts)) {
+        Err(e) => println!("\n# Fig 3 (bottom) skipped: {e}"),
+        Ok(mut accel) => {
+            println!("\n# Fig 3 (bottom): node evaluation (p=16 projections), CPU vs accelerator (ms)\n");
+            let p = 16;
+            let mut table = Table::new(&["n", "cpu_ms", "accel_ms", "winner"]);
+            for exp in 10..=16 {
+                let n = 1usize << exp;
+                let mut rng = Pcg64::new(n as u64);
+                let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+                let values_one: Vec<f32> = labels
+                    .iter()
+                    .map(|&l| rng.normal() as f32 + if l == 1 { 0.8 } else { 0.0 })
+                    .collect();
+                let parent = [n - n / 2, n / 2];
+                let mut scratch = SplitScratch::default();
+                let cpu_ns = measure(&opts, || {
+                    for _ in 0..p {
+                        std::hint::black_box(soforest::split::best_split(
+                            SplitMethod::VectorizedHistogram,
+                            &values_one,
+                            &labels,
+                            &parent,
+                            soforest::split::SplitCriterion::Entropy,
+                            256,
+                            1,
+                            &mut rng,
+                            &mut scratch,
+                        ));
+                    }
+                })
+                .median_ns;
+                let mut values = Vec::with_capacity(p * n);
+                let mut bounds = Vec::with_capacity(p * 256);
+                for _ in 0..p {
+                    values.extend_from_slice(&values_one);
+                    assert!(build_boundaries(&values_one, 256, &mut rng, &mut scratch));
+                    bounds.extend_from_slice(&scratch.boundaries);
+                }
+                let accel_ns = measure(&opts, || {
+                    std::hint::black_box(
+                        accel.execute_node(&values, p, n, &labels, &bounds, 256).unwrap(),
+                    )
+                })
+                .median_ns;
+                table.row(&[
+                    n.to_string(),
+                    format!("{:.3}", cpu_ns / 1e6),
+                    format!("{:.3}", accel_ns / 1e6),
+                    if accel_ns < cpu_ns { "accel" } else { "cpu" }.into(),
+                ]);
+            }
+            table.print();
+            println!("\n# accelerator has a fixed invocation cost amortized only at large n (paper: >29000)");
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Figure 4: which split method the dynamic policy actually selects, as a
+//! function of node cardinality, traced over a real training run.
+//!
+//! Paper shape: all nodes below the calibrated break-even sort; all above
+//! histogram; both methods co-exist at the same tree depth.
+
+use soforest::bench::Table;
+use soforest::calibrate;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::tree::ProjectionSource;
+use soforest::metrics::METHOD_NAMES;
+use soforest::rng::Pcg64;
+use soforest::split::histogram::Routing;
+use soforest::split::SplitStrategy;
+
+fn main() {
+    let n = std::env::var("SOFOREST_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30_000);
+    let sort_below = calibrate::calibrate_sort_threshold(256, Routing::TwoLevel);
+    let sort_below = if sort_below == usize::MAX { 1024 } else { sort_below };
+    println!("# Fig 4: method selection by node cardinality (calibrated break-even {sort_below})\n");
+
+    let data = TrunkConfig {
+        n_samples: n,
+        n_features: 128,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(3));
+    let mut cfg = ForestConfig {
+        n_trees: 3,
+        n_threads: 1,
+        strategy: SplitStrategy::DynamicVectorized,
+        instrument: true,
+        ..Default::default()
+    };
+    cfg.thresholds.sort_below = sort_below;
+    let out = train_forest_with_source(&data, &cfg, 5, ProjectionSource::SparseOblique);
+
+    let mut table = Table::new(&["n_bucket", "exact", "histogram", "vectorized", "accelerator"]);
+    for (bucket, counts) in out.stats.method_by_cardinality.iter().enumerate() {
+        if counts.iter().all(|&c| c == 0) {
+            continue;
+        }
+        let lo = 1usize << bucket.saturating_sub(1);
+        let hi = (1usize << bucket) - 1;
+        table.row(&[
+            format!("{lo}-{hi}"),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+            counts[3].to_string(),
+        ]);
+    }
+    table.print();
+
+    // Shape check: no vectorized-histogram node below break-even/2, no
+    // exact node above 2x break-even.
+    let mut violations = 0u64;
+    for (bucket, counts) in out.stats.method_by_cardinality.iter().enumerate() {
+        let hi = (1usize << bucket).saturating_sub(1);
+        let lo = 1usize << bucket.saturating_sub(1);
+        if hi < sort_below / 2 {
+            violations += counts[2];
+        }
+        if lo > sort_below * 2 {
+            violations += counts[0];
+        }
+    }
+    println!("\n# selection violations outside break-even band: {violations} (expect 0)");
+    let _ = METHOD_NAMES;
+}

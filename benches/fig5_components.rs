@@ -1,0 +1,72 @@
+//! Figure 5: runtime breakdown of histogram splitting by component
+//! (projection apply vs histogram build vs split evaluation) across tree
+//! depth.
+//!
+//! Paper shape: histogram construction dominates at every depth; sparse
+//! projection access grows (relatively) deeper in the tree.
+
+use soforest::bench::Table;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::tree::ProjectionSource;
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+
+fn main() {
+    let n = std::env::var("SOFOREST_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40_000);
+    let d = 256;
+    println!("# Fig 5: component breakdown (histogram splitting), trunk {n}x{d}\n");
+
+    let data = TrunkConfig {
+        n_samples: n,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(4));
+    let cfg = ForestConfig {
+        n_trees: 2,
+        n_threads: 1,
+        strategy: SplitStrategy::Histogram,
+        instrument: true,
+        ..Default::default()
+    };
+    let out = train_forest_with_source(&data, &cfg, 9, ProjectionSource::SparseOblique);
+
+    // Component indices: 0 sample_projections, 1 apply, 2 build, 3 eval, 4 partition.
+    let mut table = Table::new(&[
+        "depth",
+        "sample_ms",
+        "project_ms",
+        "hist_ms",
+        "eval+part_ms",
+        "hist_frac",
+    ]);
+    let (mut tot_proj, mut tot_hist) = (0f64, 0f64);
+    for (depth, ds) in out.stats.by_depth.iter().enumerate() {
+        let c = &ds.component_ns;
+        let total: u64 = c.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        tot_proj += c[1] as f64;
+        tot_hist += c[2] as f64;
+        table.row(&[
+            depth.to_string(),
+            format!("{:.3}", c[0] as f64 / 1e6),
+            format!("{:.3}", c[1] as f64 / 1e6),
+            format!("{:.3}", c[2] as f64 / 1e6),
+            format!("{:.3}", (c[3] + c[4]) as f64 / 1e6),
+            format!("{:.2}", c[2] as f64 / total as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n# totals: projection {:.1}ms vs histogram {:.1}ms — histogram construction dominates (paper Fig 5)",
+        tot_proj / 1e6,
+        tot_hist / 1e6
+    );
+}

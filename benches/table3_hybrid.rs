@@ -1,0 +1,120 @@
+//! Table 3: end-to-end training, CPU-only vs hybrid CPU+accelerator,
+//! including the Trunk scaling sweep.
+//!
+//! Paper (16-core + RTX PRO 6000, 128 trees): HIGGS 453.5→408.1 (+11.1%),
+//! SUSY 150.7→140.9 (+7.0%), Epsilon 103.7→102.9 (+0.8%), Trunk-100k
+//! 31.1→30.4 (+2.0%), Trunk-1M 348.4→319.5 (+9.0%), Trunk-10M
+//! 1061.7→1754.7 — the paper's table shows GPU *hurting* at 10M? No:
+//! improvement 39.5% (CPU 1754.7? numbers transposed in the paper's PDF);
+//! the reproduced shape target is: benefit grows with dataset size and can
+//! be ~0 for small/narrow data.
+
+use soforest::accel::NodeSplitAccel;
+use soforest::bench::Table;
+use soforest::calibrate;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth;
+use soforest::forest::tree::ProjectionSource;
+use soforest::rng::Pcg64;
+use soforest::split::histogram::Routing;
+use soforest::split::SplitStrategy;
+use std::path::Path;
+
+fn main() {
+    let artifacts = std::env::var("SOFOREST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let Ok(mut probe) = NodeSplitAccel::try_load(Path::new(&artifacts)) else {
+        println!("# Table 3 skipped: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let scale: f64 = std::env::var("SOFOREST_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let trees = std::env::var("SOFOREST_BENCH_TREES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+    let sz = |base: usize| ((base as f64 * scale) as usize).max(500);
+
+    let sort_below = calibrate::calibrate_sort_threshold(256, Routing::TwoLevel).min(1 << 14);
+    let accel_above = calibrate::calibrate_accel_threshold(&mut probe, 16, 256, 1 << 16);
+    drop(probe);
+    println!(
+        "# Table 3: CPU vs hybrid, {trees} trees; calibrated offload above {}\n",
+        if accel_above == usize::MAX { "never".into() } else { accel_above.to_string() }
+    );
+
+    // Trunk scaling sweep (paper: 100k / 1M / 10M) + dataset analogs.
+    let datasets = [
+        ("higgs", format!("higgs:{}", sz(60_000))),
+        ("epsilon", format!("epsilon:{}", sz(8_000))),
+        ("trunk-S", format!("trunk:{}:128", sz(10_000))),
+        ("trunk-M", format!("trunk:{}:128", sz(40_000))),
+        ("trunk-L", format!("trunk:{}:128", sz(120_000))),
+    ];
+
+    let mut table = Table::new(&[
+        "dataset",
+        "cpu_s",
+        "hybrid_s",
+        "improvement_%",
+        "offloaded",
+        "forced_s",
+        "forced_off",
+    ]);
+    for (name, spec) in &datasets {
+        let data = synth::generate(spec, &mut Pcg64::new(13)).unwrap();
+        let mk = |strategy, accel_thr: usize| {
+            let mut cfg = ForestConfig {
+                n_trees: trees,
+                n_threads: 1,
+                strategy,
+                artifacts_dir: artifacts.clone(),
+                ..Default::default()
+            };
+            cfg.thresholds.sort_below = sort_below;
+            cfg.thresholds.accel_above = accel_thr;
+            cfg
+        };
+        let cpu = train_forest_with_source(
+            &data,
+            &mk(SplitStrategy::DynamicVectorized, usize::MAX),
+            42,
+            ProjectionSource::SparseOblique,
+        );
+        // Hybrid with the *calibrated* threshold (the paper's configuration).
+        let hybrid = train_forest_with_source(
+            &data,
+            &mk(SplitStrategy::Hybrid, accel_above),
+            42,
+            ProjectionSource::SparseOblique,
+        );
+        // Forced offload of the top-of-tree nodes: quantifies what the PJRT
+        // substrate costs when the dispatcher is overridden — on a real GPU
+        // this row is where the paper's gains appear.
+        let forced_thr = (data.n_samples() / 3).max(2048);
+        let forced = train_forest_with_source(
+            &data,
+            &mk(SplitStrategy::Hybrid, forced_thr),
+            42,
+            ProjectionSource::SparseOblique,
+        );
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", cpu.wall_s),
+            format!("{:.2}", hybrid.wall_s),
+            format!("{:.1}", (cpu.wall_s - hybrid.wall_s) / cpu.wall_s * 100.0),
+            hybrid.accel_nodes.to_string(),
+            format!("{:.2}", forced.wall_s),
+            forced.accel_nodes.to_string(),
+        ]);
+        eprintln!("[{name}] done");
+    }
+    table.print();
+    println!("\n# paper shape: improvement grows with dataset size; ~0 for small/narrow data.");
+    println!("# On this substrate the calibrated threshold is typically 'never' (a single CPU");
+    println!("# core executing the XLA program cannot beat its own SIMD path), so hybrid == cpu");
+    println!("# and improvement ~0; the forced columns show the dispatcher really offloads and");
+    println!("# what that costs here (DESIGN.md §Hardware-Adaptation).");
+}

@@ -1,0 +1,83 @@
+//! Table 4: holdout accuracy of Exact vs Histogram vs Dynamic vs Dynamic
+//! Vectorized across the paper's datasets (synthetic analogs).
+//!
+//! Paper values (240 trees): Higgs 75.7 / SUSY 80.1 / Epsilon ~74.5 /
+//! Bank 90.6 / Phishing 97.2-97.4 / Credit 86.3-86.5 / Ads 97.6-97.7 /
+//! Trunk 96.4 — identical to ±0.2pp across methods. The reproduction
+//! target is that *relative* property: all four methods statistically
+//! indistinguishable per dataset.
+
+use soforest::bench::Table;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest;
+use soforest::data::synth;
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+
+fn main() {
+    let trees = std::env::var("SOFOREST_BENCH_TREES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40usize);
+    let scale: f64 = std::env::var("SOFOREST_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let sz = |b: usize| ((b as f64 * scale) as usize).max(400);
+    println!("# Table 4: accuracy by training method, {trees} trees, 75/25 split\n");
+
+    let datasets = [
+        ("higgs", format!("higgs:{}", sz(20_000)), 0.757),
+        ("susy", format!("susy:{}", sz(20_000)), 0.801),
+        ("epsilon", format!("epsilon:{}", sz(4_000)), 0.746),
+        ("bank-marketing", format!("bank-marketing:{}", sz(8_000)), 0.906),
+        ("phishing", format!("phishing:{}", sz(6_000)), 0.974),
+        ("credit-approval", "credit-approval:690".to_string(), 0.865),
+        ("internet-ads", format!("internet-ads:{}", sz(2_000)), 0.977),
+        ("trunk", format!("trunk:{}:256", sz(10_000)), 0.964),
+    ];
+    let strategies = [
+        SplitStrategy::Exact,
+        SplitStrategy::Histogram,
+        SplitStrategy::Dynamic,
+        SplitStrategy::DynamicVectorized,
+    ];
+
+    let mut table = Table::new(&[
+        "dataset", "paper", "exact", "hist", "dynamic", "dyn_vec", "spread",
+    ]);
+    for (name, spec, paper) in &datasets {
+        let mut rng = Pcg64::new(17);
+        let data = synth::generate(spec, &mut rng).unwrap();
+        let mut idx: Vec<u32> = (0..data.n_samples() as u32).collect();
+        rng.shuffle(&mut idx);
+        let n_test = data.n_samples() / 4;
+        let test = data.subset(&idx[..n_test]);
+        let train = data.subset(&idx[n_test..]);
+        let mut accs = Vec::new();
+        for &strategy in &strategies {
+            let cfg = ForestConfig {
+                n_trees: trees,
+                n_threads: 1,
+                strategy,
+                ..Default::default()
+            };
+            let f = train_forest(&train, &cfg, 42);
+            accs.push(f.accuracy(&test));
+        }
+        let max = accs.iter().cloned().fold(f64::MIN, f64::max);
+        let min = accs.iter().cloned().fold(f64::MAX, f64::min);
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}%", paper * 100.0),
+            format!("{:.1}%", accs[0] * 100.0),
+            format!("{:.1}%", accs[1] * 100.0),
+            format!("{:.1}%", accs[2] * 100.0),
+            format!("{:.1}%", accs[3] * 100.0),
+            format!("{:.1}pp", (max - min) * 100.0),
+        ]);
+        eprintln!("[{name}] done");
+    }
+    table.print();
+    println!("\n# reproduction target: spread <= ~1pp per dataset (methods indistinguishable, paper Table 4)");
+}

@@ -1,0 +1,82 @@
+"""HLO cost analysis for the L2 graph (the §Perf L2 profiling tool).
+
+Prints per-bucket op counts, estimated flops/bytes from XLA's own cost
+model, and the VMEM footprint estimate for the L1 kernel's tiles — the
+numbers DESIGN.md's TPU-performance discussion is based on.
+
+Usage: python -m compile.analyze [--p 16] [--n 16384] [--impl pallas]
+"""
+
+import argparse
+import collections
+import sys
+
+import jax
+
+from .model import node_split, node_split_spec
+
+
+def op_histogram(hlo_text: str) -> dict:
+    counts = collections.Counter()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith(("HloModule", "ENTRY", "}", "//")):
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        # "f32[16,4096]{1,0} broadcast(...)" -> op name after shape
+        parts = rhs.split(" ")
+        if len(parts) >= 2:
+            op = parts[1].split("(")[0]
+            counts[op] += 1
+    return dict(counts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--b", type=int, default=256)
+    ap.add_argument("--impl", choices=["pallas", "cpu"], default="pallas")
+    args = ap.parse_args()
+
+    spec = node_split_spec(args.p, args.n, args.b)
+    fn = lambda v, l, m, bd: node_split(v, l, m, bd, impl=args.impl)
+    lowered = jax.jit(fn).lower(*spec)
+    compiled = lowered.compile()
+
+    print(f"# L2 cost analysis: p={args.p} n={args.n} b={args.b} impl={args.impl}\n")
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        for key in ["flops", "bytes accessed", "transcendentals", "optimal_seconds"]:
+            if key in ca:
+                print(f"{key:>18}: {ca[key]:.3e}")
+    except Exception as e:  # noqa: BLE001 - cost analysis is best-effort
+        print(f"cost_analysis unavailable: {e}", file=sys.stderr)
+
+    hlo = lowered.compiler_ir("hlo").as_hlo_text()
+    print("\n# top ops in the unoptimized HLO:")
+    hist = op_histogram(hlo)
+    for op, c in sorted(hist.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"{op:>24}: {c}")
+
+    # L1 VMEM footprint estimate (DESIGN.md: interpret mode gives no TPU
+    # timings; structure is what we can verify).
+    block_n = min(4096, args.n)
+    tiles = {
+        "values block": block_n * 4,
+        "boundary tile": args.b * 4,
+        "compare tile [block,B] i32": block_n * args.b * 4,
+        "hist accumulators (2x[B])": 2 * args.b * 4,
+    }
+    total = sum(tiles.values())
+    print("\n# L1 kernel VMEM footprint per grid step:")
+    for k, v in tiles.items():
+        print(f"{k:>28}: {v/1e6:.2f} MB")
+    print(f"{'total':>28}: {total/1e6:.2f} MB (TPU core VMEM ~16 MB)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""AOT compilation: lower the L2 node-split graph to HLO text artifacts.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+>= 0.5 emits HloModuleProtos with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--buckets small|full]
+
+Emits one `node_split_p{P}_n{N}.hlo.txt` per shape bucket plus
+`model.hlo.txt` (the smallest bucket, kept as the canonical "model"
+artifact for the Makefile dependency and the quickstart example).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import node_split, node_split_spec
+
+# (P, N) shape buckets. P covers the paper's projection counts
+# (1.5·sqrt(d): d=28 -> 8, d=2000 -> 68, d=4096 -> 96); N covers the node
+# sizes worth offloading (the paper's GPU crossover is ~29k samples).
+FULL_BUCKETS = [
+    (16, 4096),
+    (16, 16384),
+    (16, 65536),
+    (64, 16384),
+    (64, 65536),
+    (128, 16384),
+    (128, 65536),
+]
+# Small grid for CI / quick builds.
+SMALL_BUCKETS = [(16, 4096), (16, 16384)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(p: int, n: int, b: int = 256, impl: str = "pallas") -> str:
+    spec = node_split_spec(p, n, b)
+    lowered = jax.jit(lambda v, l, m, bd: node_split(v, l, m, bd, impl=impl)).lower(*spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) path for model.hlo.txt")
+    ap.add_argument(
+        "--buckets",
+        choices=["small", "full"],
+        default=os.environ.get("SOFOREST_BUCKETS", "full"),
+    )
+    ap.add_argument(
+        "--impl",
+        choices=["pallas", "cpu"],
+        default=os.environ.get("SOFOREST_AOT_IMPL", "pallas"),
+        help="histogram kernel: 'pallas' (L1 kernel, TPU-shaped) or "
+        "'cpu' (searchsorted+scatter, faster on the CPU PJRT substrate)",
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:  # `--out path/model.hlo.txt` form used by the Makefile
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    buckets = FULL_BUCKETS if args.buckets == "full" else SMALL_BUCKETS
+    first_text = None
+    for p, n in buckets:
+        text = lower_bucket(p, n, impl=args.impl)
+        path = os.path.join(out_dir, f"node_split_p{p}_n{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if first_text is None:
+            first_text = text
+        print(f"wrote {path} ({len(text) / 1e3:.1f} kB)", file=sys.stderr)
+
+    model_path = os.path.join(out_dir, "model.hlo.txt")
+    with open(model_path, "w") as f:
+        f.write(first_text)
+    print(f"wrote {model_path}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

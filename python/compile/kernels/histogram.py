@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: vectorized class-histogram fill.
+
+This is the paper's §4.2 hot-spot rethought for the TPU vector unit
+(DESIGN.md §Hardware-Adaptation). On AVX-512 the paper routes one sample
+with two 16-lane compares against a two-level boundary structure. On a TPU
+the VPU operates on (8, 128) lane tiles, so the natural formulation is a
+**single broadcast compare of a block of samples against *all* B boundary
+lanes at once** — the two-level skip list collapses into one masked
+reduction, and bin assignment plus one-hot accumulation fuse into the same
+VMEM-resident loop:
+
+  * grid = (P, N / BLOCK_N): one program per (projection, sample block);
+  * the projection's B boundaries live in VMEM for the whole row of blocks;
+  * ``bins = Σ_b (boundary_b <= v)``  — the branch-free count the rust
+    side's ``route_16x16`` computes 16 lanes at a time;
+  * one-hot accumulation ``hist += onehotᵀ · w`` targets the MXU
+    (a [BLOCK_N, B]ᶠ³² matmul with a [BLOCK_N] weight vector).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering through the interpreter emits plain HLO that both
+the python tests and the rust runtime execute bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sample-axis block. 4096 f32 lanes × (B=256) compare tile ≈ 4 MiB in VMEM —
+# comfortably inside a TPU core's ~16 MiB VMEM next to the boundary tile
+# and the [B, 2] accumulator.
+BLOCK_N = 4096
+
+
+def _make_hist_kernel(accumulate):
+    """Kernel factory. `accumulate` picks the bin-count reduction:
+
+    * ``"matmul"`` — one-hot [BLOCK_N, B] matmul, the MXU-shaped reduction
+      a real TPU wants;
+    * ``"scatter"`` — `zeros(B).at[bins].add(w)`, ~2× faster under the
+      interpret-mode/CPU-PJRT execution this repo ships (scatter is serial
+      on a real TPU — flip to "matmul" when compiling for hardware).
+
+    Both are bit-identical (integer counts in f32) and covered by tests.
+    """
+
+    def kernel(values_ref, labels_ref, mask_ref, bounds_ref, hist0_ref, hist1_ref):
+        v = values_ref[0, :]  # [BLOCK_N]
+        b = bounds_ref[0, :]  # [B]
+        nb = b.shape[-1]
+        # Branch-free routing: count boundaries <= v (the §4.2 vectorized
+        # compare, all B boundary lanes at once).
+        cmp = (b[None, :] <= v[:, None]).astype(jnp.int32)  # [BLOCK_N, B]
+        bins = jnp.clip(cmp.sum(axis=1), 0, nb - 1)
+        labels = labels_ref[...]
+        mask = mask_ref[...]
+        w1 = mask * labels
+        w0 = mask * (1.0 - labels)
+        if accumulate == "matmul":
+            onehot = (
+                bins[:, None] == jax.lax.iota(jnp.int32, nb)[None, :]
+            ).astype(jnp.float32)  # [BLOCK_N, B]
+            part0 = w0 @ onehot  # [B]
+            part1 = w1 @ onehot
+        else:
+            part0 = jnp.zeros(nb, jnp.float32).at[bins].add(w0)
+            part1 = jnp.zeros(nb, jnp.float32).at[bins].add(w1)
+
+        # First block of each projection initializes; later blocks accumulate.
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            hist0_ref[0, :] = part0
+            hist1_ref[0, :] = part1
+
+        @pl.when(pl.program_id(1) != 0)
+        def _acc():
+            hist0_ref[0, :] += part0
+            hist1_ref[0, :] += part1
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "accumulate"))
+def class_histogram(values, labels, mask, boundaries, block_n=BLOCK_N, accumulate="scatter"):
+    """Per-class histograms for every projection of a node.
+
+    values: [P, N] f32 — projected features (rows padded with 0 beyond the
+        real sample count; the mask zeroes their contribution).
+    labels: [N] f32 in {0, 1}.
+    mask:   [N] f32 in {0, 1} — 1 for real samples.
+    boundaries: [P, B] f32 — sorted, +inf padded (B = 256).
+
+    Returns (hist0, hist1): [P, B] f32 class-count histograms.
+    """
+    p, n = values.shape
+    _, b = boundaries.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (p, n // block_n)
+    out_shape = [
+        jax.ShapeDtypeStruct((p, b), jnp.float32),
+        jax.ShapeDtypeStruct((p, b), jnp.float32),
+    ]
+    hist0, hist1 = pl.pallas_call(
+        _make_hist_kernel(accumulate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),  # values
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),  # labels
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),  # mask
+            pl.BlockSpec((1, b), lambda i, j: (i, 0)),  # boundaries
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, b), lambda i, j: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(values, labels, mask, boundaries)
+    return hist0, hist1
+
+
+def class_histogram_cpu(values, labels, mask, boundaries):
+    """CPU-PJRT-optimized formulation: `searchsorted` routing (O(N log B))
+    plus scatter-add accumulation — no [N, B] intermediate at all.
+
+    This is NOT the TPU kernel (no broadcast compare, no MXU reduction);
+    it exists because the shipped artifacts execute on the CPU PJRT client,
+    where the O(N·B) compare tile that a TPU eats for free dominates
+    wall-clock. `aot.py --impl cpu` lowers this variant; bit-identical to
+    the Pallas kernel (tests cross-check all three against ref.py).
+    """
+    b = boundaries.shape[-1]
+
+    def per_projection(v, bd):
+        bins = jnp.clip(jnp.searchsorted(bd, v, side="right"), 0, b - 1)
+        h1 = jnp.zeros(b, jnp.float32).at[bins].add(mask * labels)
+        h0 = jnp.zeros(b, jnp.float32).at[bins].add(mask * (1.0 - labels))
+        return h0, h1
+
+    return jax.vmap(per_projection)(values, boundaries)

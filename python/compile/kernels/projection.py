@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: batched sparse-projection application.
+
+Step (1) of the paper's per-node workflow (Fig 2) and the first kernel of
+its GPU implementation (§4.3: "apply projections: sum the columns and
+write the new sparse oblique features"). The coordinator densifies the
+node's sparse projection matrix into a [P, K] weight tile over the K
+*member* columns it gathered (K ≈ 3√d non-zeros across P projections, so
+K stays small), and the kernel computes
+
+    values[P, N] = weights[P, K] @ columns[K, N]
+
+— a dense matmul, i.e. exactly the MXU-shaped reformulation of the
+paper's per-thread column sums (DESIGN.md §Hardware-Adaptation: what CUDA
+does with a (P, N) thread grid, a TPU does as a systolic matmul). Tiled
+along N so the column block and the weight tile live in VMEM together.
+
+interpret=True as everywhere: the CPU PJRT plugin cannot run Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096
+
+
+def _proj_kernel(weights_ref, columns_ref, out_ref):
+    """One sample-block grid step: out[P, block] = W[P, K] @ C[K, block]."""
+    w = weights_ref[...]  # [P, K]
+    c = columns_ref[...]  # [K, BLOCK_N]
+    out_ref[...] = jnp.dot(w, c, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def apply_projections(weights, columns, block_n=BLOCK_N):
+    """values[P, N] = weights[P, K] @ columns[K, N] (Pallas, tiled over N).
+
+    weights: [P, K] f32 — densified sparse projection matrix (zeros for
+        features a projection does not use).
+    columns: [K, N] f32 — the gathered member columns for the node's
+        active samples (padded columns are all-zero).
+    """
+    p, k = weights.shape
+    k2, n = columns.shape
+    assert k == k2, f"weights K={k} != columns K={k2}"
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} must divide block_n={block_n}"
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((p, k), lambda j: (0, 0)),  # weights resident
+            pl.BlockSpec((k, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((p, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.float32),
+        interpret=True,
+    )(weights, columns)
+
+
+def apply_projections_ref(weights, columns):
+    """Oracle: plain jnp matmul."""
+    return weights @ columns

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the node-split computation.
+
+This is the correctness anchor of the whole accelerated path: the Pallas
+kernel (histogram.py) and the full L2 graph (model.py) are validated against
+these functions by pytest/hypothesis, and the rust integration test compares
+the compiled artifact's output against the rust CPU splitter on identical
+inputs.
+
+Conventions (identical to the rust side, rust/src/split/):
+  * ``bin(v) = #{ boundaries b : b <= v }`` clamped to ``B - 1``;
+  * boundaries are sorted, padded with +inf to ``B`` slots;
+  * edge ``k`` means threshold ``boundaries[k]``; left ⟺ ``v < b[k]``
+    ⟺ ``bin <= k``;
+  * gain is Shannon-entropy information gain in nats;
+  * an edge is valid iff both sides are non-empty (min_leaf = 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30  # sentinel for invalid edges (avoid -inf arithmetic in f32)
+
+
+def route_ref(values, boundaries):
+    """Bin index per sample: #{b <= v}, clamped to B-1.
+
+    values: [N] f32, boundaries: [B] f32 (sorted, +inf padded).
+    Returns [N] int32.
+    """
+    b = boundaries.shape[-1]
+    cmp = (boundaries[None, :] <= values[:, None]).astype(jnp.int32)
+    return jnp.clip(cmp.sum(axis=1), 0, b - 1)
+
+
+def class_histogram_ref(values, labels, mask, boundaries):
+    """Per-class histograms for one projection.
+
+    values: [N], labels: [N] (0/1 f32), mask: [N] (0/1 f32),
+    boundaries: [B]. Returns (hist0, hist1), each [B] f32.
+    """
+    b = boundaries.shape[-1]
+    bins = route_ref(values, boundaries)
+    onehot = (bins[:, None] == jnp.arange(b)[None, :]).astype(jnp.float32)
+    w1 = mask * labels
+    w0 = mask * (1.0 - labels)
+    return w0 @ onehot, w1 @ onehot
+
+
+def batched_class_histogram_ref(values, labels, mask, boundaries):
+    """values: [P, N], boundaries: [P, B] -> (hist0, hist1) each [P, B]."""
+    return jax.vmap(lambda v, b: class_histogram_ref(v, labels, mask, b))(
+        values, boundaries
+    )
+
+
+def _xlogx(x):
+    """x * ln(x) with 0 ln 0 = 0, safe for f32."""
+    return jnp.where(x > 0.0, x * jnp.log(jnp.maximum(x, 1e-30)), 0.0)
+
+
+def entropy2(c0, c1):
+    """Entropy (nats) of a 2-class count pair; 0 for empty nodes."""
+    n = c0 + c1
+    n_safe = jnp.maximum(n, 1e-30)
+    # H = ln n - (c0 ln c0 + c1 ln c1)/n
+    h = jnp.log(n_safe) - (_xlogx(c0) + _xlogx(c1)) / n_safe
+    return jnp.where(n > 0.0, h, 0.0)
+
+
+def split_gains_ref(hist0, hist1):
+    """Information gain at every edge of one projection's histograms.
+
+    hist0/hist1: [B]. Returns gains [B] with invalid edges = NEG.
+    Edge k: left = bins 0..k (cumulative), right = rest. Edge B-1 is the
+    +inf pad and always invalid.
+    """
+    b = hist0.shape[-1]
+    left0 = jnp.cumsum(hist0)
+    left1 = jnp.cumsum(hist1)
+    n0 = left0[-1]
+    n1 = left1[-1]
+    n = n0 + n1
+    right0 = n0 - left0
+    right1 = n1 - left1
+    nl = left0 + left1
+    nr = right0 + right1
+    n_safe = jnp.maximum(n, 1e-30)
+    h_parent = entropy2(n0, n1)
+    gain = (
+        h_parent
+        - (nl / n_safe) * entropy2(left0, left1)
+        - (nr / n_safe) * entropy2(right0, right1)
+    )
+    valid = (nl > 0.0) & (nr > 0.0) & (jnp.arange(b) < b - 1)
+    return jnp.where(valid, gain, NEG)
+
+
+def node_split_ref(values, labels, mask, boundaries):
+    """Full node-split oracle.
+
+    values: [P, N], labels: [N], mask: [N], boundaries: [P, B].
+    Returns (gains [P] f32, edges [P] i32): the best edge per projection
+    (gain = NEG when no valid edge exists).
+    """
+    hist0, hist1 = batched_class_histogram_ref(values, labels, mask, boundaries)
+
+    def per_proj(h0, h1):
+        gains = split_gains_ref(h0, h1)
+        edge = jnp.argmax(gains).astype(jnp.int32)
+        return gains[edge], edge
+
+    return jax.vmap(per_proj)(hist0, hist1)

@@ -1,0 +1,86 @@
+"""L2: the node-split computation the rust coordinator offloads (§4.3).
+
+Mirrors the paper's two GPU kernels:
+
+  * kernel 1 — per-projection class histograms → the L1 Pallas kernel
+    (`kernels.histogram.class_histogram`);
+  * kernel 2 — best split per histogram (cumulative class counts, entropy
+    gain at every edge, masked argmax) → plain jnp here, fused by XLA.
+
+The whole graph is lowered once by `aot.py` into a single HLO module per
+(P, N) shape bucket; the rust runtime compiles each bucket once and invokes
+it per offloaded node. Conventions match rust/src/split/ exactly — see
+kernels/ref.py for the contract and the tests for the cross-checks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.histogram import class_histogram, class_histogram_cpu
+
+
+def node_split(values, labels, mask, boundaries, impl="pallas"):
+    """Best split per projection for one tree node.
+
+    values: [P, N] f32, labels: [N] f32 {0,1}, mask: [N] f32 {0,1},
+    boundaries: [P, B] f32 (sorted, +inf padded).
+
+    `impl` selects the histogram-fill kernel: ``"pallas"`` (the L1 kernel,
+    TPU-shaped, the default artifact) or ``"cpu"`` (searchsorted + scatter,
+    faster on the CPU PJRT substrate — see kernels/histogram.py). Both are
+    bit-identical.
+
+    Returns (gains [P] f32, edges [P] i32). Invalid/padded projections get
+    gain = ref.NEG. The caller (rust/src/accel) takes the argmax over real
+    projections and maps the edge back to a threshold.
+    """
+    fill = class_histogram if impl == "pallas" else class_histogram_cpu
+    hist0, hist1 = fill(values, labels, mask, boundaries)
+
+    def per_proj(h0, h1):
+        gains = ref.split_gains_ref(h0, h1)
+        edge = jnp.argmax(gains).astype(jnp.int32)
+        return gains[edge], edge
+
+    gains, edges = jax.vmap(per_proj)(hist0, hist1)
+    return gains, edges
+
+
+def node_split_spec(p, n, b=256):
+    """ShapeDtypeStructs for lowering a (P, N, B) bucket."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((p, n), f32),  # values
+        jax.ShapeDtypeStruct((n,), f32),  # labels
+        jax.ShapeDtypeStruct((n,), f32),  # mask
+        jax.ShapeDtypeStruct((p, b), f32),  # boundaries
+    )
+
+
+def node_split_full(weights, columns, labels, mask, boundaries, impl="pallas"):
+    """Full-node offload: projection apply **and** histogram split on the
+    accelerator — both kernels of the paper's GPU implementation (§4.3).
+
+    weights: [P, K] f32 densified projection matrix, columns: [K, N] f32
+    gathered member columns, rest as in `node_split`.
+
+    Returns (gains [P] f32, edges [P] i32).
+    """
+    from .kernels.projection import apply_projections, apply_projections_ref
+
+    proj = apply_projections if impl == "pallas" else apply_projections_ref
+    values = proj(weights, columns)
+    return node_split(values, labels, mask, boundaries, impl=impl)
+
+
+def node_split_full_spec(p, k, n, b=256):
+    """ShapeDtypeStructs for lowering a full-node (P, K, N, B) bucket."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((p, k), f32),  # weights
+        jax.ShapeDtypeStruct((k, n), f32),  # columns
+        jax.ShapeDtypeStruct((n,), f32),  # labels
+        jax.ShapeDtypeStruct((n,), f32),  # mask
+        jax.ShapeDtypeStruct((p, b), f32),  # boundaries
+    )

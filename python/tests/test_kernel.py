@@ -1,0 +1,197 @@
+"""L1 correctness: the Pallas histogram kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the accelerated path — everything
+downstream (the L2 graph, the AOT artifact, the rust accel module) consumes
+the kernel's output verbatim.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.histogram import class_histogram
+
+
+def make_node(rng, p, n, b, n_real=None, scale=1.0, duplicate_bounds=False):
+    """Random padded node inputs in the exact layout rust/src/accel sends."""
+    values = (rng.normal(size=(p, n)) * scale).astype(np.float32)
+    labels = (rng.random(n) < 0.5).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    if n_real is not None:
+        mask[n_real:] = 0.0
+    raw = rng.normal(size=(p, b - 1)).astype(np.float32) * scale
+    if duplicate_bounds:
+        raw[:, : (b - 1) // 2] = raw[:, :1]  # heavy boundary ties
+    bounds = np.sort(raw, axis=1)
+    bounds = np.concatenate([bounds, np.full((p, 1), np.inf, np.float32)], axis=1)
+    return (
+        jnp.array(values),
+        jnp.array(labels),
+        jnp.array(mask),
+        jnp.array(bounds),
+    )
+
+
+def numpy_histogram(values, labels, mask, bounds):
+    """Independent numpy reference (searchsorted), no jax code shared."""
+    p, n = values.shape
+    b = bounds.shape[1]
+    h0 = np.zeros((p, b), np.float32)
+    h1 = np.zeros((p, b), np.float32)
+    for pi in range(p):
+        # bin = #{b <= v} = searchsorted(side='right')
+        bins = np.searchsorted(bounds[pi], values[pi], side="right")
+        bins = np.clip(bins, 0, b - 1)
+        for i in range(n):
+            if mask[i] > 0:
+                if labels[i] > 0.5:
+                    h1[pi, bins[i]] += 1
+                else:
+                    h0[pi, bins[i]] += 1
+    return h0, h1
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("p,n", [(1, 2048), (3, 4096), (8, 8192)])
+    def test_matches_ref(self, p, n):
+        rng = np.random.default_rng(p * 1000 + n)
+        args = make_node(rng, p, n, 256)
+        h0, h1 = class_histogram(*args)
+        r0, r1 = ref.batched_class_histogram_ref(*args)
+        np.testing.assert_allclose(h0, r0, rtol=0, atol=0)
+        np.testing.assert_allclose(h1, r1, rtol=0, atol=0)
+
+    def test_matches_independent_numpy(self):
+        rng = np.random.default_rng(7)
+        args = make_node(rng, 4, 2048, 256)
+        h0, h1 = class_histogram(*args)
+        w0, w1 = numpy_histogram(*[np.asarray(a) for a in args])
+        np.testing.assert_array_equal(np.asarray(h0), w0)
+        np.testing.assert_array_equal(np.asarray(h1), w1)
+
+    def test_mask_excludes_padding(self):
+        rng = np.random.default_rng(9)
+        args = make_node(rng, 2, 4096, 256, n_real=1000)
+        h0, h1 = class_histogram(*args)
+        total = float(h0.sum() + h1.sum())
+        assert total == 2 * 1000  # P projections × real samples
+
+    def test_duplicate_boundaries(self):
+        rng = np.random.default_rng(11)
+        args = make_node(rng, 2, 2048, 256, duplicate_bounds=True)
+        h0, h1 = class_histogram(*args)
+        r0, r1 = ref.batched_class_histogram_ref(*args)
+        np.testing.assert_array_equal(np.asarray(h0), np.asarray(r0))
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(r1))
+
+    def test_all_inf_boundaries_bin_zero(self):
+        # Padded projections: all-inf boundaries put every sample in bin 0.
+        rng = np.random.default_rng(13)
+        values, labels, mask, _ = make_node(rng, 1, 2048, 256)
+        bounds = jnp.full((1, 256), jnp.inf, jnp.float32)
+        h0, h1 = class_histogram(values, labels, mask, bounds)
+        assert float(h0[0, 0] + h1[0, 0]) == 2048
+        assert float(h0[0, 1:].sum() + h1[0, 1:].sum()) == 0
+
+    def test_extreme_values_land_in_last_bin(self):
+        rng = np.random.default_rng(15)
+        values, labels, mask, bounds = make_node(rng, 1, 2048, 256)
+        values = values.at[0, :].set(1e30)
+        h0, h1 = class_histogram(values, labels, mask, bounds)
+        assert float(h0[0, 255] + h1[0, 255]) == 2048
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=6),
+    n_blocks=st.integers(min_value=1, max_value=4),
+    b=st.sampled_from([64, 256]),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+    real_frac=st.floats(min_value=0.01, max_value=1.0),
+)
+def test_kernel_property_sweep(p, n_blocks, b, scale, seed, real_frac):
+    """Hypothesis sweep over shapes, dtypes ranges and padding fractions."""
+    n = 512 * n_blocks
+    rng = np.random.default_rng(seed)
+    n_real = max(1, int(n * real_frac))
+    args = make_node(rng, p, n, b, n_real=n_real, scale=scale)
+    h0, h1 = class_histogram(*args, block_n=512)
+    r0, r1 = ref.batched_class_histogram_ref(*args)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(r0))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(r1))
+    # Mass conservation: every real sample lands in exactly one bin.
+    assert float(h0.sum() + h1.sum()) == p * n_real
+
+
+class TestKernelVariants:
+    """The three fill implementations (pallas-scatter, pallas-matmul,
+    cpu searchsorted+scatter) must be bit-identical."""
+
+    def test_all_variants_agree(self):
+        from compile.kernels.histogram import class_histogram_cpu
+
+        rng = np.random.default_rng(21)
+        args = make_node(rng, 3, 4096, 256, n_real=3000)
+        scatter = class_histogram(*args, accumulate="scatter")
+        matmul = class_histogram(*args, accumulate="matmul")
+        cpu = class_histogram_cpu(*args)
+        for a, b in [(scatter, matmul), (scatter, cpu)]:
+            np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+            np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    def test_cpu_impl_model_matches_pallas_model(self):
+        from compile.model import node_split
+
+        rng = np.random.default_rng(22)
+        args = make_node(rng, 4, 2048, 256)
+        g1, e1 = node_split(*args, impl="pallas")
+        g2, e2 = node_split(*args, impl="cpu")
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+class TestProjectionKernel:
+    """L1 projection kernel vs the matmul oracle."""
+
+    @pytest.mark.parametrize("p,k,n", [(4, 8, 1024), (16, 48, 2048), (1, 1, 512)])
+    def test_matches_oracle(self, p, k, n):
+        from compile.kernels.projection import apply_projections, apply_projections_ref
+
+        rng = np.random.default_rng(p * 100 + k)
+        w = jnp.array(rng.normal(size=(p, k)).astype(np.float32))
+        c = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+        got = apply_projections(w, c, block_n=512)
+        want = apply_projections_ref(w, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+    def test_sparse_weights_sum_columns(self):
+        from compile.kernels.projection import apply_projections
+
+        # w = [[1, -1, 0]]: value = col0 - col1, col2 ignored.
+        w = jnp.array([[1.0, -1.0, 0.0]], jnp.float32)
+        c = jnp.array(
+            [[1.0] * 512, [0.5] * 512, [9.0] * 512], jnp.float32
+        )
+        out = apply_projections(w, c, block_n=512)
+        np.testing.assert_allclose(np.asarray(out), np.full((1, 512), 0.5), rtol=1e-6)
+
+    def test_full_node_split_matches_two_stage(self):
+        from compile.model import node_split, node_split_full
+
+        rng = np.random.default_rng(5)
+        p, k, n = 4, 12, 2048
+        w = jnp.array(rng.normal(size=(p, k)).astype(np.float32))
+        c = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+        labels = jnp.array((rng.random(n) < 0.5).astype(np.float32))
+        mask = jnp.ones(n, jnp.float32)
+        values = np.asarray(w @ c)
+        raw = np.sort(rng.normal(size=(p, 255)).astype(np.float32) * 3, axis=1)
+        bounds = jnp.array(
+            np.concatenate([raw, np.full((p, 1), np.inf, np.float32)], axis=1)
+        )
+        g1, e1 = node_split_full(w, c, labels, mask, bounds)
+        g2, e2 = node_split(jnp.array(values), labels, mask, bounds)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)

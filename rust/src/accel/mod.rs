@@ -1,0 +1,233 @@
+//! Hybrid accelerator dispatch (paper §4.3).
+//!
+//! The paper offloads the largest tree nodes to a GPU: one batched kernel
+//! evaluates *all* of a node's projections (histogram fill + best split) and
+//! returns the winning (projection, threshold). Here the device is an
+//! AOT-compiled XLA executable run through PJRT — same economics (fixed
+//! invocation cost amortized by batch size), same interface (the
+//! [`NodeAccel`] trait the tree trainer dispatches through).
+//!
+//! Shape buckets: PJRT executables are compiled for static shapes, so
+//! `aot.py` emits a small grid of (P, N) variants and nodes are padded up to
+//! the nearest bucket — the analog of the paper's kernel grid
+//! `(#projections, #active samples)`. Padding is masked inside the kernel:
+//! padded samples carry `mask = 0`, padded projections carry all-+∞
+//! boundaries, so neither can win.
+
+use crate::forest::tree::NodeAccel;
+use crate::runtime::{literal_f32, literal_to_vec_f32, literal_to_vec_i32, Engine};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One compiled (P, N) variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub p: usize,
+    pub n: usize,
+}
+
+impl Bucket {
+    pub fn artifact_name(&self) -> String {
+        format!("node_split_p{}_n{}", self.p, self.n)
+    }
+
+    /// Parse `node_split_p{P}_n{N}`.
+    pub fn parse(name: &str) -> Option<Bucket> {
+        let rest = name.strip_prefix("node_split_p")?;
+        let (p, n) = rest.split_once("_n")?;
+        Some(Bucket {
+            p: p.parse().ok()?,
+            n: n.parse().ok()?,
+        })
+    }
+}
+
+/// Histogram bins the accelerated kernel is compiled for (paper default).
+pub const ACCEL_BINS: usize = 256;
+
+/// PJRT-backed batched node-split evaluator.
+pub struct NodeSplitAccel {
+    engine: Engine,
+    /// Available buckets, sorted by (n, p) so `find_bucket` returns the
+    /// cheapest fit.
+    buckets: Vec<Bucket>,
+    nodes_executed: u64,
+    // Padded staging buffers (reused across nodes).
+    values_pad: Vec<f32>,
+    labels_pad: Vec<f32>,
+    mask_pad: Vec<f32>,
+    bounds_pad: Vec<f32>,
+}
+
+impl NodeSplitAccel {
+    /// Load every `node_split_p*_n*.hlo.txt` artifact from `dir`.
+    pub fn try_load(dir: &Path) -> Result<Self> {
+        let mut engine = Engine::cpu().context("create PJRT engine")?;
+        let names = engine
+            .load_artifact_dir(dir)
+            .with_context(|| format!("load artifacts from {dir:?}"))?;
+        let mut buckets: Vec<Bucket> = names
+            .iter()
+            .filter_map(|n| Bucket::parse(n))
+            .collect();
+        if buckets.is_empty() {
+            bail!("no node_split_p*_n* artifacts in {dir:?} (run `make artifacts`)");
+        }
+        buckets.sort_by_key(|b| (b.n, b.p));
+        Ok(Self {
+            engine,
+            buckets,
+            nodes_executed: 0,
+            values_pad: Vec::new(),
+            labels_pad: Vec::new(),
+            mask_pad: Vec::new(),
+            bounds_pad: Vec::new(),
+        })
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn nodes_executed(&self) -> u64 {
+        self.nodes_executed
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    /// Smallest bucket that fits (p, n), by padded area.
+    pub fn find_bucket(&self, p: usize, n: usize) -> Option<Bucket> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|b| b.p >= p && b.n >= n)
+            .min_by_key(|b| b.p * b.n)
+    }
+
+    /// Run the batched kernel. Exposed (in addition to the trait impl) for
+    /// the calibration and Fig 3 benches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_node(
+        &mut self,
+        values: &[f32],
+        p: usize,
+        n: usize,
+        labels: &[u16],
+        boundaries: &[f32],
+        n_bins: usize,
+    ) -> Result<(usize, usize, f64)> {
+        if n_bins != ACCEL_BINS {
+            bail!("accelerated kernel is compiled for {ACCEL_BINS} bins, got {n_bins}");
+        }
+        debug_assert_eq!(values.len(), p * n);
+        debug_assert_eq!(labels.len(), n);
+        debug_assert_eq!(boundaries.len(), p * n_bins);
+        let bucket = match self.find_bucket(p, n) {
+            Some(b) => b,
+            None => bail!("no bucket fits p={p} n={n} (have {:?})", self.buckets),
+        };
+        let (pp, nn) = (bucket.p, bucket.n);
+
+        // Pad values row-by-row; padded cells are 0 and masked out.
+        self.values_pad.clear();
+        self.values_pad.resize(pp * nn, 0.0);
+        for pi in 0..p {
+            self.values_pad[pi * nn..pi * nn + n]
+                .copy_from_slice(&values[pi * n..(pi + 1) * n]);
+        }
+        self.labels_pad.clear();
+        self.labels_pad.resize(nn, 0.0);
+        for (o, &l) in self.labels_pad.iter_mut().zip(labels) {
+            *o = l as f32;
+        }
+        self.mask_pad.clear();
+        self.mask_pad.resize(nn, 0.0);
+        self.mask_pad[..n].fill(1.0);
+        // Padded projections get all-+∞ boundaries: every (masked-in) sample
+        // lands in bin 0, every edge has an empty side ⇒ gain masked to -∞.
+        self.bounds_pad.clear();
+        self.bounds_pad.resize(pp * n_bins, f32::INFINITY);
+        for pi in 0..p {
+            self.bounds_pad[pi * n_bins..(pi + 1) * n_bins]
+                .copy_from_slice(&boundaries[pi * n_bins..(pi + 1) * n_bins]);
+        }
+
+        let inputs = [
+            literal_f32(&self.values_pad, &[pp as i64, nn as i64])?,
+            literal_f32(&self.labels_pad, &[nn as i64])?,
+            literal_f32(&self.mask_pad, &[nn as i64])?,
+            literal_f32(&self.bounds_pad, &[pp as i64, n_bins as i64])?,
+        ];
+        let outputs = self.engine.execute(&bucket.artifact_name(), &inputs)?;
+        if outputs.len() != 2 {
+            bail!("expected (gains, edges), got {} outputs", outputs.len());
+        }
+        let gains = literal_to_vec_f32(&outputs[0])?;
+        let edges = literal_to_vec_i32(&outputs[1])?;
+        if gains.len() != pp || edges.len() != pp {
+            bail!("bad output shapes: {} gains, {} edges", gains.len(), edges.len());
+        }
+        self.nodes_executed += 1;
+
+        // Winner among the *real* projections.
+        let mut best = (0usize, 0usize, f64::NEG_INFINITY);
+        for pi in 0..p {
+            let g = gains[pi] as f64;
+            if g.is_finite() && g > best.2 {
+                best = (pi, edges[pi].max(0) as usize, g);
+            }
+        }
+        Ok(best)
+    }
+}
+
+impl NodeAccel for NodeSplitAccel {
+    fn best_node_split(
+        &mut self,
+        values: &[f32],
+        p: usize,
+        n: usize,
+        labels: &[u16],
+        boundaries: &[f32],
+        n_bins: usize,
+        min_leaf: usize,
+    ) -> Option<(usize, usize, f64)> {
+        if min_leaf > 1 {
+            // The kernel is compiled with min_leaf = 1 (to-purity training,
+            // the paper's regime); other settings fall back to the CPU.
+            return None;
+        }
+        match self.execute_node(values, p, n, labels, boundaries, n_bins) {
+            Ok((pi, edge, gain)) if gain > 0.0 => Some((pi, edge, gain)),
+            Ok(_) => Some((0, 0, 0.0)), // ran fine, no valid split anywhere
+            Err(_) => None,             // shape/device problem: CPU fallback
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_name_roundtrip() {
+        let b = Bucket { p: 64, n: 16384 };
+        assert_eq!(b.artifact_name(), "node_split_p64_n16384");
+        assert_eq!(Bucket::parse("node_split_p64_n16384"), Some(b));
+        assert_eq!(Bucket::parse("node_split_p64"), None);
+        assert_eq!(Bucket::parse("model"), None);
+    }
+
+    #[test]
+    fn try_load_fails_without_artifacts() {
+        let dir = std::env::temp_dir().join("soforest_accel_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(NodeSplitAccel::try_load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    // Integration tests against the real artifacts live in
+    // rust/tests/accel_integration.rs (they need `make artifacts` first).
+}

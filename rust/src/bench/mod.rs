@@ -1,0 +1,237 @@
+//! Micro-benchmark framework.
+//!
+//! The offline crate set has no criterion, so the bench harness (and the
+//! §4.1 calibration microbenchmark, which must finish in <100 ms) uses this
+//! small measured-loop framework: warmup, adaptive iteration count targeting
+//! a time budget, and robust statistics (median + MAD) so single-core OS
+//! jitter does not corrupt crossover detection.
+
+use std::time::{Duration, Instant};
+
+/// Robust summary of repeated timings (nanoseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    /// Median absolute deviation — robust spread.
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+    pub fn median_s(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+/// Options for [`measure`].
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    /// Minimum timed iterations.
+    pub min_iters: usize,
+    /// Stop adding iterations after this much measuring time.
+    pub budget: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            min_iters: 7,
+            budget: Duration::from_millis(300),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Fast preset for the startup calibration (paper: "<100 ms" total).
+    pub fn calibration() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 3,
+            budget: Duration::from_millis(4),
+        }
+    }
+}
+
+/// Time `f` repeatedly; the closure's return value is consumed with
+/// [`std::hint::black_box`] so work is not optimized away.
+pub fn measure<R>(opts: &BenchOpts, mut f: impl FnMut() -> R) -> Timing {
+    for _ in 0..opts.warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(opts.min_iters * 2);
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= opts.min_iters && start.elapsed() >= opts.budget {
+            break;
+        }
+        // Hard cap: never loop forever on very fast closures.
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    summarize(&mut samples)
+}
+
+fn summarize(samples: &mut [f64]) -> Timing {
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len();
+    let median = percentile_sorted(samples, 50.0);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let min = samples[0];
+    let mut devs: Vec<f64> = samples.iter().map(|&s| (s - median).abs()).collect();
+    devs.sort_by(f64::total_cmp);
+    let mad = percentile_sorted(&devs, 50.0);
+    Timing {
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: min,
+        mad_ns: mad,
+        iters: n,
+    }
+}
+
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Fixed-width table printer for bench outputs (the benches print rows in
+/// the same shape as the paper's tables; EXPERIMENTS.md captures them).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_stats() {
+        let t = measure(
+            &BenchOpts {
+                warmup: 1,
+                min_iters: 5,
+                budget: Duration::from_millis(5),
+            },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert!(t.iters >= 5);
+        assert!(t.median_ns > 0.0);
+        assert!(t.min_ns <= t.median_ns);
+        assert!(t.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn measure_orders_workloads_correctly() {
+        let opts = BenchOpts {
+            warmup: 2,
+            min_iters: 9,
+            budget: Duration::from_millis(10),
+        };
+        // Sum over black-boxed data so release builds can't close-form the
+        // loop away.
+        let small_data = vec![1u64; 100];
+        let big_data = vec![1u64; 100_000];
+        let small = measure(&opts, || {
+            std::hint::black_box(&small_data).iter().sum::<u64>()
+        });
+        let big = measure(&opts, || {
+            std::hint::black_box(&big_data).iter().sum::<u64>()
+        });
+        assert!(
+            big.median_ns > small.median_ns * 10.0,
+            "big {} vs small {}",
+            big.median_ns,
+            small.median_ns
+        );
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 4.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 2.5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["dataset", "time_s"]);
+        t.row(&["higgs".into(), "663.66".into()]);
+        t.row(&["susy".into(), "245.49".into()]);
+        let r = t.render();
+        assert!(r.contains("dataset"));
+        assert!(r.lines().count() == 4);
+    }
+}

@@ -1,0 +1,26 @@
+fn main() -> anyhow::Result<()> {
+    use std::time::Instant;
+    let mut engine = soforest::runtime::Engine::cpu()?;
+    engine.load_artifact_dir(std::path::Path::new(&std::env::var("PROBE_DIR").unwrap_or_else(|_| "artifacts".into())))?;
+    let (p, n) = (16usize, 16384usize);
+    let name = format!("node_split_p{p}_n{n}");
+    let values = vec![0.5f32; p * n];
+    let labels = vec![0.0f32; n];
+    let mask = vec![1.0f32; n];
+    let bounds = vec![1.0f32; p * 256];
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let lits = [
+            soforest::runtime::literal_f32(&values, &[p as i64, n as i64])?,
+            soforest::runtime::literal_f32(&labels, &[n as i64])?,
+            soforest::runtime::literal_f32(&mask, &[n as i64])?,
+            soforest::runtime::literal_f32(&bounds, &[p as i64, 256])?,
+        ];
+        let t1 = Instant::now();
+        let out = engine.execute(&name, &lits)?;
+        let t2 = Instant::now();
+        let g = soforest::runtime::literal_to_vec_f32(&out[0])?;
+        println!("literals {:?} execute {:?} fetch {:?} (gains[0]={})", t1-t0, t2-t1, t2.elapsed(), g[0]);
+    }
+    Ok(())
+}

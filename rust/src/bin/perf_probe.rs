@@ -1,0 +1,60 @@
+//! Developer perf probe for the §Perf pass (not part of the bench suite).
+//! Measures the isolated hot paths with a long budget so single-core OS
+//! jitter averages out. See EXPERIMENTS.md §Perf for the iteration log.
+
+use soforest::bench::{measure, BenchOpts};
+use soforest::rng::Pcg64;
+use soforest::split::histogram::{build_boundaries, fill_histogram, route_binary_search, Routing};
+use soforest::split::vectorized::{build_coarse, route_16x16, TwoLevelLayout};
+use soforest::split::SplitScratch;
+use std::time::Duration;
+
+fn main() {
+    let opts = BenchOpts {
+        warmup: 5,
+        min_iters: 30,
+        budget: Duration::from_millis(1500),
+    };
+    let mut rng = Pcg64::new(1);
+    let n = 100_000usize;
+    let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+    let mut scratch = SplitScratch::default();
+    assert!(build_boundaries(&values, 256, &mut rng, &mut scratch));
+    let bounds = scratch.boundaries.clone();
+    let layout = TwoLevelLayout::for_bins(256).unwrap();
+    let mut coarse = Vec::new();
+    build_coarse(&bounds, layout, &mut coarse);
+
+    let mps = |ns: f64| n as f64 / ns * 1e3;
+
+    // Routing only (paper Fig 6's isolated comparison).
+    let t_route_bin = measure(&opts, || {
+        let mut acc = 0usize;
+        for &v in &values {
+            acc += route_binary_search(v, &bounds, 255);
+        }
+        acc
+    });
+    let t_route_vec = measure(&opts, || {
+        let mut acc = 0usize;
+        for &v in &values {
+            acc += route_16x16(v, &coarse, &bounds);
+        }
+        acc
+    });
+    println!(
+        "route-only: binary {:.1} Melem/s | two-level {:.1} Melem/s | {:.2}x",
+        mps(t_route_bin.median_ns),
+        mps(t_route_vec.median_ns),
+        t_route_bin.median_ns / t_route_vec.median_ns
+    );
+
+    // Full fill (route + class-count scatter).
+    for routing in [Routing::BinarySearch, Routing::TwoLevel] {
+        let t = measure(&opts, || {
+            fill_histogram(&values, &labels, 256, 2, routing, &mut scratch)
+        });
+        println!("fill {routing:?}: {:.1} Melem/s (mad {:.1}%)", mps(t.median_ns), t.mad_ns / t.median_ns * 100.0);
+    }
+}

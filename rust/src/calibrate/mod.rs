@@ -1,0 +1,232 @@
+//! Startup calibration microbenchmark (paper §4.1, Fig 3).
+//!
+//! "The break-even point is determined by a microbenchmark that runs at the
+//! start of training. This takes less than 100 ms to perform a binary
+//! search over reasonable parameters." — we time the three split engines on
+//! synthetic node workloads at a handful of cardinalities and binary-search
+//! the sort↔histogram crossover; when an accelerator is present we do the
+//! same for the CPU↔accelerator crossover.
+
+use crate::bench::{measure, BenchOpts};
+use crate::forest::tree::NodeAccel;
+use crate::rng::Pcg64;
+use crate::split::histogram::Routing;
+use crate::split::{self, SplitCriterion, SplitMethod, SplitScratch, SplitThresholds};
+
+/// Search range for the sort↔histogram crossover (covers every machine the
+/// paper reports: 350–1300).
+const SORT_SEARCH_LO: usize = 32;
+const SORT_SEARCH_HI: usize = 16_384;
+
+/// Cost of one split search at cardinality `n` with `method`, in ns.
+pub fn split_cost_ns(n: usize, method: SplitMethod, n_bins: usize, opts: &BenchOpts) -> f64 {
+    let mut rng = Pcg64::new(0xC0FFEE ^ n as u64);
+    // Synthetic node: Gaussian feature, balanced binary labels with signal —
+    // representative of what real nodes feed the splitter.
+    let (values, labels) = synthetic_node(&mut rng, n);
+    let parent = [n - n / 2, n / 2];
+    let mut scratch = SplitScratch::default();
+    let t = measure(opts, || {
+        split::best_split(
+            method,
+            &values,
+            &labels,
+            &parent,
+            SplitCriterion::Entropy,
+            n_bins,
+            1,
+            &mut rng,
+            &mut scratch,
+        )
+    });
+    t.median_ns
+}
+
+fn synthetic_node(rng: &mut Pcg64, n: usize) -> (Vec<f32>, Vec<u16>) {
+    let mut values = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let l = (i % 2) as u16;
+        values.push(rng.normal() as f32 + if l == 1 { 0.8 } else { 0.0 });
+        labels.push(l);
+    }
+    (values, labels)
+}
+
+/// Binary-search the smallest `n` in `[lo, hi]` where `hist(n) <= sort(n)`.
+/// Both costs are monotone-ish in `n`; the MAD-robust medians plus the
+/// coarse-to-fine search keep single-core jitter from flipping the result.
+fn crossover(
+    lo: usize,
+    hi: usize,
+    n_bins: usize,
+    routing: Routing,
+    opts: &BenchOpts,
+) -> usize {
+    let hist_method = match routing {
+        Routing::BinarySearch => SplitMethod::Histogram,
+        Routing::TwoLevel => SplitMethod::VectorizedHistogram,
+    };
+    let hist_faster = |n: usize| -> bool {
+        split_cost_ns(n, hist_method, n_bins, opts) <= split_cost_ns(n, SplitMethod::Exact, n_bins, opts)
+    };
+    // If histograms never win in range, disable them (sort everywhere).
+    if !hist_faster(hi) {
+        return usize::MAX;
+    }
+    if hist_faster(lo) {
+        return lo;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while hi - lo > lo / 8 + 1 {
+        let mid = (lo + hi) / 2;
+        if hist_faster(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Calibrate the sort↔histogram threshold for the given routing.
+pub fn calibrate_sort_threshold(n_bins: usize, routing: Routing) -> usize {
+    let opts = BenchOpts::calibration();
+    crossover(SORT_SEARCH_LO, SORT_SEARCH_HI, n_bins, routing, &opts)
+}
+
+/// Calibrate the CPU↔accelerator threshold: smallest `n` (power-of-two
+/// sweep) where one accelerator node evaluation beats the CPU vectorized
+/// path on the same workload. `p` is a typical projection count.
+pub fn calibrate_accel_threshold(
+    accel: &mut dyn NodeAccel,
+    p: usize,
+    n_bins: usize,
+    max_n: usize,
+) -> usize {
+    let opts = BenchOpts::calibration();
+    let mut n = 1024usize;
+    while n <= max_n {
+        let mut rng = Pcg64::new(0xACCE1 ^ n as u64);
+        let (values, labels) = synthetic_node(&mut rng, n);
+        let parent = [n - n / 2, n / 2];
+        let mut scratch = SplitScratch::default();
+        // CPU: p vectorized split searches.
+        let cpu_ns = measure(&opts, || {
+            for _ in 0..p {
+                std::hint::black_box(split::best_split(
+                    SplitMethod::VectorizedHistogram,
+                    &values,
+                    &labels,
+                    &parent,
+                    SplitCriterion::Entropy,
+                    n_bins,
+                    1,
+                    &mut rng,
+                    &mut scratch,
+                ));
+            }
+        })
+        .median_ns;
+        // Accelerator: one batched call over p projections.
+        let mut all_values = Vec::with_capacity(p * n);
+        let mut boundaries = Vec::with_capacity(p * n_bins);
+        for _ in 0..p {
+            all_values.extend_from_slice(&values);
+            if crate::split::histogram::build_boundaries(&values, n_bins, &mut rng, &mut scratch)
+            {
+                boundaries.extend_from_slice(&scratch.boundaries);
+            } else {
+                boundaries.extend(std::iter::repeat(f32::INFINITY).take(n_bins));
+            }
+        }
+        let accel_ns = measure(&opts, || {
+            std::hint::black_box(accel.best_node_split(
+                &all_values,
+                p,
+                n,
+                &labels,
+                &boundaries,
+                n_bins,
+                1,
+            ))
+        })
+        .median_ns;
+        if accel_ns <= cpu_ns {
+            return n;
+        }
+        n *= 2;
+    }
+    usize::MAX
+}
+
+/// Full calibration: thresholds for a training run (<100 ms total budget).
+pub fn calibrate(n_bins: usize, routing: Routing) -> SplitThresholds {
+    SplitThresholds {
+        sort_below: calibrate_sort_threshold(n_bins, routing),
+        accel_above: usize::MAX, // set separately when an accelerator exists
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn split_costs_scale_with_n() {
+        let opts = BenchOpts::calibration();
+        let small = split_cost_ns(64, SplitMethod::Exact, 256, &opts);
+        let large = split_cost_ns(8192, SplitMethod::Exact, 256, &opts);
+        assert!(large > small * 5.0, "exact: {small} vs {large}");
+    }
+
+    #[test]
+    fn sort_wins_small_hist_wins_large() {
+        // The paper's core observation (Fig 3 top): at tiny n sorting beats
+        // histograms (fixed setup cost), at large n histograms win.
+        let opts = BenchOpts::calibration();
+        let sort_small = split_cost_ns(64, SplitMethod::Exact, 256, &opts);
+        let hist_small = split_cost_ns(64, SplitMethod::Histogram, 256, &opts);
+        assert!(
+            sort_small < hist_small,
+            "sort {sort_small} should beat hist {hist_small} at n=64"
+        );
+        let sort_large = split_cost_ns(16_384, SplitMethod::Exact, 256, &opts);
+        let hist_large = split_cost_ns(16_384, SplitMethod::VectorizedHistogram, 256, &opts);
+        assert!(
+            hist_large < sort_large,
+            "hist {hist_large} should beat sort {sort_large} at n=16384"
+        );
+    }
+
+    #[test]
+    fn calibration_finds_crossover_in_range_and_fast() {
+        let t0 = Instant::now();
+        let threshold = calibrate_sort_threshold(256, Routing::TwoLevel);
+        let elapsed = t0.elapsed();
+        assert!(
+            threshold >= SORT_SEARCH_LO && threshold <= SORT_SEARCH_HI,
+            "crossover {threshold} out of range"
+        );
+        // Paper: <100ms. Allow slack for debug builds / loaded CI.
+        assert!(
+            elapsed.as_millis() < 3000,
+            "calibration took {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn vectorized_crossover_not_above_binary_search_crossover_much() {
+        // Faster routing ⇒ histograms win earlier (or equal): the vectorized
+        // threshold should not be dramatically larger.
+        let t_bin = calibrate_sort_threshold(256, Routing::BinarySearch);
+        let t_vec = calibrate_sort_threshold(256, Routing::TwoLevel);
+        if t_bin != usize::MAX && t_vec != usize::MAX {
+            assert!(
+                (t_vec as f64) <= (t_bin as f64) * 2.0,
+                "vectorized {t_vec} vs binary {t_bin}"
+            );
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! Command-line interface (hand-rolled — no clap in the offline crate set).
+//!
+//! ```text
+//! soforest train    --data trunk:20000:256 [--config file] [--key value ...]
+//! soforest eval     --data <spec> --test-frac 0.25 [--strategy ...]
+//! soforest calibrate [--bins 256]
+//! soforest might    --data <spec> [--trees N] [--replicates R]
+//! soforest gen-data --data <spec> --out file.csv
+//! soforest info     [--artifacts dir]
+//! ```
+
+use crate::config::ForestConfig;
+use crate::data::synth;
+use crate::data::{csv, Dataset};
+use crate::might::{metrics, train_might, MightConfig};
+use crate::rng::Pcg64;
+use crate::split::histogram::Routing;
+use crate::{accel, calibrate, coordinator, forest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed `--key value` flags.
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let command = argv
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing command\n{}", USAGE))?;
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {:?}", argv[i]))?;
+            let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string() // bare flag
+            };
+            flags.insert(key.to_string(), value);
+            i += 1;
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Build a ForestConfig from `--config file` plus any recognized flags.
+    pub fn forest_config(&self) -> Result<ForestConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ForestConfig::load(Path::new(path))?,
+            None => ForestConfig::default(),
+        };
+        for (k, v) in &self.flags {
+            // Flags that are not config keys are handled by the commands.
+            if matches!(
+                k.as_str(),
+                "data" | "config" | "out" | "test-frac" | "seed" | "replicates" | "list"
+                    | "artifacts" | "model" | "oob" | "repeats" | "top"
+            ) {
+                continue;
+            }
+            cfg.set(k, v)
+                .with_context(|| format!("flag --{k} {v}"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+pub const USAGE: &str = "\
+soforest — sparse oblique forests with vectorized adaptive histograms
+
+USAGE: soforest <command> [--flag value ...]
+
+COMMANDS:
+  train      train a forest; --out saves the model; --oob adds OOB accuracy
+  eval       train on a split, report holdout accuracy (+ RF baseline)
+  predict    load a model (--model) and classify --data (--out preds.csv)
+  importance permutation feature importance of a trained model
+  calibrate  run the §4.1 microbenchmark, print thresholds
+  might      run the MIGHT honest-forest protocol, report AUC / S@98
+  gen-data   materialize a synthetic dataset to CSV
+  info       show artifact / accelerator status
+  help       this text
+
+COMMON FLAGS:
+  --data <spec>     dataset: generator spec (trunk:100000:256, higgs:50000,
+                    susy, epsilon, bank-marketing, ...) or path to a CSV
+  --config <file>   key = value config file
+  --seed <u64>      RNG seed (default 42)
+  plus any config key, e.g. --trees 240 --strategy dynamic-vectorized
+  --strategy        exact | histogram | vectorized | dynamic |
+                    dynamic-vectorized | hybrid
+";
+
+/// Load `--data`: a generator spec or a CSV path.
+pub fn load_data(args: &Args, rng: &mut Pcg64) -> Result<Dataset> {
+    let spec = args
+        .get("data")
+        .ok_or_else(|| anyhow!("--data is required"))?;
+    if Path::new(spec).exists() {
+        csv::load_csv(Path::new(spec), csv::LabelColumn::Last, true)
+    } else {
+        synth::generate(spec, rng)
+    }
+}
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "predict" => cmd_predict(&args),
+        "importance" => cmd_importance(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "might" => cmd_might(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn auto_thresholds(cfg: &mut ForestConfig) {
+    if cfg.auto_calibrate {
+        let routing = match cfg.strategy {
+            crate::split::SplitStrategy::Dynamic => Routing::BinarySearch,
+            _ => Routing::TwoLevel,
+        };
+        let t = calibrate::calibrate(cfg.n_bins, routing);
+        cfg.thresholds.sort_below = t.sort_below;
+        eprintln!("[calibrate] sort_below = {}", t.sort_below);
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let mut cfg = args.forest_config()?;
+    let mut rng = Pcg64::new(seed);
+    let data = load_data(args, &mut rng)?;
+    eprintln!(
+        "[data] {} samples x {} features, {} classes, {:.1} MB",
+        data.n_samples(),
+        data.n_features(),
+        data.n_classes(),
+        data.nbytes() as f64 / 1e6
+    );
+    auto_thresholds(&mut cfg);
+    let want_oob = args.get("oob").is_some();
+    let (forest_out, bags) = if want_oob {
+        let oob = forest::evaluate::train_with_bags(&data, &cfg, seed);
+        (None, Some(oob))
+    } else {
+        (
+            Some(coordinator::train_forest_with_source(
+                &data,
+                &cfg,
+                seed,
+                forest::tree::ProjectionSource::SparseOblique,
+            )),
+            None,
+        )
+    };
+    let trained = match (&forest_out, &bags) {
+        (Some(o), _) => &o.forest,
+        (_, Some(b)) => &b.forest,
+        _ => unreachable!(),
+    };
+    if let Some(o) = &forest_out {
+        println!(
+            "trained {} trees ({} strategy) in {:.3}s  nodes={} mean_depth={:.1} accel_nodes={}",
+            o.forest.n_trees(),
+            cfg.strategy.name(),
+            o.wall_s,
+            o.forest.n_nodes(),
+            o.forest.mean_depth(),
+            o.accel_nodes,
+        );
+        if cfg.instrument {
+            println!("{}", o.stats.depth_table());
+        }
+    }
+    println!("train accuracy: {:.4}", trained.accuracy(&data));
+    if let Some(oob) = &bags {
+        let (acc, cov) = oob.oob_accuracy(&data);
+        println!("OOB accuracy: {acc:.4} (coverage {cov:.3})");
+    }
+    if let Some(path) = args.get("out") {
+        forest::serialize::save(trained, Path::new(path))?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model <file> is required"))?;
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let mut rng = Pcg64::new(seed);
+    let forest = forest::serialize::load(Path::new(model_path))?;
+    let data = load_data(args, &mut rng)?;
+    if data.n_features() != forest.n_features {
+        bail!(
+            "model expects {} features, data has {}",
+            forest.n_features,
+            data.n_features()
+        );
+    }
+    let packed = forest::PackedForest::from_forest(&forest);
+    let n = data.n_samples();
+    let d = data.n_features();
+    let mut rows = vec![0f32; n * d];
+    let mut row = Vec::new();
+    for s in 0..n {
+        data.row(s, &mut row);
+        rows[s * d..(s + 1) * d].copy_from_slice(&row);
+    }
+    let t0 = std::time::Instant::now();
+    let preds = packed.predict_batch(&rows, n);
+    let dt = t0.elapsed();
+    let acc = preds
+        .iter()
+        .zip(data.labels())
+        .filter(|(p, l)| p == l)
+        .count() as f64
+        / n as f64;
+    println!(
+        "predicted {n} samples in {dt:?} ({:.0} samples/s, packed model {:.1} kB)",
+        n as f64 / dt.as_secs_f64(),
+        packed.nbytes() as f64 / 1e3
+    );
+    println!("accuracy vs labels in file: {acc:.4}");
+    if let Some(out) = args.get("out") {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        writeln!(w, "prediction")?;
+        for p in &preds {
+            writeln!(w, "{p}")?;
+        }
+        println!("predictions written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_importance(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let repeats: usize = args.get_parse("repeats", 3)?;
+    let top: usize = args.get_parse("top", 15)?;
+    let cfg = args.forest_config()?;
+    let mut rng = Pcg64::new(seed);
+    let data = load_data(args, &mut rng)?;
+    let forest = match args.get("model") {
+        Some(p) => forest::serialize::load(Path::new(p))?,
+        None => coordinator::train_forest(&data, &cfg, seed),
+    };
+    let imp = forest::evaluate::permutation_importance(&forest, &data, repeats, seed);
+    let mut order: Vec<usize> = (0..imp.len()).collect();
+    order.sort_by(|&a, &b| imp[b].total_cmp(&imp[a]));
+    println!("top {} features by permutation importance:", top.min(imp.len()));
+    for &f in order.iter().take(top) {
+        let name = data
+            .feature_names()
+            .get(f)
+            .cloned()
+            .unwrap_or_else(|| format!("feature_{f}"));
+        println!("  {name:<24} {:+.4}", imp[f]);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let test_frac: f64 = args.get_parse("test-frac", 0.25)?;
+    let mut cfg = args.forest_config()?;
+    let mut rng = Pcg64::new(seed);
+    let data = load_data(args, &mut rng)?;
+    // Shuffled split.
+    let mut idx: Vec<u32> = (0..data.n_samples() as u32).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((data.n_samples() as f64) * test_frac) as usize;
+    let test = data.subset(&idx[..n_test]);
+    let train = data.subset(&idx[n_test..]);
+    auto_thresholds(&mut cfg);
+
+    let out = coordinator::train_forest_with_source(
+        &train,
+        &cfg,
+        seed,
+        forest::tree::ProjectionSource::SparseOblique,
+    );
+    println!(
+        "SO-{}: train {:.2}s, test accuracy {:.4}",
+        cfg.strategy.name(),
+        out.wall_s,
+        out.forest.accuracy(&test)
+    );
+    let t0 = std::time::Instant::now();
+    let rf = forest::axis_aligned::train_rf(&train, &cfg, seed);
+    println!(
+        "RF (axis-aligned exact): train {:.2}s, test accuracy {:.4}",
+        t0.elapsed().as_secs_f64(),
+        rf.accuracy(&test)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let bins: usize = args.get_parse("bins", 256)?;
+    let t0 = std::time::Instant::now();
+    let t_bin = calibrate::calibrate_sort_threshold(bins, Routing::BinarySearch);
+    let t_vec = calibrate::calibrate_sort_threshold(bins, Routing::TwoLevel);
+    println!(
+        "sort<->histogram crossover ({} bins): binary-search routing {} | vectorized routing {}",
+        bins,
+        fmt_threshold(t_bin),
+        fmt_threshold(t_vec)
+    );
+    // Accelerator crossover, if artifacts exist.
+    let dir = args.get_or("artifacts", "artifacts");
+    match accel::NodeSplitAccel::try_load(Path::new(&dir)) {
+        Ok(mut a) => {
+            let t_accel = calibrate::calibrate_accel_threshold(&mut a, 16, 256, 1 << 17);
+            println!("cpu<->accelerator crossover: {}", fmt_threshold(t_accel));
+        }
+        Err(e) => println!("accelerator unavailable ({e})"),
+    }
+    println!("calibration took {:?}", t0.elapsed());
+    Ok(())
+}
+
+fn fmt_threshold(t: usize) -> String {
+    if t == usize::MAX {
+        "never".to_string()
+    } else {
+        t.to_string()
+    }
+}
+
+fn cmd_might(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let replicates: usize = args.get_parse("replicates", 3)?;
+    let cfg = args.forest_config()?;
+    let mut rng = Pcg64::new(seed);
+    let data = load_data(args, &mut rng)?;
+    let mut aucs = Vec::new();
+    let mut s98s = Vec::new();
+    for r in 0..replicates {
+        let mf = train_might(&data, &cfg, &MightConfig::default(), seed + r as u64);
+        let pairs = mf.scored_pairs(&data);
+        let auc = metrics::roc_auc(&pairs);
+        let s98 = metrics::sensitivity_at_specificity(&pairs, 0.98);
+        println!("replicate {r}: AUC {auc:.4}  S@98 {s98:.4}");
+        aucs.push(auc);
+        s98s.push(s98);
+    }
+    if replicates > 1 {
+        println!(
+            "CoV: AUC {:.4}  S@98 {:.4}",
+            metrics::coefficient_of_variation(&aucs),
+            metrics::coefficient_of_variation(&s98s)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    if args.get("list").is_some() {
+        println!("available generators: {}", synth::ALL.join(", "));
+        return Ok(());
+    }
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out <file.csv> is required"))?;
+    let mut rng = Pcg64::new(seed);
+    let data = load_data(args, &mut rng)?;
+    csv::save_csv(&data, Path::new(out))?;
+    println!(
+        "wrote {} samples x {} features to {out}",
+        data.n_samples(),
+        data.n_features()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("soforest {}", env!("CARGO_PKG_VERSION"));
+    println!("threads available: {}", ForestConfig::default().threads());
+    match accel::NodeSplitAccel::try_load(Path::new(&dir)) {
+        Ok(a) => {
+            println!("accelerator: PJRT {} — buckets:", a.platform());
+            for b in a.buckets() {
+                println!("  p={} n={}", b.p, b.n);
+            }
+        }
+        Err(e) => println!("accelerator: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_bare_flags() {
+        let a = Args::parse(&argv(&["train", "--data", "trunk:100", "--instrument"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("data"), Some("trunk:100"));
+        assert_eq!(a.get("instrument"), Some("true"));
+        assert_eq!(a.get_or("seed", "42"), "42");
+    }
+
+    #[test]
+    fn forest_config_from_flags() {
+        let a = Args::parse(&argv(&[
+            "train", "--data", "x", "--trees", "5", "--strategy", "exact", "--seed", "9",
+        ]))
+        .unwrap();
+        let cfg = a.forest_config().unwrap();
+        assert_eq!(cfg.n_trees, 5);
+        assert_eq!(cfg.strategy, crate::split::SplitStrategy::Exact);
+    }
+
+    #[test]
+    fn bad_flag_is_error() {
+        let a = Args::parse(&argv(&["train", "--data", "x", "--bogus", "1"])).unwrap();
+        assert!(a.forest_config().is_err());
+        assert!(Args::parse(&argv(&["train", "nodashes"])).is_err());
+        assert!(Args::parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn run_small_train_roundtrip() {
+        run(&argv(&[
+            "train", "--data", "trunk:200:8", "--trees", "3", "--threads", "1",
+        ]))
+        .unwrap();
+    }
+}

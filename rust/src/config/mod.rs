@@ -1,0 +1,240 @@
+//! Training configuration.
+//!
+//! One struct carries every knob of the trainer; the CLI builds it from
+//! `--key value` flags and/or a `key = value` config file (a TOML subset —
+//! the offline crate set has no serde, so parsing is done here). Every field
+//! has a paper-faithful default.
+
+use crate::projection::{ProjectionConfig, SamplerKind, WeightScheme};
+use crate::split::{SplitCriterion, SplitStrategy, SplitThresholds};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// All hyper-parameters of a forest training run.
+#[derive(Clone, Debug)]
+pub struct ForestConfig {
+    /// Number of trees (paper: 240 CPU / 128 GPU experiments).
+    pub n_trees: usize,
+    /// Split strategy (paper headline: `DynamicVectorized`).
+    pub strategy: SplitStrategy,
+    /// Histogram bins (paper default 256; 64 exercises the 8×8 variant).
+    pub n_bins: usize,
+    /// Minimum samples per leaf (1 = train to purity, the MIGHT regime).
+    pub min_leaf: usize,
+    /// Maximum depth; 0 = unlimited (purity).
+    pub max_depth: usize,
+    /// Split criterion (YDF uses entropy).
+    pub criterion: SplitCriterion,
+    /// Fraction of samples bagged per tree (paper: 50–80%).
+    pub bootstrap_fraction: f64,
+    /// Bagging with replacement (classic RF) or honest subsampling.
+    pub with_replacement: bool,
+    /// Sparse projection sampler parameters.
+    pub projection: ProjectionConfig,
+    /// Projection sampling algorithm (paper default: Floyd, Appendix A.1).
+    pub sampler: SamplerKind,
+    /// Worker threads (0 = all available).
+    pub n_threads: usize,
+    /// Cardinality thresholds; `auto_calibrate` replaces them at startup.
+    pub thresholds: SplitThresholds,
+    /// Run the §4.1 calibration microbenchmark before training.
+    pub auto_calibrate: bool,
+    /// Directory with AOT artifacts for the hybrid strategy.
+    pub artifacts_dir: String,
+    /// Record per-depth/component instrumentation (small overhead).
+    pub instrument: bool,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        Self {
+            n_trees: 100,
+            strategy: SplitStrategy::DynamicVectorized,
+            n_bins: 256,
+            min_leaf: 1,
+            max_depth: 0,
+            criterion: SplitCriterion::Entropy,
+            bootstrap_fraction: 0.67,
+            with_replacement: false,
+            projection: ProjectionConfig::default(),
+            sampler: SamplerKind::Floyd,
+            n_threads: 0,
+            thresholds: SplitThresholds::default(),
+            auto_calibrate: false,
+            artifacts_dir: "artifacts".to_string(),
+            instrument: false,
+        }
+    }
+}
+
+impl ForestConfig {
+    /// Effective thread count.
+    pub fn threads(&self) -> usize {
+        if self.n_threads > 0 {
+            self.n_threads
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        }
+    }
+
+    /// Apply one `key = value` assignment (shared by file + CLI parsing).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key.trim() {
+            "n_trees" | "trees" => self.n_trees = v.parse().context("n_trees")?,
+            "strategy" => {
+                self.strategy = SplitStrategy::parse(v)
+                    .with_context(|| format!("unknown strategy {v:?}"))?
+            }
+            "n_bins" | "bins" => {
+                self.n_bins = v.parse().context("n_bins")?;
+                if self.n_bins < 2 {
+                    bail!("n_bins must be >= 2");
+                }
+            }
+            "min_leaf" => self.min_leaf = v.parse().context("min_leaf")?,
+            "max_depth" => self.max_depth = v.parse().context("max_depth")?,
+            "criterion" => {
+                self.criterion = SplitCriterion::parse(v)
+                    .with_context(|| format!("unknown criterion {v:?}"))?
+            }
+            "bootstrap_fraction" => {
+                self.bootstrap_fraction = v.parse().context("bootstrap_fraction")?;
+                if !(0.0..=1.0).contains(&self.bootstrap_fraction) {
+                    bail!("bootstrap_fraction must be in [0,1]");
+                }
+            }
+            "with_replacement" => self.with_replacement = parse_bool(v)?,
+            "row_factor" => self.projection.row_factor = v.parse().context("row_factor")?,
+            "nnz_factor" => self.projection.nnz_factor = v.parse().context("nnz_factor")?,
+            "weights" => {
+                self.projection.weights = match v {
+                    "rademacher" | "pm1" => WeightScheme::Rademacher,
+                    "uniform" => WeightScheme::Uniform,
+                    _ => bail!("unknown weight scheme {v:?}"),
+                }
+            }
+            "sampler" => {
+                self.sampler = match v {
+                    "naive" => SamplerKind::Naive,
+                    "floyd" => SamplerKind::Floyd,
+                    _ => bail!("unknown sampler {v:?}"),
+                }
+            }
+            "threads" | "n_threads" => self.n_threads = v.parse().context("threads")?,
+            "sort_below" => self.thresholds.sort_below = v.parse().context("sort_below")?,
+            "accel_above" => {
+                self.thresholds.accel_above = if v == "off" {
+                    usize::MAX
+                } else {
+                    v.parse().context("accel_above")?
+                }
+            }
+            "auto_calibrate" | "calibrate" => self.auto_calibrate = parse_bool(v)?,
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "instrument" => self.instrument = parse_bool(v)?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines from a config file. `#` starts a comment.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read config {path:?}"))?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue; // section headers are decorative
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("{path:?}:{}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            cfg.set(k, v)
+                .with_context(|| format!("{path:?}:{}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => bail!("expected boolean, got {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_faithful() {
+        let c = ForestConfig::default();
+        assert_eq!(c.n_bins, 256);
+        assert_eq!(c.min_leaf, 1); // train to purity
+        assert_eq!(c.strategy, SplitStrategy::DynamicVectorized);
+        assert_eq!(c.sampler, SamplerKind::Floyd);
+        assert!((c.projection.row_factor - 1.5).abs() < 1e-12);
+        assert!((c.projection.nnz_factor - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_all_keys() {
+        let mut c = ForestConfig::default();
+        for (k, v) in [
+            ("n_trees", "7"),
+            ("strategy", "hybrid"),
+            ("bins", "64"),
+            ("min_leaf", "5"),
+            ("max_depth", "12"),
+            ("criterion", "gini"),
+            ("bootstrap_fraction", "0.5"),
+            ("with_replacement", "true"),
+            ("row_factor", "2.0"),
+            ("nnz_factor", "4.0"),
+            ("weights", "uniform"),
+            ("sampler", "naive"),
+            ("threads", "3"),
+            ("sort_below", "777"),
+            ("accel_above", "30000"),
+            ("instrument", "on"),
+        ] {
+            c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
+        }
+        assert_eq!(c.n_trees, 7);
+        assert_eq!(c.strategy, SplitStrategy::Hybrid);
+        assert_eq!(c.n_bins, 64);
+        assert_eq!(c.thresholds.sort_below, 777);
+        assert_eq!(c.thresholds.accel_above, 30_000);
+        assert!(c.instrument);
+        c.set("accel_above", "off").unwrap();
+        assert_eq!(c.thresholds.accel_above, usize::MAX);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = ForestConfig::default();
+        assert!(c.set("strategy", "quantum").is_err());
+        assert!(c.set("bins", "1").is_err());
+        assert!(c.set("bootstrap_fraction", "1.5").is_err());
+        assert!(c.set("no_such_key", "1").is_err());
+    }
+
+    #[test]
+    fn load_config_file() {
+        let tmp = std::env::temp_dir().join("soforest_cfg_test.toml");
+        std::fs::write(
+            &tmp,
+            "[forest]\nn_trees = 33 # comment\nstrategy = \"dynamic\"\n\nbins=64\n",
+        )
+        .unwrap();
+        let c = ForestConfig::load(&tmp).unwrap();
+        assert_eq!(c.n_trees, 33);
+        assert_eq!(c.strategy, SplitStrategy::Dynamic);
+        assert_eq!(c.n_bins, 64);
+        std::fs::remove_file(tmp).ok();
+    }
+}

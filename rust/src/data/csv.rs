@@ -1,0 +1,144 @@
+//! Minimal CSV load/save for external datasets.
+//!
+//! Supports the UCI-style layout the paper's datasets use: one sample per
+//! line, numeric features, label in a configurable column (first or last),
+//! optional header. No quoting/escaping — these files are purely numeric.
+
+use super::{Dataset, Label};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Where the label lives in each row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelColumn {
+    First,
+    Last,
+}
+
+/// Load a numeric CSV. `has_header` skips (and records) the first line.
+pub fn load_csv(path: &Path, label: LabelColumn, has_header: bool) -> Result<Dataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let mut header: Vec<String> = Vec::new();
+    if has_header {
+        if let Some(h) = lines.next() {
+            header = h?.split(',').map(|s| s.trim().to_string()).collect();
+        }
+    }
+    let mut columns: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<Label> = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 2 {
+            bail!("line {}: need at least 2 fields", lineno + 1);
+        }
+        let (label_str, feats): (&str, &[&str]) = match label {
+            LabelColumn::First => (fields[0], &fields[1..]),
+            LabelColumn::Last => (fields[fields.len() - 1], &fields[..fields.len() - 1]),
+        };
+        if columns.is_empty() {
+            columns = vec![Vec::new(); feats.len()];
+        } else if columns.len() != feats.len() {
+            bail!(
+                "line {}: {} features, expected {}",
+                lineno + 1,
+                feats.len(),
+                columns.len()
+            );
+        }
+        // Labels may be written as floats (HIGGS uses "1.000000000000000e+00").
+        let lab_f: f64 = label_str
+            .parse()
+            .with_context(|| format!("line {}: bad label {label_str:?}", lineno + 1))?;
+        labels.push(lab_f as Label);
+        for (f, v) in feats.iter().enumerate() {
+            columns[f].push(
+                v.parse()
+                    .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?,
+            );
+        }
+    }
+    if labels.is_empty() {
+        bail!("{path:?} contains no samples");
+    }
+    let mut ds = Dataset::from_columns(columns, labels);
+    if !header.is_empty() {
+        let names: Vec<String> = match label {
+            LabelColumn::First => header[1..].to_vec(),
+            LabelColumn::Last => header[..header.len() - 1].to_vec(),
+        };
+        if names.len() == ds.n_features() {
+            ds = ds.with_feature_names(names);
+        }
+    }
+    Ok(ds)
+}
+
+/// Save a dataset as CSV with the label in the last column.
+pub fn save_csv(data: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    // Always write a header (generated names if the dataset has none) so
+    // `load_csv(..., has_header = true)` round-trips without losing a row.
+    if data.feature_names().is_empty() {
+        let names: Vec<String> = (0..data.n_features()).map(|f| format!("f{f}")).collect();
+        writeln!(w, "{},label", names.join(","))?;
+    } else {
+        writeln!(w, "{},label", data.feature_names().join(","))?;
+    }
+    let mut row = Vec::new();
+    for s in 0..data.n_samples() {
+        data.row(s, &mut row);
+        for v in &row {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", data.label(s))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let d = Dataset::from_columns(
+            vec![vec![1.5, 2.5], vec![-3.0, 4.0]],
+            vec![0, 1],
+        )
+        .with_feature_names(vec!["a".into(), "b".into()]);
+        let tmp = std::env::temp_dir().join("soforest_csv_roundtrip.csv");
+        save_csv(&d, &tmp).unwrap();
+        let back = load_csv(&tmp, LabelColumn::Last, true).unwrap();
+        assert_eq!(back.n_samples(), 2);
+        assert_eq!(back.n_features(), 2);
+        assert_eq!(back.column(0), d.column(0));
+        assert_eq!(back.labels(), d.labels());
+        assert_eq!(back.feature_names(), d.feature_names());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn label_first_and_float_labels() {
+        let tmp = std::env::temp_dir().join("soforest_csv_first.csv");
+        std::fs::write(&tmp, "1.000e+00,0.5,0.25\n0.0,1.5,2.5\n").unwrap();
+        let d = load_csv(&tmp, LabelColumn::First, false).unwrap();
+        assert_eq!(d.labels(), &[1, 0]);
+        assert_eq!(d.column(0), &[0.5, 1.5]);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let tmp = std::env::temp_dir().join("soforest_csv_ragged.csv");
+        std::fs::write(&tmp, "0,1,2\n0,1\n").unwrap();
+        assert!(load_csv(&tmp, LabelColumn::Last, false).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,281 @@
+//! Columnar dataset store.
+//!
+//! SO-YDF (and this reproduction) keeps the training table in a
+//! **feature-major** layout: each feature's values are contiguous, so the
+//! sparse projection step (gather `n` active samples from each of ~`3√d`
+//! member columns) touches a handful of dense arrays instead of striding
+//! through row-major memory. The table is immutable during training; nodes
+//! address it through index sets of *active samples* (see [`ActiveSet`]).
+
+pub mod csv;
+pub mod transform;
+pub mod sampling;
+pub mod synth;
+
+/// Class label type. Two-class problems dominate the paper's evaluation but
+/// the library supports up to 65k classes.
+pub type Label = u16;
+
+/// An immutable, feature-major table of `f32` features plus labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `columns[f][s]` = value of feature `f` for sample `s`.
+    columns: Vec<Vec<f32>>,
+    labels: Vec<Label>,
+    n_classes: usize,
+    /// Optional feature names (CSV header); empty if unnamed.
+    feature_names: Vec<String>,
+}
+
+impl Dataset {
+    /// Build from feature-major columns. All columns must have equal length.
+    pub fn from_columns(columns: Vec<Vec<f32>>, labels: Vec<Label>) -> Self {
+        let n = labels.len();
+        for (f, col) in columns.iter().enumerate() {
+            assert_eq!(col.len(), n, "column {f} length {} != {n}", col.len());
+        }
+        let n_classes = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+        Self {
+            columns,
+            labels,
+            n_classes,
+            feature_names: Vec::new(),
+        }
+    }
+
+    /// Build from a row-major buffer (`rows[s * d + f]`).
+    pub fn from_rows(rows: &[f32], n_features: usize, labels: Vec<Label>) -> Self {
+        let n = labels.len();
+        assert_eq!(rows.len(), n * n_features);
+        let mut columns = vec![vec![0f32; n]; n_features];
+        for s in 0..n {
+            for f in 0..n_features {
+                columns[f][s] = rows[s * n_features + f];
+            }
+        }
+        Self::from_columns(columns, labels)
+    }
+
+    pub fn with_feature_names(mut self, names: Vec<String>) -> Self {
+        assert_eq!(names.len(), self.n_features());
+        self.feature_names = names;
+        self
+    }
+
+    /// Force the class count (e.g. when a split of the data happens to miss
+    /// the last class).
+    pub fn with_n_classes(mut self, n_classes: usize) -> Self {
+        assert!(n_classes > self.labels.iter().copied().max().unwrap_or(0) as usize);
+        self.n_classes = n_classes;
+        self
+    }
+
+    #[inline]
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.columns.len()
+    }
+
+    #[inline]
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    #[inline]
+    pub fn column(&self, f: usize) -> &[f32] {
+        &self.columns[f]
+    }
+
+    #[inline]
+    pub fn labels(&self) -> &[Label] {
+        &self.labels
+    }
+
+    #[inline]
+    pub fn label(&self, s: usize) -> Label {
+        self.labels[s]
+    }
+
+    #[inline]
+    pub fn value(&self, s: usize, f: usize) -> f32 {
+        self.columns[f][s]
+    }
+
+    pub fn feature_names(&self) -> &[String] {
+        &self.feature_names
+    }
+
+    /// Gather one sample as a dense row (prediction path).
+    pub fn row(&self, s: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.columns.iter().map(|c| c[s]));
+    }
+
+    /// Class frequency vector over the whole table.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Select a subset of samples into a new (materialized) dataset. Used by
+    /// the MIGHT protocol to carve out calibration/validation sets, never on
+    /// the per-node hot path.
+    pub fn subset(&self, indices: &[u32]) -> Dataset {
+        let columns = self
+            .columns
+            .iter()
+            .map(|col| indices.iter().map(|&i| col[i as usize]).collect())
+            .collect();
+        let labels = indices.iter().map(|&i| self.labels[i as usize]).collect();
+        Dataset {
+            columns,
+            labels,
+            n_classes: self.n_classes,
+            feature_names: self.feature_names.clone(),
+        }
+    }
+
+    /// Approximate in-memory size in bytes (reported by the CLI, mirrors the
+    /// "Model" column of the paper's Table 1).
+    pub fn nbytes(&self) -> usize {
+        self.columns.len() * self.n_samples() * std::mem::size_of::<f32>()
+            + self.labels.len() * std::mem::size_of::<Label>()
+    }
+}
+
+/// The set of samples active at a tree node, as indices into the [`Dataset`].
+///
+/// Nodes never materialize data; they own a `Vec<u32>` of sample ids that is
+/// split in place (stable partition) when the node splits. `u32` halves the
+/// cache traffic versus `usize` and caps the table at 4G samples, far above
+/// anything the paper trains.
+#[derive(Clone, Debug, Default)]
+pub struct ActiveSet {
+    pub indices: Vec<u32>,
+}
+
+impl ActiveSet {
+    pub fn full(n: usize) -> Self {
+        Self {
+            indices: (0..n as u32).collect(),
+        }
+    }
+
+    pub fn from_vec(indices: Vec<u32>) -> Self {
+        Self { indices }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Class histogram of the active samples.
+    pub fn class_counts(&self, data: &Dataset) -> Vec<usize> {
+        let mut counts = vec![0usize; data.n_classes()];
+        let labels = data.labels();
+        for &i in &self.indices {
+            counts[labels[i as usize] as usize] += 1;
+        }
+        counts
+    }
+
+    /// True iff all active samples share one class (purity stop condition).
+    pub fn is_pure(&self, data: &Dataset) -> bool {
+        let labels = data.labels();
+        match self.indices.first() {
+            None => true,
+            Some(&first) => {
+                let l0 = labels[first as usize];
+                self.indices.iter().all(|&i| labels[i as usize] == l0)
+            }
+        }
+    }
+
+    /// Stable partition by a predicate on sample id: samples satisfying
+    /// `pred` go left. Returns (left, right) without touching the dataset.
+    pub fn partition(&self, mut pred: impl FnMut(u32) -> bool) -> (ActiveSet, ActiveSet) {
+        let mut left = Vec::with_capacity(self.indices.len() / 2);
+        let mut right = Vec::with_capacity(self.indices.len() / 2);
+        for &i in &self.indices {
+            if pred(i) {
+                left.push(i);
+            } else {
+                right.push(i);
+            }
+        }
+        (ActiveSet::from_vec(left), ActiveSet::from_vec(right))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::from_columns(
+            vec![vec![0.0, 1.0, 2.0, 3.0], vec![5.0, 4.0, 3.0, 2.0]],
+            vec![0, 0, 1, 1],
+        )
+    }
+
+    #[test]
+    fn columnar_roundtrip_from_rows() {
+        let rows = [0.0, 5.0, 1.0, 4.0, 2.0, 3.0, 3.0, 2.0];
+        let d = Dataset::from_rows(&rows, 2, vec![0, 0, 1, 1]);
+        assert_eq!(d.column(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(d.column(1), &[5.0, 4.0, 3.0, 2.0]);
+        assert_eq!(d.value(3, 1), 2.0);
+    }
+
+    #[test]
+    fn class_accounting() {
+        let d = toy();
+        assert_eq!(d.n_classes(), 2);
+        assert_eq!(d.class_counts(), vec![2, 2]);
+        let a = ActiveSet::from_vec(vec![0, 2]);
+        assert_eq!(a.class_counts(&d), vec![1, 1]);
+        assert!(!a.is_pure(&d));
+        assert!(ActiveSet::from_vec(vec![2, 3]).is_pure(&d));
+        assert!(ActiveSet::default().is_pure(&d));
+    }
+
+    #[test]
+    fn partition_is_stable_and_complete() {
+        let a = ActiveSet::full(10);
+        let (l, r) = a.partition(|i| i % 3 == 0);
+        assert_eq!(l.indices, vec![0, 3, 6, 9]);
+        assert_eq!(r.indices, vec![1, 2, 4, 5, 7, 8]);
+        assert_eq!(l.len() + r.len(), 10);
+    }
+
+    #[test]
+    fn subset_preserves_columns_and_classes() {
+        let d = toy();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n_samples(), 2);
+        assert_eq!(s.column(0), &[2.0, 0.0]);
+        assert_eq!(s.labels(), &[1, 0]);
+        assert_eq!(s.n_classes(), 2);
+    }
+
+    #[test]
+    fn row_gather() {
+        let d = toy();
+        let mut row = Vec::new();
+        d.row(1, &mut row);
+        assert_eq!(row, vec![1.0, 4.0]);
+    }
+}

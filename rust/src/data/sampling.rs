@@ -1,0 +1,174 @@
+//! Bootstrap and honest-split sampling.
+//!
+//! MIGHT (§2 of the paper) divides each tree's bootstrap into three disjoint
+//! roles: *training* (structure search), *calibration* (posterior fitting at
+//! the leaves) and *validation* (scoring). [`might_split`] produces that
+//! three-way split; plain forests use [`bootstrap`] / [`subsample`].
+
+use super::{ActiveSet, Dataset};
+use crate::rng::Pcg64;
+
+/// Sample `k` ids from `[0, n)` **with replacement** (classic bagging).
+pub fn bootstrap(rng: &mut Pcg64, n: usize, k: usize) -> ActiveSet {
+    let mut idx = Vec::with_capacity(k);
+    for _ in 0..k {
+        idx.push(rng.index(n) as u32);
+    }
+    ActiveSet::from_vec(idx)
+}
+
+/// Sample `k` distinct ids from `[0, n)` **without replacement** (honest
+/// subsampling — what MIGHT uses so the three roles can be disjoint).
+pub fn subsample(rng: &mut Pcg64, n: usize, k: usize) -> ActiveSet {
+    assert!(k <= n);
+    // Partial Fisher–Yates over an index buffer.
+    let mut pool: Vec<u32> = (0..n as u32).collect();
+    for i in 0..k {
+        let j = i + rng.index(n - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    ActiveSet::from_vec(pool)
+}
+
+/// Stratified subsample: preserves class proportions (± rounding).
+pub fn stratified_subsample(
+    rng: &mut Pcg64,
+    data: &Dataset,
+    fraction: f64,
+) -> ActiveSet {
+    assert!((0.0..=1.0).contains(&fraction));
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); data.n_classes()];
+    for (i, &l) in data.labels().iter().enumerate() {
+        by_class[l as usize].push(i as u32);
+    }
+    let mut out = Vec::new();
+    for ids in by_class.iter_mut() {
+        rng.shuffle(ids);
+        let take = ((ids.len() as f64) * fraction).round() as usize;
+        out.extend_from_slice(&ids[..take.min(ids.len())]);
+    }
+    rng.shuffle(&mut out);
+    ActiveSet::from_vec(out)
+}
+
+/// The three disjoint per-tree roles of the MIGHT protocol.
+#[derive(Clone, Debug)]
+pub struct MightSplit {
+    pub train: ActiveSet,
+    pub calibrate: ActiveSet,
+    pub validate: ActiveSet,
+}
+
+/// Split a subsample of `total_fraction`·n samples into train / calibrate /
+/// validate with the given proportions (which must sum to 1). Stratified by
+/// class so small calibration sets still see both classes.
+pub fn might_split(
+    rng: &mut Pcg64,
+    data: &Dataset,
+    total_fraction: f64,
+    proportions: [f64; 3],
+) -> MightSplit {
+    let psum: f64 = proportions.iter().sum();
+    assert!((psum - 1.0).abs() < 1e-9, "proportions must sum to 1");
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); data.n_classes()];
+    for (i, &l) in data.labels().iter().enumerate() {
+        by_class[l as usize].push(i as u32);
+    }
+    let mut parts: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for ids in by_class.iter_mut() {
+        rng.shuffle(ids);
+        let take = ((ids.len() as f64) * total_fraction).round() as usize;
+        let taken = &ids[..take.min(ids.len())];
+        let n_train = (taken.len() as f64 * proportions[0]).round() as usize;
+        let n_cal = (taken.len() as f64 * proportions[1]).round() as usize;
+        let n_cal_end = (n_train + n_cal).min(taken.len());
+        parts[0].extend_from_slice(&taken[..n_train.min(taken.len())]);
+        parts[1].extend_from_slice(&taken[n_train.min(taken.len())..n_cal_end]);
+        parts[2].extend_from_slice(&taken[n_cal_end..]);
+    }
+    for p in parts.iter_mut() {
+        rng.shuffle(p);
+    }
+    let [train, calibrate, validate] = parts;
+    MightSplit {
+        train: ActiveSet::from_vec(train),
+        calibrate: ActiveSet::from_vec(calibrate),
+        validate: ActiveSet::from_vec(validate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+
+    fn data() -> Dataset {
+        TrunkConfig {
+            n_samples: 1000,
+            n_features: 4,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(1))
+    }
+
+    #[test]
+    fn bootstrap_size_and_range() {
+        let mut rng = Pcg64::new(2);
+        let b = bootstrap(&mut rng, 100, 80);
+        assert_eq!(b.len(), 80);
+        assert!(b.indices.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn subsample_distinct() {
+        let mut rng = Pcg64::new(3);
+        let s = subsample(&mut rng, 100, 60);
+        let mut v = s.indices.clone();
+        v.sort_unstable();
+        v.dedup();
+        assert_eq!(v.len(), 60);
+    }
+
+    #[test]
+    fn stratified_preserves_proportions() {
+        let d = data();
+        let mut rng = Pcg64::new(4);
+        let s = stratified_subsample(&mut rng, &d, 0.5);
+        let counts = s.class_counts(&d);
+        let full = d.class_counts();
+        for c in 0..d.n_classes() {
+            let got = counts[c] as f64;
+            let want = full[c] as f64 * 0.5;
+            assert!((got - want).abs() <= 1.0, "class {c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn might_split_disjoint_and_covering() {
+        let d = data();
+        let mut rng = Pcg64::new(5);
+        let ms = might_split(&mut rng, &d, 0.9, [0.5, 0.25, 0.25]);
+        let mut all: Vec<u32> = ms
+            .train
+            .indices
+            .iter()
+            .chain(&ms.calibrate.indices)
+            .chain(&ms.validate.indices)
+            .copied()
+            .collect();
+        let total = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total, "roles overlap");
+        assert!((total as f64 - 900.0).abs() <= 4.0);
+        // Roughly the requested proportions.
+        assert!((ms.train.len() as f64 / total as f64 - 0.5).abs() < 0.03);
+        assert!((ms.calibrate.len() as f64 / total as f64 - 0.25).abs() < 0.03);
+        // All three roles see both classes.
+        for part in [&ms.train, &ms.calibrate, &ms.validate] {
+            let c = part.class_counts(&d);
+            assert!(c.iter().all(|&x| x > 0), "class missing: {c:?}");
+        }
+    }
+}

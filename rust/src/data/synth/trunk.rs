@@ -1,0 +1,104 @@
+//! Trunk's two-class Gaussian benchmark (Trunk & Coleman 1982, the paper's
+//! reference [25], as used by SPORF [24]).
+//!
+//! Class 0 ~ N(+μ, I), class 1 ~ N(−μ, I) with μ_i = 1/√i. Feature i's
+//! signal decays as 1/√i, so early features are informative and late ones
+//! are nearly noise — exactly the regime where sparse oblique projections
+//! (which can sum several weak features) beat axis-aligned splits. Classes
+//! are balanced. The Bayes risk is Φ(−‖μ‖), which grows slowly with
+//! dimension; the paper reports ~96.4% accuracy at 1M samples.
+
+use crate::data::Dataset;
+use crate::rng::{Normal, Pcg64};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrunkConfig {
+    pub n_samples: usize,
+    pub n_features: usize,
+    /// Scales the mean vector; 1.0 is the classic benchmark.
+    pub signal: f64,
+}
+
+impl Default for TrunkConfig {
+    fn default() -> Self {
+        Self {
+            n_samples: 10_000,
+            n_features: 256,
+            signal: 1.0,
+        }
+    }
+}
+
+impl TrunkConfig {
+    pub fn generate(&self, rng: &mut Pcg64) -> Dataset {
+        let n = self.n_samples;
+        let d = self.n_features;
+        // Balanced labels: first half class 0, then shuffled.
+        let mut labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+        rng.shuffle(&mut labels);
+        let std_normal = Normal::new(0.0, 1.0);
+        let mut columns = Vec::with_capacity(d);
+        for f in 0..d {
+            let mu = self.signal / ((f + 1) as f64).sqrt();
+            let mut col = vec![0f32; n];
+            std_normal.fill(rng, &mut col);
+            for (v, &l) in col.iter_mut().zip(&labels) {
+                // Class 0 shifted +mu, class 1 shifted -mu.
+                *v += if l == 0 { mu as f32 } else { -(mu as f32) };
+            }
+            columns.push(col);
+        }
+        Dataset::from_columns(columns, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let d = TrunkConfig {
+            n_samples: 2000,
+            n_features: 16,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(1));
+        assert_eq!(d.n_samples(), 2000);
+        assert_eq!(d.n_features(), 16);
+        let counts = d.class_counts();
+        assert_eq!(counts[0], 1000);
+        assert_eq!(counts[1], 1000);
+    }
+
+    #[test]
+    fn signal_decays_with_feature_index() {
+        let d = TrunkConfig {
+            n_samples: 20_000,
+            n_features: 64,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(2));
+        let sep = |f: usize| {
+            let col = d.column(f);
+            let mut m0 = 0.0f64;
+            let mut m1 = 0.0f64;
+            let (mut n0, mut n1) = (0usize, 0usize);
+            for (i, &v) in col.iter().enumerate() {
+                if d.label(i) == 0 {
+                    m0 += v as f64;
+                    n0 += 1;
+                } else {
+                    m1 += v as f64;
+                    n1 += 1;
+                }
+            }
+            m0 / n0 as f64 - m1 / n1 as f64
+        };
+        // Feature 0 separation ~ 2/sqrt(1) = 2, feature 63 ~ 2/8 = 0.25.
+        let s0 = sep(0);
+        let s63 = sep(63);
+        assert!((s0 - 2.0).abs() < 0.1, "s0 = {s0}");
+        assert!((s63 - 0.25).abs() < 0.1, "s63 = {s63}");
+    }
+}

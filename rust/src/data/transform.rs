@@ -1,0 +1,175 @@
+//! Dataset transforms and split helpers.
+//!
+//! Trees are scale-invariant per feature, but *oblique* projections sum
+//! features, so wildly different feature scales skew which features
+//! dominate a random ±1 combination. YDF's sparse-oblique learner
+//! standardizes features for exactly this reason; [`standardize`]
+//! reproduces that, and [`train_test_split`] centralizes the shuffled
+//! holdout split used by the CLI, benches and examples.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+/// Per-feature standardization parameters (fit on training data only).
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub means: Vec<f32>,
+    /// Inverse standard deviations (0 for constant features).
+    pub inv_stds: Vec<f32>,
+}
+
+impl Standardizer {
+    /// Fit mean/std per feature.
+    pub fn fit(data: &Dataset) -> Self {
+        let n = data.n_samples() as f64;
+        let mut means = Vec::with_capacity(data.n_features());
+        let mut inv_stds = Vec::with_capacity(data.n_features());
+        for f in 0..data.n_features() {
+            let col = data.column(f);
+            let mean = col.iter().map(|&v| v as f64).sum::<f64>() / n;
+            let var = col
+                .iter()
+                .map(|&v| (v as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n;
+            means.push(mean as f32);
+            inv_stds.push(if var > 1e-24 {
+                (1.0 / var.sqrt()) as f32
+            } else {
+                0.0
+            });
+        }
+        Self { means, inv_stds }
+    }
+
+    /// Apply to a dataset (returns a new standardized dataset).
+    pub fn transform(&self, data: &Dataset) -> Dataset {
+        assert_eq!(self.means.len(), data.n_features());
+        let columns: Vec<Vec<f32>> = (0..data.n_features())
+            .map(|f| {
+                let (m, s) = (self.means[f], self.inv_stds[f]);
+                data.column(f).iter().map(|&v| (v - m) * s).collect()
+            })
+            .collect();
+        Dataset::from_columns(columns, data.labels().to_vec())
+            .with_feature_names_opt(data.feature_names().to_vec())
+    }
+
+    /// Apply in place to a dense row (prediction path).
+    pub fn transform_row(&self, row: &mut [f32]) {
+        for ((v, &m), &s) in row.iter_mut().zip(&self.means).zip(&self.inv_stds) {
+            *v = (*v - m) * s;
+        }
+    }
+}
+
+impl Dataset {
+    /// Internal helper for transforms that preserve names when present.
+    pub(crate) fn with_feature_names_opt(self, names: Vec<String>) -> Dataset {
+        if names.len() == self.n_features() {
+            self.with_feature_names(names)
+        } else {
+            self
+        }
+    }
+}
+
+/// Shuffled train/test split. Returns (train, test).
+pub fn train_test_split(data: &Dataset, test_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut idx: Vec<u32> = (0..data.n_samples() as u32).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((data.n_samples() as f64) * test_frac).round() as usize;
+    let test = data.subset(&idx[..n_test]);
+    let train = data.subset(&idx[n_test..]);
+    (train, test)
+}
+
+/// K-fold cross-validation index sets: `folds[i]` = test indices of fold i.
+pub fn kfold_indices(n: usize, k: usize, rng: &mut Pcg64) -> Vec<Vec<u32>> {
+    assert!(k >= 2 && k <= n);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut idx);
+    let mut folds = vec![Vec::new(); k];
+    for (i, id) in idx.into_iter().enumerate() {
+        folds[i % k].push(id);
+    }
+    folds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+
+    fn data() -> Dataset {
+        TrunkConfig {
+            n_samples: 500,
+            n_features: 6,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(1))
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let d = data();
+        let std = Standardizer::fit(&d);
+        let t = std.transform(&d);
+        for f in 0..t.n_features() {
+            let col = t.column(f);
+            let n = col.len() as f64;
+            let mean = col.iter().map(|&v| v as f64).sum::<f64>() / n;
+            let var = col.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+            assert!(mean.abs() < 1e-5, "f{f} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-4, "f{f} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let d = Dataset::from_columns(vec![vec![5.0; 10], (0..10).map(|i| i as f32).collect()], vec![0; 10]);
+        let std = Standardizer::fit(&d);
+        let t = std.transform(&d);
+        assert!(t.column(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn transform_row_matches_dataset_transform() {
+        let d = data();
+        let std = Standardizer::fit(&d);
+        let t = std.transform(&d);
+        let mut row = Vec::new();
+        d.row(7, &mut row);
+        std.transform_row(&mut row);
+        let mut trow = Vec::new();
+        t.row(7, &mut trow);
+        for (a, b) in row.iter().zip(&trow) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn split_covers_everything_once() {
+        let d = data();
+        let mut rng = Pcg64::new(2);
+        let (train, test) = train_test_split(&d, 0.25, &mut rng);
+        assert_eq!(train.n_samples() + test.n_samples(), d.n_samples());
+        assert_eq!(test.n_samples(), 125);
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let mut rng = Pcg64::new(3);
+        let folds = kfold_indices(103, 5, &mut rng);
+        let total: usize = folds.iter().map(Vec::len).sum();
+        assert_eq!(total, 103);
+        let mut all: Vec<u32> = folds.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 103);
+        for f in &folds {
+            assert!(f.len() >= 20);
+        }
+    }
+}

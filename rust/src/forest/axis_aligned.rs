@@ -1,0 +1,74 @@
+//! Axis-aligned random-forest baseline (paper Fig 7's "RF" bars).
+//!
+//! Classic Breiman RF: `mtry = √d` candidate features per node, exact
+//! (sort-based) splits, trained to purity — "YDF's axis-aligned RF, which
+//! is limited to exact splits" in the paper's comparison. Implemented as a
+//! preset over the shared [`TreeTrainer`] so both learners exercise
+//! identical substrate code.
+
+use super::tree::ProjectionSource;
+use crate::config::ForestConfig;
+use crate::coordinator;
+use crate::data::Dataset;
+use crate::forest::Forest;
+use crate::split::SplitStrategy;
+
+/// Default `mtry` for `d` features: ⌈√d⌉.
+pub fn default_mtry(d: usize) -> usize {
+    ((d as f64).sqrt().ceil() as usize).clamp(1, d)
+}
+
+/// Derive the RF-baseline configuration from a sparse-oblique one: same
+/// tree count / depth / leaf limits, but exact splits on axis candidates.
+pub fn rf_config(base: &ForestConfig) -> ForestConfig {
+    ForestConfig {
+        strategy: SplitStrategy::Exact,
+        ..base.clone()
+    }
+}
+
+/// Train the axis-aligned baseline forest.
+pub fn train_rf(data: &Dataset, config: &ForestConfig, seed: u64) -> Forest {
+    let cfg = rf_config(config);
+    let mtry = default_mtry(data.n_features());
+    coordinator::train_forest_with_source(
+        data,
+        &cfg,
+        seed,
+        ProjectionSource::AxisAligned { mtry },
+    )
+    .forest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mtry_defaults() {
+        assert_eq!(default_mtry(1), 1);
+        assert_eq!(default_mtry(16), 4);
+        assert_eq!(default_mtry(28), 6);
+        assert_eq!(default_mtry(4096), 64);
+    }
+
+    #[test]
+    fn rf_baseline_learns_trunk() {
+        let data = TrunkConfig {
+            n_samples: 800,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(2));
+        let cfg = ForestConfig {
+            n_trees: 15,
+            n_threads: 1,
+            ..Default::default()
+        };
+        let rf = train_rf(&data, &cfg, 3);
+        let acc = rf.accuracy(&data);
+        assert!(acc > 0.9, "RF train accuracy {acc}");
+    }
+}

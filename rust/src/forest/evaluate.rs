@@ -1,0 +1,221 @@
+//! Forest evaluation utilities: out-of-bag scoring and permutation feature
+//! importance.
+//!
+//! OOB gives the honest accuracy estimate classical RF papers report;
+//! permutation importance is projection-aware (a feature's importance
+//! accumulates through every oblique projection it participates in) and is
+//! the tool the MIGHT line of work uses to surface biomarker panels.
+
+use super::tree::ProjectionSource;
+use super::Forest;
+use crate::config::ForestConfig;
+use crate::coordinator;
+use crate::data::{sampling, Dataset};
+use crate::rng::Pcg64;
+
+/// Forest + the per-tree bags needed for OOB scoring.
+pub struct OobForest {
+    pub forest: Forest,
+    /// `bags[t][s]` = true if sample `s` was in tree `t`'s training bag.
+    pub bags: Vec<Vec<bool>>,
+}
+
+/// Train a forest recording each tree's bag (same RNG streams as
+/// [`coordinator::train_forest`], so the forest is identical to a normal
+/// training run with the same seed).
+pub fn train_with_bags(data: &Dataset, config: &ForestConfig, seed: u64) -> OobForest {
+    let forest = coordinator::train_forest_with_source(
+        data,
+        config,
+        seed,
+        ProjectionSource::SparseOblique,
+    )
+    .forest;
+    let n = data.n_samples();
+    let k = ((n as f64) * config.bootstrap_fraction).round().max(2.0) as usize;
+    let mut bags = Vec::with_capacity(config.n_trees);
+    for tree_idx in 0..config.n_trees {
+        // Re-derive the bag from the tree's RNG stream (cheap; avoids
+        // plumbing bags through the parallel trainer).
+        let mut rng = Pcg64::with_stream(seed, tree_idx as u64 + 1);
+        let active = if config.with_replacement {
+            sampling::bootstrap(&mut rng, n, k.min(n * 4))
+        } else {
+            sampling::subsample(&mut rng, n, k.min(n))
+        };
+        let mut bag = vec![false; n];
+        for &i in &active.indices {
+            bag[i as usize] = true;
+        }
+        bags.push(bag);
+    }
+    OobForest { forest, bags }
+}
+
+impl OobForest {
+    /// Out-of-bag accuracy: each sample is voted on only by trees that did
+    /// not train on it. Returns (accuracy, coverage fraction).
+    pub fn oob_accuracy(&self, data: &Dataset) -> (f64, f64) {
+        let n = data.n_samples();
+        let c = self.forest.n_classes;
+        let mut votes = vec![0f32; n * c];
+        let mut any = vec![false; n];
+        let mut row = Vec::new();
+        for (tree, bag) in self.forest.trees.iter().zip(&self.bags) {
+            for s in 0..n {
+                if bag[s] {
+                    continue;
+                }
+                data.row(s, &mut row);
+                let p = tree.predict_row(&row);
+                for (o, &x) in votes[s * c..(s + 1) * c].iter_mut().zip(p) {
+                    *o += x;
+                }
+                any[s] = true;
+            }
+        }
+        let mut correct = 0usize;
+        let mut covered = 0usize;
+        for s in 0..n {
+            if !any[s] {
+                continue;
+            }
+            covered += 1;
+            let pred = votes[s * c..(s + 1) * c]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map_or(0, |(i, _)| i as u16);
+            if pred == data.label(s) {
+                correct += 1;
+            }
+        }
+        if covered == 0 {
+            return (f64::NAN, 0.0);
+        }
+        (correct as f64 / covered as f64, covered as f64 / n as f64)
+    }
+}
+
+/// Permutation importance: accuracy drop when feature `f`'s column is
+/// shuffled. Returns one score per feature (higher ⇒ more important).
+/// `n_repeats` permutations are averaged per feature.
+pub fn permutation_importance(
+    forest: &Forest,
+    data: &Dataset,
+    n_repeats: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let baseline = forest.accuracy(data);
+    let n = data.n_samples();
+    let d = data.n_features();
+    let mut rng = Pcg64::new(seed);
+    let mut importances = vec![0f64; d];
+    // Materialize rows once; permute in place per feature.
+    let mut rows = vec![0f32; n * d];
+    let mut row = Vec::new();
+    for s in 0..n {
+        data.row(s, &mut row);
+        rows[s * d..(s + 1) * d].copy_from_slice(&row);
+    }
+    let packed = super::predict::PackedForest::from_forest(forest);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut saved = vec![0f32; n];
+    for f in 0..d {
+        for s in 0..n {
+            saved[s] = rows[s * d + f];
+        }
+        let mut drop_sum = 0.0;
+        for _ in 0..n_repeats {
+            rng.shuffle(&mut perm);
+            for s in 0..n {
+                rows[s * d + f] = saved[perm[s] as usize];
+            }
+            let preds = packed.predict_batch(&rows, n);
+            let acc = preds
+                .iter()
+                .zip(data.labels())
+                .filter(|(p, l)| p == l)
+                .count() as f64
+                / n as f64;
+            drop_sum += baseline - acc;
+        }
+        importances[f] = drop_sum / n_repeats as f64;
+        for s in 0..n {
+            rows[s * d + f] = saved[s];
+        }
+    }
+    importances
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::openml::sparse_parity;
+    use crate::data::synth::trunk::TrunkConfig;
+
+    #[test]
+    fn oob_accuracy_is_honest_and_covered() {
+        let data = TrunkConfig {
+            n_samples: 600,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(3));
+        let cfg = ForestConfig {
+            n_trees: 20,
+            n_threads: 2,
+            bootstrap_fraction: 0.6,
+            ..Default::default()
+        };
+        let oob = train_with_bags(&data, &cfg, 9);
+        let (acc, coverage) = oob.oob_accuracy(&data);
+        // (1 - 0.6)^20 ~ 0: everyone is OOB for some tree.
+        assert!(coverage > 0.99, "coverage {coverage}");
+        assert!(acc > 0.85, "OOB accuracy {acc}");
+        // OOB accuracy should not exceed (memorizing) training accuracy.
+        let train_acc = oob.forest.accuracy(&data);
+        assert!(acc <= train_acc + 0.02, "oob {acc} vs train {train_acc}");
+    }
+
+    #[test]
+    fn bags_match_training_subsample() {
+        let data = TrunkConfig {
+            n_samples: 100,
+            n_features: 4,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(4));
+        let cfg = ForestConfig {
+            n_trees: 3,
+            n_threads: 1,
+            bootstrap_fraction: 0.5,
+            ..Default::default()
+        };
+        let oob = train_with_bags(&data, &cfg, 11);
+        for bag in &oob.bags {
+            let in_bag = bag.iter().filter(|&&b| b).count();
+            assert_eq!(in_bag, 50);
+        }
+    }
+
+    #[test]
+    fn importance_finds_the_relevant_features() {
+        // sparse_parity: only the first k=2 features matter.
+        let mut rng = Pcg64::new(5);
+        let data = sparse_parity(&mut rng, 800, 8, 2);
+        let cfg = ForestConfig {
+            n_trees: 30,
+            n_threads: 2,
+            ..Default::default()
+        };
+        let forest = crate::coordinator::train_forest(&data, &cfg, 13);
+        let imp = permutation_importance(&forest, &data, 3, 7);
+        let relevant: f64 = imp[..2].iter().sum::<f64>() / 2.0;
+        let irrelevant: f64 = imp[2..].iter().sum::<f64>() / 6.0;
+        assert!(
+            relevant > irrelevant * 5.0 + 0.01,
+            "relevant {relevant} vs irrelevant {irrelevant}: {imp:?}"
+        );
+    }
+}

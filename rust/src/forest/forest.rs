@@ -1,0 +1,208 @@
+//! Forest container and prediction.
+
+use super::tree::{Node, Tree};
+use crate::data::Dataset;
+
+/// A trained forest: an ensemble of [`Tree`]s over a fixed feature space.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub n_classes: usize,
+    pub n_features: usize,
+}
+
+impl Forest {
+    pub fn new(trees: Vec<Tree>, n_classes: usize, n_features: usize) -> Self {
+        assert!(!trees.is_empty());
+        Self {
+            trees,
+            n_classes,
+            n_features,
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Average class posterior across trees for a dense row.
+    pub fn predict_proba_row(&self, row: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n_classes, 0.0);
+        for tree in &self.trees {
+            for (o, &p) in out.iter_mut().zip(tree.predict_row(row)) {
+                *o += p;
+            }
+        }
+        let inv = 1.0 / self.trees.len() as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Predicted class for a dense row.
+    pub fn predict_row(&self, row: &[f32]) -> u16 {
+        let mut proba = Vec::new();
+        self.predict_proba_row(row, &mut proba);
+        argmax(&proba)
+    }
+
+    /// Predict every sample of a dataset.
+    pub fn predict(&self, data: &Dataset) -> Vec<u16> {
+        assert_eq!(data.n_features(), self.n_features);
+        let mut row = Vec::new();
+        let mut proba = Vec::new();
+        (0..data.n_samples())
+            .map(|s| {
+                data.row(s, &mut row);
+                self.predict_proba_row(&row, &mut proba);
+                argmax(&proba)
+            })
+            .collect()
+    }
+
+    /// P(class 1) for every sample — the score the MIGHT pipeline thresholds.
+    pub fn predict_proba1(&self, data: &Dataset) -> Vec<f32> {
+        assert!(self.n_classes >= 2);
+        let mut row = Vec::new();
+        let mut proba = Vec::new();
+        (0..data.n_samples())
+            .map(|s| {
+                data.row(s, &mut row);
+                self.predict_proba_row(&row, &mut proba);
+                proba[1]
+            })
+            .collect()
+    }
+
+    /// Accuracy on a labeled dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let preds = self.predict(data);
+        let correct = preds
+            .iter()
+            .zip(data.labels())
+            .filter(|(p, l)| p == l)
+            .count();
+        correct as f64 / data.n_samples() as f64
+    }
+
+    /// Leaf index per tree for one row (kernel prediction, Scornet [22]).
+    pub fn leaf_indices(&self, row: &[f32], out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(self.trees.iter().map(|t| t.leaf_index(row) as u32));
+    }
+
+    /// Total node count (model-size reporting).
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+
+    /// Mean tree depth.
+    pub fn mean_depth(&self) -> f64 {
+        self.trees.iter().map(|t| t.depth() as f64).sum::<f64>() / self.trees.len() as f64
+    }
+
+    /// Replace every leaf posterior using an external estimator (MIGHT
+    /// calibration). `estimate(tree_idx, leaf_idx)` returns the new
+    /// posterior, or `None` to keep the training-set one.
+    pub fn recalibrate_leaves(
+        &mut self,
+        mut estimate: impl FnMut(usize, usize) -> Option<Vec<f32>>,
+    ) {
+        for (ti, tree) in self.trees.iter_mut().enumerate() {
+            for (ni, node) in tree.nodes.iter_mut().enumerate() {
+                if let Node::Leaf {
+                    posterior,
+                    majority,
+                    ..
+                } = node
+                {
+                    if let Some(new_post) = estimate(ti, ni) {
+                        debug_assert_eq!(new_post.len(), posterior.len());
+                        *majority = new_post
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map_or(0, |(i, _)| i as u16);
+                        *posterior = new_post;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> u16 {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map_or(0, |(i, _)| i as u16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ForestConfig;
+    use crate::coordinator::train_forest;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+
+    fn small_forest() -> (Forest, Dataset) {
+        let data = TrunkConfig {
+            n_samples: 600,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(1));
+        let cfg = ForestConfig {
+            n_trees: 15,
+            n_threads: 1,
+            ..Default::default()
+        };
+        (train_forest(&data, &cfg, 7), data)
+    }
+
+    #[test]
+    fn forest_beats_chance_on_trunk() {
+        let (forest, data) = small_forest();
+        let acc = forest.accuracy(&data);
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn proba_sums_to_one() {
+        let (forest, data) = small_forest();
+        let mut row = Vec::new();
+        let mut proba = Vec::new();
+        for s in (0..data.n_samples()).step_by(37) {
+            data.row(s, &mut row);
+            forest.predict_proba_row(&row, &mut proba);
+            let sum: f32 = proba.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{proba:?}");
+        }
+    }
+
+    #[test]
+    fn leaf_indices_has_one_entry_per_tree() {
+        let (forest, data) = small_forest();
+        let mut row = Vec::new();
+        data.row(0, &mut row);
+        let mut leaves = Vec::new();
+        forest.leaf_indices(&row, &mut leaves);
+        assert_eq!(leaves.len(), forest.n_trees());
+        for (t, &l) in forest.trees.iter().zip(&leaves) {
+            assert!(matches!(t.nodes[l as usize], Node::Leaf { .. }));
+        }
+    }
+
+    #[test]
+    fn recalibrate_overrides_posteriors() {
+        let (mut forest, data) = small_forest();
+        forest.recalibrate_leaves(|_, _| Some(vec![0.25, 0.75]));
+        let mut row = Vec::new();
+        data.row(0, &mut row);
+        let mut proba = Vec::new();
+        forest.predict_proba_row(&row, &mut proba);
+        assert!((proba[1] - 0.75).abs() < 1e-6);
+    }
+}

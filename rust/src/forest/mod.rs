@@ -1,0 +1,12 @@
+//! Trees, forests and prediction.
+
+pub mod axis_aligned;
+pub mod evaluate;
+pub mod forest;
+pub mod predict;
+pub mod serialize;
+pub mod tree;
+
+pub use forest::Forest;
+pub use predict::PackedForest;
+pub use tree::{Node, ProjectionSource, Tree, TreeTrainer};

@@ -1,0 +1,265 @@
+//! Packed batched inference.
+//!
+//! Pointer-chasing through `Vec<Node>` (with heap-allocated projection term
+//! lists and posteriors per node) is fine for training-time bookkeeping but
+//! wasteful for serving. [`PackedForest`] flattens every tree into three
+//! contiguous arrays — node records, projection terms, leaf posteriors — in
+//! DFS order so the hot path touches sequential memory, in the spirit of
+//! the cache-aware layouts the paper cites (forest packing [4],
+//! BLOCKSET [16]).
+//!
+//! Node record (16 bytes): `{ term_off:u32, meta:u32, threshold:f32,
+//! left:u32 }` where `meta` packs term-count (16 bits) | leaf flag (1) and
+//! `right = left + 1` is implicit (children are allocated together). Leaves
+//! reuse `term_off` as the posterior offset.
+
+use super::tree::{Node, Tree};
+use super::Forest;
+
+#[derive(Clone, Copy, Debug)]
+struct PackedNode {
+    /// Split: offset into `terms`. Leaf: offset into `posteriors`.
+    off: u32,
+    /// bits 0..15: term count (splits). bit 31: leaf flag.
+    meta: u32,
+    threshold: f32,
+    /// Split: index of the left child; right child is `left + 1`.
+    left: u32,
+}
+
+const LEAF_BIT: u32 = 1 << 31;
+
+/// One flattened tree.
+struct PackedTree {
+    nodes: Vec<PackedNode>,
+    terms: Vec<(u32, f32)>,
+    posteriors: Vec<f32>,
+}
+
+impl PackedTree {
+    fn from_tree(tree: &Tree, n_classes: usize) -> Self {
+        let mut out = PackedTree {
+            nodes: Vec::with_capacity(tree.nodes.len()),
+            terms: Vec::new(),
+            posteriors: Vec::new(),
+        };
+        // DFS that allocates both children contiguously (left = right - 1).
+        // stack of (source node idx, packed slot).
+        out.nodes.push(PackedNode {
+            off: 0,
+            meta: 0,
+            threshold: 0.0,
+            left: 0,
+        });
+        let mut stack = vec![(0usize, 0usize)];
+        while let Some((src, slot)) = stack.pop() {
+            match &tree.nodes[src] {
+                Node::Leaf { posterior, .. } => {
+                    let off = out.posteriors.len() as u32;
+                    debug_assert_eq!(posterior.len(), n_classes);
+                    out.posteriors.extend_from_slice(posterior);
+                    out.nodes[slot] = PackedNode {
+                        off,
+                        meta: LEAF_BIT,
+                        threshold: 0.0,
+                        left: 0,
+                    };
+                }
+                Node::Split {
+                    projection,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    let term_off = out.terms.len() as u32;
+                    out.terms
+                        .extend(projection.terms.iter().map(|&(f, w)| (f, w)));
+                    let child_base = out.nodes.len() as u32;
+                    // Reserve both children now so right = left + 1.
+                    out.nodes.push(PackedNode {
+                        off: 0,
+                        meta: 0,
+                        threshold: 0.0,
+                        left: 0,
+                    });
+                    out.nodes.push(PackedNode {
+                        off: 0,
+                        meta: 0,
+                        threshold: 0.0,
+                        left: 0,
+                    });
+                    out.nodes[slot] = PackedNode {
+                        off: term_off,
+                        meta: projection.terms.len() as u32,
+                        threshold: *threshold,
+                        left: child_base,
+                    };
+                    stack.push((*right as usize, child_base as usize + 1));
+                    stack.push((*left as usize, child_base as usize));
+                }
+            }
+        }
+        out
+    }
+
+    /// Posterior slice for one dense row.
+    #[inline]
+    fn predict_row(&self, row: &[f32], n_classes: usize) -> &[f32] {
+        let mut i = 0usize;
+        loop {
+            let node = &self.nodes[i];
+            if node.meta & LEAF_BIT != 0 {
+                let off = node.off as usize;
+                return &self.posteriors[off..off + n_classes];
+            }
+            let n_terms = (node.meta & 0xFFFF) as usize;
+            let off = node.off as usize;
+            let mut v = 0f32;
+            for &(f, w) in &self.terms[off..off + n_terms] {
+                v += w * row[f as usize];
+            }
+            // Branch-free child select: right = left + 1. `!(v < t)` (not
+            // `v >= t`) so NaN projections take the right branch exactly
+            // like the pointer-based traversal.
+            i = node.left as usize + !(v < node.threshold) as usize;
+        }
+    }
+}
+
+/// A forest flattened for batched inference.
+pub struct PackedForest {
+    trees: Vec<PackedTree>,
+    pub n_classes: usize,
+    pub n_features: usize,
+}
+
+impl PackedForest {
+    pub fn from_forest(forest: &Forest) -> Self {
+        Self {
+            trees: forest
+                .trees
+                .iter()
+                .map(|t| PackedTree::from_tree(t, forest.n_classes))
+                .collect(),
+            n_classes: forest.n_classes,
+            n_features: forest.n_features,
+        }
+    }
+
+    /// Average posterior for one dense row.
+    pub fn predict_proba_row(&self, row: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n_classes, 0.0);
+        for tree in &self.trees {
+            let p = tree.predict_row(row, self.n_classes);
+            for (o, &x) in out.iter_mut().zip(p) {
+                *o += x;
+            }
+        }
+        let inv = 1.0 / self.trees.len() as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Batched prediction over row-major samples (`rows.len() = n·d`).
+    /// Iterates tree-major so each tree's arrays stay cache-resident across
+    /// the whole batch (the forest-packing access order).
+    pub fn predict_batch(&self, rows: &[f32], n: usize) -> Vec<u16> {
+        let d = self.n_features;
+        assert_eq!(rows.len(), n * d);
+        let mut acc = vec![0f32; n * self.n_classes];
+        for tree in &self.trees {
+            for (s, row) in rows.chunks_exact(d).enumerate() {
+                let p = tree.predict_row(row, self.n_classes);
+                let a = &mut acc[s * self.n_classes..(s + 1) * self.n_classes];
+                for (o, &x) in a.iter_mut().zip(p) {
+                    *o += x;
+                }
+            }
+        }
+        acc.chunks_exact(self.n_classes)
+            .map(|p| {
+                p.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map_or(0, |(i, _)| i as u16)
+            })
+            .collect()
+    }
+
+    /// Total packed size in bytes (model-size reporting).
+    pub fn nbytes(&self) -> usize {
+        self.trees
+            .iter()
+            .map(|t| {
+                t.nodes.len() * std::mem::size_of::<PackedNode>()
+                    + t.terms.len() * 8
+                    + t.posteriors.len() * 4
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ForestConfig;
+    use crate::coordinator::train_forest;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+
+    fn setup() -> (Forest, crate::data::Dataset) {
+        let data = TrunkConfig {
+            n_samples: 500,
+            n_features: 16,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(2));
+        let cfg = ForestConfig {
+            n_trees: 12,
+            n_threads: 2,
+            ..Default::default()
+        };
+        (train_forest(&data, &cfg, 5), data)
+    }
+
+    #[test]
+    fn packed_matches_pointer_forest_exactly() {
+        let (forest, data) = setup();
+        let packed = PackedForest::from_forest(&forest);
+        let mut row = Vec::new();
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            forest.predict_proba_row(&row, &mut pa);
+            packed.predict_proba_row(&row, &mut pb);
+            assert_eq!(pa, pb, "sample {s}");
+        }
+    }
+
+    #[test]
+    fn batch_prediction_matches_rowwise() {
+        let (forest, data) = setup();
+        let packed = PackedForest::from_forest(&forest);
+        let n = data.n_samples();
+        let d = data.n_features();
+        let mut rows = vec![0f32; n * d];
+        let mut row = Vec::new();
+        for s in 0..n {
+            data.row(s, &mut row);
+            rows[s * d..(s + 1) * d].copy_from_slice(&row);
+        }
+        let batch = packed.predict_batch(&rows, n);
+        let rowwise = forest.predict(&data);
+        assert_eq!(batch, rowwise);
+    }
+
+    #[test]
+    fn packed_size_is_reported() {
+        let (forest, _) = setup();
+        let packed = PackedForest::from_forest(&forest);
+        assert!(packed.nbytes() > 0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Forest model persistence.
+//!
+//! Compact little-endian binary format (the offline crate set has no serde):
+//!
+//! ```text
+//! magic "SOFRST01" | u32 n_classes | u32 n_features | u32 n_trees
+//! per tree:  u32 n_nodes
+//! per node:  u8 tag (0 = split, 1 = leaf)
+//!   split: u16 n_terms, { u32 feature, f32 weight }*, f32 threshold,
+//!          u32 left, u32 right
+//!   leaf:  u16 n_classes, f32 posterior*, u16 majority, u32 n
+//! ```
+//!
+//! The format is versioned by the magic; loads validate every structural
+//! invariant (link bounds, posterior lengths) so a truncated or corrupt
+//! file errors instead of producing a silently-broken model.
+
+use super::tree::{Node, Tree};
+use super::Forest;
+use crate::projection::Projection;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SOFRST01";
+
+/// Serialize a forest to a writer.
+pub fn write_forest(forest: &Forest, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC)?;
+    write_u32(w, forest.n_classes as u32)?;
+    write_u32(w, forest.n_features as u32)?;
+    write_u32(w, forest.trees.len() as u32)?;
+    for tree in &forest.trees {
+        write_u32(w, tree.nodes.len() as u32)?;
+        for node in &tree.nodes {
+            match node {
+                Node::Split {
+                    projection,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    w.write_all(&[0u8])?;
+                    write_u16(w, projection.terms.len() as u16)?;
+                    for &(f, wt) in &projection.terms {
+                        write_u32(w, f)?;
+                        write_f32(w, wt)?;
+                    }
+                    write_f32(w, *threshold)?;
+                    write_u32(w, *left)?;
+                    write_u32(w, *right)?;
+                }
+                Node::Leaf {
+                    posterior,
+                    majority,
+                    n,
+                } => {
+                    w.write_all(&[1u8])?;
+                    write_u16(w, posterior.len() as u16)?;
+                    for &p in posterior {
+                        write_f32(w, p)?;
+                    }
+                    write_u16(w, *majority)?;
+                    write_u32(w, *n)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a forest from a reader, validating structure.
+pub fn read_forest(r: &mut impl Read) -> Result<Forest> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("read magic")?;
+    if &magic != MAGIC {
+        bail!("not a soforest model (bad magic {magic:?})");
+    }
+    let n_classes = read_u32(r)? as usize;
+    let n_features = read_u32(r)? as usize;
+    let n_trees = read_u32(r)? as usize;
+    if n_classes < 2 || n_trees == 0 || n_trees > 1_000_000 {
+        bail!("implausible header: {n_classes} classes, {n_trees} trees");
+    }
+    let mut trees = Vec::with_capacity(n_trees);
+    for ti in 0..n_trees {
+        let n_nodes = read_u32(r)? as usize;
+        if n_nodes == 0 || n_nodes > 500_000_000 {
+            bail!("tree {ti}: implausible node count {n_nodes}");
+        }
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for ni in 0..n_nodes {
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            match tag[0] {
+                0 => {
+                    let n_terms = read_u16(r)? as usize;
+                    let mut terms = Vec::with_capacity(n_terms);
+                    for _ in 0..n_terms {
+                        let f = read_u32(r)?;
+                        if f as usize >= n_features {
+                            bail!("tree {ti} node {ni}: feature {f} out of range");
+                        }
+                        terms.push((f, read_f32(r)?));
+                    }
+                    let threshold = read_f32(r)?;
+                    let left = read_u32(r)?;
+                    let right = read_u32(r)?;
+                    if left as usize >= n_nodes || right as usize >= n_nodes {
+                        bail!("tree {ti} node {ni}: child link out of range");
+                    }
+                    nodes.push(Node::Split {
+                        projection: Projection { terms },
+                        threshold,
+                        left,
+                        right,
+                    });
+                }
+                1 => {
+                    let len = read_u16(r)? as usize;
+                    if len != n_classes {
+                        bail!("tree {ti} node {ni}: posterior len {len} != {n_classes}");
+                    }
+                    let mut posterior = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        posterior.push(read_f32(r)?);
+                    }
+                    let majority = read_u16(r)?;
+                    let n = read_u32(r)?;
+                    if majority as usize >= n_classes {
+                        bail!("tree {ti} node {ni}: majority class out of range");
+                    }
+                    nodes.push(Node::Leaf {
+                        posterior,
+                        majority,
+                        n,
+                    });
+                }
+                t => bail!("tree {ti} node {ni}: unknown node tag {t}"),
+            }
+        }
+        trees.push(Tree { nodes, n_classes });
+    }
+    Ok(Forest::new(trees, n_classes, n_features))
+}
+
+/// Save to a file path.
+pub fn save(forest: &Forest, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    write_forest(forest, &mut w)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load from a file path.
+pub fn load(path: &Path) -> Result<Forest> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    read_forest(&mut BufReader::new(f))
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn write_u16(w: &mut impl Write, v: u16) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ForestConfig;
+    use crate::coordinator::train_forest;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+
+    fn forest_and_data() -> (Forest, crate::data::Dataset) {
+        let data = TrunkConfig {
+            n_samples: 300,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(1));
+        let cfg = ForestConfig {
+            n_trees: 5,
+            n_threads: 1,
+            ..Default::default()
+        };
+        (train_forest(&data, &cfg, 3), data)
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let (forest, data) = forest_and_data();
+        let path = std::env::temp_dir().join("soforest_model_roundtrip.bin");
+        save(&forest, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.n_trees(), forest.n_trees());
+        assert_eq!(loaded.n_classes, forest.n_classes);
+        assert_eq!(loaded.n_features, forest.n_features);
+        let a = forest.predict(&data);
+        let b = loaded.predict(&data);
+        assert_eq!(a, b);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let (forest, _) = forest_and_data();
+        let mut buf = Vec::new();
+        write_forest(&forest, &mut buf).unwrap();
+        // Bad magic.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_forest(&mut bad.as_slice()).is_err());
+        // Truncations at various points must error, not panic.
+        for cut in [4usize, 12, 20, buf.len() / 2, buf.len() - 3] {
+            assert!(
+                read_forest(&mut buf[..cut].to_vec().as_slice()).is_err(),
+                "cut at {cut} did not error"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_links() {
+        let (forest, _) = forest_and_data();
+        let mut buf = Vec::new();
+        write_forest(&forest, &mut buf).unwrap();
+        // Flip bytes through the body; must never panic, at most load a
+        // forest that fails validation.
+        let mut rng = Pcg64::new(9);
+        for _ in 0..200 {
+            let mut corrupt = buf.clone();
+            let i = 20 + rng.index(corrupt.len() - 20);
+            corrupt[i] ^= 0xFF;
+            let _ = read_forest(&mut corrupt.as_slice()); // no panic
+        }
+    }
+}

@@ -1,0 +1,782 @@
+//! Single-tree training: the recursive node loop of the paper's Figure 2,
+//! with the dynamic method selection of §4.1 and the accelerator hook of
+//! §4.3.
+//!
+//! The trainer is written as an explicit work stack (to-purity trees on 1M
+//! samples reach depth > 40; no recursion limits) and owns per-tree scratch
+//! buffers so the node loop performs **no heap allocation** except for the
+//! child active-sets — one of the §Perf items.
+
+use crate::config::ForestConfig;
+use crate::data::{ActiveSet, Dataset};
+use crate::metrics::{Component, TrainStats};
+use crate::projection::apply::{apply_projection, gather_labels};
+use crate::projection::{self, Projection, ProjectionMatrix};
+use crate::rng::Pcg64;
+use crate::split::{
+    best_split, DynamicSplitter, Split, SplitMethod, SplitScratch,
+};
+use std::time::Instant;
+
+/// How candidate features are drawn at each node.
+#[derive(Clone, Copy, Debug)]
+pub enum ProjectionSource {
+    /// Sparse oblique projections (the paper's learner).
+    SparseOblique,
+    /// `mtry` random single features with exact splits — the classic RF
+    /// baseline of Fig 7 ("RF" bars).
+    AxisAligned { mtry: usize },
+}
+
+/// A trained decision tree node.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Split {
+        projection: Projection,
+        threshold: f32,
+        /// Index of the `v < threshold` child.
+        left: u32,
+        right: u32,
+    },
+    Leaf {
+        /// Class posterior estimated on training data (replaced by the
+        /// calibration set under the MIGHT protocol).
+        posterior: Vec<f32>,
+        majority: u16,
+        /// Training samples that reached this leaf.
+        n: u32,
+    },
+}
+
+/// A trained tree. Nodes are stored in a flat vec; node 0 is the root.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub n_classes: usize,
+}
+
+impl Tree {
+    /// Leaf index reached by a dense feature row.
+    pub fn leaf_index(&self, row: &[f32]) -> usize {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { .. } => return i,
+                Node::Split {
+                    projection,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    let mut v = 0f32;
+                    for &(f, w) in &projection.terms {
+                        v += w * row[f as usize];
+                    }
+                    i = if v < *threshold { *left } else { *right } as usize;
+                }
+            }
+        }
+    }
+
+    /// Class posterior for a dense feature row.
+    pub fn predict_row(&self, row: &[f32]) -> &[f32] {
+        match &self.nodes[self.leaf_index(row)] {
+            Node::Leaf { posterior, .. } => posterior,
+            Node::Split { .. } => unreachable!(),
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn depth_of(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + depth_of(nodes, *left as usize)
+                    .max(depth_of(nodes, *right as usize)),
+            }
+        }
+        depth_of(&self.nodes, 0)
+    }
+
+    /// True iff every leaf contains a single class (training-set purity).
+    pub fn is_pure(&self) -> bool {
+        self.nodes.iter().all(|n| match n {
+            Node::Leaf { posterior, .. } => {
+                posterior.iter().filter(|&&p| p > 0.0).count() <= 1
+            }
+            _ => true,
+        })
+    }
+}
+
+/// Batched accelerator interface for §4.3 node offload.
+///
+/// Given a node's `p × n` projected values (row-major), binary labels and
+/// per-projection bin boundaries (`n_real` real entries padded to the
+/// two-level layout), return the winning `(projection, edge, gain)` — or
+/// `None` to make the trainer fall back to the CPU path (wrong shape,
+/// device busy, ...). Implemented by [`crate::accel::NodeSplitAccel`]; the
+/// trainer only sees this trait so tests can mock the device.
+pub trait NodeAccel {
+    #[allow(clippy::too_many_arguments)]
+    fn best_node_split(
+        &mut self,
+        values: &[f32],
+        p: usize,
+        n: usize,
+        labels: &[u16],
+        boundaries: &[f32],
+        n_bins: usize,
+        min_leaf: usize,
+    ) -> Option<(usize, usize, f64)>;
+}
+
+/// Per-tree trainer. Create one per (tree × worker); reuse is allowed.
+pub struct TreeTrainer<'a> {
+    pub data: &'a Dataset,
+    pub config: &'a ForestConfig,
+    pub source: ProjectionSource,
+    pub splitter: DynamicSplitter,
+    pub rng: Pcg64,
+    pub stats: TrainStats,
+    pub accel: Option<&'a mut dyn NodeAccel>,
+    // Scratch (no allocation in the node loop):
+    scratch: SplitScratch,
+    values: Vec<f32>,
+    best_values: Vec<f32>,
+    labels: Vec<u16>,
+    matrix: ProjectionMatrix,
+    accel_values: Vec<f32>,
+    accel_boundaries: Vec<f32>,
+}
+
+/// Work item: (active set, depth, slot in `nodes` to patch with the child).
+struct WorkItem {
+    active: ActiveSet,
+    depth: usize,
+    /// (parent node index, is_left) — None for the root.
+    link: Option<(usize, bool)>,
+}
+
+impl<'a> TreeTrainer<'a> {
+    pub fn new(
+        data: &'a Dataset,
+        config: &'a ForestConfig,
+        source: ProjectionSource,
+        rng: Pcg64,
+    ) -> Self {
+        Self {
+            data,
+            config,
+            source,
+            splitter: DynamicSplitter::new(config.strategy, config.thresholds),
+            rng,
+            stats: TrainStats::new(config.instrument),
+            accel: None,
+            scratch: SplitScratch::default(),
+            values: Vec::new(),
+            best_values: Vec::new(),
+            labels: Vec::new(),
+            matrix: ProjectionMatrix::default(),
+            accel_values: Vec::new(),
+            accel_boundaries: Vec::new(),
+        }
+    }
+
+    pub fn with_accel(mut self, accel: &'a mut dyn NodeAccel) -> Self {
+        self.accel = Some(accel);
+        self
+    }
+
+    /// Train one tree on the given active sample set.
+    pub fn train(&mut self, root_active: ActiveSet) -> Tree {
+        let t0 = Instant::now();
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut stack = vec![WorkItem {
+            active: root_active,
+            depth: 0,
+            link: None,
+        }];
+        while let Some(item) = stack.pop() {
+            let node_idx = nodes.len();
+            if let Some((parent, is_left)) = item.link {
+                if let Node::Split { left, right, .. } = &mut nodes[parent] {
+                    if is_left {
+                        *left = node_idx as u32;
+                    } else {
+                        *right = node_idx as u32;
+                    }
+                }
+            }
+            match self.split_node(&item.active, item.depth) {
+                Some((projection, split, left_set, right_set)) => {
+                    nodes.push(Node::Split {
+                        projection,
+                        threshold: split.threshold,
+                        left: u32::MAX,
+                        right: u32::MAX,
+                    });
+                    // Push right first so left is processed (and allocated)
+                    // immediately after its parent — better locality.
+                    stack.push(WorkItem {
+                        active: right_set,
+                        depth: item.depth + 1,
+                        link: Some((node_idx, false)),
+                    });
+                    stack.push(WorkItem {
+                        active: left_set,
+                        depth: item.depth + 1,
+                        link: Some((node_idx, true)),
+                    });
+                }
+                None => {
+                    nodes.push(self.make_leaf(&item.active));
+                    self.stats.record_leaf();
+                }
+            }
+        }
+        self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+        Tree {
+            nodes,
+            n_classes: self.data.n_classes(),
+        }
+    }
+
+    fn make_leaf(&mut self, active: &ActiveSet) -> Node {
+        let counts = active.class_counts(self.data);
+        let total = counts.iter().sum::<usize>().max(1) as f32;
+        let posterior: Vec<f32> = counts.iter().map(|&c| c as f32 / total).collect();
+        let majority = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map_or(0, |(i, _)| i as u16);
+        Node::Leaf {
+            posterior,
+            majority,
+            n: active.len() as u32,
+        }
+    }
+
+    /// Attempt to split a node; `None` ⇒ leaf.
+    fn split_node(
+        &mut self,
+        active: &ActiveSet,
+        depth: usize,
+    ) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
+        let n = active.len();
+        let cfg = self.config;
+        if n < 2 * cfg.min_leaf.max(1)
+            || (cfg.max_depth > 0 && depth >= cfg.max_depth)
+            || active.is_pure(self.data)
+        {
+            return None;
+        }
+        let parent_counts = active.class_counts(self.data);
+        let mut method = self.splitter.choose(n);
+        self.stats.record_node(depth, method, n);
+
+        // Candidate projections.
+        self.stats.time(depth, Component::SampleProjections, || {
+            sample_projections(
+                &mut self.matrix,
+                &mut self.rng,
+                self.data.n_features(),
+                self.source,
+                cfg,
+            )
+        });
+
+        // Labels gathered once per node, shared across projections.
+        gather_labels(self.data, &active.indices, &mut self.labels);
+
+        if method == SplitMethod::Accelerator {
+            if let Some(result) = self.try_accel_split(active, depth, &parent_counts) {
+                return result.map(|(proj, split)| {
+                    let (l, r) = self.partition(active, &proj, split.threshold, depth);
+                    (proj, split, l, r)
+                });
+            }
+            // Accelerator unavailable / shape mismatch: CPU fallback.
+            method = SplitMethod::VectorizedHistogram;
+        }
+
+        let mut best: Option<(usize, Split)> = None;
+        for pi in 0..self.matrix.projections.len() {
+            let proj = &self.matrix.projections[pi];
+            if proj.is_empty() {
+                continue;
+            }
+            {
+                // Borrow dance: apply_projection needs &self.data and the
+                // buffers disjointly.
+                let data = self.data;
+                let values = &mut self.values;
+                let indices = &active.indices;
+                self.stats.time(depth, Component::ApplyProjection, || {
+                    apply_projection(data, proj, indices, values);
+                });
+            }
+            let split = {
+                let values = &self.values;
+                let labels = &self.labels;
+                let rng = &mut self.rng;
+                let scratch = &mut self.scratch;
+                let stats = &mut self.stats;
+                // Exact's sort and histogram's boundary+fill both count as
+                // "build"; best_split fuses build and edge-scan, so the
+                // whole search is attributed to BuildHistogram — the
+                // dominant part (paper Fig 5; the scan is O(bins), the
+                // fill O(n)).
+                stats.time(depth, Component::BuildHistogram, || {
+                    best_split(
+                        method,
+                        values,
+                        labels,
+                        &parent_counts,
+                        cfg.criterion,
+                        cfg.n_bins,
+                        cfg.min_leaf,
+                        rng,
+                        scratch,
+                    )
+                })
+            };
+            if let Some(s) = split {
+                if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                    best = Some((pi, s));
+                    std::mem::swap(&mut self.values, &mut self.best_values);
+                }
+            }
+        }
+
+        let (pi, split) = best?;
+        let proj = self.matrix.projections[pi].clone();
+        // best_values currently holds the winning projection's values.
+        let (l, r) = {
+            let best_values = &self.best_values;
+            let threshold = split.threshold;
+            let indices = &active.indices;
+            self.stats.time(depth, Component::Partition, || {
+                partition_by_values(indices, best_values, threshold)
+            })
+        };
+        debug_assert_eq!(l.len(), split.n_left);
+        debug_assert_eq!(r.len(), split.n_right);
+        Some((proj, split, l, r))
+    }
+
+    /// Partition by re-applying a projection (accelerator path, where the
+    /// winning values buffer lives on the device).
+    fn partition(
+        &mut self,
+        active: &ActiveSet,
+        proj: &Projection,
+        threshold: f32,
+        depth: usize,
+    ) -> (ActiveSet, ActiveSet) {
+        let data = self.data;
+        let values = &mut self.values;
+        apply_projection(data, proj, &active.indices, values);
+        let indices = &active.indices;
+        let values = &self.values;
+        self.stats.time(depth, Component::Partition, || {
+            partition_by_values(indices, values, threshold)
+        })
+    }
+
+    /// Batched accelerator evaluation of all projections (§4.3).
+    ///
+    /// Returns `None` when the accelerator declined (caller falls back);
+    /// `Some(None)` when the accelerator ran but found no valid split.
+    #[allow(clippy::type_complexity)]
+    fn try_accel_split(
+        &mut self,
+        active: &ActiveSet,
+        depth: usize,
+        parent_counts: &[usize],
+    ) -> Option<Option<(Projection, Split)>> {
+        self.accel.as_ref()?;
+        if parent_counts.len() != 2 {
+            return None; // accelerated kernel is binary-class only
+        }
+        let n = active.len();
+        let projs: Vec<usize> = (0..self.matrix.projections.len())
+            .filter(|&pi| !self.matrix.projections[pi].is_empty())
+            .collect();
+        let p = projs.len();
+        if p == 0 {
+            return Some(None);
+        }
+        let n_bins = self.config.n_bins;
+        // Materialize values [p, n] and per-projection boundaries [p, n_bins]
+        // (padded layout, same as the CPU histogram path).
+        self.accel_values.clear();
+        self.accel_values.reserve(p * n);
+        self.accel_boundaries.clear();
+        self.accel_boundaries.reserve(p * n_bins);
+        {
+            let data = self.data;
+            let indices = &active.indices;
+            for &pi in &projs {
+                let proj = &self.matrix.projections[pi];
+                let base = self.accel_values.len();
+                self.stats.time(depth, Component::ApplyProjection, || {
+                    apply_projection(data, proj, indices, &mut self.values);
+                });
+                self.accel_values.extend_from_slice(&self.values);
+                debug_assert_eq!(self.accel_values.len(), base + n);
+                let ok = crate::split::histogram::build_boundaries(
+                    &self.values,
+                    n_bins,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
+                if ok {
+                    self.accel_boundaries.extend_from_slice(&self.scratch.boundaries);
+                } else {
+                    // Constant feature: all-∞ boundaries yield zero gain.
+                    self.accel_boundaries
+                        .extend(std::iter::repeat(f32::INFINITY).take(n_bins));
+                }
+            }
+        }
+        let accel = self.accel.as_mut()?;
+        let result = {
+            let accel_values = &self.accel_values;
+            let accel_boundaries = &self.accel_boundaries;
+            let labels = &self.labels;
+            let min_leaf = self.config.min_leaf;
+            self.stats.time(depth, Component::Accelerator, || {
+                accel.best_node_split(
+                    accel_values,
+                    p,
+                    n,
+                    labels,
+                    accel_boundaries,
+                    n_bins,
+                    min_leaf,
+                )
+            })
+        };
+        let (local_pi, edge, gain) = result?;
+        if gain <= 1e-12 || local_pi >= p || edge >= n_bins - 1 {
+            return Some(None);
+        }
+        let pi = projs[local_pi];
+        let threshold = self.accel_boundaries[local_pi * n_bins + edge];
+        if !threshold.is_finite() {
+            return Some(None);
+        }
+        // Reconstruct exact left/right counts on CPU (cheap single pass).
+        let vals = &self.accel_values[local_pi * n..(local_pi + 1) * n];
+        let n_left = vals.iter().filter(|&&v| v < threshold).count();
+        if n_left == 0 || n_left == n {
+            return Some(None);
+        }
+        Some(Some((
+            self.matrix.projections[pi].clone(),
+            Split {
+                threshold,
+                gain,
+                n_left,
+                n_right: n - n_left,
+            },
+        )))
+    }
+}
+
+/// Split an active set by `values[i] < threshold`.
+fn partition_by_values(indices: &[u32], values: &[f32], threshold: f32) -> (ActiveSet, ActiveSet) {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut left = Vec::with_capacity(indices.len() / 2 + 1);
+    let mut right = Vec::with_capacity(indices.len() / 2 + 1);
+    for (&i, &v) in indices.iter().zip(values) {
+        if v < threshold {
+            left.push(i);
+        } else {
+            right.push(i);
+        }
+    }
+    (ActiveSet::from_vec(left), ActiveSet::from_vec(right))
+}
+
+/// Draw the node's candidate projections according to the source.
+fn sample_projections(
+    matrix: &mut ProjectionMatrix,
+    rng: &mut Pcg64,
+    d: usize,
+    source: ProjectionSource,
+    cfg: &ForestConfig,
+) {
+    match source {
+        ProjectionSource::SparseOblique => {
+            *matrix = projection::sample(rng, d, &cfg.projection, cfg.sampler);
+        }
+        ProjectionSource::AxisAligned { mtry } => {
+            matrix.projections.clear();
+            let mut picked = Vec::new();
+            rng.sample_distinct(d, mtry.min(d).max(1), &mut picked);
+            matrix
+                .projections
+                .extend(picked.into_iter().map(|f| Projection::axis(f as u32)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::split::SplitStrategy;
+
+    fn trunk(n: usize, d: usize, seed: u64) -> Dataset {
+        TrunkConfig {
+            n_samples: n,
+            n_features: d,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(seed))
+    }
+
+    fn train_one(data: &Dataset, cfg: &ForestConfig, seed: u64) -> Tree {
+        let mut t = TreeTrainer::new(data, cfg, ProjectionSource::SparseOblique, Pcg64::new(seed));
+        t.train(ActiveSet::full(data.n_samples()))
+    }
+
+    #[test]
+    fn trains_to_purity_by_default() {
+        let data = trunk(500, 8, 1);
+        let cfg = ForestConfig {
+            strategy: SplitStrategy::Exact,
+            ..Default::default()
+        };
+        let tree = train_one(&data, &cfg, 2);
+        assert!(tree.is_pure(), "to-purity training left impure leaves");
+        // Every training sample classified correctly by its own tree.
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            let p = tree.predict_row(&row);
+            let pred = p
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            assert_eq!(pred as u16, data.label(s), "sample {s}");
+        }
+    }
+
+    #[test]
+    fn all_strategies_reach_purity_and_similar_depth() {
+        let data = trunk(600, 16, 3);
+        let mut depths = Vec::new();
+        for strategy in [
+            SplitStrategy::Exact,
+            SplitStrategy::Histogram,
+            SplitStrategy::VectorizedHistogram,
+            SplitStrategy::Dynamic,
+            SplitStrategy::DynamicVectorized,
+        ] {
+            let cfg = ForestConfig {
+                strategy,
+                ..Default::default()
+            };
+            let tree = train_one(&data, &cfg, 4);
+            assert!(tree.is_pure(), "{strategy:?}");
+            depths.push(tree.depth());
+        }
+        let min = *depths.iter().min().unwrap();
+        let max = *depths.iter().max().unwrap();
+        assert!(max <= min * 2 + 3, "depths diverge wildly: {depths:?}");
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let data = trunk(2000, 8, 5);
+        let cfg = ForestConfig {
+            max_depth: 3,
+            ..Default::default()
+        };
+        let tree = train_one(&data, &cfg, 6);
+        assert!(tree.depth() <= 3);
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let data = trunk(500, 8, 7);
+        let cfg = ForestConfig {
+            min_leaf: 20,
+            ..Default::default()
+        };
+        let tree = train_one(&data, &cfg, 8);
+        for node in &tree.nodes {
+            if let Node::Leaf { n, .. } = node {
+                assert!(*n >= 20 || tree.nodes.len() == 1, "leaf with {n} samples");
+            }
+        }
+    }
+
+    #[test]
+    fn node_links_are_consistent() {
+        let data = trunk(400, 8, 9);
+        let cfg = ForestConfig::default();
+        let tree = train_one(&data, &cfg, 10);
+        let mut seen = vec![false; tree.nodes.len()];
+        // BFS from root must reach every node exactly once.
+        let mut queue = vec![0usize];
+        while let Some(i) = queue.pop() {
+            assert!(!seen[i], "node {i} reachable twice");
+            seen[i] = true;
+            if let Node::Split { left, right, .. } = &tree.nodes[i] {
+                assert_ne!(*left, u32::MAX);
+                assert_ne!(*right, u32::MAX);
+                queue.push(*left as usize);
+                queue.push(*right as usize);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "orphan nodes");
+    }
+
+    #[test]
+    fn axis_aligned_source_uses_single_features() {
+        let data = trunk(300, 16, 11);
+        let cfg = ForestConfig {
+            strategy: SplitStrategy::Exact,
+            ..Default::default()
+        };
+        let mut t = TreeTrainer::new(
+            &data,
+            &cfg,
+            ProjectionSource::AxisAligned { mtry: 4 },
+            Pcg64::new(12),
+        );
+        let tree = t.train(ActiveSet::full(data.n_samples()));
+        for node in &tree.nodes {
+            if let Node::Split { projection, .. } = node {
+                assert_eq!(projection.terms.len(), 1);
+                assert_eq!(projection.terms[0].1, 1.0);
+            }
+        }
+        assert!(tree.is_pure());
+    }
+
+    #[test]
+    fn instrumentation_counts_nodes() {
+        let data = trunk(400, 8, 13);
+        let cfg = ForestConfig {
+            instrument: true,
+            ..Default::default()
+        };
+        let mut t =
+            TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(14));
+        let tree = t.train(ActiveSet::full(data.n_samples()));
+        // Internal nodes recorded; leaves counted separately.
+        let n_internal = tree.nodes.len() - tree.n_leaves();
+        assert!(t.stats.n_nodes as usize >= n_internal);
+        assert_eq!(t.stats.n_leaves as usize, tree.n_leaves());
+        assert!(t.stats.wall_ns > 0);
+        assert!(!t.stats.by_depth.is_empty());
+    }
+
+    /// A mock accelerator that replays the CPU vectorized path, letting us
+    /// test the hybrid wiring without PJRT.
+    struct MockAccel {
+        calls: usize,
+    }
+    impl NodeAccel for MockAccel {
+        fn best_node_split(
+            &mut self,
+            values: &[f32],
+            p: usize,
+            n: usize,
+            labels: &[u16],
+            boundaries: &[f32],
+            n_bins: usize,
+            min_leaf: usize,
+        ) -> Option<(usize, usize, f64)> {
+            self.calls += 1;
+            let mut parent = [0usize; 2];
+            for &l in labels {
+                parent[l as usize] += 1;
+            }
+            let crit = crate::split::SplitCriterion::Entropy;
+            let mut best: Option<(usize, usize, f64)> = None;
+            for pi in 0..p {
+                let vals = &values[pi * n..(pi + 1) * n];
+                let bounds = &boundaries[pi * n_bins..(pi + 1) * n_bins];
+                // Scan every edge directly.
+                for k in 0..n_bins - 1 {
+                    let t = bounds[k];
+                    if !t.is_finite() {
+                        continue;
+                    }
+                    let mut left = [0u32; 2];
+                    let mut right = [0u32; 2];
+                    for (&v, &l) in vals.iter().zip(labels) {
+                        if v < t {
+                            left[l as usize] += 1;
+                        } else {
+                            right[l as usize] += 1;
+                        }
+                    }
+                    let nl = (left[0] + left[1]) as usize;
+                    let nr = n - nl;
+                    if nl < min_leaf.max(1) || nr < min_leaf.max(1) {
+                        continue;
+                    }
+                    let parent_imp = crit.impurity(&parent);
+                    let gain = crit.gain(
+                        parent_imp,
+                        n as f64,
+                        &left,
+                        nl as f64,
+                        &right,
+                        nr as f64,
+                    );
+                    if best.map_or(true, |(_, _, g)| gain > g) {
+                        best = Some((pi, k, gain));
+                    }
+                }
+            }
+            best
+        }
+    }
+
+    #[test]
+    fn hybrid_uses_accelerator_for_large_nodes_and_trains_correctly() {
+        let data = trunk(800, 8, 15);
+        let mut cfg = ForestConfig {
+            strategy: SplitStrategy::Hybrid,
+            ..Default::default()
+        };
+        cfg.thresholds.sort_below = 64;
+        cfg.thresholds.accel_above = 200;
+        let mut accel = MockAccel { calls: 0 };
+        let mut t =
+            TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(16))
+                .with_accel(&mut accel);
+        let tree = t.train(ActiveSet::full(data.n_samples()));
+        assert!(tree.is_pure());
+        assert!(accel.calls > 0, "accelerator never invoked");
+    }
+
+    #[test]
+    fn hybrid_without_accel_falls_back() {
+        let data = trunk(500, 8, 17);
+        let mut cfg = ForestConfig {
+            strategy: SplitStrategy::Hybrid,
+            ..Default::default()
+        };
+        cfg.thresholds.accel_above = 100; // would offload, but no device
+        let tree = train_one(&data, &cfg, 18);
+        assert!(tree.is_pure());
+    }
+}

@@ -1,0 +1,58 @@
+//! # soforest — Vectorized Adaptive Histograms for Sparse Oblique Forests
+//!
+//! A from-scratch reproduction of *"Vectorized Adaptive Histograms for
+//! Sparse Oblique Forests"* (Lubonja et al., 2026): a sparse-oblique
+//! random-forest trainer that
+//!
+//! 1. **adaptively switches** between exact (sort-based) and histogram
+//!    splitting per tree node, with the crossover calibrated by a startup
+//!    microbenchmark ([`calibrate`]);
+//! 2. **vectorizes histogram filling** with a branchless two-level (16×16)
+//!    bin-routing structure in place of binary search ([`split::vectorized`]);
+//! 3. **dispatches the largest nodes to an accelerator** — here an
+//!    AOT-compiled XLA executable run through PJRT ([`accel`], [`runtime`]),
+//!    playing the role of the paper's GPU.
+//!
+//! The crate also carries everything the paper's evaluation depends on:
+//! synthetic dataset generators matched to the paper's Table 1
+//! ([`data::synth`]), the MIGHT honest-forest protocol ([`might`]), an
+//! axis-aligned RF baseline ([`forest::axis_aligned`]), per-depth/component
+//! instrumentation ([`metrics`]) and a micro-benchmark framework ([`bench`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use soforest::prelude::*;
+//!
+//! let mut rng = Pcg64::new(42);
+//! let data = soforest::data::synth::generate("trunk:2000:32", &mut rng).unwrap();
+//! let config = ForestConfig { n_trees: 10, ..Default::default() };
+//! let forest = train_forest(&data, &config, 42);
+//! let acc = forest.accuracy(&data);
+//! println!("train accuracy: {acc:.3}");
+//! ```
+
+pub mod accel;
+pub mod bench;
+pub mod calibrate;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod forest;
+pub mod metrics;
+pub mod might;
+pub mod projection;
+pub mod rng;
+pub mod runtime;
+pub mod split;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::ForestConfig;
+    pub use crate::coordinator::train_forest;
+    pub use crate::data::{ActiveSet, Dataset};
+    pub use crate::forest::Forest;
+    pub use crate::rng::Pcg64;
+    pub use crate::split::SplitStrategy;
+}

@@ -1,0 +1,9 @@
+//! `soforest` — CLI entry point. All logic lives in [`soforest::cli`].
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = soforest::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

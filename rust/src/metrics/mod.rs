@@ -1,0 +1,278 @@
+//! Timing instrumentation.
+//!
+//! The paper's method section opens with "we identified bottlenecks … by
+//! implementing full timing instrumentation … for histograms and exact
+//! splits and measured at all nodes in the tree". This module is that
+//! instrumentation: per-depth × per-component × per-method nanosecond
+//! accounting, cheap enough to leave on for the figure benches
+//! (`Instant::now` pairs around the five phases of the node loop), merged
+//! across trees and threads to produce Figures 1, 4 and 5.
+
+use crate::split::SplitMethod;
+use std::time::Instant;
+
+/// Phases of the per-node computation (paper Fig 2 / Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Component {
+    /// Projection sampling (the A.1 workload).
+    SampleProjections,
+    /// Sparse weighted column sum → dense feature.
+    ApplyProjection,
+    /// Histogram boundaries + fill (or the sort for exact nodes).
+    BuildHistogram,
+    /// Boundary scan / criterion evaluation.
+    EvaluateSplit,
+    /// Partitioning the active set after the winning split.
+    Partition,
+    /// Accelerator invocation (pad + transfer + execute).
+    Accelerator,
+}
+
+pub const N_COMPONENTS: usize = 6;
+
+impl Component {
+    pub const ALL: [Component; N_COMPONENTS] = [
+        Component::SampleProjections,
+        Component::ApplyProjection,
+        Component::BuildHistogram,
+        Component::EvaluateSplit,
+        Component::Partition,
+        Component::Accelerator,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::SampleProjections => "sample_projections",
+            Component::ApplyProjection => "apply_projection",
+            Component::BuildHistogram => "build_histogram",
+            Component::EvaluateSplit => "evaluate_split",
+            Component::Partition => "partition",
+            Component::Accelerator => "accelerator",
+        }
+    }
+
+    #[inline]
+    fn idx(&self) -> usize {
+        match self {
+            Component::SampleProjections => 0,
+            Component::ApplyProjection => 1,
+            Component::BuildHistogram => 2,
+            Component::EvaluateSplit => 3,
+            Component::Partition => 4,
+            Component::Accelerator => 5,
+        }
+    }
+}
+
+#[inline]
+fn method_idx(m: SplitMethod) -> usize {
+    match m {
+        SplitMethod::Exact => 0,
+        SplitMethod::Histogram => 1,
+        SplitMethod::VectorizedHistogram => 2,
+        SplitMethod::Accelerator => 3,
+    }
+}
+
+pub const METHOD_NAMES: [&str; 4] = ["exact", "histogram", "vectorized", "accelerator"];
+
+/// Accumulators for one tree depth.
+#[derive(Clone, Debug, Default)]
+pub struct DepthStats {
+    /// Nanoseconds per component.
+    pub component_ns: [u64; N_COMPONENTS],
+    /// Nodes processed per split method.
+    pub nodes_by_method: [u64; 4],
+    /// Total active samples seen (for nodes-size profiles, Fig 4).
+    pub total_samples: u64,
+    /// Total node-processing nanoseconds (component sums + untracked).
+    pub total_ns: u64,
+}
+
+impl DepthStats {
+    fn merge(&mut self, other: &DepthStats) {
+        for i in 0..N_COMPONENTS {
+            self.component_ns[i] += other.component_ns[i];
+        }
+        for i in 0..4 {
+            self.nodes_by_method[i] += other.nodes_by_method[i];
+        }
+        self.total_samples += other.total_samples;
+        self.total_ns += other.total_ns;
+    }
+}
+
+/// Per-tree (later per-forest) instrumentation record.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub by_depth: Vec<DepthStats>,
+    /// (node cardinality bucket log2, method) counts — Fig 4's scatter.
+    pub method_by_cardinality: Vec<[u64; 4]>,
+    pub n_nodes: u64,
+    pub n_leaves: u64,
+    pub max_depth: usize,
+    /// Wall-clock nanoseconds of whole-tree training.
+    pub wall_ns: u64,
+    pub enabled: bool,
+}
+
+impl TrainStats {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            ..Default::default()
+        }
+    }
+
+    #[inline]
+    fn depth_mut(&mut self, depth: usize) -> &mut DepthStats {
+        if self.by_depth.len() <= depth {
+            self.by_depth.resize(depth + 1, DepthStats::default());
+        }
+        self.max_depth = self.max_depth.max(depth);
+        &mut self.by_depth[depth]
+    }
+
+    /// Time `f`, attributing to (depth, component). When instrumentation is
+    /// off this is a direct call with no clock reads.
+    #[inline]
+    pub fn time<R>(&mut self, depth: usize, c: Component, f: impl FnOnce() -> R) -> R {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let r = f();
+        let ns = t0.elapsed().as_nanos() as u64;
+        let d = self.depth_mut(depth);
+        d.component_ns[c.idx()] += ns;
+        d.total_ns += ns;
+        r
+    }
+
+    /// Record a node processed with `method` over `n` active samples.
+    #[inline]
+    pub fn record_node(&mut self, depth: usize, method: SplitMethod, n: usize) {
+        self.n_nodes += 1;
+        if !self.enabled {
+            return;
+        }
+        let d = self.depth_mut(depth);
+        d.nodes_by_method[method_idx(method)] += 1;
+        d.total_samples += n as u64;
+        let bucket = (usize::BITS - n.max(1).leading_zeros()) as usize;
+        if self.method_by_cardinality.len() <= bucket {
+            self.method_by_cardinality.resize(bucket + 1, [0; 4]);
+        }
+        self.method_by_cardinality[bucket][method_idx(method)] += 1;
+    }
+
+    #[inline]
+    pub fn record_leaf(&mut self) {
+        self.n_leaves += 1;
+    }
+
+    pub fn merge(&mut self, other: &TrainStats) {
+        if self.by_depth.len() < other.by_depth.len() {
+            self.by_depth
+                .resize(other.by_depth.len(), DepthStats::default());
+        }
+        for (d, o) in self.by_depth.iter_mut().zip(&other.by_depth) {
+            d.merge(o);
+        }
+        if self.method_by_cardinality.len() < other.method_by_cardinality.len() {
+            self.method_by_cardinality
+                .resize(other.method_by_cardinality.len(), [0; 4]);
+        }
+        for (m, o) in self
+            .method_by_cardinality
+            .iter_mut()
+            .zip(&other.method_by_cardinality)
+        {
+            for i in 0..4 {
+                m[i] += o[i];
+            }
+        }
+        self.n_nodes += other.n_nodes;
+        self.n_leaves += other.n_leaves;
+        self.max_depth = self.max_depth.max(other.max_depth);
+        self.wall_ns += other.wall_ns;
+        self.enabled |= other.enabled;
+    }
+
+    /// Render the Fig-1-style per-depth table.
+    pub fn depth_table(&self) -> String {
+        let mut out = String::from(
+            "depth  nodes(exact/hist/vec/accel)      samples      total_ms  proj_ms  hist_ms  eval_ms\n",
+        );
+        for (depth, d) in self.by_depth.iter().enumerate() {
+            let ms = |ns: u64| ns as f64 / 1e6;
+            out.push_str(&format!(
+                "{depth:>5}  {:>7}/{:<7}/{:<7}/{:<6} {:>12}  {:>10.3} {:>8.3} {:>8.3} {:>8.3}\n",
+                d.nodes_by_method[0],
+                d.nodes_by_method[1],
+                d.nodes_by_method[2],
+                d.nodes_by_method[3],
+                d.total_samples,
+                ms(d.total_ns),
+                ms(d.component_ns[1]),
+                ms(d.component_ns[2]),
+                ms(d.component_ns[3]),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_stats_skip_accounting_but_count_nodes() {
+        let mut s = TrainStats::new(false);
+        let r = s.time(3, Component::BuildHistogram, || 7);
+        assert_eq!(r, 7);
+        s.record_node(3, SplitMethod::Exact, 100);
+        assert_eq!(s.n_nodes, 1);
+        assert!(s.by_depth.is_empty());
+    }
+
+    #[test]
+    fn time_attributes_to_depth_and_component() {
+        let mut s = TrainStats::new(true);
+        s.time(2, Component::EvaluateSplit, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert_eq!(s.by_depth.len(), 3);
+        assert!(s.by_depth[2].component_ns[3] >= 1_000_000);
+        assert_eq!(s.by_depth[2].component_ns[0], 0);
+    }
+
+    #[test]
+    fn record_node_buckets_by_log2() {
+        let mut s = TrainStats::new(true);
+        s.record_node(0, SplitMethod::Exact, 1); // bucket 1
+        s.record_node(0, SplitMethod::Histogram, 1000); // bucket 10
+        s.record_node(1, SplitMethod::Histogram, 1024); // bucket 11
+        assert_eq!(s.method_by_cardinality[1][0], 1);
+        assert_eq!(s.method_by_cardinality[10][1], 1);
+        assert_eq!(s.method_by_cardinality[11][1], 1);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = TrainStats::new(true);
+        a.record_node(0, SplitMethod::Exact, 4);
+        a.record_leaf();
+        let mut b = TrainStats::new(true);
+        b.record_node(2, SplitMethod::VectorizedHistogram, 5000);
+        b.record_node(0, SplitMethod::Exact, 4);
+        a.merge(&b);
+        assert_eq!(a.n_nodes, 3);
+        assert_eq!(a.n_leaves, 1);
+        assert_eq!(a.max_depth, 2);
+        assert_eq!(a.by_depth[0].nodes_by_method[0], 2);
+        assert_eq!(a.by_depth[2].nodes_by_method[2], 1);
+        assert!(!a.depth_table().is_empty());
+    }
+}

@@ -1,0 +1,147 @@
+//! Screening metrics: ROC-AUC, sensitivity@specificity, coefficient of
+//! variation — the statistics MIGHT reports (paper §2: "coefficients of
+//! variation orders of magnitude less … at the same or better sensitivity").
+
+/// Area under the ROC curve of (score, label) pairs via the rank statistic
+/// (Mann–Whitney), with the standard tie correction.
+pub fn roc_auc(pairs: &[(f32, u16)]) -> f64 {
+    let n1 = pairs.iter().filter(|(_, l)| *l == 1).count();
+    let n0 = pairs.len() - n1;
+    if n0 == 0 || n1 == 0 {
+        return f64::NAN;
+    }
+    let mut sorted: Vec<(f32, u16)> = pairs.to_vec();
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+    // Average ranks over tie groups.
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < sorted.len() {
+        let mut j = i;
+        while j < sorted.len() && sorted[j].0 == sorted[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + 1 + j) as f64 / 2.0; // ranks are 1-based
+        for item in &sorted[i..j] {
+            if item.1 == 1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    (rank_sum_pos - n1 as f64 * (n1 as f64 + 1.0) / 2.0) / (n0 as f64 * n1 as f64)
+}
+
+/// Sensitivity (true-positive rate) at the score threshold achieving at
+/// least `specificity` on the negatives — S@98 is the cancer-screening
+/// headline statistic of the MIGHT papers.
+pub fn sensitivity_at_specificity(pairs: &[(f32, u16)], specificity: f64) -> f64 {
+    let mut negs: Vec<f32> = pairs
+        .iter()
+        .filter(|(_, l)| *l == 0)
+        .map(|(s, _)| *s)
+        .collect();
+    if negs.is_empty() {
+        return f64::NAN;
+    }
+    negs.sort_by(f32::total_cmp);
+    // Threshold: the smallest score t such that P(neg < t) >= specificity.
+    let k = ((specificity * negs.len() as f64).ceil() as usize).min(negs.len() - 1);
+    let threshold = negs[k];
+    let pos: Vec<f32> = pairs
+        .iter()
+        .filter(|(_, l)| *l == 1)
+        .map(|(s, _)| *s)
+        .collect();
+    if pos.is_empty() {
+        return f64::NAN;
+    }
+    pos.iter().filter(|&&s| s > threshold).count() as f64 / pos.len() as f64
+}
+
+/// Coefficient of variation (σ/μ) of replicate statistics.
+pub fn coefficient_of_variation(values: &[f64]) -> f64 {
+    let n = values.len();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    if mean == 0.0 {
+        return f64::NAN;
+    }
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+    var.sqrt() / mean
+}
+
+/// Plain accuracy of hard predictions.
+pub fn accuracy(preds: &[u16], labels: &[u16]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| p == l)
+        .count() as f64
+        / preds.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let perfect: Vec<(f32, u16)> =
+            vec![(0.1, 0), (0.2, 0), (0.8, 1), (0.9, 1)];
+        assert!((roc_auc(&perfect) - 1.0).abs() < 1e-12);
+        let inverted: Vec<(f32, u16)> =
+            vec![(0.9, 0), (0.8, 0), (0.2, 1), (0.1, 1)];
+        assert!(roc_auc(&inverted).abs() < 1e-12);
+        let chance: Vec<(f32, u16)> =
+            vec![(0.5, 0), (0.5, 1), (0.5, 0), (0.5, 1)];
+        assert!((roc_auc(&chance) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_handles_ties_correctly() {
+        // 1 pos tied with 1 of 2 negs: AUC = (1 + 0.5)/2 = 0.75.
+        let pairs: Vec<(f32, u16)> = vec![(0.1, 0), (0.5, 0), (0.5, 1)];
+        assert!((roc_auc(&pairs) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_is_nan() {
+        assert!(roc_auc(&[(0.5, 1), (0.6, 1)]).is_nan());
+    }
+
+    #[test]
+    fn s_at_s_perfect_separation() {
+        let mut pairs = Vec::new();
+        for i in 0..100 {
+            pairs.push((i as f32 / 100.0, 0));
+            pairs.push((1.0 + i as f32 / 100.0, 1));
+        }
+        assert!((sensitivity_at_specificity(&pairs, 0.98) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn s_at_s_no_separation_is_low() {
+        let mut pairs = Vec::new();
+        for i in 0..1000 {
+            pairs.push((i as f32, (i % 2) as u16));
+        }
+        let s = sensitivity_at_specificity(&pairs, 0.98);
+        assert!(s < 0.05, "S@98 = {s}");
+    }
+
+    #[test]
+    fn cov_basics() {
+        assert!((coefficient_of_variation(&[1.0, 1.0, 1.0]) - 0.0).abs() < 1e-12);
+        let cov = coefficient_of_variation(&[90.0, 100.0, 110.0]);
+        assert!((cov - 0.1).abs() < 0.01, "{cov}");
+        assert!(coefficient_of_variation(&[1.0]).is_nan());
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 0, 0]), 2.0 / 3.0);
+    }
+}

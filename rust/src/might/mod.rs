@@ -1,0 +1,245 @@
+//! The MIGHT honest-forest protocol (paper §2, refs [8, 9]).
+//!
+//! MIGHT wraps the sparse-oblique forest with the machinery that yields its
+//! uncertainty guarantees:
+//!
+//! 1. each tree's subsample is split three ways — **train** (structure
+//!    search, to purity), **calibrate** (leaf posterior fitting) and
+//!    **validate** (scoring);
+//! 2. leaf posteriors are re-estimated on the calibration samples (honest:
+//!    structure never sees them), with Laplace smoothing;
+//! 3. validation samples are scored only by trees that held them out,
+//!    giving an unbiased posterior per sample;
+//! 4. metrics built for screening: ROC-AUC, **sensitivity at fixed
+//!    specificity** (S@98 — cancer screening minimizes false positives) and
+//!    the **coefficient of variation** of that statistic across replicates.
+
+pub mod metrics;
+
+use crate::config::ForestConfig;
+use crate::data::{sampling, Dataset};
+use crate::forest::tree::{Node, ProjectionSource, TreeTrainer};
+use crate::forest::Forest;
+use crate::rng::Pcg64;
+
+/// Proportions of each tree's subsample assigned to the three roles.
+#[derive(Clone, Copy, Debug)]
+pub struct MightConfig {
+    /// Fraction of the full dataset subsampled per tree (paper: 50–80%).
+    pub subsample: f64,
+    pub train_prop: f64,
+    pub calibrate_prop: f64,
+    pub validate_prop: f64,
+    /// Laplace smoothing for calibrated posteriors.
+    pub smoothing: f64,
+}
+
+impl Default for MightConfig {
+    fn default() -> Self {
+        Self {
+            subsample: 0.8,
+            train_prop: 0.5,
+            calibrate_prop: 0.25,
+            validate_prop: 0.25,
+            smoothing: 1.0,
+        }
+    }
+}
+
+/// A trained MIGHT ensemble: a forest with honest posteriors plus the
+/// per-sample validation scores gathered during training.
+pub struct MightForest {
+    pub forest: Forest,
+    /// Mean honest P(class 1) per dataset sample (NaN when a sample was
+    /// never in any tree's validation set).
+    pub scores: Vec<f32>,
+    /// Number of trees that scored each sample.
+    pub coverage: Vec<u32>,
+}
+
+/// Train a MIGHT ensemble.
+pub fn train_might(
+    data: &Dataset,
+    forest_cfg: &ForestConfig,
+    might_cfg: &MightConfig,
+    seed: u64,
+) -> MightForest {
+    assert_eq!(data.n_classes(), 2, "MIGHT scoring assumes binary labels");
+    let props = [
+        might_cfg.train_prop,
+        might_cfg.calibrate_prop,
+        might_cfg.validate_prop,
+    ];
+    let psum: f64 = props.iter().sum();
+    assert!((psum - 1.0).abs() < 1e-9, "role proportions must sum to 1");
+
+    let n = data.n_samples();
+    let mut score_sum = vec![0f64; n];
+    let mut coverage = vec![0u32; n];
+    let mut trees = Vec::with_capacity(forest_cfg.n_trees);
+    let mut row = Vec::new();
+
+    for tree_idx in 0..forest_cfg.n_trees {
+        let mut rng = Pcg64::with_stream(seed, tree_idx as u64 + 1);
+        let split = sampling::might_split(&mut rng, data, might_cfg.subsample, props);
+
+        // 1. Structure on the train role only.
+        let mut trainer = TreeTrainer::new(
+            data,
+            forest_cfg,
+            ProjectionSource::SparseOblique,
+            rng,
+        );
+        let mut tree = trainer.train(split.train);
+
+        // 2. Honest posteriors from the calibration role.
+        let n_classes = data.n_classes();
+        let mut leaf_counts: Vec<Vec<f64>> = vec![Vec::new(); tree.nodes.len()];
+        for &s in &split.calibrate.indices {
+            data.row(s as usize, &mut row);
+            let leaf = tree.leaf_index(&row);
+            if leaf_counts[leaf].is_empty() {
+                leaf_counts[leaf] = vec![0.0; n_classes];
+            }
+            leaf_counts[leaf][data.label(s as usize) as usize] += 1.0;
+        }
+        for (ni, node) in tree.nodes.iter_mut().enumerate() {
+            if let Node::Leaf { posterior, majority, .. } = node {
+                let counts = if leaf_counts[ni].is_empty() {
+                    // No calibration sample reached this leaf: fall back to
+                    // the (smoothed) prior-free uniform posterior — the leaf
+                    // abstains rather than repeating the training label.
+                    vec![0.0; n_classes]
+                } else {
+                    leaf_counts[ni].clone()
+                };
+                let total: f64 =
+                    counts.iter().sum::<f64>() + might_cfg.smoothing * n_classes as f64;
+                let post: Vec<f32> = counts
+                    .iter()
+                    .map(|&c| ((c + might_cfg.smoothing) / total) as f32)
+                    .collect();
+                *majority = post
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map_or(0, |(i, _)| i as u16);
+                *posterior = post;
+            }
+        }
+
+        // 3. Score the validation role with the calibrated tree.
+        for &s in &split.validate.indices {
+            data.row(s as usize, &mut row);
+            let p1 = tree.predict_row(&row)[1];
+            score_sum[s as usize] += p1 as f64;
+            coverage[s as usize] += 1;
+        }
+
+        trees.push(tree);
+    }
+
+    let scores: Vec<f32> = score_sum
+        .iter()
+        .zip(&coverage)
+        .map(|(&s, &c)| if c > 0 { (s / c as f64) as f32 } else { f32::NAN })
+        .collect();
+
+    MightForest {
+        forest: Forest::new(trees, data.n_classes(), data.n_features()),
+        scores,
+        coverage,
+    }
+}
+
+impl MightForest {
+    /// (score, label) pairs for samples with validation coverage.
+    pub fn scored_pairs(&self, data: &Dataset) -> Vec<(f32, u16)> {
+        self.scores
+            .iter()
+            .zip(data.labels())
+            .filter(|(s, _)| !s.is_nan())
+            .map(|(&s, &l)| (s, l))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+
+    fn setup() -> (Dataset, MightForest) {
+        let data = TrunkConfig {
+            n_samples: 800,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(31));
+        let cfg = ForestConfig {
+            n_trees: 25,
+            n_threads: 1,
+            ..Default::default()
+        };
+        let mf = train_might(&data, &cfg, &MightConfig::default(), 7);
+        (data, mf)
+    }
+
+    #[test]
+    fn most_samples_get_scored() {
+        let (data, mf) = setup();
+        let covered = mf.coverage.iter().filter(|&&c| c > 0).count();
+        // P(sample in no validation set of 25 trees) = (1-0.2)^25 ≈ 0.4%.
+        assert!(covered as f64 > 0.95 * data.n_samples() as f64);
+    }
+
+    #[test]
+    fn honest_scores_separate_classes() {
+        let (data, mf) = setup();
+        let pairs = mf.scored_pairs(&data);
+        let mean = |class: u16| {
+            let v: Vec<f32> = pairs
+                .iter()
+                .filter(|(_, l)| *l == class)
+                .map(|(s, _)| *s)
+                .collect();
+            v.iter().sum::<f32>() / v.len() as f32
+        };
+        let (m0, m1) = (mean(0), mean(1));
+        assert!(
+            m1 - m0 > 0.3,
+            "honest scores don't separate: class0 {m0}, class1 {m1}"
+        );
+    }
+
+    #[test]
+    fn posteriors_are_smoothed_probabilities() {
+        let (_, mf) = setup();
+        for tree in &mf.forest.trees {
+            for node in &tree.nodes {
+                if let Node::Leaf { posterior, .. } = node {
+                    let sum: f32 = posterior.iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-5);
+                    // Laplace smoothing: never exactly 0 or 1.
+                    for &p in posterior {
+                        assert!(p > 0.0 && p < 1.0, "unsmoothed posterior {p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "binary")]
+    fn rejects_multiclass() {
+        let data = Dataset::from_columns(
+            vec![vec![0.0, 1.0, 2.0, 0.5, 1.5, 2.5]],
+            vec![0, 1, 2, 0, 1, 2],
+        );
+        let cfg = ForestConfig {
+            n_trees: 1,
+            ..Default::default()
+        };
+        train_might(&data, &cfg, &MightConfig::default(), 1);
+    }
+}

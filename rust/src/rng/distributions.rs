@@ -1,0 +1,263 @@
+//! Non-uniform distributions on top of [`Pcg64`](super::Pcg64).
+//!
+//! `Binomial` is the workhorse of the Appendix A.1 Floyd sampler: instead of
+//! Θ(np) Unif(0,1) draws to build the projection mask, the total number of
+//! non-zeros is drawn once from Binomial(np, k/p) and placed with Floyd's
+//! distinct-sampling algorithm.
+
+use super::Pcg64;
+
+/// Gaussian with configurable mean / standard deviation.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0);
+        Self { mean, std }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.mean + self.std * rng.normal()
+    }
+
+    /// Bulk fill using paired Box–Muller (two variates per transcendental
+    /// pair) — used by the synthetic data generators where millions of
+    /// normals are drawn.
+    pub fn fill(&self, rng: &mut Pcg64, out: &mut [f32]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = loop {
+                let u = rng.unif01();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            let u2 = rng.unif01();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+            out[i] = (self.mean + self.std * r * c) as f32;
+            out[i + 1] = (self.mean + self.std * r * s) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.sample(rng) as f32;
+        }
+    }
+}
+
+/// Binomial(n, p) sampler.
+///
+/// Uses inversion (geometric skipping) for small n·p and the BTPE-lite
+/// normal-approximation-with-rejection split for large n·p. Exactness of the
+/// small-regime path is what the Floyd sampler tests rely on; the large
+/// regime only has to be statistically faithful.
+#[derive(Clone, Copy, Debug)]
+pub struct Binomial {
+    pub n: u64,
+    pub p: f64,
+}
+
+impl Binomial {
+    pub fn new(n: u64, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p={p} out of range");
+        Self { n, p }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        if self.p == 0.0 || self.n == 0 {
+            return 0;
+        }
+        if self.p == 1.0 {
+            return self.n;
+        }
+        // Work with q = min(p, 1-p) and mirror at the end.
+        let flipped = self.p > 0.5;
+        let q = if flipped { 1.0 - self.p } else { self.p };
+        let np = self.n as f64 * q;
+        let k = if np < 30.0 {
+            self.sample_inversion(rng, q)
+        } else {
+            self.sample_rejection(rng, q)
+        };
+        if flipped {
+            self.n - k
+        } else {
+            k
+        }
+    }
+
+    /// First-waiting-time inversion: skip over failures geometrically.
+    /// Exact; O(np) expected draws.
+    fn sample_inversion(&self, rng: &mut Pcg64, q: f64) -> u64 {
+        let lq = (1.0 - q).ln();
+        if lq == 0.0 {
+            return 0;
+        }
+        let mut count = 0u64;
+        let mut pos = 0u64;
+        loop {
+            // Number of failures before the next success ~ Geometric(q).
+            let g = (rng.unif01().ln() / lq).floor() as u64 + 1;
+            pos += g;
+            if pos > self.n {
+                return count;
+            }
+            count += 1;
+        }
+    }
+
+    /// Normal approximation with continuity correction and a squeeze/accept
+    /// step against the exact pmf ratio — adequate for the large-np regime
+    /// (projection counts, bootstrap sizes).
+    fn sample_rejection(&self, rng: &mut Pcg64, q: f64) -> u64 {
+        let n = self.n as f64;
+        let mean = n * q;
+        let sd = (n * q * (1.0 - q)).sqrt();
+        loop {
+            let x = mean + sd * rng.normal();
+            if x < -0.5 || x > n + 0.5 {
+                continue;
+            }
+            let k = (x + 0.5).floor();
+            if k < 0.0 || k > n {
+                continue;
+            }
+            // Accept with ratio pmf(k) / (normal density at k, scaled). A
+            // single Stirling-based log-pmf evaluation keeps this exact
+            // enough for our statistical tests (chi-square at 4 sigma).
+            let accept = (ln_pmf(self.n, q, k as u64)
+                - ln_normal_pdf(k, mean, sd)
+                - (2.0 * std::f64::consts::PI).sqrt().recip().ln()
+                + sd.ln())
+            .exp()
+                / 1.08; // slight envelope inflation
+            if rng.unif01() <= accept.min(1.0) {
+                return k as u64;
+            }
+        }
+    }
+}
+
+fn ln_normal_pdf(x: f64, mean: f64, sd: f64) -> f64 {
+    let z = (x - mean) / sd;
+    -0.5 * z * z - sd.ln() - 0.5 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// Exact log pmf of Binomial(n, p) at k via `ln_gamma`.
+fn ln_pmf(n: u64, p: f64, k: u64) -> f64 {
+    let (n, k) = (n as f64, k as f64);
+    ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)
+        + k * p.ln()
+        + (n - k) * (1.0 - p).ln()
+}
+
+/// Lanczos log-gamma (g=7, n=9), |err| < 1e-13 on the positive axis.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_1,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        let mut fact = 1.0f64;
+        for n in 1..15u32 {
+            fact *= n as f64;
+            let lg = ln_gamma(n as f64 + 1.0);
+            assert!((lg - fact.ln()).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn binomial_small_regime_moments() {
+        let mut rng = Pcg64::new(23);
+        let b = Binomial::new(50, 0.1); // np = 5 -> inversion path
+        let trials = 200_000;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..trials {
+            let k = b.sample(&mut rng) as f64;
+            s1 += k;
+            s2 += k * k;
+        }
+        let mean = s1 / trials as f64;
+        let var = s2 / trials as f64 - mean * mean;
+        assert!((mean - 5.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.5).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn binomial_large_regime_moments() {
+        let mut rng = Pcg64::new(29);
+        let b = Binomial::new(10_000, 0.3); // np = 3000 -> rejection path
+        let trials = 20_000;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..trials {
+            let k = b.sample(&mut rng) as f64;
+            assert!(k <= 10_000.0);
+            s1 += k;
+            s2 += k * k;
+        }
+        let mean = s1 / trials as f64;
+        let var = s2 / trials as f64 - mean * mean;
+        assert!((mean - 3000.0).abs() < 3.0, "mean {mean}");
+        let expect_var = 10_000.0 * 0.3 * 0.7;
+        assert!((var / expect_var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut rng = Pcg64::new(31);
+        assert_eq!(Binomial::new(10, 0.0).sample(&mut rng), 0);
+        assert_eq!(Binomial::new(10, 1.0).sample(&mut rng), 10);
+        assert_eq!(Binomial::new(0, 0.5).sample(&mut rng), 0);
+        // p > 0.5 mirror path
+        let b = Binomial::new(100, 0.9);
+        let mean: f64 =
+            (0..20_000).map(|_| b.sample(&mut rng) as f64).sum::<f64>() / 20_000.0;
+        assert!((mean - 90.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_fill_moments() {
+        let mut rng = Pcg64::new(37);
+        let mut buf = vec![0f32; 100_001]; // odd length exercises the tail
+        Normal::new(2.0, 3.0).fill(&mut rng, &mut buf);
+        let n = buf.len() as f64;
+        let mean = buf.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.2, "var {var}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set does not include `rand`, so the library carries its
+//! own generator: PCG-XSL-RR 128/64 (O'Neill 2014), the same family used by
+//! NumPy's `PCG64`. It is fast (one 128-bit multiply per draw), has a
+//! guaranteed period of 2^128 and supports cheap independent streams, which
+//! the coordinator uses to give every tree (and every worker thread) its own
+//! reproducible stream.
+//!
+//! Everything downstream (bootstrap, projection sampling, bin boundaries,
+//! synthetic data) draws from this module, so a fixed seed reproduces a
+//! forest bit-for-bit regardless of thread count.
+
+mod distributions;
+
+pub use distributions::{Binomial, Normal};
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, xor-shift-low + random rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    /// Stream selector; must be odd. Two generators with different
+    /// increments produce statistically independent sequences.
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+const PCG_DEFAULT_INC: u128 = 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f;
+
+impl Pcg64 {
+    /// Create a generator from a seed, using the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Create a generator on an independent stream. `stream` is hashed into
+    /// the increment so that consecutive stream ids are decorrelated.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let seq = splitmix64(stream ^ 0x9e37_79b9_7f4a_7c15);
+        let inc = (((seq as u128) << 64 | splitmix64(seq) as u128) << 1) | 1;
+        let mut rng = Self {
+            state: 0,
+            inc: inc ^ PCG_DEFAULT_INC,
+        };
+        rng.inc |= 1;
+        // Standard PCG seeding dance: advance once, add seed, advance again.
+        rng.step();
+        rng.state = rng.state.wrapping_add(splitmix64(seed) as u128 | ((seed as u128) << 64));
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next 32 uniformly random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn unif01(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn unif01_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.unif01()
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` via Lemire's multiply-shift
+    /// rejection method — the hot call in bootstrap and Floyd sampling.
+    #[inline]
+    pub fn bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.bounded(bound as u64) as usize
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.unif01() < p
+    }
+
+    /// Random sign: ±1 with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Standard normal via Box–Muller on cached pairs.
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        // Box–Muller without caching the second variate: the callers that
+        // need bulk normals use `distributions::Normal::fill`.
+        let u1 = loop {
+            let u = self.unif01();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.unif01();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.index(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` with Floyd's algorithm
+    /// (Bentley & Floyd 1987) — O(k) expected time, no O(n) scratch. This is
+    /// the combinatorial core of the paper's Appendix A.1 projection
+    /// sampler.
+    pub fn sample_distinct(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        out.clear();
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        // For small k relative to n, Floyd with a linear membership probe is
+        // faster than any hash set; k here is O(sqrt(d)) so the probe is cheap.
+        for j in (n - k)..n {
+            let t = self.index(j + 1);
+            if out.contains(&t) {
+                out.push(j);
+            } else {
+                out.push(t);
+            }
+        }
+    }
+
+    /// Split off an independent child generator (used to seed per-tree
+    /// streams from the coordinator's root generator).
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64(), stream)
+    }
+}
+
+/// SplitMix64 — used only for seed expansion.
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::with_stream(42, 0);
+        let mut b = Pcg64::with_stream(42, 1);
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn unif01_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.unif01();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn bounded_is_unbiased_small_bound() {
+        let mut rng = Pcg64::new(3);
+        let mut counts = [0usize; 7];
+        let n = 700_000;
+        for _ in 0..n {
+            counts[rng.bounded(7) as usize] += 1;
+        }
+        let expect = n as f64 / 7.0;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn bounded_never_exceeds() {
+        let mut rng = Pcg64::new(9);
+        for bound in [1u64, 2, 3, 255, 256, u32::MAX as u64 + 1] {
+            for _ in 0..1000 {
+                assert!(rng.bounded(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Pcg64::new(5);
+        let mut out = Vec::new();
+        for (n, k) in [(10, 10), (100, 7), (1000, 32), (5, 0), (1, 1)] {
+            rng.sample_distinct(n, k, &mut out);
+            assert_eq!(out.len(), k);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates for n={n} k={k}");
+            assert!(out.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_uniform_marginals() {
+        // Each index should appear with probability k/n.
+        let mut rng = Pcg64::new(13);
+        let (n, k, trials) = (20usize, 5usize, 40_000usize);
+        let mut hits = vec![0usize; n];
+        let mut out = Vec::new();
+        for _ in 0..trials {
+            rng.sample_distinct(n, k, &mut out);
+            for &i in &out {
+                hits[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for &h in &hits {
+            assert!(
+                (h as f64 - expect).abs() < 6.0 * expect.sqrt(),
+                "hits={hits:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,286 @@
+//! Split quality criteria.
+//!
+//! YDF's sparse-oblique learner scores splits by information gain
+//! (entropy); Gini is provided for completeness and for the ablation bench.
+//! All engines report gain on the same scale so the tree trainer can
+//! compare candidates produced by different engines within one node.
+
+/// Impurity measure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitCriterion {
+    /// Shannon entropy in nats (YDF default).
+    Entropy,
+    /// Gini impurity.
+    Gini,
+}
+
+impl SplitCriterion {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "entropy" => Some(Self::Entropy),
+            "gini" => Some(Self::Gini),
+            _ => None,
+        }
+    }
+
+    /// Impurity of a class-count vector with the given total.
+    #[inline]
+    pub fn impurity_with_total(&self, counts: &[usize], total: f64) -> f64 {
+        if total <= 0.0 {
+            return 0.0;
+        }
+        match self {
+            SplitCriterion::Entropy => {
+                let mut h = 0.0;
+                for &c in counts {
+                    if c > 0 {
+                        let p = c as f64 / total;
+                        h -= p * p.ln();
+                    }
+                }
+                h
+            }
+            SplitCriterion::Gini => {
+                let mut sum_sq = 0.0;
+                for &c in counts {
+                    let p = c as f64 / total;
+                    sum_sq += p * p;
+                }
+                1.0 - sum_sq
+            }
+        }
+    }
+
+    #[inline]
+    pub fn impurity(&self, counts: &[usize]) -> f64 {
+        self.impurity_with_total(counts, counts.iter().sum::<usize>() as f64)
+    }
+
+    /// Same, over u32 counts (histogram scan path).
+    #[inline]
+    pub fn impurity_u32(&self, counts: &[u32], total: f64) -> f64 {
+        if total <= 0.0 {
+            return 0.0;
+        }
+        match self {
+            SplitCriterion::Entropy => {
+                let mut h = 0.0;
+                for &c in counts {
+                    if c > 0 {
+                        let p = c as f64 / total;
+                        h -= p * p.ln();
+                    }
+                }
+                h
+            }
+            SplitCriterion::Gini => {
+                let mut sum_sq = 0.0;
+                for &c in counts {
+                    let p = c as f64 / total;
+                    sum_sq += p * p;
+                }
+                1.0 - sum_sq
+            }
+        }
+    }
+
+    /// Information gain of a (left, right) partition of a parent with
+    /// impurity `parent_imp` over `n` samples.
+    #[inline]
+    pub fn gain(
+        &self,
+        parent_imp: f64,
+        n: f64,
+        left: &[u32],
+        n_left: f64,
+        right: &[u32],
+        n_right: f64,
+    ) -> f64 {
+        parent_imp
+            - (n_left / n) * self.impurity_u32(left, n_left)
+            - (n_right / n) * self.impurity_u32(right, n_right)
+    }
+}
+
+/// Incremental boundary scanner shared by the exact and histogram engines.
+///
+/// Feed class counts left-to-right (per sample or per bin); at each
+/// candidate boundary call [`BoundaryScan::gain_here`]. Keeps running left
+/// counts and derives right = parent − left, so a full scan is O(n·C) with
+/// no allocation.
+pub struct BoundaryScan<'a> {
+    criterion: SplitCriterion,
+    parent_counts: &'a [usize],
+    parent_imp: f64,
+    n: usize,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub n_left: usize,
+}
+
+impl<'a> BoundaryScan<'a> {
+    pub fn new(criterion: SplitCriterion, parent_counts: &'a [usize]) -> Self {
+        let n: usize = parent_counts.iter().sum();
+        let parent_imp = criterion.impurity_with_total(parent_counts, n as f64);
+        let right = parent_counts.iter().map(|&c| c as u32).collect();
+        Self {
+            criterion,
+            parent_counts,
+            parent_imp,
+            n,
+            left: vec![0u32; parent_counts.len()],
+            right,
+            n_left: 0,
+        }
+    }
+
+    pub fn parent_impurity(&self) -> f64 {
+        self.parent_imp
+    }
+
+    /// Move one sample of class `label` from right to left.
+    #[inline]
+    pub fn push(&mut self, label: u16) {
+        self.left[label as usize] += 1;
+        self.right[label as usize] -= 1;
+        self.n_left += 1;
+    }
+
+    /// Move a whole bin's class counts from right to left.
+    #[inline]
+    pub fn push_bin(&mut self, bin_counts: &[u32]) {
+        for (c, (&b, r)) in self
+            .left
+            .iter_mut()
+            .zip(bin_counts.iter().zip(self.right.iter_mut()))
+        {
+            *c += b;
+            *r -= b;
+        }
+        self.n_left += bin_counts.iter().map(|&b| b as usize).sum::<usize>();
+    }
+
+    /// Gain if we split right here. `None` if a side would be empty or
+    /// smaller than `min_leaf`.
+    #[inline]
+    pub fn gain_here(&self, min_leaf: usize) -> Option<f64> {
+        let n_right = self.n - self.n_left;
+        if self.n_left < min_leaf.max(1) || n_right < min_leaf.max(1) {
+            return None;
+        }
+        Some(self.criterion.gain(
+            self.parent_imp,
+            self.n as f64,
+            &self.left,
+            self.n_left as f64,
+            &self.right,
+            n_right as f64,
+        ))
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.n
+    }
+
+    pub fn parent_counts(&self) -> &[usize] {
+        self.parent_counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_known_values() {
+        let e = SplitCriterion::Entropy;
+        assert_eq!(e.impurity(&[10, 0]), 0.0);
+        let h = e.impurity(&[5, 5]);
+        assert!((h - std::f64::consts::LN_2).abs() < 1e-12);
+        let h3 = e.impurity(&[1, 1, 1]);
+        assert!((h3 - 3f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_known_values() {
+        let g = SplitCriterion::Gini;
+        assert_eq!(g.impurity(&[10, 0]), 0.0);
+        assert!((g.impurity(&[5, 5]) - 0.5).abs() < 1e-12);
+        assert!((g.impurity(&[1, 1, 1, 1]) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_split_gain_equals_parent_impurity() {
+        for crit in [SplitCriterion::Entropy, SplitCriterion::Gini] {
+            let parent = [8usize, 8];
+            let mut scan = BoundaryScan::new(crit, &parent);
+            for _ in 0..8 {
+                scan.push(0);
+            }
+            let gain = scan.gain_here(1).unwrap();
+            assert!(
+                (gain - crit.impurity(&parent)).abs() < 1e-12,
+                "{crit:?}: {gain}"
+            );
+        }
+    }
+
+    #[test]
+    fn useless_split_has_zero_gain() {
+        let parent = [6usize, 6];
+        let mut scan = BoundaryScan::new(SplitCriterion::Entropy, &parent);
+        // Move a perfectly mixed half over.
+        for _ in 0..3 {
+            scan.push(0);
+            scan.push(1);
+        }
+        let gain = scan.gain_here(1).unwrap();
+        assert!(gain.abs() < 1e-12, "{gain}");
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let parent = [4usize, 4];
+        let mut scan = BoundaryScan::new(SplitCriterion::Entropy, &parent);
+        scan.push(0);
+        assert!(scan.gain_here(2).is_none()); // left side has 1 < 2
+        scan.push(0);
+        assert!(scan.gain_here(2).is_some());
+    }
+
+    #[test]
+    fn push_bin_equals_pushes() {
+        let parent = [10usize, 10];
+        let mut a = BoundaryScan::new(SplitCriterion::Gini, &parent);
+        let mut b = BoundaryScan::new(SplitCriterion::Gini, &parent);
+        for _ in 0..3 {
+            a.push(0);
+        }
+        for _ in 0..2 {
+            a.push(1);
+        }
+        b.push_bin(&[3, 2]);
+        assert_eq!(a.gain_here(1), b.gain_here(1));
+        assert_eq!(a.n_left, b.n_left);
+    }
+
+    #[test]
+    fn gain_never_negative_never_exceeds_parent() {
+        // Property check across random partitions.
+        let mut rng = crate::rng::Pcg64::new(77);
+        for _ in 0..200 {
+            let c0 = rng.index(50) + 1;
+            let c1 = rng.index(50) + 1;
+            let parent = [c0, c1];
+            let mut scan = BoundaryScan::new(SplitCriterion::Entropy, &parent);
+            let take0 = rng.index(c0 + 1);
+            let take1 = rng.index(c1 + 1);
+            scan.push_bin(&[take0 as u32, take1 as u32]);
+            if let Some(g) = scan.gain_here(1) {
+                let parent_imp = scan.parent_impurity();
+                assert!(g > -1e-12, "gain {g}");
+                assert!(g <= parent_imp + 1e-12, "gain {g} > parent {parent_imp}");
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Runtime-adaptive split-method selection (paper §4.1).
+//!
+//! "During tree-construction, we dynamically choose between a histogram and
+//! sorting on a node-by-node basis" — driven purely by the node's active
+//! sample count against thresholds measured once per training run by the
+//! calibration microbenchmark ([`crate::calibrate`]). Two nodes at the same
+//! depth may use different engines (paper Fig 4).
+
+use super::{SplitMethod, SplitStrategy};
+
+/// Cardinality thresholds governing the per-node choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitThresholds {
+    /// Nodes with fewer active samples than this sort (exact); at or above,
+    /// they histogram. Paper's CPU microbenchmark found ~350–1300 depending
+    /// on machine and routing (Fig 3 top / Fig 4).
+    pub sort_below: usize,
+    /// Nodes with at least this many active samples are offloaded to the
+    /// accelerator when the strategy allows it (Fig 3 bottom: ~29 000 on the
+    /// paper's GPU). `usize::MAX` disables offload.
+    pub accel_above: usize,
+}
+
+impl Default for SplitThresholds {
+    fn default() -> Self {
+        // Safe defaults in the range the paper reports; `soforest calibrate`
+        // replaces them with measured values at startup.
+        Self {
+            sort_below: 1024,
+            accel_above: usize::MAX,
+        }
+    }
+}
+
+/// Stateless selector from (strategy, thresholds) to the per-node method.
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicSplitter {
+    pub strategy: SplitStrategy,
+    pub thresholds: SplitThresholds,
+}
+
+impl DynamicSplitter {
+    pub fn new(strategy: SplitStrategy, thresholds: SplitThresholds) -> Self {
+        Self {
+            strategy,
+            thresholds,
+        }
+    }
+
+    /// Pick the split engine for a node with `n` active samples.
+    #[inline]
+    pub fn choose(&self, n: usize) -> SplitMethod {
+        match self.strategy {
+            SplitStrategy::Exact => SplitMethod::Exact,
+            SplitStrategy::Histogram => SplitMethod::Histogram,
+            SplitStrategy::VectorizedHistogram => SplitMethod::VectorizedHistogram,
+            SplitStrategy::Dynamic => {
+                if n < self.thresholds.sort_below {
+                    SplitMethod::Exact
+                } else {
+                    SplitMethod::Histogram
+                }
+            }
+            SplitStrategy::DynamicVectorized => {
+                if n < self.thresholds.sort_below {
+                    SplitMethod::Exact
+                } else {
+                    SplitMethod::VectorizedHistogram
+                }
+            }
+            SplitStrategy::Hybrid => {
+                if n >= self.thresholds.accel_above {
+                    SplitMethod::Accelerator
+                } else if n < self.thresholds.sort_below {
+                    SplitMethod::Exact
+                } else {
+                    SplitMethod::VectorizedHistogram
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_strategies_ignore_cardinality() {
+        let t = SplitThresholds {
+            sort_below: 100,
+            accel_above: 1000,
+        };
+        for n in [1usize, 99, 100, 10_000] {
+            assert_eq!(
+                DynamicSplitter::new(SplitStrategy::Exact, t).choose(n),
+                SplitMethod::Exact
+            );
+            assert_eq!(
+                DynamicSplitter::new(SplitStrategy::Histogram, t).choose(n),
+                SplitMethod::Histogram
+            );
+            assert_eq!(
+                DynamicSplitter::new(SplitStrategy::VectorizedHistogram, t).choose(n),
+                SplitMethod::VectorizedHistogram
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_crossover_at_threshold() {
+        let t = SplitThresholds {
+            sort_below: 350,
+            accel_above: usize::MAX,
+        };
+        let d = DynamicSplitter::new(SplitStrategy::DynamicVectorized, t);
+        assert_eq!(d.choose(349), SplitMethod::Exact);
+        assert_eq!(d.choose(350), SplitMethod::VectorizedHistogram);
+    }
+
+    #[test]
+    fn hybrid_three_way() {
+        let t = SplitThresholds {
+            sort_below: 350,
+            accel_above: 29_000,
+        };
+        let d = DynamicSplitter::new(SplitStrategy::Hybrid, t);
+        assert_eq!(d.choose(10), SplitMethod::Exact);
+        assert_eq!(d.choose(5000), SplitMethod::VectorizedHistogram);
+        assert_eq!(d.choose(29_000), SplitMethod::Accelerator);
+        assert_eq!(d.choose(1_000_000), SplitMethod::Accelerator);
+    }
+
+    #[test]
+    fn hybrid_with_disabled_accel_never_offloads() {
+        let d = DynamicSplitter::new(SplitStrategy::Hybrid, SplitThresholds::default());
+        assert_ne!(d.choose(usize::MAX - 1), SplitMethod::Accelerator);
+    }
+}

@@ -1,0 +1,200 @@
+//! Split search: the per-node hot path of the paper.
+//!
+//! Given a node's projected feature values and labels, find the threshold
+//! maximizing the split criterion. Four interchangeable engines:
+//!
+//! * [`exact`] — sort the (value, label) pairs and scan every boundary
+//!   between distinct values. Exact; `O(n log n)`; fastest for small `n`
+//!   (std's pdqsort + our unguarded insertion sort for tiny nodes).
+//! * [`histogram`] — YDF baseline: route each sample into one of `k` bins by
+//!   **binary search** over random-width boundaries, then scan bin edges.
+//!   `O(k + n log k)`; wins for large `n` but pays a fixed setup cost.
+//! * [`vectorized`] — the paper's contribution (§4.2): same histogram, but
+//!   routing uses a **branchless two-level 16×16 compare** (a two-level
+//!   deterministic skip list) instead of binary search — 2 vector compares
+//!   per sample instead of ~8 mispredicting branches.
+//! * [`dynamic`] — the paper's §4.1: pick exact vs histogram per node from
+//!   the calibrated cardinality thresholds.
+
+pub mod criterion;
+pub mod dynamic;
+pub mod exact;
+pub mod histogram;
+pub mod scan;
+pub mod vectorized;
+
+pub use criterion::SplitCriterion;
+pub use dynamic::{DynamicSplitter, SplitThresholds};
+
+use crate::rng::Pcg64;
+
+/// A candidate threshold split of one projected feature.
+///
+/// Samples with `value < threshold` go left. `gain` is the criterion
+/// improvement over the parent node (same scale for every engine, so the
+/// tree trainer can compare candidates across projections and engines).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Split {
+    pub threshold: f32,
+    pub gain: f64,
+    pub n_left: usize,
+    pub n_right: usize,
+}
+
+/// Which split engine a node used (recorded by the instrumentation and the
+/// Fig 4 bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SplitMethod {
+    Exact,
+    Histogram,
+    VectorizedHistogram,
+    Accelerator,
+}
+
+/// Forest-level splitting strategy (CLI `--strategy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitStrategy {
+    /// Always sort (SO-YDF exact baseline).
+    Exact,
+    /// Always histogram with binary-search routing (YDF histogram baseline).
+    Histogram,
+    /// Always histogram with vectorized routing.
+    VectorizedHistogram,
+    /// Adaptive exact/histogram with binary-search routing (§4.1 alone).
+    Dynamic,
+    /// Adaptive exact/vectorized-histogram (§4.1 + §4.2; paper headline).
+    DynamicVectorized,
+    /// DynamicVectorized + accelerator offload for the largest nodes (§4.3).
+    Hybrid,
+}
+
+impl SplitStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "exact" => Self::Exact,
+            "histogram" | "hist" => Self::Histogram,
+            "vectorized" | "vhist" => Self::VectorizedHistogram,
+            "dynamic" => Self::Dynamic,
+            "dynamic-vectorized" | "dynvec" => Self::DynamicVectorized,
+            "hybrid" => Self::Hybrid,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Histogram => "histogram",
+            Self::VectorizedHistogram => "vectorized",
+            Self::Dynamic => "dynamic",
+            Self::DynamicVectorized => "dynamic-vectorized",
+            Self::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Reusable per-worker scratch: no allocation inside the node loop (§Perf).
+#[derive(Default)]
+pub struct SplitScratch {
+    /// (value, label) pairs for the exact engine.
+    pub pairs: Vec<(f32, u16)>,
+    /// Histogram bin boundaries (padded to the two-level layout).
+    pub boundaries: Vec<f32>,
+    /// Coarse (every-16th) boundary vector for two-level routing.
+    pub coarse: Vec<f32>,
+    /// bins × classes counts.
+    pub counts: Vec<u32>,
+    /// Boundary-sampling scratch.
+    pub sample_idx: Vec<usize>,
+}
+
+/// Find the best split of `values`/`labels` with a specific engine.
+/// `parent_counts` are the node's class counts (computed once per node).
+pub fn best_split(
+    method: SplitMethod,
+    values: &[f32],
+    labels: &[u16],
+    parent_counts: &[usize],
+    criterion: SplitCriterion,
+    n_bins: usize,
+    min_leaf: usize,
+    rng: &mut Pcg64,
+    scratch: &mut SplitScratch,
+) -> Option<Split> {
+    match method {
+        SplitMethod::Exact => {
+            exact::best_split_exact(values, labels, parent_counts, criterion, min_leaf, scratch)
+        }
+        SplitMethod::Histogram => histogram::best_split_histogram(
+            values,
+            labels,
+            parent_counts,
+            criterion,
+            n_bins,
+            min_leaf,
+            rng,
+            scratch,
+            histogram::Routing::BinarySearch,
+        ),
+        SplitMethod::VectorizedHistogram => histogram::best_split_histogram(
+            values,
+            labels,
+            parent_counts,
+            criterion,
+            n_bins,
+            min_leaf,
+            rng,
+            scratch,
+            histogram::Routing::TwoLevel,
+        ),
+        SplitMethod::Accelerator => {
+            unreachable!("accelerator splits are batched at the node level (accel::)")
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::rng::Pcg64;
+
+    /// Random two-class node data with a signal: class 1 values shifted.
+    pub fn gaussian_node(rng: &mut Pcg64, n: usize, shift: f32) -> (Vec<f32>, Vec<u16>) {
+        let mut values = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let l = (i % 2) as u16;
+            let v = rng.normal() as f32 + if l == 1 { shift } else { 0.0 };
+            values.push(v);
+            labels.push(l);
+        }
+        (values, labels)
+    }
+
+    pub fn counts_of(labels: &[u16], n_classes: usize) -> Vec<usize> {
+        let mut c = vec![0usize; n_classes];
+        for &l in labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            SplitStrategy::Exact,
+            SplitStrategy::Histogram,
+            SplitStrategy::VectorizedHistogram,
+            SplitStrategy::Dynamic,
+            SplitStrategy::DynamicVectorized,
+            SplitStrategy::Hybrid,
+        ] {
+            assert_eq!(SplitStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(SplitStrategy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! Linear-scan bin routing for small histograms.
+//!
+//! Paper §4.2: "An alternative is to scan the bins, which has higher
+//! predictability, but performs more work. Scanning is better for small
+//! histograms up to 16 or 32 bins." This module provides that third
+//! routing engine; [`best_scan_bins`] measures the crossover on the local
+//! machine (the same philosophy as the §4.1 calibration microbenchmark),
+//! and the histogram splitter uses scan routing automatically for bin
+//! counts at or below [`SCAN_MAX_BINS`].
+
+use crate::bench::{measure, BenchOpts};
+
+/// Default upper bound for scan routing (paper: 16–32).
+pub const SCAN_MAX_BINS: usize = 32;
+
+/// Route by scanning the boundaries left to right: `bin = #{ b : b <= v }`.
+/// The loop is a fixed forward pass with a branch-free accumulate — every
+/// iteration's branch (the loop bound) is perfectly predictable, unlike
+/// binary search's data-dependent ones.
+#[inline(always)]
+pub fn route_scan(v: f32, boundaries: &[f32], n_real: usize) -> usize {
+    let b = &boundaries[..n_real];
+    let mut bin = 0usize;
+    for &x in b {
+        bin += (x <= v) as usize;
+    }
+    bin
+}
+
+/// Fill a `n_bins × n_classes` histogram with scan routing.
+pub fn fill_scan(
+    values: &[f32],
+    labels: &[u16],
+    boundaries: &[f32],
+    n_bins: usize,
+    n_classes: usize,
+    counts: &mut [u32],
+) {
+    debug_assert_eq!(counts.len(), n_bins * n_classes);
+    let n_real = n_bins - 1;
+    if n_classes == 2 {
+        for (&v, &l) in values.iter().zip(labels) {
+            let bin = route_scan(v, boundaries, n_real);
+            counts[bin * 2 + l as usize] += 1;
+        }
+    } else {
+        for (&v, &l) in values.iter().zip(labels) {
+            let bin = route_scan(v, boundaries, n_real);
+            counts[bin * n_classes + l as usize] += 1;
+        }
+    }
+}
+
+/// Measure the largest bin count (powers of two up to 256) where scan
+/// routing beats binary search on this machine. Used by `soforest
+/// calibrate` to report the paper's "16 or 32" locally.
+pub fn best_scan_bins() -> usize {
+    use super::histogram::route_binary_search;
+    let opts = BenchOpts::calibration();
+    let mut rng = crate::rng::Pcg64::new(0x5CA9);
+    let values: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+    let mut best = 0usize;
+    for shift in 2..=8u32 {
+        let bins = 1usize << shift;
+        let mut bounds: Vec<f32> = (0..bins - 1).map(|_| rng.normal() as f32).collect();
+        bounds.sort_unstable_by(f32::total_cmp);
+        bounds.push(f32::INFINITY);
+        let t_scan = measure(&opts, || {
+            let mut acc = 0usize;
+            for &v in &values {
+                acc += route_scan(v, &bounds, bins - 1);
+            }
+            acc
+        });
+        let t_bin = measure(&opts, || {
+            let mut acc = 0usize;
+            for &v in &values {
+                acc += route_binary_search(v, &bounds, bins - 1);
+            }
+            acc
+        });
+        if t_scan.median_ns <= t_bin.median_ns {
+            best = bins;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::split::histogram::route_binary_search;
+
+    #[test]
+    fn scan_matches_binary_search() {
+        let mut rng = Pcg64::new(1);
+        for bins in [4usize, 16, 32, 256] {
+            let mut bounds: Vec<f32> =
+                (0..bins - 1).map(|_| rng.normal() as f32).collect();
+            bounds.sort_unstable_by(f32::total_cmp);
+            bounds.push(f32::INFINITY);
+            for _ in 0..2000 {
+                let v = (rng.normal() * 2.0) as f32;
+                assert_eq!(
+                    route_scan(v, &bounds, bins - 1),
+                    route_binary_search(v, &bounds, bins - 1)
+                );
+            }
+            // Edge values.
+            for v in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                assert_eq!(
+                    route_scan(v, &bounds, bins - 1),
+                    route_binary_search(v, &bounds, bins - 1),
+                    "v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fill_scan_counts_everything_once() {
+        let mut rng = Pcg64::new(2);
+        let n = 1000;
+        let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let labels: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+        let bins = 16;
+        let mut bounds: Vec<f32> = (0..bins - 1).map(|_| rng.normal() as f32).collect();
+        bounds.sort_unstable_by(f32::total_cmp);
+        bounds.push(f32::INFINITY);
+        let mut counts = vec![0u32; bins * 3];
+        fill_scan(&values, &labels, &bounds, bins, 3, &mut counts);
+        assert_eq!(counts.iter().sum::<u32>() as usize, n);
+    }
+}

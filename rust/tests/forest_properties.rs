@@ -1,0 +1,270 @@
+//! Property-based tests over coordinator/forest invariants (hand-rolled
+//! randomized properties — the offline crate set has no proptest; each
+//! property sweeps many seeded cases and shrinks by reporting the seed).
+
+use soforest::config::ForestConfig;
+use soforest::coordinator::{train_forest, train_forest_with_source};
+use soforest::data::synth;
+use soforest::data::{ActiveSet, Dataset};
+use soforest::forest::tree::{Node, ProjectionSource};
+use soforest::forest::Forest;
+use soforest::projection::{ProjectionConfig, SamplerKind};
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+
+fn random_dataset(rng: &mut Pcg64) -> Dataset {
+    let specs = [
+        "trunk",
+        "higgs",
+        "susy",
+        "credit-approval",
+        "sparse-parity",
+    ];
+    let name = specs[rng.index(specs.len())];
+    let n = 80 + rng.index(400);
+    let spec = format!("{name}:{n}");
+    synth::generate(&spec, rng).unwrap()
+}
+
+fn random_config(rng: &mut Pcg64) -> ForestConfig {
+    let strategies = [
+        SplitStrategy::Exact,
+        SplitStrategy::Histogram,
+        SplitStrategy::VectorizedHistogram,
+        SplitStrategy::Dynamic,
+        SplitStrategy::DynamicVectorized,
+    ];
+    let mut cfg = ForestConfig {
+        n_trees: 1 + rng.index(4),
+        n_threads: 1 + rng.index(3),
+        strategy: strategies[rng.index(strategies.len())],
+        n_bins: if rng.bernoulli(0.5) { 256 } else { 64 },
+        min_leaf: 1 + rng.index(3),
+        max_depth: if rng.bernoulli(0.3) {
+            1 + rng.index(6)
+        } else {
+            0
+        },
+        bootstrap_fraction: 0.4 + rng.unif01() * 0.5,
+        with_replacement: rng.bernoulli(0.5),
+        sampler: if rng.bernoulli(0.5) {
+            SamplerKind::Floyd
+        } else {
+            SamplerKind::Naive
+        },
+        projection: ProjectionConfig {
+            row_factor: 1.0 + rng.unif01() * 2.0,
+            nnz_factor: 1.0 + rng.unif01() * 4.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.thresholds.sort_below = [0, 64, 1024, usize::MAX][rng.index(4)];
+    cfg
+}
+
+/// Structural invariants every trained forest must satisfy.
+fn check_forest(forest: &Forest, data: &Dataset, cfg: &ForestConfig, seed: u64) {
+    assert_eq!(forest.n_trees(), cfg.n_trees, "seed {seed}");
+    let mut row = Vec::new();
+    for tree in &forest.trees {
+        // 1. Node links form a tree (every node reachable exactly once).
+        let mut seen = vec![false; tree.nodes.len()];
+        let mut stack = vec![0usize];
+        while let Some(i) = stack.pop() {
+            assert!(!seen[i], "seed {seed}: node {i} visited twice");
+            seen[i] = true;
+            match &tree.nodes[i] {
+                Node::Split {
+                    left,
+                    right,
+                    projection,
+                    threshold,
+                } => {
+                    assert!(threshold.is_finite(), "seed {seed}");
+                    assert!(!projection.terms.is_empty(), "seed {seed}");
+                    for &(f, w) in &projection.terms {
+                        assert!((f as usize) < data.n_features(), "seed {seed}");
+                        assert!(w.is_finite() && w != 0.0, "seed {seed}");
+                    }
+                    stack.push(*left as usize);
+                    stack.push(*right as usize);
+                }
+                Node::Leaf { posterior, n, .. } => {
+                    let sum: f32 = posterior.iter().sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-5 || *n == 0,
+                        "seed {seed}: posterior sums to {sum}"
+                    );
+                    // Depth/min-leaf limits.
+                    if cfg.max_depth == 0 && cfg.min_leaf == 1 {
+                        // To-purity: leaf posterior is one-hot.
+                        let nonzero = posterior.iter().filter(|&&p| p > 0.0).count();
+                        assert!(nonzero <= 1, "seed {seed}: impure leaf {posterior:?}");
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "seed {seed}: orphan node");
+        // 2. Depth limit honored.
+        if cfg.max_depth > 0 {
+            assert!(
+                tree.depth() <= cfg.max_depth,
+                "seed {seed}: depth {} > {}",
+                tree.depth(),
+                cfg.max_depth
+            );
+        }
+    }
+    // 3. Prediction total probability.
+    let mut proba = Vec::new();
+    for s in (0..data.n_samples()).step_by(29) {
+        data.row(s, &mut row);
+        forest.predict_proba_row(&row, &mut proba);
+        let sum: f32 = proba.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "seed {seed}: proba sum {sum}");
+    }
+}
+
+#[test]
+fn forest_invariants_hold_across_random_configs() {
+    let mut meta = Pcg64::new(0xF0123);
+    for case in 0..25u64 {
+        let seed = meta.next_u64() % 100_000;
+        let mut rng = Pcg64::new(seed);
+        let data = random_dataset(&mut rng);
+        let cfg = random_config(&mut rng);
+        let forest = train_forest(&data, &cfg, seed);
+        check_forest(&forest, &data, &cfg, seed);
+        let _ = case;
+    }
+}
+
+#[test]
+fn axis_aligned_invariants_hold() {
+    let mut meta = Pcg64::new(0xA0456);
+    for _ in 0..8 {
+        let seed = meta.next_u64() % 100_000;
+        let mut rng = Pcg64::new(seed);
+        let data = random_dataset(&mut rng);
+        let mut cfg = random_config(&mut rng);
+        cfg.strategy = SplitStrategy::Exact;
+        let out = train_forest_with_source(
+            &data,
+            &cfg,
+            seed,
+            ProjectionSource::AxisAligned { mtry: 3 },
+        );
+        check_forest(&out.forest, &data, &cfg, seed);
+        // All splits use single axis projections.
+        for tree in &out.forest.trees {
+            for node in &tree.nodes {
+                if let Node::Split { projection, .. } = node {
+                    assert_eq!(projection.terms.len(), 1, "seed {seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn to_purity_forests_memorize_their_bootstrap() {
+    // With subsampling (no replacement), every tree perfectly classifies
+    // its own training subset; the forest's training accuracy must beat the
+    // majority class by a wide margin.
+    let mut meta = Pcg64::new(0xBEEF);
+    for _ in 0..6 {
+        let seed = meta.next_u64() % 100_000;
+        let mut rng = Pcg64::new(seed);
+        let data = synth::generate("trunk:400:8", &mut rng).unwrap();
+        let cfg = ForestConfig {
+            n_trees: 10,
+            n_threads: 2,
+            with_replacement: false,
+            bootstrap_fraction: 0.9,
+            ..Default::default()
+        };
+        let forest = train_forest(&data, &cfg, seed);
+        let acc = forest.accuracy(&data);
+        assert!(acc > 0.9, "seed {seed}: to-purity train accuracy {acc}");
+    }
+}
+
+#[test]
+fn strategies_agree_on_strongly_separable_data() {
+    // The paper's Table 4 claim, as a property: on separable data all
+    // strategies reach (near-)identical holdout accuracy.
+    let mut rng = Pcg64::new(0x7AB1E4);
+    let data = synth::generate("trunk:1200:16", &mut rng).unwrap();
+    let train_idx: Vec<u32> = (0..900).collect();
+    let test_idx: Vec<u32> = (900..1200).collect();
+    let train = data.subset(&train_idx);
+    let test = data.subset(&test_idx);
+    let mut accs = Vec::new();
+    for strategy in [
+        SplitStrategy::Exact,
+        SplitStrategy::Histogram,
+        SplitStrategy::DynamicVectorized,
+    ] {
+        let cfg = ForestConfig {
+            n_trees: 20,
+            n_threads: 2,
+            strategy,
+            ..Default::default()
+        };
+        accs.push(train_forest(&train, &cfg, 42).accuracy(&test));
+    }
+    let max = accs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = accs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max - min < 0.04, "strategy accuracies diverge: {accs:?}");
+    assert!(min > 0.88, "accuracy too low: {accs:?}");
+}
+
+#[test]
+fn empty_and_degenerate_inputs_are_rejected_or_handled() {
+    // Constant features: forest still trains (single leaf if no signal).
+    let data = Dataset::from_columns(
+        vec![vec![1.0; 50], vec![2.0; 50]],
+        (0..50).map(|i| (i % 2) as u16).collect(),
+    );
+    let cfg = ForestConfig {
+        n_trees: 2,
+        n_threads: 1,
+        ..Default::default()
+    };
+    let f = train_forest(&data, &cfg, 1);
+    // No split is possible on constant features.
+    for tree in &f.trees {
+        assert_eq!(tree.nodes.len(), 1, "constant features must yield a stump");
+    }
+    // ActiveSet edge cases.
+    let empty = ActiveSet::default();
+    assert!(empty.is_pure(&data));
+    assert_eq!(empty.class_counts(&data), vec![0, 0]);
+}
+
+#[test]
+fn tiny_datasets_train_without_panics() {
+    for n in [2usize, 3, 5, 9] {
+        let mut cols = vec![Vec::new(), Vec::new()];
+        let mut labels = Vec::new();
+        let mut rng = Pcg64::new(n as u64);
+        for i in 0..n {
+            cols[0].push(rng.normal() as f32);
+            cols[1].push(rng.normal() as f32);
+            labels.push((i % 2) as u16);
+        }
+        let data = Dataset::from_columns(cols, labels);
+        for strategy in [SplitStrategy::Exact, SplitStrategy::DynamicVectorized] {
+            let cfg = ForestConfig {
+                n_trees: 2,
+                n_threads: 1,
+                strategy,
+                bootstrap_fraction: 1.0,
+                ..Default::default()
+            };
+            let f = train_forest(&data, &cfg, 7);
+            assert_eq!(f.n_trees(), 2, "n={n}");
+        }
+    }
+}
