@@ -32,6 +32,11 @@ fn main() {
         n_threads: 1,
         strategy: SplitStrategy::Histogram,
         instrument: true,
+        // This figure decomposes the *classic* pipeline into apply/build/
+        // eval components; the fused engine collapses apply+build into one
+        // FusedSplit timer, so run the materializing path here. The fused
+        // engine's profile is covered by benches/fused_pipeline.rs.
+        fused: false,
         ..Default::default()
     };
     let out = train_forest_with_source(&data, &cfg, 9, ProjectionSource::SparseOblique);

@@ -1,0 +1,77 @@
+//! Classic vs fused node-split cost at several node cardinalities.
+//!
+//! Measures the full per-node work the trainer actually does for
+//! histogram-method nodes — gather (apply) + route + accumulate + edge
+//! scan over all candidate projections — for both engines, and emits
+//! `BENCH_node_split.json` so the perf trajectory is machine-readable
+//! across PRs. The acceptance bar for the fused engine is ≥ 1.2×
+//! ns/sample on nodes of ≥ 4096 samples.
+//!
+//! `SOFOREST_BENCH_SIZES=1024,4096` overrides the cardinality sweep.
+
+use soforest::bench::{BenchOpts, Table};
+use soforest::calibrate::{classic_node_cost_ns, fused_node_cost_ns, synthetic_workload};
+use soforest::split::histogram::Routing;
+use soforest::split::SplitMethod;
+use std::fmt::Write as _;
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("SOFOREST_BENCH_SIZES")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1024, 4096, 16_384, 65_536]);
+    let d = 256;
+    // ≈ 1.5·√d candidate projections, the paper's default node workload.
+    let p = 24;
+    let n_bins = 256;
+    let opts = BenchOpts::default();
+
+    println!("# node-split engines: classic (materialize-then-route) vs fused, d={d} p={p} bins={n_bins}\n");
+    let mut table = Table::new(&[
+        "n",
+        "classic_ns/smp",
+        "fused_ns/smp",
+        "speedup",
+    ]);
+    let mut json_rows = String::new();
+    for (k, &n) in sizes.iter().enumerate() {
+        let w = synthetic_workload(n, p, d, 0xBE7C4 + k as u64);
+        let classic =
+            classic_node_cost_ns(&w, SplitMethod::VectorizedHistogram, n_bins, &opts);
+        let fused = fused_node_cost_ns(&w, n_bins, Routing::TwoLevel, &opts);
+        let classic_per_sample = classic / n as f64;
+        let fused_per_sample = fused / n as f64;
+        let speedup = classic / fused;
+        table.row(&[
+            n.to_string(),
+            format!("{classic_per_sample:.3}"),
+            format!("{fused_per_sample:.3}"),
+            format!("{speedup:.2}x"),
+        ]);
+        if k > 0 {
+            json_rows.push_str(",\n");
+        }
+        let _ = write!(
+            json_rows,
+            "    {{\"n\": {n}, \"p\": {p}, \"n_bins\": {n_bins}, \
+             \"classic_ns_per_sample\": {classic_per_sample:.4}, \
+             \"fused_ns_per_sample\": {fused_per_sample:.4}, \
+             \"speedup\": {speedup:.4}}}"
+        );
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"node_split\",\n  \"unit\": \"ns_per_sample_per_projection\",\n  \
+         \"d\": {d},\n  \"projections\": {p},\n  \"results\": [\n{json_rows}\n  ]\n}}\n"
+    );
+    let out = "BENCH_node_split.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("\n# wrote {out}"),
+        Err(e) => eprintln!("\n# could not write {out}: {e}"),
+    }
+}

@@ -8,10 +8,15 @@
 //! same for the CPU↔accelerator crossover.
 
 use crate::bench::{measure, BenchOpts};
+use crate::data::Dataset;
 use crate::forest::tree::NodeAccel;
+use crate::projection::apply::{apply_projection, gather_labels};
+use crate::projection::Projection;
 use crate::rng::Pcg64;
 use crate::split::histogram::Routing;
-use crate::split::{self, SplitCriterion, SplitMethod, SplitScratch, SplitThresholds};
+use crate::split::{
+    self, best_split_fused, SplitCriterion, SplitMethod, SplitScratch, SplitThresholds,
+};
 
 /// Search range for the sort↔histogram crossover (covers every machine the
 /// paper reports: 350–1300).
@@ -53,34 +58,21 @@ fn synthetic_node(rng: &mut Pcg64, n: usize) -> (Vec<f32>, Vec<u16>) {
     (values, labels)
 }
 
-/// Binary-search the smallest `n` in `[lo, hi]` where `hist(n) <= sort(n)`.
-/// Both costs are monotone-ish in `n`; the MAD-robust medians plus the
+/// Binary-search the smallest `n` in `[lo, hi]` where `faster(n)` holds.
+/// Costs are monotone-ish in `n`; the MAD-robust medians plus the
 /// coarse-to-fine search keep single-core jitter from flipping the result.
-fn crossover(
-    lo: usize,
-    hi: usize,
-    n_bins: usize,
-    routing: Routing,
-    opts: &BenchOpts,
-) -> usize {
-    let hist_method = match routing {
-        Routing::BinarySearch => SplitMethod::Histogram,
-        Routing::TwoLevel => SplitMethod::VectorizedHistogram,
-    };
-    let hist_faster = |n: usize| -> bool {
-        split_cost_ns(n, hist_method, n_bins, opts) <= split_cost_ns(n, SplitMethod::Exact, n_bins, opts)
-    };
-    // If histograms never win in range, disable them (sort everywhere).
-    if !hist_faster(hi) {
+fn crossover_by(lo: usize, hi: usize, faster: impl Fn(usize) -> bool) -> usize {
+    // If the challenger never wins in range, disable it (usize::MAX).
+    if !faster(hi) {
         return usize::MAX;
     }
-    if hist_faster(lo) {
+    if faster(lo) {
         return lo;
     }
     let (mut lo, mut hi) = (lo, hi);
     while hi - lo > lo / 8 + 1 {
         let mid = (lo + hi) / 2;
-        if hist_faster(mid) {
+        if faster(mid) {
             hi = mid;
         } else {
             lo = mid;
@@ -89,10 +81,149 @@ fn crossover(
     hi
 }
 
+fn crossover(lo: usize, hi: usize, n_bins: usize, routing: Routing, opts: &BenchOpts) -> usize {
+    let hist_method = match routing {
+        Routing::BinarySearch => SplitMethod::Histogram,
+        Routing::TwoLevel => SplitMethod::VectorizedHistogram,
+    };
+    crossover_by(lo, hi, |n| {
+        split_cost_ns(n, hist_method, n_bins, opts)
+            <= split_cost_ns(n, SplitMethod::Exact, n_bins, opts)
+    })
+}
+
 /// Calibrate the sort↔histogram threshold for the given routing.
 pub fn calibrate_sort_threshold(n_bins: usize, routing: Routing) -> usize {
     let opts = BenchOpts::calibration();
     crossover(SORT_SEARCH_LO, SORT_SEARCH_HI, n_bins, routing, &opts)
+}
+
+/// A synthetic node workload for whole-node cost measurements: a columnar
+/// dataset, `p` sparse 2-term projections (the paper's mean term count),
+/// the active set and its gathered labels. Shared by the fused calibration
+/// and `benches/fused_pipeline.rs` so both measure the same thing.
+pub struct NodeWorkload {
+    pub data: Dataset,
+    pub projections: Vec<Projection>,
+    pub active: Vec<u32>,
+    pub labels: Vec<u16>,
+    pub parent: Vec<usize>,
+}
+
+/// Build a workload with `n` active samples over `d` features.
+pub fn synthetic_workload(n: usize, p: usize, d: usize, seed: u64) -> NodeWorkload {
+    let mut rng = Pcg64::new(seed);
+    let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+    let columns: Vec<Vec<f32>> = (0..d)
+        .map(|f| {
+            let signal = 0.8 / (1.0 + f as f32);
+            labels
+                .iter()
+                .map(|&l| rng.normal() as f32 + if l == 1 { signal } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let data = Dataset::from_columns(columns, labels.clone());
+    let projections: Vec<Projection> = (0..p)
+        .map(|_| {
+            let f0 = rng.index(d) as u32;
+            let f1 = rng.index(d) as u32;
+            Projection {
+                terms: vec![(f0, rng.sign()), (f1, rng.sign())],
+            }
+        })
+        .collect();
+    let active: Vec<u32> = (0..n as u32).collect();
+    let mut gathered = Vec::new();
+    gather_labels(&data, &active, &mut gathered);
+    let parent = vec![n - n / 2, n / 2];
+    NodeWorkload {
+        data,
+        projections,
+        active,
+        labels: gathered,
+        parent,
+    }
+}
+
+/// Per-projection cost of the fused engine on a whole node (gather + route
+/// + accumulate + edge scan, all projections in one call), in ns.
+pub fn fused_node_cost_ns(w: &NodeWorkload, n_bins: usize, routing: Routing, opts: &BenchOpts) -> f64 {
+    let mut rng = Pcg64::new(0xF05ED ^ w.active.len() as u64);
+    let mut scratch = SplitScratch::default();
+    let t = measure(opts, || {
+        best_split_fused(
+            &w.data,
+            &w.projections,
+            &w.active,
+            &w.labels,
+            &w.parent,
+            SplitCriterion::Entropy,
+            n_bins,
+            1,
+            routing,
+            &mut rng,
+            &mut scratch,
+        )
+    });
+    t.median_ns / w.projections.len() as f64
+}
+
+/// Per-projection cost of the classic materialize-then-route loop on the
+/// same whole-node workload (apply_projection + best_split per projection),
+/// in ns. This is the true alternative the trainer faces — unlike
+/// [`split_cost_ns`] it includes the gather.
+pub fn classic_node_cost_ns(
+    w: &NodeWorkload,
+    method: SplitMethod,
+    n_bins: usize,
+    opts: &BenchOpts,
+) -> f64 {
+    let mut rng = Pcg64::new(0xC1A551C ^ w.active.len() as u64);
+    let mut scratch = SplitScratch::default();
+    let mut values = Vec::new();
+    let t = measure(opts, || {
+        let mut best_gain = f64::NEG_INFINITY;
+        for proj in &w.projections {
+            apply_projection(&w.data, proj, &w.active, &mut values);
+            if let Some(s) = split::best_split(
+                method,
+                &values,
+                &w.labels,
+                &w.parent,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                &mut rng,
+                &mut scratch,
+            ) {
+                if s.gain > best_gain {
+                    best_gain = s.gain;
+                }
+            }
+        }
+        best_gain
+    });
+    t.median_ns / w.projections.len() as f64
+}
+
+/// Number of projections used by the fused calibration workloads (≈ the
+/// paper's 1.5·√d at d = 28; the crossover is insensitive to p because both
+/// sides are measured per projection).
+const FUSED_CAL_PROJECTIONS: usize = 8;
+
+/// Calibrate the sort↔fused-histogram threshold: smallest `n` where one
+/// projection's share of a fused node evaluation beats the classic
+/// apply+sort path. Fusion removes the materialization write+read, so this
+/// lands at or below the classic threshold (the engine switch shifts
+/// `sort_below`, see EXPERIMENTS.md §Perf).
+pub fn calibrate_sort_threshold_fused(n_bins: usize, routing: Routing) -> usize {
+    let opts = BenchOpts::calibration();
+    crossover_by(SORT_SEARCH_LO, SORT_SEARCH_HI, |n| {
+        let w = synthetic_workload(n, FUSED_CAL_PROJECTIONS, 8, 0xCA11B ^ n as u64);
+        fused_node_cost_ns(&w, n_bins, routing, &opts)
+            <= classic_node_cost_ns(&w, SplitMethod::Exact, n_bins, &opts)
+    })
 }
 
 /// Calibrate the CPU↔accelerator threshold: smallest `n` (power-of-two
@@ -168,6 +299,14 @@ pub fn calibrate(n_bins: usize, routing: Routing) -> SplitThresholds {
     }
 }
 
+/// Full calibration against the fused engine (the default training path).
+pub fn calibrate_fused(n_bins: usize, routing: Routing) -> SplitThresholds {
+    SplitThresholds {
+        sort_below: calibrate_sort_threshold_fused(n_bins, routing),
+        accel_above: usize::MAX,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +353,32 @@ mod tests {
             elapsed.as_millis() < 3000,
             "calibration took {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn fused_calibration_in_range_and_bounded() {
+        // Wall-clock kept generous: debug builds on loaded CI runners are
+        // an order of magnitude slower than the <100 ms release budget.
+        let t0 = Instant::now();
+        let t = calibrate_sort_threshold_fused(256, Routing::TwoLevel);
+        let elapsed = t0.elapsed();
+        assert!(
+            t == usize::MAX || (SORT_SEARCH_LO..=SORT_SEARCH_HI).contains(&t),
+            "fused crossover {t} out of range"
+        );
+        assert!(elapsed.as_secs() < 30, "fused calibration took {elapsed:?}");
+    }
+
+    #[test]
+    fn fused_node_cost_scales_with_n() {
+        // 64x the samples must cost measurably more per node; 2x leaves
+        // ample headroom for timer noise on shared runners.
+        let opts = BenchOpts::calibration();
+        let small = synthetic_workload(128, 4, 8, 1);
+        let large = synthetic_workload(8192, 4, 8, 2);
+        let c_small = fused_node_cost_ns(&small, 256, Routing::TwoLevel, &opts);
+        let c_large = fused_node_cost_ns(&large, 256, Routing::TwoLevel, &opts);
+        assert!(c_large > c_small * 2.0, "fused: {c_small} vs {c_large}");
     }
 
     #[test]

@@ -113,6 +113,8 @@ COMMON FLAGS:
   plus any config key, e.g. --trees 240 --strategy dynamic-vectorized
   --strategy        exact | histogram | vectorized | dynamic |
                     dynamic-vectorized | hybrid
+  --fused on|off    fused cache-blocked node-split pipeline (default on;
+                    off restores the materialize-then-route path for A/B)
 ";
 
 /// Load `--data`: a generator spec or a CSV path.
@@ -152,9 +154,20 @@ fn auto_thresholds(cfg: &mut ForestConfig) {
             crate::split::SplitStrategy::Dynamic => Routing::BinarySearch,
             _ => Routing::TwoLevel,
         };
-        let t = calibrate::calibrate(cfg.n_bins, routing);
+        // The fused engine has a different (lower) sort↔histogram
+        // crossover than the materializing path — calibrate the engine
+        // that will actually run.
+        let t = if cfg.fused {
+            calibrate::calibrate_fused(cfg.n_bins, routing)
+        } else {
+            calibrate::calibrate(cfg.n_bins, routing)
+        };
         cfg.thresholds.sort_below = t.sort_below;
-        eprintln!("[calibrate] sort_below = {}", t.sort_below);
+        eprintln!(
+            "[calibrate] sort_below = {} ({} engine)",
+            t.sort_below,
+            if cfg.fused { "fused" } else { "classic" }
+        );
     }
 }
 
@@ -340,6 +353,12 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         bins,
         fmt_threshold(t_bin),
         fmt_threshold(t_vec)
+    );
+    let t_fused = calibrate::calibrate_sort_threshold_fused(bins, Routing::TwoLevel);
+    println!(
+        "sort<->fused-histogram crossover ({} bins, whole-node incl. gather): {}",
+        bins,
+        fmt_threshold(t_fused)
     );
     // Accelerator crossover, if artifacts exist.
     let dir = args.get_or("artifacts", "artifacts");

@@ -43,6 +43,10 @@ pub struct ForestConfig {
     pub artifacts_dir: String,
     /// Record per-depth/component instrumentation (small overhead).
     pub instrument: bool,
+    /// Use the fused, cache-blocked node-split pipeline for histogram nodes
+    /// (`--fused off` restores the materialize-then-route path for A/B).
+    /// Both paths produce bit-identical forests for the same seed.
+    pub fused: bool,
 }
 
 impl Default for ForestConfig {
@@ -63,6 +67,7 @@ impl Default for ForestConfig {
             auto_calibrate: false,
             artifacts_dir: "artifacts".to_string(),
             instrument: false,
+            fused: true,
         }
     }
 }
@@ -130,6 +135,7 @@ impl ForestConfig {
                     v.parse().context("accel_above")?
                 }
             }
+            "fused" => self.fused = parse_bool(v)?,
             "auto_calibrate" | "calibrate" => self.auto_calibrate = parse_bool(v)?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "instrument" => self.instrument = parse_bool(v)?,
@@ -175,6 +181,7 @@ mod tests {
         let c = ForestConfig::default();
         assert_eq!(c.n_bins, 256);
         assert_eq!(c.min_leaf, 1); // train to purity
+        assert!(c.fused, "fused engine is the default training path");
         assert_eq!(c.strategy, SplitStrategy::DynamicVectorized);
         assert_eq!(c.sampler, SamplerKind::Floyd);
         assert!((c.projection.row_factor - 1.5).abs() < 1e-12);
@@ -201,6 +208,7 @@ mod tests {
             ("sort_below", "777"),
             ("accel_above", "30000"),
             ("instrument", "on"),
+            ("fused", "off"),
         ] {
             c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
         }
@@ -210,6 +218,7 @@ mod tests {
         assert_eq!(c.thresholds.sort_below, 777);
         assert_eq!(c.thresholds.accel_above, 30_000);
         assert!(c.instrument);
+        assert!(!c.fused);
         c.set("accel_above", "off").unwrap();
         assert_eq!(c.thresholds.accel_above, usize::MAX);
     }

@@ -13,8 +13,9 @@ use crate::metrics::{Component, TrainStats};
 use crate::projection::apply::{apply_projection, gather_labels};
 use crate::projection::{self, Projection, ProjectionMatrix};
 use crate::rng::Pcg64;
+use crate::split::histogram::Routing;
 use crate::split::{
-    best_split, DynamicSplitter, Split, SplitMethod, SplitScratch,
+    best_split, best_split_fused, DynamicSplitter, Split, SplitMethod, SplitScratch,
 };
 use std::time::Instant;
 
@@ -305,6 +306,53 @@ impl<'a> TreeTrainer<'a> {
             }
             // Accelerator unavailable / shape mismatch: CPU fallback.
             method = SplitMethod::VectorizedHistogram;
+        }
+
+        // Fused engine (default): one blocked gather→route→accumulate pass
+        // over all projections — no materialized projection vectors. Exact
+        // (sort-based) nodes keep the classic path: the sort needs the full
+        // value vector anyway, so there is nothing to fuse away.
+        if cfg.fused
+            && matches!(
+                method,
+                SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+            )
+        {
+            let routing = match method {
+                SplitMethod::Histogram => Routing::BinarySearch,
+                _ => Routing::TwoLevel,
+            };
+            let fused_best = {
+                let data = self.data;
+                let projections = &self.matrix.projections;
+                let indices = &active.indices;
+                let labels = &self.labels;
+                let rng = &mut self.rng;
+                let scratch = &mut self.scratch;
+                self.stats.time(depth, Component::FusedSplit, || {
+                    best_split_fused(
+                        data,
+                        projections,
+                        indices,
+                        labels,
+                        &parent_counts,
+                        cfg.criterion,
+                        cfg.n_bins,
+                        cfg.min_leaf,
+                        routing,
+                        rng,
+                        scratch,
+                    )
+                })
+            };
+            let (pi, split) = fused_best?;
+            let proj = self.matrix.projections[pi].clone();
+            // Only the winner is ever materialized: re-apply it once for
+            // the partition (classic kept a full buffer per projection).
+            let (l, r) = self.partition(active, &proj, split.threshold, depth);
+            debug_assert_eq!(l.len(), split.n_left);
+            debug_assert_eq!(r.len(), split.n_right);
+            return Some((proj, split, l, r));
         }
 
         let mut best: Option<(usize, Split)> = None;

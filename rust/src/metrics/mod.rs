@@ -26,9 +26,13 @@ pub enum Component {
     Partition,
     /// Accelerator invocation (pad + transfer + execute).
     Accelerator,
+    /// Fused gather→route→accumulate pass over all projections (subsumes
+    /// ApplyProjection + BuildHistogram for fused nodes, so Fig-5-style
+    /// profiles can attribute the fused engine separately).
+    FusedSplit,
 }
 
-pub const N_COMPONENTS: usize = 6;
+pub const N_COMPONENTS: usize = 7;
 
 impl Component {
     pub const ALL: [Component; N_COMPONENTS] = [
@@ -38,6 +42,7 @@ impl Component {
         Component::EvaluateSplit,
         Component::Partition,
         Component::Accelerator,
+        Component::FusedSplit,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -48,6 +53,7 @@ impl Component {
             Component::EvaluateSplit => "evaluate_split",
             Component::Partition => "partition",
             Component::Accelerator => "accelerator",
+            Component::FusedSplit => "fused_split",
         }
     }
 
@@ -60,6 +66,7 @@ impl Component {
             Component::EvaluateSplit => 3,
             Component::Partition => 4,
             Component::Accelerator => 5,
+            Component::FusedSplit => 6,
         }
     }
 }
@@ -202,12 +209,12 @@ impl TrainStats {
     /// Render the Fig-1-style per-depth table.
     pub fn depth_table(&self) -> String {
         let mut out = String::from(
-            "depth  nodes(exact/hist/vec/accel)      samples      total_ms  proj_ms  hist_ms  eval_ms\n",
+            "depth  nodes(exact/hist/vec/accel)      samples      total_ms  proj_ms  hist_ms  eval_ms  fused_ms\n",
         );
         for (depth, d) in self.by_depth.iter().enumerate() {
             let ms = |ns: u64| ns as f64 / 1e6;
             out.push_str(&format!(
-                "{depth:>5}  {:>7}/{:<7}/{:<7}/{:<6} {:>12}  {:>10.3} {:>8.3} {:>8.3} {:>8.3}\n",
+                "{depth:>5}  {:>7}/{:<7}/{:<7}/{:<6} {:>12}  {:>10.3} {:>8.3} {:>8.3} {:>8.3} {:>9.3}\n",
                 d.nodes_by_method[0],
                 d.nodes_by_method[1],
                 d.nodes_by_method[2],
@@ -217,6 +224,7 @@ impl TrainStats {
                 ms(d.component_ns[1]),
                 ms(d.component_ns[2]),
                 ms(d.component_ns[3]),
+                ms(d.component_ns[6]),
             ));
         }
         out

@@ -16,29 +16,68 @@ use crate::data::Dataset;
 /// terms/projection) stays a single fused gather loop.
 pub fn apply_projection(data: &Dataset, proj: &Projection, active: &[u32], out: &mut Vec<f32>) {
     out.clear();
+    out.resize(active.len(), 0.0);
+    // Delegate to the slice-based kernel so the materializing and fused
+    // paths share one implementation — their bit-equivalence contract
+    // (tests/fused_equivalence.rs) hinges on identical element arithmetic.
+    apply_projection_into(data, proj, active, out);
+}
+
+/// Apply `proj` over a *block* of active-sample ids, writing into an
+/// existing slice (`out.len() == active.len()`). This is the shared gather
+/// kernel: [`apply_projection`] delegates to it for the materializing
+/// path, and the fused split engine ([`crate::split::fused`]) calls it on
+/// cache-sized blocks so the projection values never round-trip through a
+/// full `n`-element buffer. Keep the per-element arithmetic in sync with
+/// [`project_row`] — the fused engine's bit-equivalence with the
+/// materializing path depends on it.
+pub fn apply_projection_into(data: &Dataset, proj: &Projection, active: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(active.len(), out.len());
     match proj.terms.as_slice() {
-        [] => out.resize(active.len(), 0.0),
+        [] => out.fill(0.0),
         [(f, w)] => {
             let col = data.column(*f as usize);
-            out.extend(active.iter().map(|&i| w * col[i as usize]));
+            for (o, &i) in out.iter_mut().zip(active) {
+                *o = w * col[i as usize];
+            }
         }
         [(f0, w0), (f1, w1)] => {
             let c0 = data.column(*f0 as usize);
             let c1 = data.column(*f1 as usize);
-            out.extend(
-                active
-                    .iter()
-                    .map(|&i| w0 * c0[i as usize] + w1 * c1[i as usize]),
-            );
+            for (o, &i) in out.iter_mut().zip(active) {
+                *o = w0 * c0[i as usize] + w1 * c1[i as usize];
+            }
         }
         terms => {
-            out.resize(active.len(), 0.0);
+            out.fill(0.0);
             for &(f, w) in terms {
                 let col = data.column(f as usize);
                 for (o, &i) in out.iter_mut().zip(active) {
                     *o += w * col[i as usize];
                 }
             }
+        }
+    }
+}
+
+/// Projection value of a single sample — used by the fused engine to gather
+/// boundary samples without materializing the projection vector. Must stay
+/// arithmetically identical to [`apply_projection_into`] (see above).
+#[inline]
+pub fn project_row(data: &Dataset, proj: &Projection, row: u32) -> f32 {
+    let s = row as usize;
+    match proj.terms.as_slice() {
+        [] => 0.0,
+        [(f, w)] => w * data.column(*f as usize)[s],
+        [(f0, w0), (f1, w1)] => {
+            w0 * data.column(*f0 as usize)[s] + w1 * data.column(*f1 as usize)[s]
+        }
+        terms => {
+            let mut v = 0.0f32;
+            for &(f, w) in terms {
+                v += w * data.column(f as usize)[s];
+            }
+            v
         }
     }
 }
@@ -105,6 +144,32 @@ mod tests {
         apply_projection(&d, &p, &[2, 0], &mut out);
         // sample 2: 3 + 15 - 1 = 17 ; sample 0: 1 + 5 - 1 = 5
         assert_eq!(out, vec![17.0, 5.0]);
+    }
+
+    #[test]
+    fn block_gather_and_row_gather_match_materialized() {
+        let d = data();
+        let projections = [
+            Projection::default(),
+            Projection::axis(2),
+            Projection {
+                terms: vec![(0, -1.5), (2, 2.0)],
+            },
+            Projection {
+                terms: vec![(0, 1.0), (1, 0.5), (2, -2.0)],
+            },
+        ];
+        let active = [3u32, 0, 2, 1];
+        for p in &projections {
+            let mut full = Vec::new();
+            apply_projection(&d, p, &active, &mut full);
+            let mut block = vec![0f32; active.len()];
+            apply_projection_into(&d, p, &active, &mut block);
+            assert_eq!(full, block, "{p:?}");
+            for (k, &i) in active.iter().enumerate() {
+                assert_eq!(project_row(&d, p, i).to_bits(), full[k].to_bits(), "{p:?}");
+            }
+        }
     }
 
     #[test]

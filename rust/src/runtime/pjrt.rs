@@ -1,0 +1,214 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust hot path.
+//!
+//! Python/JAX runs only at build time (`make artifacts`): `aot.py` lowers
+//! the L2 node-split computation (which embeds the L1 Pallas kernel) to
+//! **HLO text** — text, not a serialized `HloModuleProto`, because jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids cleanly. This module wraps the `xla` crate:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`, with an executable cache keyed by artifact name so each
+//! variant compiles once per process.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus a cache of compiled executables.
+///
+/// Registration ([`Engine::load_artifact_dir`]) only records paths;
+/// compilation happens on first [`Engine::execute`] of each artifact
+/// (compiling the full bucket grid takes seconds — workers that never
+/// offload must not pay it; see EXPERIMENTS.md §Perf).
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Registered-but-not-yet-compiled artifacts.
+    pending: HashMap<String, PathBuf>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine. This PJRT executable path *is* the
+    /// "accelerator" of the reproduction: a fixed per-invocation cost plus
+    /// high-throughput batched execution, the same cost structure as the
+    /// paper's GPU (DESIGN.md §Hardware-Adaptation).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            executables: HashMap::new(),
+            pending: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact under the given name.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Register an artifact for lazy compilation on first use.
+    pub fn register_hlo_text(&mut self, name: &str, path: &Path) {
+        if !self.executables.contains_key(name) {
+            self.pending.insert(name.to_string(), path.to_path_buf());
+        }
+    }
+
+    /// Compile a pending artifact if needed.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let Some(path) = self.pending.remove(name) else {
+            return Ok(()); // not pending either: execute() will report it
+        };
+        self.load_hlo_text(name, &path)
+    }
+
+    /// Load every `*.hlo.txt` in a directory (artifact name = file stem).
+    pub fn load_artifact_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let entries = std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let name = path
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            self.register_hlo_text(&name, &path);
+            loaded.push(name);
+        }
+        Ok(loaded)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name) || self.pending.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .executables
+            .keys()
+            .chain(self.pending.keys())
+            .map(String::as_str)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Execute a loaded artifact (compiling it first if it was lazily
+    /// registered). Inputs are host literals; the single device output (jax
+    /// lowers with `return_tuple=True`, so it is a tuple) is decomposed
+    /// into per-output literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name:?} loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("execute {name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let mut tuple = out;
+        tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose result of {name}: {e:?}"))
+    }
+}
+
+/// Host-side helpers for building input literals.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn literal_to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// HLO text for a tiny computation: f(x, y) = (x + y,) over f32[4].
+    /// Written by hand so runtime tests need no python step.
+    const ADD_HLO: &str = r#"HloModule add_vecs, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn engine_compiles_and_executes_hlo_text() {
+        let path = write_tmp("soforest_add.hlo.txt", ADD_HLO);
+        let mut engine = Engine::cpu().unwrap();
+        engine.load_hlo_text("add", &path).unwrap();
+        assert!(engine.has("add"));
+        let x = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let y = literal_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
+        let out = engine.execute("add", &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            literal_to_vec_f32(&out[0]).unwrap(),
+            vec![11.0, 22.0, 33.0, 44.0]
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_executable_is_error() {
+        let mut engine = Engine::cpu().unwrap();
+        assert!(engine.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn load_artifact_dir_picks_up_hlo_files() {
+        let dir = std::env::temp_dir().join("soforest_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), ADD_HLO).unwrap();
+        std::fs::write(dir.join("ignore.txt"), "not hlo").unwrap();
+        let mut engine = Engine::cpu().unwrap();
+        let loaded = engine.load_artifact_dir(&dir).unwrap();
+        assert_eq!(loaded, vec!["a".to_string()]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,68 @@
+//! No-PJRT stub: same surface as [`super::pjrt`], every entry point fails.
+//!
+//! [`Engine::cpu`] is the only constructor, and it errors — so the
+//! remaining methods are unreachable in practice but keep the call sites in
+//! [`crate::accel`] and the probes compiling unchanged.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const NO_PJRT: &str =
+    "soforest was built without the `pjrt` feature; accelerator offload is unavailable. \
+     To enable it, first uncomment the `xla` dependency in Cargo.toml (it is git-only \
+     and needs a libxla install), then rebuild with `--features pjrt` — the feature \
+     alone does not compile without the dependency";
+
+/// Opaque placeholder for `xla::Literal` in non-PJRT builds.
+pub struct Literal {
+    _priv: (),
+}
+
+/// Placeholder engine; cannot be constructed.
+pub struct Engine {
+    _priv: (),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn platform(&self) -> String {
+        "none".to_string()
+    }
+
+    pub fn load_hlo_text(&mut self, _name: &str, _path: &Path) -> Result<()> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn register_hlo_text(&mut self, _name: &str, _path: &Path) {}
+
+    pub fn load_artifact_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn execute(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        bail!("{NO_PJRT}")
+    }
+}
+
+pub fn literal_f32(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+    bail!("{NO_PJRT}")
+}
+
+pub fn literal_to_vec_f32(_lit: &Literal) -> Result<Vec<f32>> {
+    bail!("{NO_PJRT}")
+}
+
+pub fn literal_to_vec_i32(_lit: &Literal) -> Result<Vec<i32>> {
+    bail!("{NO_PJRT}")
+}

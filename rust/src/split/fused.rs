@@ -1,0 +1,386 @@
+//! Fused, cache-blocked node-split pipeline: gather → route → accumulate
+//! in one pass.
+//!
+//! The classic trainer materializes every candidate projection into a full
+//! `n`-element buffer (`apply_projection`) and then re-streams that buffer
+//! to route samples into histogram bins — one avoidable write + read of
+//! `n × 4` bytes per projection per node. Figure 5 of the paper shows this
+//! "sparse access" cost growing with depth until it rivals histogram fill;
+//! GPU tree-boosting systems remove the same traffic by fusing binning
+//! into the feature pass. This module is that fusion for the CPU path:
+//!
+//! * the active set is walked in cache-sized blocks ([`FUSED_BLOCK`] rows);
+//! * per block, each projection's sparse column terms are gathered into one
+//!   L1-resident buffer, routed through the existing two-level compare
+//!   ([`super::vectorized`]) and accumulated into that projection's count
+//!   table — the full projection vector never exists;
+//! * iteration is **block-major** (all projections over block `b` before
+//!   advancing), so the active-set indices, the labels and the source
+//!   columns stay L1/L2-resident deep in the tree where the classic
+//!   projection-major loop re-faults them per projection;
+//! * only the *winning* projection is re-applied in full, once, for the
+//!   partition step.
+//!
+//! Equivalence contract (enforced by `rust/tests/fused_equivalence.rs`):
+//! the fused pipeline consumes the RNG in exactly the same sequence as the
+//! classic path (boundary *positions* are drawn with the same
+//! `rng.index(n)` calls), computes boundary values and routed bins with
+//! bit-identical f32 arithmetic, and applies the same tie-breaking — so a
+//! forest trained with `fused = on` is node-for-node identical to one
+//! trained with `fused = off`.
+
+use super::criterion::SplitCriterion;
+use super::histogram::{best_edge_in, route_binary_search, Routing};
+use super::scan::{self, SCAN_MAX_BINS};
+use super::vectorized::{self, TwoLevelLayout};
+use super::{Split, SplitScratch};
+use crate::data::Dataset;
+use crate::projection::apply::{apply_projection_into, project_row};
+use crate::projection::Projection;
+use crate::rng::Pcg64;
+
+/// Rows per gather block: 1024 × 4 B of projected values plus 1024 × 2 B of
+/// labels fit comfortably in L1 next to the boundary/coarse vectors, while
+/// keeping the per-projection loop overhead amortized over ≥ 1k samples.
+/// Tune against `benches/fused_pipeline.rs` (log results in EXPERIMENTS.md
+/// §Perf before changing).
+pub const FUSED_BLOCK: usize = 1024;
+
+/// Find the best split across *all* candidate projections of a node in one
+/// blocked pass. Returns the winning `(projection index, split)`, or `None`
+/// when no projection admits a positive-gain split.
+///
+/// `labels` must be the node's gathered labels (`labels[i]` is the label of
+/// sample `active[i]`). On return, `scratch.fused_counts` /
+/// `scratch.fused_boundaries` / `scratch.fused_ok` hold the per-projection
+/// histogram state (used by the equivalence tests and kept for debugging).
+#[allow(clippy::too_many_arguments)]
+pub fn best_split_fused(
+    data: &Dataset,
+    projections: &[Projection],
+    active: &[u32],
+    labels: &[u16],
+    parent_counts: &[usize],
+    criterion: SplitCriterion,
+    n_bins: usize,
+    min_leaf: usize,
+    routing: Routing,
+    rng: &mut Pcg64,
+    scratch: &mut SplitScratch,
+) -> Option<(usize, Split)> {
+    let n = active.len();
+    debug_assert_eq!(labels.len(), n);
+    debug_assert!(n_bins >= 2);
+    if n < 2 {
+        return None;
+    }
+    let p = projections.len();
+    let n_classes = parent_counts.len();
+    let n_real = n_bins - 1;
+    let layout = TwoLevelLayout::for_bins(n_bins);
+    let groups = layout.map_or(0, |l| l.groups);
+
+    let SplitScratch {
+        block,
+        fused_boundaries,
+        fused_coarse,
+        fused_ok,
+        fused_counts,
+        ..
+    } = scratch;
+
+    // ---- Phase 1: per-projection bin boundaries, without materializing ----
+    // Boundary *positions* are drawn with the same `rng.index(n)` sequence
+    // as `histogram::build_boundaries` on a materialized vector, and the
+    // sampled values are computed with the same per-element arithmetic
+    // (`project_row` ≡ `apply_projection`), so the boundaries — and the RNG
+    // state left behind — are bit-identical to the classic path's.
+    fused_boundaries.clear();
+    fused_boundaries.resize(p * n_bins, f32::INFINITY);
+    fused_coarse.clear();
+    fused_coarse.resize(p * groups, f32::INFINITY);
+    fused_ok.clear();
+    fused_ok.resize(p, false);
+    for (pi, proj) in projections.iter().enumerate() {
+        if proj.is_empty() {
+            continue; // classic path skips before touching the RNG
+        }
+        let b = &mut fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+        for slot in b[..n_real].iter_mut() {
+            *slot = project_row(data, proj, active[rng.index(n)]);
+        }
+        b[..n_real].sort_unstable_by(f32::total_cmp);
+        if b[0] == b[n_real - 1] {
+            // All sampled boundaries identical: check whether the projection
+            // itself is constant (one blocked min/max pass — still no full
+            // materialization); if not, fall back to range-anchored
+            // boundaries. Mirrors `build_boundaries` exactly.
+            let (lo, hi) = projected_min_max(data, proj, active, block);
+            if lo == hi {
+                continue; // constant projection: no split possible
+            }
+            for (i, slot) in b[..n_real].iter_mut().enumerate() {
+                let frac = (i + 1) as f32 / n_bins as f32;
+                *slot = lo + (hi - lo) * frac;
+            }
+        }
+        b[n_real] = f32::INFINITY;
+        if let Some(layout) = layout {
+            let coarse = &mut fused_coarse[pi * groups..(pi + 1) * groups];
+            for (g, c) in coarse.iter_mut().enumerate() {
+                *c = b[g * layout.group_size + layout.group_size - 1];
+            }
+        }
+        fused_ok[pi] = true;
+    }
+
+    // ---- Phase 2: block-major gather + route + accumulate ----
+    let stride = n_bins * n_classes;
+    fused_counts.clear();
+    fused_counts.resize(p * stride, 0);
+    block.resize(FUSED_BLOCK, 0.0);
+    for (ablock, lblock) in active.chunks(FUSED_BLOCK).zip(labels.chunks(FUSED_BLOCK)) {
+        let vals = &mut block[..ablock.len()];
+        for (pi, proj) in projections.iter().enumerate() {
+            if !fused_ok[pi] {
+                continue;
+            }
+            apply_projection_into(data, proj, ablock, vals);
+            let bounds = &fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+            let counts = &mut fused_counts[pi * stride..(pi + 1) * stride];
+            match (routing, layout) {
+                (Routing::TwoLevel, Some(layout)) => {
+                    let coarse = &fused_coarse[pi * groups..(pi + 1) * groups];
+                    vectorized::fill_two_level(
+                        vals, lblock, bounds, coarse, layout, n_classes, counts,
+                    );
+                }
+                _ if n_bins <= SCAN_MAX_BINS => {
+                    scan::fill_scan(vals, lblock, bounds, n_bins, n_classes, counts);
+                }
+                _ => {
+                    // Same out-of-range-label guard as fill_two_level: a bad
+                    // label would silently corrupt a neighboring bin's slots
+                    // in release builds.
+                    debug_assert!(
+                        lblock.iter().all(|&l| (l as usize) < n_classes),
+                        "label out of range for {n_classes} classes"
+                    );
+                    for (&v, &l) in vals.iter().zip(lblock) {
+                        let bin = route_binary_search(v, bounds, n_real);
+                        counts[bin * n_classes + l as usize] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Phase 3: edge scan per projection, same tie-breaking as the ----
+    // classic projection loop (first strictly-greater gain wins).
+    let mut best: Option<(usize, Split)> = None;
+    for pi in 0..p {
+        if !fused_ok[pi] {
+            continue;
+        }
+        let bounds = &fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+        let counts = &fused_counts[pi * stride..(pi + 1) * stride];
+        if let Some(s) = best_edge_in(parent_counts, criterion, n_bins, min_leaf, counts, bounds) {
+            if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                best = Some((pi, s));
+            }
+        }
+    }
+    best
+}
+
+/// Blocked min/max of a projection over the active set (degenerate-boundary
+/// fallback only). Elementwise `min`/`max` in active-set order — the same
+/// fold, in the same order, as the classic path over a materialized vector,
+/// so the results (including NaN handling) are identical.
+fn projected_min_max(
+    data: &Dataset,
+    proj: &Projection,
+    active: &[u32],
+    block: &mut Vec<f32>,
+) -> (f32, f32) {
+    block.resize(FUSED_BLOCK, 0.0);
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for ablock in active.chunks(FUSED_BLOCK) {
+        let vals = &mut block[..ablock.len()];
+        apply_projection_into(data, proj, ablock, vals);
+        for &v in vals.iter() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::apply::{apply_projection, gather_labels};
+    use crate::split::{best_split, SplitMethod};
+
+    /// Random dataset + sparse projections for equivalence checks.
+    fn setup(
+        rng: &mut Pcg64,
+        n: usize,
+        d: usize,
+        n_classes: usize,
+    ) -> (Dataset, Vec<Projection>) {
+        let columns: Vec<Vec<f32>> = (0..d)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let labels: Vec<u16> = (0..n).map(|i| (i % n_classes) as u16).collect();
+        let data = Dataset::from_columns(columns, labels);
+        let projections: Vec<Projection> = (0..6)
+            .map(|_| {
+                let k = 1 + rng.index(3);
+                let terms = (0..k)
+                    .map(|_| (rng.index(d) as u32, rng.sign()))
+                    .collect();
+                Projection { terms }
+            })
+            .collect();
+        (data, projections)
+    }
+
+    /// The classic materialize-then-route loop, verbatim from split_node.
+    fn classic_best(
+        data: &Dataset,
+        projections: &[Projection],
+        active: &[u32],
+        labels: &[u16],
+        parent: &[usize],
+        n_bins: usize,
+        method: SplitMethod,
+        rng: &mut Pcg64,
+    ) -> Option<(usize, Split)> {
+        let mut scratch = SplitScratch::default();
+        let mut values = Vec::new();
+        let mut best: Option<(usize, Split)> = None;
+        for (pi, proj) in projections.iter().enumerate() {
+            if proj.is_empty() {
+                continue;
+            }
+            apply_projection(data, proj, active, &mut values);
+            let s = best_split(
+                method,
+                &values,
+                labels,
+                parent,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                rng,
+                &mut scratch,
+            );
+            if let Some(s) = s {
+                if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                    best = Some((pi, s));
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn fused_matches_classic_winner_and_rng_state() {
+        let mut meta = Pcg64::new(0xF15ED);
+        for case in 0..30u64 {
+            let seed = meta.next_u64();
+            let mut rng = Pcg64::new(seed);
+            let n_classes = 2 + rng.index(4);
+            let n = 64 + rng.index(3000);
+            let (data, projections) = setup(&mut rng, n, 12, n_classes);
+            let (n_bins, method, routing) = match case % 3 {
+                0 => (256, SplitMethod::VectorizedHistogram, Routing::TwoLevel),
+                1 => (64, SplitMethod::VectorizedHistogram, Routing::TwoLevel),
+                _ => (256, SplitMethod::Histogram, Routing::BinarySearch),
+            };
+            let active: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 0).collect();
+            let mut labels = Vec::new();
+            gather_labels(&data, &active, &mut labels);
+            let mut parent = vec![0usize; n_classes];
+            for &l in &labels {
+                parent[l as usize] += 1;
+            }
+
+            let mut rng_c = Pcg64::new(seed ^ 0x5EED);
+            let mut rng_f = Pcg64::new(seed ^ 0x5EED);
+            let classic = classic_best(
+                &data,
+                &projections,
+                &active,
+                &labels,
+                &parent,
+                n_bins,
+                method,
+                &mut rng_c,
+            );
+            let mut scratch = SplitScratch::default();
+            let fused = best_split_fused(
+                &data,
+                &projections,
+                &active,
+                &labels,
+                &parent,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                routing,
+                &mut rng_f,
+                &mut scratch,
+            );
+            match (classic, fused) {
+                (None, None) => {}
+                (Some((cpi, cs)), Some((fpi, fs))) => {
+                    assert_eq!(cpi, fpi, "seed {seed}: winner differs");
+                    assert_eq!(
+                        cs.threshold.to_bits(),
+                        fs.threshold.to_bits(),
+                        "seed {seed}"
+                    );
+                    assert_eq!(cs.gain.to_bits(), fs.gain.to_bits(), "seed {seed}");
+                    assert_eq!(cs.n_left, fs.n_left, "seed {seed}");
+                    assert_eq!(cs.n_right, fs.n_right, "seed {seed}");
+                }
+                (c, f) => panic!("seed {seed}: classic {c:?} vs fused {f:?}"),
+            }
+            // Both paths must have consumed the RNG identically.
+            assert_eq!(rng_c.next_u64(), rng_f.next_u64(), "seed {seed}: rng diverged");
+        }
+    }
+
+    #[test]
+    fn constant_projection_is_skipped_like_classic() {
+        let n = 500;
+        let columns = vec![vec![1.0f32; n], (0..n).map(|i| i as f32).collect()];
+        let labels: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+        let data = Dataset::from_columns(columns, labels.clone());
+        let projections = vec![Projection::axis(0), Projection::axis(1)];
+        let active: Vec<u32> = (0..n as u32).collect();
+        let parent = vec![n / 2, n / 2];
+        let mut rng = Pcg64::new(3);
+        let mut scratch = SplitScratch::default();
+        let best = best_split_fused(
+            &data,
+            &projections,
+            &active,
+            &labels,
+            &parent,
+            SplitCriterion::Entropy,
+            256,
+            1,
+            Routing::TwoLevel,
+            &mut rng,
+            &mut scratch,
+        );
+        let (pi, s) = best.expect("feature 1 is perfectly splittable");
+        assert_eq!(pi, 1, "constant projection must not win");
+        assert!(!scratch.fused_ok[0]);
+        assert!(scratch.fused_ok[1]);
+        assert!(s.gain > 0.0);
+    }
+}

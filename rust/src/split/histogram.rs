@@ -152,17 +152,37 @@ pub fn best_edge(
     min_leaf: usize,
     scratch: &SplitScratch,
 ) -> Option<Split> {
+    best_edge_in(
+        parent_counts,
+        criterion,
+        n_bins,
+        min_leaf,
+        &scratch.counts,
+        &scratch.boundaries,
+    )
+}
+
+/// [`best_edge`] over caller-provided buffers — the fused engine keeps one
+/// `(counts, boundaries)` segment per projection and scans each in turn.
+pub fn best_edge_in(
+    parent_counts: &[usize],
+    criterion: SplitCriterion,
+    n_bins: usize,
+    min_leaf: usize,
+    counts: &[u32],
+    boundaries: &[f32],
+) -> Option<Split> {
     let n_classes = parent_counts.len();
     let n_real = n_bins - 1;
     let mut scan = BoundaryScan::new(criterion, parent_counts);
     let mut best: Option<Split> = None;
     let n = scan.n_total();
     for k in 0..n_real {
-        scan.push_bin(&scratch.counts[k * n_classes..(k + 1) * n_classes]);
+        scan.push_bin(&counts[k * n_classes..(k + 1) * n_classes]);
         if let Some(gain) = scan.gain_here(min_leaf) {
             if gain > 1e-12 && best.map_or(true, |b| gain > b.gain) {
                 best = Some(Split {
-                    threshold: scratch.boundaries[k],
+                    threshold: boundaries[k],
                     gain,
                     n_left: scan.n_left,
                     n_right: n - scan.n_left,

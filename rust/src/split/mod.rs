@@ -19,12 +19,14 @@
 pub mod criterion;
 pub mod dynamic;
 pub mod exact;
+pub mod fused;
 pub mod histogram;
 pub mod scan;
 pub mod vectorized;
 
 pub use criterion::SplitCriterion;
 pub use dynamic::{DynamicSplitter, SplitThresholds};
+pub use fused::{best_split_fused, FUSED_BLOCK};
 
 use crate::rng::Pcg64;
 
@@ -106,6 +108,19 @@ pub struct SplitScratch {
     pub counts: Vec<u32>,
     /// Boundary-sampling scratch.
     pub sample_idx: Vec<usize>,
+    // Fused-engine block buffers (see [`fused`]): one gather block plus
+    // per-projection boundary/coarse/count segments so every candidate
+    // projection's histogram is accumulated in a single blocked pass.
+    /// Gathered projection values for one [`FUSED_BLOCK`]-row block.
+    pub block: Vec<f32>,
+    /// `n_projections × n_bins` boundary segments (each padded with +∞).
+    pub fused_boundaries: Vec<f32>,
+    /// `n_projections × groups` coarse vectors for two-level routing.
+    pub fused_coarse: Vec<f32>,
+    /// Which projections are splittable (non-empty, non-constant).
+    pub fused_ok: Vec<bool>,
+    /// `n_projections × n_bins × n_classes` count tables.
+    pub fused_counts: Vec<u32>,
 }
 
 /// Find the best split of `values`/`labels` with a specific engine.

@@ -37,6 +37,12 @@ pub fn fill_scan(
     counts: &mut [u32],
 ) {
     debug_assert_eq!(counts.len(), n_bins * n_classes);
+    // Same guard as fill_two_level: the 2-class loop's `bin * 2 + label`
+    // write would silently spill into the next bin for a label >= n_classes.
+    debug_assert!(
+        labels.iter().all(|&l| (l as usize) < n_classes),
+        "label out of range for {n_classes} classes"
+    );
     let n_real = n_bins - 1;
     if n_classes == 2 {
         for (&v, &l) in values.iter().zip(labels) {

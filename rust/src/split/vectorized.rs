@@ -179,6 +179,13 @@ pub fn fill_two_level(
     counts: &mut [u32],
 ) {
     debug_assert_eq!(counts.len(), layout.groups * layout.group_size * n_classes);
+    // The specialized 2-class loops index `counts[bin * 2 + label]`: a label
+    // >= n_classes would silently corrupt the *next bin's* class slots in
+    // release builds (no bounds check catches it, the buffer is big enough).
+    debug_assert!(
+        labels.iter().all(|&l| (l as usize) < n_classes),
+        "label out of range for {n_classes} classes"
+    );
     match (layout.groups, n_classes) {
         (16, 2) => {
             // §Perf note: a 4-way unroll with split sub-histograms was

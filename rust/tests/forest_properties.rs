@@ -168,6 +168,42 @@ fn axis_aligned_invariants_hold() {
 }
 
 #[test]
+fn fused_and_classic_paths_build_identical_forests() {
+    // The fused engine is the default training path; with the same seed it
+    // must produce node-for-node the same forest as the classic
+    // materialize-then-route path (`fused = off`) on every strategy,
+    // layout and class count the random-config sweep generates.
+    let mut meta = Pcg64::new(0xFA57ED);
+    for _ in 0..10 {
+        let seed = meta.next_u64() % 100_000;
+        let mut rng = Pcg64::new(seed);
+        let data = random_dataset(&mut rng);
+        let mut cfg_fused = random_config(&mut rng);
+        cfg_fused.fused = true;
+        let mut cfg_classic = cfg_fused.clone();
+        cfg_classic.fused = false;
+        let a = train_forest(&data, &cfg_fused, seed);
+        let b = train_forest(&data, &cfg_classic, seed);
+        let mut row = Vec::new();
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(
+                ta.nodes.len(),
+                tb.nodes.len(),
+                "seed {seed}: tree shapes diverge between fused and classic"
+            );
+            for s in (0..data.n_samples()).step_by(7) {
+                data.row(s, &mut row);
+                assert_eq!(
+                    ta.leaf_index(&row),
+                    tb.leaf_index(&row),
+                    "seed {seed}: sample {s} routed differently"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn to_purity_forests_memorize_their_bootstrap() {
     // With subsampling (no replacement), every tree perfectly classifies
     // its own training subset; the forest's training accuracy must beat the

@@ -1,0 +1,244 @@
+//! Property tests: the fused gather→route→accumulate pipeline must be
+//! *bit-identical* to the classic materialize-then-route path — same bin
+//! counts, same boundaries, same chosen (projection, threshold, gain), and
+//! the same RNG state left behind — across layouts (64 / 256 bins), 2–5
+//! classes, duplicate boundaries, and NaN values.
+
+use soforest::data::Dataset;
+use soforest::projection::apply::{apply_projection, gather_labels};
+use soforest::projection::Projection;
+use soforest::rng::Pcg64;
+use soforest::split::histogram::{best_split_histogram, Routing};
+use soforest::split::{best_split_fused, Split, SplitCriterion, SplitScratch};
+
+struct Case {
+    data: Dataset,
+    projections: Vec<Projection>,
+    active: Vec<u32>,
+    labels: Vec<u16>,
+    parent: Vec<usize>,
+}
+
+/// Random node workload. `discrete` draws column values from a 7-point grid
+/// so boundary sampling produces heavy duplicates; `with_nan` poisons ~5%
+/// of the first column with NaN.
+fn random_case(rng: &mut Pcg64, n_classes: usize, discrete: bool, with_nan: bool) -> Case {
+    let d = 4 + rng.index(8);
+    let n = n_classes * 2 + 50 + rng.index(2500);
+    let columns: Vec<Vec<f32>> = (0..d)
+        .map(|f| {
+            (0..n)
+                .map(|i| {
+                    if with_nan && f == 0 && rng.bernoulli(0.05) {
+                        f32::NAN
+                    } else if discrete {
+                        rng.index(7) as f32 * 0.5 - 1.5
+                    } else {
+                        rng.normal() as f32 + (i % n_classes) as f32 * 0.3
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let raw_labels: Vec<u16> = (0..n).map(|i| (i % n_classes) as u16).collect();
+    let data = Dataset::from_columns(columns, raw_labels);
+    let mut projections: Vec<Projection> = (0..5)
+        .map(|_| {
+            let k = 1 + rng.index(3);
+            let terms = (0..k).map(|_| (rng.index(d) as u32, rng.sign())).collect();
+            Projection { terms }
+        })
+        .collect();
+    // An empty projection: both paths must skip it without touching the RNG.
+    projections.insert(rng.index(projections.len() + 1), Projection::default());
+    let active: Vec<u32> = (0..n as u32).filter(|i| i % 4 != 1).collect();
+    let mut labels = Vec::new();
+    gather_labels(&data, &active, &mut labels);
+    let mut parent = vec![0usize; n_classes];
+    for &l in &labels {
+        parent[l as usize] += 1;
+    }
+    Case {
+        data,
+        projections,
+        active,
+        labels,
+        parent,
+    }
+}
+
+/// Classic per-projection loop, as `TreeTrainer::split_node` runs it with
+/// `fused = off`. Also returns, for every splittable projection, the
+/// (boundaries, counts) the histogram engine produced.
+#[allow(clippy::type_complexity)]
+fn classic_reference(
+    case: &Case,
+    n_bins: usize,
+    routing: Routing,
+    rng: &mut Pcg64,
+) -> (Option<(usize, Split)>, Vec<Option<(Vec<f32>, Vec<u32>)>>) {
+    let mut scratch = SplitScratch::default();
+    let mut values = Vec::new();
+    let mut best: Option<(usize, Split)> = None;
+    let mut tables: Vec<Option<(Vec<f32>, Vec<u32>)>> = Vec::new();
+    for (pi, proj) in case.projections.iter().enumerate() {
+        if proj.is_empty() {
+            tables.push(None);
+            continue;
+        }
+        apply_projection(&case.data, proj, &case.active, &mut values);
+        let split = best_split_histogram(
+            &values,
+            &case.labels,
+            &case.parent,
+            SplitCriterion::Entropy,
+            n_bins,
+            1,
+            rng,
+            &mut scratch,
+            routing,
+        );
+        // best_split_histogram leaves boundaries/counts for the *last*
+        // filled projection in scratch; snapshot them. When the projection
+        // is constant, build_boundaries bails before pushing the +∞ pad, so
+        // "did it fill" is observable from the boundary-buffer length.
+        let filled = scratch.boundaries.len() == n_bins;
+        if filled {
+            tables.push(Some((scratch.boundaries.clone(), scratch.counts.clone())));
+        } else {
+            tables.push(None);
+        }
+        if let Some(s) = split {
+            if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                best = Some((pi, s));
+            }
+        }
+    }
+    (best, tables)
+}
+
+fn check_case(seed: u64, n_classes: usize, n_bins: usize, routing: Routing, discrete: bool, with_nan: bool) {
+    let mut gen = Pcg64::new(seed);
+    let case = random_case(&mut gen, n_classes, discrete, with_nan);
+
+    let mut rng_classic = Pcg64::new(seed ^ 0xDECADE);
+    let mut rng_fused = Pcg64::new(seed ^ 0xDECADE);
+    let (classic_best, tables) = classic_reference(&case, n_bins, routing, &mut rng_classic);
+
+    let mut scratch = SplitScratch::default();
+    let fused_best = best_split_fused(
+        &case.data,
+        &case.projections,
+        &case.active,
+        &case.labels,
+        &case.parent,
+        SplitCriterion::Entropy,
+        n_bins,
+        1,
+        routing,
+        &mut rng_fused,
+        &mut scratch,
+    );
+
+    let ctx = format!(
+        "seed {seed} classes {n_classes} bins {n_bins} routing {routing:?} \
+         discrete {discrete} nan {with_nan}"
+    );
+
+    // 1. Winner identical (bit-level threshold/gain).
+    match (classic_best, fused_best) {
+        (None, None) => {}
+        (Some((cpi, cs)), Some((fpi, fs))) => {
+            assert_eq!(cpi, fpi, "{ctx}: winning projection differs");
+            assert_eq!(
+                cs.threshold.to_bits(),
+                fs.threshold.to_bits(),
+                "{ctx}: threshold differs"
+            );
+            assert_eq!(cs.gain.to_bits(), fs.gain.to_bits(), "{ctx}: gain differs");
+            assert_eq!(cs.n_left, fs.n_left, "{ctx}");
+            assert_eq!(cs.n_right, fs.n_right, "{ctx}");
+        }
+        (c, f) => panic!("{ctx}: classic {c:?} vs fused {f:?}"),
+    }
+
+    // 2. Bit-identical per-projection histogram state.
+    let stride = n_bins * n_classes;
+    for (pi, table) in tables.iter().enumerate() {
+        match table {
+            None => assert!(
+                !scratch.fused_ok[pi],
+                "{ctx}: projection {pi} splittable only in fused path"
+            ),
+            Some((bounds, counts)) => {
+                assert!(scratch.fused_ok[pi], "{ctx}: projection {pi} dropped by fused");
+                let fb = &scratch.fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+                let fc = &scratch.fused_counts[pi * stride..(pi + 1) * stride];
+                let same_bounds = bounds
+                    .iter()
+                    .zip(fb)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same_bounds, "{ctx}: boundaries differ for projection {pi}");
+                assert_eq!(counts.as_slice(), fc, "{ctx}: bin counts differ for projection {pi}");
+            }
+        }
+    }
+
+    // 3. Both paths consumed the RNG identically.
+    assert_eq!(
+        rng_classic.next_u64(),
+        rng_fused.next_u64(),
+        "{ctx}: RNG state diverged"
+    );
+}
+
+#[test]
+fn fused_equals_classic_two_level_256() {
+    let mut meta = Pcg64::new(0x256256);
+    for _ in 0..12 {
+        let seed = meta.next_u64();
+        let n_classes = 2 + (seed % 4) as usize;
+        check_case(seed, n_classes, 256, Routing::TwoLevel, false, false);
+    }
+}
+
+#[test]
+fn fused_equals_classic_two_level_64() {
+    let mut meta = Pcg64::new(0x646464);
+    for _ in 0..12 {
+        let seed = meta.next_u64();
+        let n_classes = 2 + (seed % 4) as usize;
+        check_case(seed, n_classes, 64, Routing::TwoLevel, false, false);
+    }
+}
+
+#[test]
+fn fused_equals_classic_binary_search_routing() {
+    let mut meta = Pcg64::new(0xB15EC);
+    for _ in 0..8 {
+        let seed = meta.next_u64();
+        check_case(seed, 2 + (seed % 2) as usize, 256, Routing::BinarySearch, false, false);
+    }
+}
+
+#[test]
+fn fused_equals_classic_with_duplicate_boundaries() {
+    let mut meta = Pcg64::new(0xD0B1E5);
+    for _ in 0..10 {
+        let seed = meta.next_u64();
+        let n_classes = 2 + (seed % 4) as usize;
+        check_case(seed, n_classes, 256, Routing::TwoLevel, true, false);
+        check_case(seed ^ 1, n_classes, 64, Routing::TwoLevel, true, false);
+    }
+}
+
+#[test]
+fn fused_equals_classic_with_nan_values() {
+    let mut meta = Pcg64::new(0x7A9A0);
+    for _ in 0..10 {
+        let seed = meta.next_u64();
+        let n_classes = 2 + (seed % 4) as usize;
+        check_case(seed, n_classes, 256, Routing::TwoLevel, false, true);
+        check_case(seed ^ 3, n_classes, 64, Routing::TwoLevel, true, true);
+    }
+}
