@@ -1,0 +1,128 @@
+//! Serving throughput: row-at-a-time vs cache-blocked batched vs
+//! multi-threaded batched prediction through [`PackedForest`].
+//!
+//! Emits `BENCH_predict.json` (rows/sec per mode) so the serving-perf
+//! trajectory is machine-readable across PRs, next to
+//! `BENCH_node_split.json` for training. The acceptance bar for the
+//! cache-blocked batch path is ≥ 1.0× the row-at-a-time baseline at every
+//! batch size (it removes per-row accumulator allocation and re-streams
+//! neither rows nor accumulator per tree).
+//!
+//! `SOFOREST_BENCH_PREDICT_ROWS=4096,65536` overrides the batch sweep;
+//! `SOFOREST_BENCH_THREADS=8` pins the multi-threaded shard count.
+
+use soforest::bench::{measure, BenchOpts, Table};
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::PackedForest;
+use soforest::rng::Pcg64;
+use std::fmt::Write as _;
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("SOFOREST_BENCH_PREDICT_ROWS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1024, 16_384, 65_536]);
+    let threads: usize = std::env::var("SOFOREST_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(4, |n| n.get()));
+    let d = 32;
+    let n_trees = 48;
+    let max_rows = sizes.iter().copied().max().unwrap_or(1024);
+
+    // One forest, one pool of rows (cycled when a sweep point exceeds the
+    // training set); each sweep point scores a prefix.
+    let mut rng = Pcg64::new(0xF0E57);
+    let data = TrunkConfig {
+        n_samples: 20_000,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut rng);
+    let cfg = ForestConfig {
+        n_trees,
+        ..Default::default()
+    };
+    let forest = train_forest(&data, &cfg, 9);
+    let packed = PackedForest::from_forest(&forest).expect("pack forest");
+    let n_data = data.n_samples();
+    let mut rows = vec![0f32; max_rows * d];
+    let mut row = Vec::new();
+    for s in 0..max_rows {
+        data.row(s % n_data, &mut row);
+        rows[s * d..(s + 1) * d].copy_from_slice(&row);
+    }
+
+    println!(
+        "# packed-forest prediction: rowwise vs batched vs batched x{threads} threads \
+         (d={d}, {n_trees} trees, {:.0} kB model)\n",
+        packed.nbytes() as f64 / 1e3
+    );
+    let mut table = Table::new(&[
+        "rows",
+        "rowwise_rows/s",
+        "batched_rows/s",
+        "batched_mt_rows/s",
+        "batch_speedup",
+        "mt_speedup",
+    ]);
+    let opts = BenchOpts::default();
+    let mut json_rows = String::new();
+    for (k, &n) in sizes.iter().enumerate() {
+        let n = n.min(max_rows);
+        let slice = &rows[..n * d];
+        let rowwise = measure(&opts, || {
+            let mut proba = Vec::new();
+            let mut preds: Vec<u16> = Vec::with_capacity(n);
+            for r in slice.chunks_exact(d) {
+                packed.predict_proba_row(r, &mut proba);
+                let p = proba
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map_or(0, |(i, _)| i as u16);
+                preds.push(p);
+            }
+            preds
+        });
+        let batched = measure(&opts, || packed.predict_batch(slice, n));
+        let batched_mt = measure(&opts, || packed.predict_batch_parallel(slice, n, threads));
+        let rps = |t: &soforest::bench::Timing| n as f64 / t.median_s();
+        let (r_row, r_batch, r_mt) = (rps(&rowwise), rps(&batched), rps(&batched_mt));
+        table.row(&[
+            n.to_string(),
+            format!("{r_row:.0}"),
+            format!("{r_batch:.0}"),
+            format!("{r_mt:.0}"),
+            format!("{:.2}x", r_batch / r_row),
+            format!("{:.2}x", r_mt / r_row),
+        ]);
+        if k > 0 {
+            json_rows.push_str(",\n");
+        }
+        let _ = write!(
+            json_rows,
+            "    {{\"rows\": {n}, \"d\": {d}, \"trees\": {n_trees}, \
+             \"rowwise_rows_per_s\": {r_row:.1}, \
+             \"batched_rows_per_s\": {r_batch:.1}, \
+             \"batched_mt_rows_per_s\": {r_mt:.1}, \
+             \"threads\": {threads}, \
+             \"batch_speedup\": {:.4}, \"mt_speedup\": {:.4}}}",
+            r_batch / r_row,
+            r_mt / r_row
+        );
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"predict\",\n  \"unit\": \"rows_per_sec\",\n  \
+         \"results\": [\n{json_rows}\n  ]\n}}\n"
+    );
+    let out = "BENCH_predict.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("\n# wrote {out}"),
+        Err(e) => eprintln!("\n# could not write {out}: {e}"),
+    }
+}

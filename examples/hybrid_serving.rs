@@ -1,104 +1,139 @@
-//! Hybrid CPU/accelerator training (§4.3) end to end: load the AOT
-//! artifacts, calibrate the CPU↔accelerator crossover, train with per-node
-//! offload and compare against the pure-CPU run — the full three-layer
-//! stack (rust coordinator → PJRT runtime → XLA executable embedding the
-//! Pallas histogram kernel) on one small real workload.
+//! Train-to-serve, end to end, on the production serving stack:
 //!
-//! Run: `make artifacts && cargo run --release --example hybrid_serving [-- --fast]`
+//! 1. train a sparse-oblique forest (hybrid CPU/accelerator when AOT
+//!    artifacts exist, pure CPU otherwise — the example no longer *requires*
+//!    an accelerator),
+//! 2. save it in the v2 packed format (`forest::serialize`), whose on-disk
+//!    layout is the serving layout,
+//! 3. load it back as a [`PackedForest`] (no per-node rebuild) and stand up
+//!    the batching TCP server (`serve::serve_tcp`),
+//! 4. fire client traffic at it and report end-to-end latency percentiles.
+//!
+//! Run: `cargo run --release --example hybrid_serving [-- --fast]`
 
 use soforest::accel::NodeSplitAccel;
-use soforest::calibrate;
 use soforest::config::ForestConfig;
 use soforest::coordinator::train_forest_with_source;
 use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::serialize;
 use soforest::forest::tree::ProjectionSource;
 use soforest::rng::Pcg64;
+use soforest::serve::{percentile, serve_tcp, ServeConfig};
 use soforest::split::SplitStrategy;
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
+use std::time::{Duration, Instant};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
     let artifacts = std::env::var("SOFOREST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
 
-    // 1. Probe the accelerator.
-    let mut accel = match NodeSplitAccel::try_load(Path::new(&artifacts)) {
-        Ok(a) => a,
+    // 1. Train — hybrid when the accelerator artifacts are present.
+    let strategy = match NodeSplitAccel::try_load(Path::new(&artifacts)) {
+        Ok(a) => {
+            println!("accelerator: PJRT {} — training hybrid", a.platform());
+            SplitStrategy::Hybrid
+        }
         Err(e) => {
-            eprintln!("no accelerator ({e}); run `make artifacts` first");
-            std::process::exit(1);
+            println!("accelerator unavailable ({e}) — training on CPU");
+            SplitStrategy::DynamicVectorized
         }
     };
-    println!("accelerator: PJRT {}", accel.platform());
-    for b in accel.buckets() {
-        println!("  compiled bucket: p={:<4} n={}", b.p, b.n);
-    }
-
-    // 2. Calibrate both crossovers (paper Fig 3).
-    let sort_below = calibrate::calibrate_sort_threshold(256, soforest::split::histogram::Routing::TwoLevel);
-    let accel_above = calibrate::calibrate_accel_threshold(&mut accel, 16, 256, 1 << 16);
-    println!("\ncalibration: sort below {sort_below}, offload above {}", fmt(accel_above));
-
-    // 3. Train hybrid vs CPU on a dataset big enough to cross the offload
-    //    threshold at the top of the tree.
-    let n = if fast { 6_000 } else { 40_000 };
+    let n = if fast { 4_000 } else { 20_000 };
     let mut rng = Pcg64::new(7);
     let data = TrunkConfig {
         n_samples: n,
-        n_features: 64,
+        n_features: 32,
         ..Default::default()
     }
     .generate(&mut rng);
-    println!("\ndataset: trunk {}x{}", data.n_samples(), data.n_features());
-
-    let mk = |strategy| {
-        let mut cfg = ForestConfig {
-            n_trees: if fast { 4 } else { 16 },
-            strategy,
-            artifacts_dir: artifacts.clone(),
-            ..Default::default()
-        };
-        cfg.thresholds.sort_below = sort_below.min(4096);
-        // Use the calibrated offload point, but cap it so the example
-        // always exercises the accelerator path on this dataset.
-        cfg.thresholds.accel_above = accel_above.min(n / 2);
-        cfg
+    let mut cfg = ForestConfig {
+        n_trees: if fast { 8 } else { 48 },
+        strategy,
+        artifacts_dir: artifacts,
+        ..Default::default()
     };
-
-    let cpu = train_forest_with_source(
-        &data,
-        &mk(SplitStrategy::DynamicVectorized),
-        11,
-        ProjectionSource::SparseOblique,
-    );
-    println!(
-        "\nCPU   (dynamic-vectorized): {:.2}s  train acc {:.4}",
-        cpu.wall_s,
-        cpu.forest.accuracy(&data)
-    );
-    let hybrid = train_forest_with_source(
-        &data,
-        &mk(SplitStrategy::Hybrid),
-        11,
-        ProjectionSource::SparseOblique,
-    );
-    println!(
-        "HYBRID (cpu+accelerator)  : {:.2}s  train acc {:.4}  ({} nodes offloaded)",
-        hybrid.wall_s,
-        hybrid.forest.accuracy(&data),
-        hybrid.accel_nodes
-    );
-
-    let delta = (cpu.wall_s - hybrid.wall_s) / cpu.wall_s * 100.0;
-    println!(
-        "\nhybrid vs cpu: {delta:+.1}% wall-clock — the offload pays only above the\n\
-         calibrated node size, exactly the economics of the paper's Table 3."
-    );
-}
-
-fn fmt(t: usize) -> String {
-    if t == usize::MAX {
-        "never (CPU wins at every size on this box)".into()
-    } else {
-        t.to_string()
+    if strategy == SplitStrategy::Hybrid {
+        // The default accel_above is usize::MAX ("never offload"); cap it
+        // so the top-of-tree nodes actually exercise the accelerator.
+        cfg.thresholds.accel_above = (n / 2).max(1024);
     }
+    let trained = train_forest_with_source(&data, &cfg, 11, ProjectionSource::SparseOblique);
+    println!(
+        "trained {} trees in {:.2}s (train acc {:.4})",
+        trained.forest.n_trees(),
+        trained.wall_s,
+        trained.forest.accuracy(&data)
+    );
+
+    // 2. Save v2, 3. load packed.
+    let model_path = std::env::temp_dir().join("soforest_example_model.bin");
+    serialize::save(&trained.forest, &model_path).expect("save model");
+    let packed = serialize::load_packed(&model_path).expect("load packed model");
+    println!(
+        "model: {:.1} kB packed, format v2 (layout == serving layout)",
+        packed.nbytes() as f64 / 1e3
+    );
+
+    // 4. Serve over TCP and drive client load.
+    let n_requests = if fast { 500 } else { 5_000 };
+    let serve_cfg = ServeConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(500),
+        ..Default::default()
+    };
+    let port_file = std::env::temp_dir().join("soforest_example_port");
+    std::fs::remove_file(&port_file).ok();
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_tcp(
+                &packed,
+                &serve_cfg,
+                "127.0.0.1:0",
+                Some(port_file.as_path()),
+                Some(n_requests),
+            )
+            .expect("serve")
+        });
+        let addr = loop {
+            match std::fs::read_to_string(&port_file) {
+                Ok(s) if !s.is_empty() => break s,
+                _ => std::thread::sleep(Duration::from_millis(2)),
+            }
+        };
+        println!("serving on {addr}; sending {n_requests} requests...");
+        let mut conn = std::net::TcpStream::connect(addr.trim()).expect("connect");
+        let mut responses = BufReader::new(conn.try_clone().expect("clone"));
+        let mut row = Vec::new();
+        let mut latencies = Vec::with_capacity(n_requests);
+        let mut line = String::new();
+        let t0 = Instant::now();
+        for i in 0..n_requests {
+            data.row(i % data.n_samples(), &mut row);
+            let req: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+            let t = Instant::now();
+            writeln!(conn, "{}", req.join(",")).expect("send");
+            conn.flush().expect("flush");
+            line.clear();
+            responses.read_line(&mut line).expect("recv");
+            latencies.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // Shut the socket down (a plain drop would leave the cloned read
+        // half holding the connection open and the server waiting).
+        conn.shutdown(std::net::Shutdown::Both).ok();
+        let stats = server.join().expect("server thread");
+        latencies.sort_by(f64::total_cmp);
+        println!(
+            "client: {n_requests} request/response round trips in {wall:.2}s \
+             ({:.0} req/s) — us p50 {:.0} p95 {:.0} p99 {:.0}",
+            n_requests as f64 / wall,
+            percentile(&latencies, 50.0),
+            percentile(&latencies, 95.0),
+            percentile(&latencies, 99.0),
+        );
+        println!("server: {}", stats.summary());
+    });
+    std::fs::remove_file(&model_path).ok();
+    std::fs::remove_file(&port_file).ok();
 }

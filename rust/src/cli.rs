@@ -15,10 +15,11 @@ use crate::data::{csv, Dataset};
 use crate::might::{metrics, train_might, MightConfig};
 use crate::rng::Pcg64;
 use crate::split::histogram::Routing;
-use crate::{accel, calibrate, coordinator, forest};
+use crate::{accel, calibrate, coordinator, forest, serve};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::time::Duration;
 
 /// Parsed `--key value` flags.
 pub struct Args {
@@ -95,9 +96,18 @@ soforest — sparse oblique forests with vectorized adaptive histograms
 USAGE: soforest <command> [--flag value ...]
 
 COMMANDS:
-  train      train a forest; --out saves the model; --oob adds OOB accuracy
+  train      train a forest; --out saves the model (v2); --oob adds OOB accuracy
   eval       train on a split, report holdout accuracy (+ RF baseline)
   predict    load a model (--model) and classify --data (--out preds.csv)
+  score      batched multi-threaded scoring of a CSV through a saved model:
+             --model m.bin --data file.csv [--block 4096] [--threads N]
+             [--out preds.csv]; reports rows/s + block latency percentiles
+  serve      online serving loop with request batching; stdin -> stdout, or
+             --tcp host:port (port 0 = ephemeral); --max-batch 64,
+             --max-wait-us 2000, --proba, --port-file ready.addr,
+             --max-requests N (stop after N answers; default: run forever)
+  migrate    rewrite a model file in the v2 packed serving format:
+             --model old.bin --out new.bin
   importance permutation feature importance of a trained model
   calibrate  run the §4.1 microbenchmark, print thresholds
   might      run the MIGHT honest-forest protocol, report AUC / S@98
@@ -135,6 +145,9 @@ pub fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "predict" => cmd_predict(&args),
+        "score" => cmd_score(&args),
+        "serve" => cmd_serve(&args),
+        "migrate" => cmd_migrate(&args),
         "importance" => cmd_importance(&args),
         "calibrate" => cmd_calibrate(&args),
         "might" => cmd_might(&args),
@@ -235,17 +248,19 @@ fn cmd_predict(args: &Args) -> Result<()> {
         .get("model")
         .ok_or_else(|| anyhow!("--model <file> is required"))?;
     let seed: u64 = args.get_parse("seed", 42)?;
+    let threads: usize = args.get_parse("threads", 1)?;
     let mut rng = Pcg64::new(seed);
-    let forest = forest::serialize::load(Path::new(model_path))?;
+    // The packed loader serves v2 files without a per-node rebuild and
+    // migrates v1 files transparently.
+    let packed = forest::serialize::load_packed(Path::new(model_path))?;
     let data = load_data(args, &mut rng)?;
-    if data.n_features() != forest.n_features {
+    if data.n_features() != packed.n_features {
         bail!(
             "model expects {} features, data has {}",
-            forest.n_features,
+            packed.n_features,
             data.n_features()
         );
     }
-    let packed = forest::PackedForest::from_forest(&forest);
     let n = data.n_samples();
     let d = data.n_features();
     let mut rows = vec![0f32; n * d];
@@ -255,7 +270,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         rows[s * d..(s + 1) * d].copy_from_slice(&row);
     }
     let t0 = std::time::Instant::now();
-    let preds = packed.predict_batch(&rows, n);
+    let preds = packed.predict_batch_parallel(&rows, n, threads);
     let dt = t0.elapsed();
     let acc = preds
         .iter()
@@ -281,6 +296,141 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    }
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model <file> is required"))?;
+    let packed = forest::serialize::load_packed(Path::new(model_path))?;
+    let block: usize = args.get_parse("block", 4096)?;
+    let threads = effective_threads(args.get_parse("threads", 0)?);
+    let spec = args
+        .get("data")
+        .ok_or_else(|| anyhow!("--data is required"))?;
+    // Predictions are only retained when they will be written out.
+    let keep = args.get("out").is_some();
+    let report = if Path::new(spec).exists() {
+        let f = std::fs::File::open(spec).with_context(|| format!("open {spec}"))?;
+        serve::score_csv_stream(&packed, &mut std::io::BufReader::new(f), block, threads, keep)?
+    } else {
+        // Generator spec: materialize to in-memory CSV rows so both input
+        // kinds flow through the same streaming block scorer.
+        let seed: u64 = args.get_parse("seed", 42)?;
+        let mut rng = Pcg64::new(seed);
+        let data = synth::generate(spec, &mut rng)?;
+        if data.n_features() != packed.n_features {
+            bail!(
+                "model expects {} features, data has {}",
+                packed.n_features,
+                data.n_features()
+            );
+        }
+        let mut text = String::new();
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            for v in &row {
+                text.push_str(&format!("{v},"));
+            }
+            text.push_str(&format!("{}\n", data.label(s)));
+        }
+        let mut reader = text.as_bytes();
+        serve::score_csv_stream(&packed, &mut reader, block, threads, keep)?
+    };
+    println!(
+        "scored {} rows in {:.3}s — {:.0} rows/s (block {block} x {threads} threads, \
+         {} blocks, packed model {:.1} kB)",
+        report.rows,
+        report.wall_s,
+        report.rows_per_s(),
+        report.blocks,
+        packed.nbytes() as f64 / 1e3
+    );
+    if let Some((correct, labeled)) = report.correct {
+        println!("accuracy: {:.4}", correct as f64 / labeled as f64);
+    }
+    println!(
+        "block latency ms: p50 {:.3} p95 {:.3} p99 {:.3} max {:.3}",
+        serve::percentile(&report.block_ms, 50.0),
+        serve::percentile(&report.block_ms, 95.0),
+        serve::percentile(&report.block_ms, 99.0),
+        report.block_ms.last().copied().unwrap_or(f64::NAN)
+    );
+    if let Some(out) = args.get("out") {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        writeln!(w, "prediction")?;
+        for p in &report.predictions {
+            writeln!(w, "{p}")?;
+        }
+        println!("predictions written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model <file> is required"))?;
+    let packed = forest::serialize::load_packed(Path::new(model_path))?;
+    let cfg = serve::ServeConfig {
+        max_batch: args.get_parse("max-batch", 64usize)?.max(1),
+        max_wait: Duration::from_micros(args.get_parse("max-wait-us", 2000u64)?),
+        n_threads: args.get_parse("threads", 1usize)?.max(1),
+        proba: args.get("proba").is_some(),
+    };
+    let max_requests = match args.get("max-requests") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<usize>()
+                .map_err(|_| anyhow!("--max-requests: cannot parse {v:?}"))?,
+        ),
+    };
+    eprintln!(
+        "[serve] model {model_path}: {} trees, {} features, {} classes, {:.1} kB packed",
+        packed.n_trees(),
+        packed.n_features,
+        packed.n_classes,
+        packed.nbytes() as f64 / 1e3
+    );
+    let stats = match args.get("tcp") {
+        Some(addr) => serve::serve_tcp(
+            &packed,
+            &cfg,
+            addr,
+            args.get("port-file").map(Path::new),
+            max_requests,
+        )?,
+        None => serve::serve_stdio(&packed, &cfg)?,
+    };
+    eprintln!("[serve] {}", stats.summary());
+    Ok(())
+}
+
+fn cmd_migrate(args: &Args) -> Result<()> {
+    let input = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model <file> is required"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out <file> is required"))?;
+    let packed = forest::serialize::load_packed(Path::new(input))?;
+    forest::serialize::save_packed(&packed, Path::new(out))?;
+    println!(
+        "migrated {input} -> {out} (v2 packed format, {} trees, {:.1} kB)",
+        packed.n_trees(),
+        packed.nbytes() as f64 / 1e3
+    );
+    Ok(())
+}
+
 fn cmd_importance(args: &Args) -> Result<()> {
     let seed: u64 = args.get_parse("seed", 42)?;
     let repeats: usize = args.get_parse("repeats", 3)?;
@@ -292,7 +442,7 @@ fn cmd_importance(args: &Args) -> Result<()> {
         Some(p) => forest::serialize::load(Path::new(p))?,
         None => coordinator::train_forest(&data, &cfg, seed),
     };
-    let imp = forest::evaluate::permutation_importance(&forest, &data, repeats, seed);
+    let imp = forest::evaluate::permutation_importance(&forest, &data, repeats, seed)?;
     let mut order: Vec<usize> = (0..imp.len()).collect();
     order.sort_by(|&a, &b| imp[b].total_cmp(&imp[a]));
     println!("top {} features by permutation importance:", top.min(imp.len()));

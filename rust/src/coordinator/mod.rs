@@ -23,6 +23,45 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Work-stealing task queue: workers claim indices `0..n_tasks` until
+/// exhausted. Shared by the training pool below and the batched scoring
+/// pool (`serve`/`score`), so both sides balance imbalanced work the same
+/// way.
+pub struct TaskQueue {
+    next: AtomicUsize,
+    n_tasks: usize,
+}
+
+impl TaskQueue {
+    pub fn new(n_tasks: usize) -> Self {
+        Self {
+            next: AtomicUsize::new(0),
+            n_tasks,
+        }
+    }
+
+    /// Claim the next task index, or `None` when the queue is drained.
+    #[inline]
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.n_tasks).then_some(i)
+    }
+}
+
+/// Run `worker(&queue)` on up to `n_workers` scoped threads over a queue of
+/// `n_tasks` tasks. Each worker owns its closure invocation for its whole
+/// lifetime, so per-worker state (scratch buffers, accelerator clients)
+/// lives in the closure body — the pattern both training and serving use.
+pub fn run_pool(n_workers: usize, n_tasks: usize, worker: impl Fn(&TaskQueue) + Sync) {
+    let queue = TaskQueue::new(n_tasks);
+    let n_workers = n_workers.max(1).min(n_tasks.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| worker(&queue));
+        }
+    });
+}
+
 /// Result of a coordinated training run.
 pub struct TrainOutcome {
     pub forest: Forest,
@@ -53,47 +92,37 @@ pub fn train_forest_with_source(
     let t0 = Instant::now();
 
     let n_workers = config.threads().min(config.n_trees);
-    let next_tree = AtomicUsize::new(0);
     let results: Mutex<Vec<(usize, Tree, TrainStats)>> =
         Mutex::new(Vec::with_capacity(config.n_trees));
     let accel_nodes = AtomicUsize::new(0);
 
-    std::thread::scope(|scope| {
-        for _ in 0..n_workers {
-            scope.spawn(|| {
-                // Per-worker accelerator (PJRT clients are not Sync).
-                // Only stand up a PJRT device when the strategy can
-                // actually offload (calibration may have said "never").
-                let mut accel: Option<NodeSplitAccel> = if config.strategy
-                    == SplitStrategy::Hybrid
-                    && config.thresholds.accel_above != usize::MAX
-                {
-                    NodeSplitAccel::try_load(std::path::Path::new(&config.artifacts_dir)).ok()
-                } else {
-                    None
-                };
-                let mut local: Vec<(usize, Tree, TrainStats)> = Vec::new();
-                loop {
-                    let tree_idx = next_tree.fetch_add(1, Ordering::Relaxed);
-                    if tree_idx >= config.n_trees {
-                        break;
-                    }
-                    let (tree, stats) = train_one_tree(
-                        data,
-                        config,
-                        seed,
-                        tree_idx,
-                        source,
-                        accel.as_mut().map(|a| a as &mut NodeSplitAccel),
-                    );
-                    local.push((tree_idx, tree, stats));
-                }
-                if let Some(a) = &accel {
-                    accel_nodes.fetch_add(a.nodes_executed() as usize, Ordering::Relaxed);
-                }
-                results.lock().unwrap().extend(local);
-            });
+    run_pool(n_workers, config.n_trees, |queue| {
+        // Per-worker accelerator (PJRT clients are not Sync).
+        // Only stand up a PJRT device when the strategy can
+        // actually offload (calibration may have said "never").
+        let mut accel: Option<NodeSplitAccel> = if config.strategy == SplitStrategy::Hybrid
+            && config.thresholds.accel_above != usize::MAX
+        {
+            NodeSplitAccel::try_load(std::path::Path::new(&config.artifacts_dir)).ok()
+        } else {
+            None
+        };
+        let mut local: Vec<(usize, Tree, TrainStats)> = Vec::new();
+        while let Some(tree_idx) = queue.claim() {
+            let (tree, stats) = train_one_tree(
+                data,
+                config,
+                seed,
+                tree_idx,
+                source,
+                accel.as_mut().map(|a| a as &mut NodeSplitAccel),
+            );
+            local.push((tree_idx, tree, stats));
         }
+        if let Some(a) = &accel {
+            accel_nodes.fetch_add(a.nodes_executed() as usize, Ordering::Relaxed);
+        }
+        results.lock().unwrap().extend(local);
     });
 
     let mut collected = results.into_inner().unwrap();
@@ -115,6 +144,30 @@ pub fn train_forest_with_source(
     }
 }
 
+/// Draw tree `tree_idx`'s bag from its deterministic RNG stream. Returns
+/// the active set and the RNG in its post-bag state (the state the node
+/// loop continues from). This is the single source of truth for bag
+/// derivation: both the trainer ([`train_one_tree`]) and OOB re-derivation
+/// ([`crate::forest::evaluate::train_with_bags`]) call it, so the two can
+/// never silently drift apart and corrupt OOB scores.
+pub fn tree_bag(
+    n_samples: usize,
+    config: &ForestConfig,
+    seed: u64,
+    tree_idx: usize,
+) -> (ActiveSet, Pcg64) {
+    let mut rng = Pcg64::with_stream(seed, tree_idx as u64 + 1);
+    let k = ((n_samples as f64) * config.bootstrap_fraction)
+        .round()
+        .max(2.0) as usize;
+    let active: ActiveSet = if config.with_replacement {
+        sampling::bootstrap(&mut rng, n_samples, k.min(n_samples * 4))
+    } else {
+        sampling::subsample(&mut rng, n_samples, k.min(n_samples))
+    };
+    (active, rng)
+}
+
 /// Train tree `tree_idx` with its deterministic RNG stream.
 fn train_one_tree(
     data: &Dataset,
@@ -124,14 +177,7 @@ fn train_one_tree(
     source: ProjectionSource,
     accel: Option<&mut NodeSplitAccel>,
 ) -> (Tree, TrainStats) {
-    let mut rng = Pcg64::with_stream(seed, tree_idx as u64 + 1);
-    let n = data.n_samples();
-    let k = ((n as f64) * config.bootstrap_fraction).round().max(2.0) as usize;
-    let active: ActiveSet = if config.with_replacement {
-        sampling::bootstrap(&mut rng, n, k.min(n * 4))
-    } else {
-        sampling::subsample(&mut rng, n, k.min(n))
-    };
+    let (active, rng) = tree_bag(data.n_samples(), config, seed, tree_idx);
     let mut trainer = TreeTrainer::new(data, config, source, rng);
     if let Some(a) = accel {
         trainer = trainer.with_accel(a);
@@ -187,6 +233,50 @@ mod tests {
                 assert_eq!(ta.leaf_index(&row), tb.leaf_index(&row), "sample {s}");
             }
         }
+    }
+
+    #[test]
+    fn tree_bag_plus_trainer_reproduces_pool_trees() {
+        // `tree_bag` is the contract between the parallel trainer and OOB
+        // bag re-derivation: feeding its (bag, rng) into a TreeTrainer by
+        // hand must rebuild exactly the trees the pool produced.
+        let data = trunk(300, 8);
+        let cfg = ForestConfig {
+            n_trees: 4,
+            n_threads: 2,
+            ..Default::default()
+        };
+        let forest = train_forest(&data, &cfg, 33);
+        let mut row = Vec::new();
+        for t in 0..cfg.n_trees {
+            let (active, rng) = tree_bag(data.n_samples(), &cfg, 33, t);
+            let mut trainer =
+                TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, rng);
+            let tree = trainer.train(active);
+            assert_eq!(tree.nodes.len(), forest.trees[t].nodes.len(), "tree {t}");
+            for s in (0..data.n_samples()).step_by(13) {
+                data.row(s, &mut row);
+                assert_eq!(
+                    tree.leaf_index(&row),
+                    forest.trees[t].leaf_index(&row),
+                    "tree {t} sample {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_claims_each_task_once() {
+        use std::sync::atomic::AtomicU32;
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        run_pool(5, hits.len(), |q| {
+            while let Some(i) = q.claim() {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Zero tasks must not hang or panic.
+        run_pool(3, 0, |q| assert!(q.claim().is_none()));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use super::tree::ProjectionSource;
 use super::Forest;
 use crate::config::ForestConfig;
 use crate::coordinator;
-use crate::data::{sampling, Dataset};
+use crate::data::Dataset;
 use crate::rng::Pcg64;
 
 /// Forest + the per-tree bags needed for OOB scoring.
@@ -32,17 +32,13 @@ pub fn train_with_bags(data: &Dataset, config: &ForestConfig, seed: u64) -> OobF
     )
     .forest;
     let n = data.n_samples();
-    let k = ((n as f64) * config.bootstrap_fraction).round().max(2.0) as usize;
     let mut bags = Vec::with_capacity(config.n_trees);
     for tree_idx in 0..config.n_trees {
         // Re-derive the bag from the tree's RNG stream (cheap; avoids
-        // plumbing bags through the parallel trainer).
-        let mut rng = Pcg64::with_stream(seed, tree_idx as u64 + 1);
-        let active = if config.with_replacement {
-            sampling::bootstrap(&mut rng, n, k.min(n * 4))
-        } else {
-            sampling::subsample(&mut rng, n, k.min(n))
-        };
+        // plumbing bags through the parallel trainer). `coordinator::tree_bag`
+        // is the same function the trainer itself drew the bag from, so the
+        // re-derivation cannot drift.
+        let (active, _) = coordinator::tree_bag(n, config, seed, tree_idx);
         let mut bag = vec![false; n];
         for &i in &active.indices {
             bag[i as usize] = true;
@@ -99,13 +95,14 @@ impl OobForest {
 
 /// Permutation importance: accuracy drop when feature `f`'s column is
 /// shuffled. Returns one score per feature (higher ⇒ more important).
-/// `n_repeats` permutations are averaged per feature.
+/// `n_repeats` permutations are averaged per feature. Fails only if the
+/// forest exceeds the packed layout's ranges.
 pub fn permutation_importance(
     forest: &Forest,
     data: &Dataset,
     n_repeats: usize,
     seed: u64,
-) -> Vec<f64> {
+) -> anyhow::Result<Vec<f64>> {
     let baseline = forest.accuracy(data);
     let n = data.n_samples();
     let d = data.n_features();
@@ -118,7 +115,7 @@ pub fn permutation_importance(
         data.row(s, &mut row);
         rows[s * d..(s + 1) * d].copy_from_slice(&row);
     }
-    let packed = super::predict::PackedForest::from_forest(forest);
+    let packed = super::predict::PackedForest::from_forest(forest)?;
     let mut perm: Vec<u32> = (0..n as u32).collect();
     let mut saved = vec![0f32; n];
     for f in 0..d {
@@ -145,7 +142,7 @@ pub fn permutation_importance(
             rows[s * d + f] = saved[s];
         }
     }
-    importances
+    Ok(importances)
 }
 
 #[cfg(test)]
@@ -200,6 +197,39 @@ mod tests {
     }
 
     #[test]
+    fn rederived_bags_equal_trainer_bags() {
+        // Regression for the hand-duplicated RNG/bootstrap sequence this
+        // module used to carry: the bags recorded by `train_with_bags` must
+        // be exactly the bags the trainer drew — verified against
+        // `coordinator::tree_bag` (the trainer's own bag source) for both
+        // bagging modes.
+        let data = TrunkConfig {
+            n_samples: 180,
+            n_features: 6,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(6));
+        for with_replacement in [false, true] {
+            let cfg = ForestConfig {
+                n_trees: 5,
+                n_threads: 2,
+                bootstrap_fraction: 0.7,
+                with_replacement,
+                ..Default::default()
+            };
+            let oob = train_with_bags(&data, &cfg, 27);
+            for t in 0..cfg.n_trees {
+                let (active, _) = coordinator::tree_bag(data.n_samples(), &cfg, 27, t);
+                let mut bag = vec![false; data.n_samples()];
+                for &i in &active.indices {
+                    bag[i as usize] = true;
+                }
+                assert_eq!(bag, oob.bags[t], "tree {t} replacement={with_replacement}");
+            }
+        }
+    }
+
+    #[test]
     fn importance_finds_the_relevant_features() {
         // sparse_parity: only the first k=2 features matter.
         let mut rng = Pcg64::new(5);
@@ -210,7 +240,7 @@ mod tests {
             ..Default::default()
         };
         let forest = crate::coordinator::train_forest(&data, &cfg, 13);
-        let imp = permutation_importance(&forest, &data, 3, 7);
+        let imp = permutation_importance(&forest, &data, 3, 7).unwrap();
         let relevant: f64 = imp[..2].iter().sum::<f64>() / 2.0;
         let irrelevant: f64 = imp[2..].iter().sum::<f64>() / 6.0;
         assert!(

@@ -6,38 +6,54 @@
 //! contiguous arrays — node records, projection terms, leaf posteriors — in
 //! DFS order so the hot path touches sequential memory, in the spirit of
 //! the cache-aware layouts the paper cites (forest packing [4],
-//! BLOCKSET [16]).
+//! BLOCKSET [16]). The same SoA arrays are the on-disk layout of the v2
+//! model format (`forest::serialize`), so loading a model for serving is a
+//! validated bulk read, not a per-node rebuild.
 //!
-//! Node record (16 bytes): `{ term_off:u32, meta:u32, threshold:f32,
-//! left:u32 }` where `meta` packs term-count (16 bits) | leaf flag (1) and
-//! `right = left + 1` is implicit (children are allocated together). Leaves
-//! reuse `term_off` as the posterior offset.
+//! Node record (16 bytes): `{ off:u32, meta:u32, threshold:f32, left:u32 }`.
+//! Splits: `off` indexes `terms`, `meta` packs the term count (16 bits),
+//! and `right = left + 1` is implicit (children are allocated together).
+//! Leaves: `off` indexes `posteriors`, `meta` packs the majority class in
+//! its low 16 bits next to the leaf flag (bit 31), and `left` carries the
+//! leaf's training-sample count — so packing is lossless and a packed tree
+//! can be unpacked back into a [`Tree`] exactly.
 
 use super::tree::{Node, Tree};
 use super::Forest;
+use anyhow::{bail, Result};
 
-#[derive(Clone, Copy, Debug)]
-struct PackedNode {
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct PackedNode {
     /// Split: offset into `terms`. Leaf: offset into `posteriors`.
-    off: u32,
-    /// bits 0..15: term count (splits). bit 31: leaf flag.
-    meta: u32,
-    threshold: f32,
-    /// Split: index of the left child; right child is `left + 1`.
-    left: u32,
+    pub(super) off: u32,
+    /// Splits: bits 0..15 = term count. Leaves: bits 0..15 = majority
+    /// class. Bit 31: leaf flag.
+    pub(super) meta: u32,
+    pub(super) threshold: f32,
+    /// Split: index of the left child (right child is `left + 1`).
+    /// Leaf: training samples that reached the leaf.
+    pub(super) left: u32,
 }
 
-const LEAF_BIT: u32 = 1 << 31;
+pub(super) const LEAF_BIT: u32 = 1 << 31;
+/// Term counts (and leaf majorities) live in 16 bits of `meta`.
+pub(super) const MAX_TERMS: usize = 0xFFFF;
+
+/// Rows per cache block in the batched path: every tree traverses one
+/// block before the next block is touched, so the block's rows and partial
+/// posteriors stay cache-resident across the whole forest while each
+/// tree's packed arrays stream through once per block.
+const PRED_BLOCK: usize = 256;
 
 /// One flattened tree.
-struct PackedTree {
-    nodes: Vec<PackedNode>,
-    terms: Vec<(u32, f32)>,
-    posteriors: Vec<f32>,
+pub(super) struct PackedTree {
+    pub(super) nodes: Vec<PackedNode>,
+    pub(super) terms: Vec<(u32, f32)>,
+    pub(super) posteriors: Vec<f32>,
 }
 
 impl PackedTree {
-    fn from_tree(tree: &Tree, n_classes: usize) -> Self {
+    pub(super) fn from_tree(tree: &Tree, n_classes: usize) -> Result<Self> {
         let mut out = PackedTree {
             nodes: Vec::with_capacity(tree.nodes.len()),
             terms: Vec::new(),
@@ -45,24 +61,23 @@ impl PackedTree {
         };
         // DFS that allocates both children contiguously (left = right - 1).
         // stack of (source node idx, packed slot).
-        out.nodes.push(PackedNode {
-            off: 0,
-            meta: 0,
-            threshold: 0.0,
-            left: 0,
-        });
+        out.nodes.push(PackedNode::default());
         let mut stack = vec![(0usize, 0usize)];
         while let Some((src, slot)) = stack.pop() {
             match &tree.nodes[src] {
-                Node::Leaf { posterior, .. } => {
+                Node::Leaf {
+                    posterior,
+                    majority,
+                    n,
+                } => {
                     let off = out.posteriors.len() as u32;
                     debug_assert_eq!(posterior.len(), n_classes);
                     out.posteriors.extend_from_slice(posterior);
                     out.nodes[slot] = PackedNode {
                         off,
-                        meta: LEAF_BIT,
+                        meta: LEAF_BIT | *majority as u32,
                         threshold: 0.0,
-                        left: 0,
+                        left: *n,
                     };
                 }
                 Node::Split {
@@ -71,23 +86,20 @@ impl PackedTree {
                     left,
                     right,
                 } => {
+                    if projection.terms.len() > MAX_TERMS {
+                        bail!(
+                            "projection with {} terms exceeds the packed-node \
+                             limit of {MAX_TERMS}",
+                            projection.terms.len()
+                        );
+                    }
                     let term_off = out.terms.len() as u32;
                     out.terms
                         .extend(projection.terms.iter().map(|&(f, w)| (f, w)));
                     let child_base = out.nodes.len() as u32;
                     // Reserve both children now so right = left + 1.
-                    out.nodes.push(PackedNode {
-                        off: 0,
-                        meta: 0,
-                        threshold: 0.0,
-                        left: 0,
-                    });
-                    out.nodes.push(PackedNode {
-                        off: 0,
-                        meta: 0,
-                        threshold: 0.0,
-                        left: 0,
-                    });
+                    out.nodes.push(PackedNode::default());
+                    out.nodes.push(PackedNode::default());
                     out.nodes[slot] = PackedNode {
                         off: term_off,
                         meta: projection.terms.len() as u32,
@@ -99,7 +111,41 @@ impl PackedTree {
                 }
             }
         }
-        out
+        Ok(out)
+    }
+
+    /// Unpack into a pointer-based [`Tree`] (v2 model files feeding
+    /// training-side tools: importance, recalibration). Node order is the
+    /// packed DFS order, which [`PackedTree::from_tree`] maps back onto the
+    /// identical byte layout.
+    pub(super) fn to_tree(&self, n_classes: usize) -> Tree {
+        use crate::projection::Projection;
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|pn| {
+                if pn.meta & LEAF_BIT != 0 {
+                    let off = pn.off as usize;
+                    Node::Leaf {
+                        posterior: self.posteriors[off..off + n_classes].to_vec(),
+                        majority: (pn.meta & 0xFFFF) as u16,
+                        n: pn.left,
+                    }
+                } else {
+                    let off = pn.off as usize;
+                    let n_terms = (pn.meta & 0xFFFF) as usize;
+                    Node::Split {
+                        projection: Projection {
+                            terms: self.terms[off..off + n_terms].to_vec(),
+                        },
+                        threshold: pn.threshold,
+                        left: pn.left,
+                        right: pn.left + 1,
+                    }
+                }
+            })
+            .collect();
+        Tree { nodes, n_classes }
     }
 
     /// Posterior slice for one dense row.
@@ -128,25 +174,54 @@ impl PackedTree {
 
 /// A forest flattened for batched inference.
 pub struct PackedForest {
-    trees: Vec<PackedTree>,
+    pub(super) trees: Vec<PackedTree>,
     pub n_classes: usize,
     pub n_features: usize,
 }
 
 impl PackedForest {
-    pub fn from_forest(forest: &Forest) -> Self {
-        Self {
+    /// Pack a trained forest. Fails if any node exceeds the packed layout's
+    /// ranges (≥ 2^16 projection terms) instead of silently corrupting the
+    /// leaf flag.
+    pub fn from_forest(forest: &Forest) -> Result<Self> {
+        Ok(Self {
             trees: forest
                 .trees
                 .iter()
                 .map(|t| PackedTree::from_tree(t, forest.n_classes))
-                .collect(),
+                .collect::<Result<Vec<_>>>()?,
             n_classes: forest.n_classes,
             n_features: forest.n_features,
+        })
+    }
+
+    pub(super) fn from_parts(
+        trees: Vec<PackedTree>,
+        n_classes: usize,
+        n_features: usize,
+    ) -> Self {
+        Self {
+            trees,
+            n_classes,
+            n_features,
         }
     }
 
-    /// Average posterior for one dense row.
+    /// Unpack into a pointer-based [`Forest`].
+    pub fn to_forest(&self) -> Forest {
+        Forest::new(
+            self.trees.iter().map(|t| t.to_tree(self.n_classes)).collect(),
+            self.n_classes,
+            self.n_features,
+        )
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Average posterior for one dense row (the row-at-a-time baseline the
+    /// batched path is benchmarked against).
     pub fn predict_proba_row(&self, row: &[f32], out: &mut Vec<f32>) {
         out.clear();
         out.resize(self.n_classes, 0.0);
@@ -162,30 +237,80 @@ impl PackedForest {
         }
     }
 
-    /// Batched prediction over row-major samples (`rows.len() = n·d`).
-    /// Iterates tree-major so each tree's arrays stay cache-resident across
-    /// the whole batch (the forest-packing access order).
-    pub fn predict_batch(&self, rows: &[f32], n: usize) -> Vec<u16> {
+    /// Average posteriors for row-major samples into `out`
+    /// (`n × n_classes`), cache-blocked: trees iterate within a
+    /// [`PRED_BLOCK`]-row block, blocks iterate outermost, so neither the
+    /// rows nor the accumulator are re-streamed from memory once per tree.
+    pub fn predict_proba_batch_into(&self, rows: &[f32], out: &mut [f32]) {
         let d = self.n_features;
-        assert_eq!(rows.len(), n * d);
-        let mut acc = vec![0f32; n * self.n_classes];
-        for tree in &self.trees {
-            for (s, row) in rows.chunks_exact(d).enumerate() {
-                let p = tree.predict_row(row, self.n_classes);
-                let a = &mut acc[s * self.n_classes..(s + 1) * self.n_classes];
-                for (o, &x) in a.iter_mut().zip(p) {
-                    *o += x;
+        let c = self.n_classes;
+        assert_eq!(rows.len() % d, 0);
+        let n = rows.len() / d;
+        assert_eq!(out.len(), n * c);
+        out.fill(0.0);
+        let inv = 1.0 / self.trees.len() as f32;
+        for (rblock, oblock) in rows
+            .chunks(PRED_BLOCK * d)
+            .zip(out.chunks_mut(PRED_BLOCK * c))
+        {
+            for tree in &self.trees {
+                for (row, o) in rblock.chunks_exact(d).zip(oblock.chunks_exact_mut(c)) {
+                    let p = tree.predict_row(row, c);
+                    for (acc, &x) in o.iter_mut().zip(p) {
+                        *acc += x;
+                    }
                 }
             }
+            for o in oblock.iter_mut() {
+                *o *= inv;
+            }
         }
-        acc.chunks_exact(self.n_classes)
-            .map(|p| {
-                p.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map_or(0, |(i, _)| i as u16)
-            })
+    }
+
+    /// Average posteriors for row-major samples (`rows.len() = n·d`).
+    pub fn predict_proba_batch(&self, rows: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(rows.len(), n * self.n_features);
+        let mut out = vec![0f32; n * self.n_classes];
+        self.predict_proba_batch_into(rows, &mut out);
+        out
+    }
+
+    /// Batched class prediction over row-major samples (`rows.len() = n·d`).
+    pub fn predict_batch(&self, rows: &[f32], n: usize) -> Vec<u16> {
+        self.predict_proba_batch(rows, n)
+            .chunks_exact(self.n_classes)
+            .map(argmax)
             .collect()
+    }
+
+    /// Multi-threaded batched prediction: the batch is sharded into
+    /// contiguous row ranges, one scoped thread per shard, each shard
+    /// running the cache-blocked path. Shards write disjoint output slices
+    /// so no synchronization is needed on the hot path.
+    pub fn predict_batch_parallel(&self, rows: &[f32], n: usize, n_threads: usize) -> Vec<u16> {
+        let d = self.n_features;
+        let c = self.n_classes;
+        assert_eq!(rows.len(), n * d);
+        let n_threads = n_threads.max(1);
+        if n_threads == 1 || n < 2 * PRED_BLOCK {
+            return self.predict_batch(rows, n);
+        }
+        let per = n.div_ceil(n_threads);
+        let mut out = vec![0u16; n];
+        std::thread::scope(|scope| {
+            for (shard_rows, shard_out) in
+                rows.chunks(per * d).zip(out.chunks_mut(per))
+            {
+                scope.spawn(move || {
+                    let mut proba = vec![0f32; shard_out.len() * c];
+                    self.predict_proba_batch_into(shard_rows, &mut proba);
+                    for (o, p) in shard_out.iter_mut().zip(proba.chunks_exact(c)) {
+                        *o = argmax(p);
+                    }
+                });
+            }
+        });
+        out
     }
 
     /// Total packed size in bytes (model-size reporting).
@@ -201,12 +326,22 @@ impl PackedForest {
     }
 }
 
+/// Argmax with `total_cmp` tie-breaking (first max wins) — the single
+/// class-selection rule shared by batch prediction and the serving loop.
+pub(crate) fn argmax(xs: &[f32]) -> u16 {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map_or(0, |(i, _)| i as u16)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ForestConfig;
     use crate::coordinator::train_forest;
     use crate::data::synth::trunk::TrunkConfig;
+    use crate::projection::Projection;
     use crate::rng::Pcg64;
 
     fn setup() -> (Forest, crate::data::Dataset) {
@@ -224,10 +359,21 @@ mod tests {
         (train_forest(&data, &cfg, 5), data)
     }
 
+    fn row_major(data: &crate::data::Dataset) -> Vec<f32> {
+        let (n, d) = (data.n_samples(), data.n_features());
+        let mut rows = vec![0f32; n * d];
+        let mut row = Vec::new();
+        for s in 0..n {
+            data.row(s, &mut row);
+            rows[s * d..(s + 1) * d].copy_from_slice(&row);
+        }
+        rows
+    }
+
     #[test]
     fn packed_matches_pointer_forest_exactly() {
         let (forest, data) = setup();
-        let packed = PackedForest::from_forest(&forest);
+        let packed = PackedForest::from_forest(&forest).unwrap();
         let mut row = Vec::new();
         let mut pa = Vec::new();
         let mut pb = Vec::new();
@@ -242,24 +388,110 @@ mod tests {
     #[test]
     fn batch_prediction_matches_rowwise() {
         let (forest, data) = setup();
-        let packed = PackedForest::from_forest(&forest);
+        let packed = PackedForest::from_forest(&forest).unwrap();
         let n = data.n_samples();
-        let d = data.n_features();
-        let mut rows = vec![0f32; n * d];
-        let mut row = Vec::new();
-        for s in 0..n {
-            data.row(s, &mut row);
-            rows[s * d..(s + 1) * d].copy_from_slice(&row);
-        }
+        let rows = row_major(&data);
         let batch = packed.predict_batch(&rows, n);
         let rowwise = forest.predict(&data);
         assert_eq!(batch, rowwise);
+        // Posterior batch agrees with the row-at-a-time path too.
+        let proba = packed.predict_proba_batch(&rows, n);
+        let mut row = Vec::new();
+        let mut p = Vec::new();
+        for s in 0..n {
+            data.row(s, &mut row);
+            packed.predict_proba_row(&row, &mut p);
+            assert_eq!(&proba[s * 2..(s + 1) * 2], &p[..], "sample {s}");
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial() {
+        let (forest, data) = setup();
+        let packed = PackedForest::from_forest(&forest).unwrap();
+        let n = data.n_samples();
+        let rows = row_major(&data);
+        let serial = packed.predict_batch(&rows, n);
+        for threads in [1, 2, 3, 7] {
+            assert_eq!(
+                packed.predict_batch_parallel(&rows, n, threads),
+                serial,
+                "{threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrips_tree_payloads() {
+        let (forest, data) = setup();
+        let packed = PackedForest::from_forest(&forest).unwrap();
+        let back = packed.to_forest();
+        assert_eq!(back.n_trees(), forest.n_trees());
+        // Leaf counts and sample tallies survive pack → unpack.
+        let count = |f: &Forest| -> (usize, u64) {
+            let mut leaves = 0usize;
+            let mut samples = 0u64;
+            for t in &f.trees {
+                for node in &t.nodes {
+                    if let Node::Leaf { n, .. } = node {
+                        leaves += 1;
+                        samples += *n as u64;
+                    }
+                }
+            }
+            (leaves, samples)
+        };
+        assert_eq!(count(&back), count(&forest));
+        assert_eq!(back.predict(&data), forest.predict(&data));
+        // Re-packing the unpacked forest reproduces identical arrays (the
+        // packed DFS order is a fixed point).
+        let repacked = PackedForest::from_forest(&back).unwrap();
+        for (a, b) in packed.trees.iter().zip(&repacked.trees) {
+            assert_eq!(a.terms, b.terms);
+            assert_eq!(a.posteriors, b.posteriors);
+            assert_eq!(a.nodes.len(), b.nodes.len());
+            for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!((x.off, x.meta, x.left), (y.off, y.meta, y.left));
+                assert_eq!(x.threshold.to_bits(), y.threshold.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_projection_is_rejected_not_corrupted() {
+        // A split with 2^16 terms would alias the term count into the leaf
+        // flag under the old unchecked packing; it must now error.
+        let terms: Vec<(u32, f32)> = (0..=MAX_TERMS as u32).map(|f| (f % 4, 1.0)).collect();
+        let tree = Tree {
+            nodes: vec![
+                Node::Split {
+                    projection: Projection { terms },
+                    threshold: 0.0,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf {
+                    posterior: vec![1.0, 0.0],
+                    majority: 0,
+                    n: 1,
+                },
+                Node::Leaf {
+                    posterior: vec![0.0, 1.0],
+                    majority: 1,
+                    n: 1,
+                },
+            ],
+            n_classes: 2,
+        };
+        let forest = Forest::new(vec![tree], 2, 4);
+        let err = PackedForest::from_forest(&forest).unwrap_err();
+        assert!(err.to_string().contains("terms"), "{err}");
     }
 
     #[test]
     fn packed_size_is_reported() {
         let (forest, _) = setup();
-        let packed = PackedForest::from_forest(&forest);
+        let packed = PackedForest::from_forest(&forest).unwrap();
         assert!(packed.nbytes() > 0);
     }
 }

@@ -1,6 +1,38 @@
-//! Forest model persistence.
+//! Forest model persistence (versioned, little-endian, serde-free).
 //!
-//! Compact little-endian binary format (the offline crate set has no serde):
+//! Two on-disk formats share the 8-byte magic prefix `SOFRSTnn`:
+//!
+//! ## v2 — `SOFRST02`, the serving format (written by [`save`])
+//!
+//! The payload *is* the [`PackedForest`] SoA layout, so loading a model for
+//! serving ([`load_packed`]) is a validated bulk read of three arrays per
+//! tree — no per-node tree rebuild, no per-node heap allocation:
+//!
+//! ```text
+//! offset 0   magic   b"SOFRST02"
+//!        8   u32     endianness mark 0x01020304 — the file is written
+//!                    little-endian; a reader that decodes this field as
+//!                    anything else is byte-swapped/corrupt and must reject
+//!       12   u32     n_classes
+//!       16   u32     n_features
+//!       20   u32     n_trees
+//!       24   directory: n_trees × 36 B entries
+//!            { u64 nodes_off, u64 terms_off, u64 post_off,
+//!              u32 n_nodes,   u32 n_terms,   u32 n_post }
+//!            — absolute byte offsets of each tree's three sections
+//!       ..   sections, per tree, back to back:
+//!            nodes:      n_nodes × 16 B { u32 off, u32 meta,
+//!                                         f32 threshold, u32 left }
+//!            terms:      n_terms × 8 B  { u32 feature, f32 weight }
+//!            posteriors: n_post  × 4 B  f32
+//! ```
+//!
+//! Node semantics are documented in [`super::predict`]; the file bytes and
+//! the in-memory packed arrays correspond field for field, which is what
+//! makes the save → load → save round trip bit-identical (enforced by
+//! `v2_roundtrip_is_byte_identical`).
+//!
+//! ## v1 — `SOFRST01`, the legacy tree-walk format (read-compatible)
 //!
 //! ```text
 //! magic "SOFRST01" | u32 n_classes | u32 n_features | u32 n_trees
@@ -11,22 +43,240 @@
 //!   leaf:  u16 n_classes, f32 posterior*, u16 majority, u32 n
 //! ```
 //!
-//! The format is versioned by the magic; loads validate every structural
-//! invariant (link bounds, posterior lengths) so a truncated or corrupt
-//! file errors instead of producing a silently-broken model.
+//! v1 files still load through every entry point; [`load_packed`] migrates
+//! them by packing after the tree-walk read, and `soforest migrate`
+//! rewrites them as v2 on disk.
+//!
+//! Both readers validate every structural invariant (endianness, section
+//! offsets, link bounds and DFS ordering, term/posterior ranges) so a
+//! truncated or corrupt file errors instead of producing a silently-broken
+//! model.
 
+use super::predict::{LEAF_BIT, MAX_TERMS, PackedNode, PackedTree};
 use super::tree::{Node, Tree};
-use super::Forest;
+use super::{Forest, PackedForest};
 use crate::projection::Projection;
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"SOFRST01";
+const MAGIC_V1: &[u8; 8] = b"SOFRST01";
+const MAGIC_V2: &[u8; 8] = b"SOFRST02";
+/// Written little-endian; decodes to this value only when reader and file
+/// agree on byte order.
+const ENDIAN_MARK: u32 = 0x0102_0304;
+/// Fixed header bytes before the tree directory.
+const V2_HEADER: u64 = 8 + 4 + 4 + 4 + 4;
+/// Directory entry: three u64 offsets + three u32 counts.
+const V2_DIR_ENTRY: u64 = 8 * 3 + 4 * 3;
+const NODE_BYTES: usize = 16;
+const TERM_BYTES: usize = 8;
 
-/// Serialize a forest to a writer.
-pub fn write_forest(forest: &Forest, w: &mut impl Write) -> Result<()> {
-    w.write_all(MAGIC)?;
+// ---------------------------------------------------------------- v2 write
+
+/// Serialize a packed forest in the v2 layout.
+pub fn write_packed(packed: &PackedForest, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC_V2)?;
+    write_u32(w, ENDIAN_MARK)?;
+    write_u32(w, packed.n_classes as u32)?;
+    write_u32(w, packed.n_features as u32)?;
+    write_u32(w, packed.n_trees() as u32)?;
+    // Directory: offsets are fully determined by the section sizes.
+    let mut cursor = V2_HEADER + V2_DIR_ENTRY * packed.n_trees() as u64;
+    for tree in &packed.trees {
+        let nodes_off = cursor;
+        let terms_off = nodes_off + (tree.nodes.len() * NODE_BYTES) as u64;
+        let post_off = terms_off + (tree.terms.len() * TERM_BYTES) as u64;
+        cursor = post_off + (tree.posteriors.len() * 4) as u64;
+        write_u64(w, nodes_off)?;
+        write_u64(w, terms_off)?;
+        write_u64(w, post_off)?;
+        write_u32(w, tree.nodes.len() as u32)?;
+        write_u32(w, tree.terms.len() as u32)?;
+        write_u32(w, tree.posteriors.len() as u32)?;
+    }
+    for tree in &packed.trees {
+        for node in &tree.nodes {
+            write_u32(w, node.off)?;
+            write_u32(w, node.meta)?;
+            write_f32(w, node.threshold)?;
+            write_u32(w, node.left)?;
+        }
+        for &(f, wt) in &tree.terms {
+            write_u32(w, f)?;
+            write_f32(w, wt)?;
+        }
+        for &p in &tree.posteriors {
+            write_f32(w, p)?;
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- v2 read
+
+struct DirEntry {
+    nodes_off: u64,
+    terms_off: u64,
+    post_off: u64,
+    n_nodes: usize,
+    n_terms: usize,
+    n_post: usize,
+}
+
+/// Read the v2 body (after the magic has been consumed and verified).
+fn read_packed_v2(r: &mut impl Read) -> Result<PackedForest> {
+    let mark = read_u32(r)?;
+    if mark != ENDIAN_MARK {
+        bail!("endianness mark {mark:#010x} != {ENDIAN_MARK:#010x} (byte-swapped or corrupt file)");
+    }
+    let n_classes = read_u32(r)? as usize;
+    let n_features = read_u32(r)? as usize;
+    let n_trees = read_u32(r)? as usize;
+    if n_classes < 2 || n_features == 0 || n_trees == 0 || n_trees > 1_000_000 {
+        bail!("implausible header: {n_classes} classes, {n_features} features, {n_trees} trees");
+    }
+    let mut dir = Vec::with_capacity(n_trees);
+    let mut expected = V2_HEADER + V2_DIR_ENTRY * n_trees as u64;
+    for ti in 0..n_trees {
+        let e = DirEntry {
+            nodes_off: read_u64(r)?,
+            terms_off: read_u64(r)?,
+            post_off: read_u64(r)?,
+            n_nodes: read_u32(r)? as usize,
+            n_terms: read_u32(r)? as usize,
+            n_post: read_u32(r)? as usize,
+        };
+        if e.n_nodes == 0 || e.n_nodes > 500_000_000 {
+            bail!("tree {ti}: implausible node count {}", e.n_nodes);
+        }
+        // Bound the other sections too, so a crafted directory cannot force
+        // a multi-gigabyte zero-fill before `read_exact` gets to fail.
+        if e.n_terms > 500_000_000 || e.n_post > 500_000_000 {
+            bail!(
+                "tree {ti}: implausible section sizes ({} terms, {} posteriors)",
+                e.n_terms,
+                e.n_post
+            );
+        }
+        // Sections must tile the file exactly in directory order.
+        if e.nodes_off != expected
+            || e.terms_off != e.nodes_off + (e.n_nodes * NODE_BYTES) as u64
+            || e.post_off != e.terms_off + (e.n_terms * TERM_BYTES) as u64
+        {
+            bail!("tree {ti}: section offsets inconsistent with section sizes");
+        }
+        if e.n_post % n_classes != 0 {
+            bail!(
+                "tree {ti}: posterior section {} not a multiple of {n_classes} classes",
+                e.n_post
+            );
+        }
+        expected = e.post_off + (e.n_post * 4) as u64;
+        dir.push(e);
+    }
+    let mut trees = Vec::with_capacity(n_trees);
+    let mut buf: Vec<u8> = Vec::new();
+    for (ti, e) in dir.iter().enumerate() {
+        // Bulk-read each section, then decode — the only per-node work is
+        // validation, not tree reconstruction.
+        read_section(r, &mut buf, e.n_nodes * NODE_BYTES)
+            .with_context(|| format!("tree {ti}: nodes section"))?;
+        let nodes: Vec<PackedNode> = buf
+            .chunks_exact(NODE_BYTES)
+            .map(|c| PackedNode {
+                off: le_u32(&c[0..4]),
+                meta: le_u32(&c[4..8]),
+                threshold: f32::from_le_bytes(c[8..12].try_into().unwrap()),
+                left: le_u32(&c[12..16]),
+            })
+            .collect();
+        read_section(r, &mut buf, e.n_terms * TERM_BYTES)
+            .with_context(|| format!("tree {ti}: terms section"))?;
+        let terms: Vec<(u32, f32)> = buf
+            .chunks_exact(TERM_BYTES)
+            .map(|c| {
+                (
+                    le_u32(&c[0..4]),
+                    f32::from_le_bytes(c[4..8].try_into().unwrap()),
+                )
+            })
+            .collect();
+        read_section(r, &mut buf, e.n_post * 4)
+            .with_context(|| format!("tree {ti}: posterior section"))?;
+        let posteriors: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        validate_packed_tree(ti, &nodes, &terms, &posteriors, n_classes, n_features)?;
+        trees.push(PackedTree {
+            nodes,
+            terms,
+            posteriors,
+        });
+    }
+    Ok(PackedForest::from_parts(trees, n_classes, n_features))
+}
+
+/// Structural validation of one packed tree: every traversal the serving
+/// path can take stays in bounds and terminates.
+fn validate_packed_tree(
+    ti: usize,
+    nodes: &[PackedNode],
+    terms: &[(u32, f32)],
+    posteriors: &[f32],
+    n_classes: usize,
+    n_features: usize,
+) -> Result<()> {
+    for (ni, node) in nodes.iter().enumerate() {
+        if node.meta & LEAF_BIT != 0 {
+            let off = node.off as usize;
+            if off + n_classes > posteriors.len() {
+                bail!("tree {ti} node {ni}: posterior offset out of range");
+            }
+            if (node.meta & 0xFFFF) as usize >= n_classes {
+                bail!("tree {ti} node {ni}: majority class out of range");
+            }
+        } else {
+            let n_terms = (node.meta & 0xFFFF) as usize;
+            let off = node.off as usize;
+            if n_terms > MAX_TERMS || off + n_terms > terms.len() {
+                bail!("tree {ti} node {ni}: term range out of bounds");
+            }
+            // Children are allocated after their parent by the packing DFS;
+            // requiring forward links makes any traversal provably finite.
+            let left = node.left as usize;
+            if left <= ni || left + 1 >= nodes.len() {
+                bail!("tree {ti} node {ni}: child link out of range");
+            }
+            for &(f, _) in &terms[off..off + n_terms] {
+                if f as usize >= n_features {
+                    bail!("tree {ti} node {ni}: feature {f} out of range");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_section(r: &mut impl Read, buf: &mut Vec<u8>, len: usize) -> Result<()> {
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(())
+}
+
+#[inline]
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
+// ---------------------------------------------------------------- v1 write
+
+/// Serialize a forest in the legacy v1 tree-walk layout (compat tooling and
+/// tests; new models are written as v2 by [`save`]).
+pub fn write_forest_v1(forest: &Forest, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC_V1)?;
     write_u32(w, forest.n_classes as u32)?;
     write_u32(w, forest.n_features as u32)?;
     write_u32(w, forest.trees.len() as u32)?;
@@ -40,6 +290,12 @@ pub fn write_forest(forest: &Forest, w: &mut impl Write) -> Result<()> {
                     left,
                     right,
                 } => {
+                    if projection.terms.len() > MAX_TERMS {
+                        bail!(
+                            "projection with {} terms exceeds the format limit of {MAX_TERMS}",
+                            projection.terms.len()
+                        );
+                    }
                     w.write_all(&[0u8])?;
                     write_u16(w, projection.terms.len() as u16)?;
                     for &(f, wt) in &projection.terms {
@@ -69,18 +325,15 @@ pub fn write_forest(forest: &Forest, w: &mut impl Write) -> Result<()> {
     Ok(())
 }
 
-/// Deserialize a forest from a reader, validating structure.
-pub fn read_forest(r: &mut impl Read) -> Result<Forest> {
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic).context("read magic")?;
-    if &magic != MAGIC {
-        bail!("not a soforest model (bad magic {magic:?})");
-    }
+// ----------------------------------------------------------------- v1 read
+
+/// Read the v1 body (after the magic has been consumed and verified).
+fn read_forest_v1(r: &mut impl Read) -> Result<Forest> {
     let n_classes = read_u32(r)? as usize;
     let n_features = read_u32(r)? as usize;
     let n_trees = read_u32(r)? as usize;
-    if n_classes < 2 || n_trees == 0 || n_trees > 1_000_000 {
-        bail!("implausible header: {n_classes} classes, {n_trees} trees");
+    if n_classes < 2 || n_features == 0 || n_trees == 0 || n_trees > 1_000_000 {
+        bail!("implausible header: {n_classes} classes, {n_features} features, {n_trees} trees");
     }
     let mut trees = Vec::with_capacity(n_trees);
     for ti in 0..n_trees {
@@ -144,21 +397,64 @@ pub fn read_forest(r: &mut impl Read) -> Result<Forest> {
     Ok(Forest::new(trees, n_classes, n_features))
 }
 
-/// Save to a file path.
+// ------------------------------------------------------------ entry points
+
+/// Deserialize a forest from a reader, auto-detecting the format version.
+pub fn read_forest(r: &mut impl Read) -> Result<Forest> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("read magic")?;
+    match &magic {
+        m if m == MAGIC_V1 => read_forest_v1(r),
+        m if m == MAGIC_V2 => Ok(read_packed_v2(r)?.to_forest()),
+        _ => bail!("not a soforest model (bad magic {magic:?})"),
+    }
+}
+
+/// Deserialize a servable [`PackedForest`], auto-detecting the version.
+/// v2 files materialize directly from the section arrays; v1 files take
+/// the tree-walk reader and are packed afterwards (the migration path).
+pub fn read_packed(r: &mut impl Read) -> Result<PackedForest> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("read magic")?;
+    match &magic {
+        m if m == MAGIC_V2 => read_packed_v2(r),
+        m if m == MAGIC_V1 => PackedForest::from_forest(&read_forest_v1(r)?),
+        _ => bail!("not a soforest model (bad magic {magic:?})"),
+    }
+}
+
+/// Save a forest to a file path in the v2 serving format.
 pub fn save(forest: &Forest, path: &Path) -> Result<()> {
+    save_packed(&PackedForest::from_forest(forest)?, path)
+}
+
+/// Save an already-packed forest to a file path (v2).
+pub fn save_packed(packed: &PackedForest, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    write_forest(forest, &mut w)?;
+    write_packed(packed, &mut w)?;
     w.flush()?;
     Ok(())
 }
 
-/// Load from a file path.
+/// Load a pointer-based forest from a file path (v1 or v2).
 pub fn load(path: &Path) -> Result<Forest> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     read_forest(&mut BufReader::new(f))
 }
 
+/// Load a servable packed forest from a file path (v1 or v2).
+pub fn load_packed(path: &Path) -> Result<PackedForest> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    read_packed(&mut BufReader::new(f))
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
@@ -170,6 +466,11 @@ fn write_u16(w: &mut impl Write, v: u16) -> Result<()> {
 fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
+}
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
@@ -222,40 +523,118 @@ mod tests {
         let a = forest.predict(&data);
         let b = loaded.predict(&data);
         assert_eq!(a, b);
+        // The packed loader serves identical predictions without the
+        // tree-walk rebuild.
+        let packed = load_packed(&path).unwrap();
+        let mut rows = vec![0f32; data.n_samples() * data.n_features()];
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            rows[s * data.n_features()..(s + 1) * data.n_features()].copy_from_slice(&row);
+        }
+        assert_eq!(packed.predict_batch(&rows, data.n_samples()), a);
         std::fs::remove_file(path).ok();
     }
 
     #[test]
-    fn rejects_bad_magic_and_truncation() {
+    fn v2_roundtrip_is_byte_identical() {
+        let (forest, _) = forest_and_data();
+        let packed = PackedForest::from_forest(&forest).unwrap();
+        let mut first = Vec::new();
+        write_packed(&packed, &mut first).unwrap();
+        let reloaded = read_packed(&mut first.as_slice()).unwrap();
+        let mut second = Vec::new();
+        write_packed(&reloaded, &mut second).unwrap();
+        assert_eq!(first, second, "save → load → save must be bit-identical");
+        // And so must a third generation routed through the Forest view.
+        let mut third = Vec::new();
+        write_packed(
+            &PackedForest::from_forest(&reloaded.to_forest()).unwrap(),
+            &mut third,
+        )
+        .unwrap();
+        assert_eq!(first, third);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let (forest, data) = forest_and_data();
+        let mut v1 = Vec::new();
+        write_forest_v1(&forest, &mut v1).unwrap();
+        assert_eq!(&v1[..8], MAGIC_V1);
+        // Tree-walk loader.
+        let loaded = read_forest(&mut v1.as_slice()).unwrap();
+        assert_eq!(loaded.predict(&data), forest.predict(&data));
+        // Migration loader: v1 bytes → servable packed forest.
+        let packed = read_packed(&mut v1.as_slice()).unwrap();
+        let mut row = Vec::new();
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        for s in (0..data.n_samples()).step_by(7) {
+            data.row(s, &mut row);
+            forest.predict_proba_row(&row, &mut pa);
+            packed.predict_proba_row(&row, &mut pb);
+            assert_eq!(pa, pb, "sample {s}");
+        }
+        // v1 → v2 migration writes a byte-stable v2 file.
+        let mut v2 = Vec::new();
+        write_packed(&packed, &mut v2).unwrap();
+        assert_eq!(&v2[..8], MAGIC_V2);
+        let mut again = Vec::new();
+        write_packed(&read_packed(&mut v2.as_slice()).unwrap(), &mut again).unwrap();
+        assert_eq!(v2, again);
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_endianness() {
         let (forest, _) = forest_and_data();
         let mut buf = Vec::new();
-        write_forest(&forest, &mut buf).unwrap();
+        write_packed(&PackedForest::from_forest(&forest).unwrap(), &mut buf).unwrap();
         // Bad magic.
         let mut bad = buf.clone();
         bad[0] = b'X';
         assert!(read_forest(&mut bad.as_slice()).is_err());
+        assert!(read_packed(&mut bad.as_slice()).is_err());
+        // Unknown future version.
+        let mut v9 = buf.clone();
+        v9[7] = b'9';
+        assert!(read_packed(&mut v9.as_slice()).is_err());
+        // Byte-swapped endianness mark.
+        let mut swapped = buf.clone();
+        swapped[8..12].reverse();
+        let err = read_packed(&mut swapped.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("endian"), "{err}");
         // Truncations at various points must error, not panic.
-        for cut in [4usize, 12, 20, buf.len() / 2, buf.len() - 3] {
+        for cut in [4usize, 10, 20, 40, buf.len() / 2, buf.len() - 3] {
             assert!(
-                read_forest(&mut buf[..cut].to_vec().as_slice()).is_err(),
+                read_packed(&mut buf[..cut].to_vec().as_slice()).is_err(),
                 "cut at {cut} did not error"
+            );
+        }
+        // v1 truncations as well.
+        let mut v1 = Vec::new();
+        write_forest_v1(&forest, &mut v1).unwrap();
+        for cut in [4usize, 12, 20, v1.len() / 2, v1.len() - 3] {
+            assert!(
+                read_forest(&mut v1[..cut].to_vec().as_slice()).is_err(),
+                "v1 cut at {cut} did not error"
             );
         }
     }
 
     #[test]
-    fn rejects_corrupt_links() {
+    fn rejects_corrupt_bytes_without_panicking() {
         let (forest, _) = forest_and_data();
         let mut buf = Vec::new();
-        write_forest(&forest, &mut buf).unwrap();
+        write_packed(&PackedForest::from_forest(&forest).unwrap(), &mut buf).unwrap();
         // Flip bytes through the body; must never panic, at most load a
         // forest that fails validation.
         let mut rng = Pcg64::new(9);
-        for _ in 0..200 {
+        for _ in 0..300 {
             let mut corrupt = buf.clone();
-            let i = 20 + rng.index(corrupt.len() - 20);
+            let i = 12 + rng.index(corrupt.len() - 12);
             corrupt[i] ^= 0xFF;
-            let _ = read_forest(&mut corrupt.as_slice()); // no panic
+            let _ = read_packed(&mut corrupt.as_slice()); // no panic
         }
     }
 }

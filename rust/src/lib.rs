@@ -45,6 +45,7 @@ pub mod might;
 pub mod projection;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod split;
 
 /// Convenience re-exports for examples and downstream users.
@@ -52,7 +53,7 @@ pub mod prelude {
     pub use crate::config::ForestConfig;
     pub use crate::coordinator::train_forest;
     pub use crate::data::{ActiveSet, Dataset};
-    pub use crate::forest::Forest;
+    pub use crate::forest::{Forest, PackedForest};
     pub use crate::rng::Pcg64;
     pub use crate::split::SplitStrategy;
 }

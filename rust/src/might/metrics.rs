@@ -34,6 +34,14 @@ pub fn roc_auc(pairs: &[(f32, u16)]) -> f64 {
 /// Sensitivity (true-positive rate) at the score threshold achieving at
 /// least `specificity` on the negatives — S@98 is the cancer-screening
 /// headline statistic of the MIGHT papers.
+///
+/// The decision rule is `score > t ⇒ positive`, so the achieved
+/// specificity at threshold `t` is `#{neg ≤ t} / n_neg`. Thresholds can
+/// only sit between *tie groups* of negative scores: we pick the smallest
+/// negative score `t` whose whole tie group fits under the threshold with
+/// `#{neg ≤ t} ≥ ⌈specificity · n_neg⌉`. Landing inside a tie group would
+/// silently count part of the group as `< t` and overstate specificity
+/// while positives are still screened with strict `>`.
 pub fn sensitivity_at_specificity(pairs: &[(f32, u16)], specificity: f64) -> f64 {
     let mut negs: Vec<f32> = pairs
         .iter()
@@ -44,9 +52,6 @@ pub fn sensitivity_at_specificity(pairs: &[(f32, u16)], specificity: f64) -> f64
         return f64::NAN;
     }
     negs.sort_by(f32::total_cmp);
-    // Threshold: the smallest score t such that P(neg < t) >= specificity.
-    let k = ((specificity * negs.len() as f64).ceil() as usize).min(negs.len() - 1);
-    let threshold = negs[k];
     let pos: Vec<f32> = pairs
         .iter()
         .filter(|(_, l)| *l == 1)
@@ -55,10 +60,26 @@ pub fn sensitivity_at_specificity(pairs: &[(f32, u16)], specificity: f64) -> f64
     if pos.is_empty() {
         return f64::NAN;
     }
+    let required = (specificity * negs.len() as f64).ceil() as usize;
+    if required == 0 {
+        // Specificity 0: everything may be called positive.
+        return 1.0;
+    }
+    // Smallest index giving `required` negatives at or below the threshold,
+    // then extend to the end of its tie group — `#{neg <= t}` always counts
+    // whole tie groups, so the threshold must too.
+    let mut j = required.min(negs.len()) - 1;
+    while j + 1 < negs.len() && negs[j + 1] == negs[j] {
+        j += 1;
+    }
+    let threshold = negs[j];
+    debug_assert!(j + 1 >= required, "tie-group threshold lost specificity");
     pos.iter().filter(|&&s| s > threshold).count() as f64 / pos.len() as f64
 }
 
-/// Coefficient of variation (σ/μ) of replicate statistics.
+/// Coefficient of variation (σ/|μ|) of replicate statistics. The standard
+/// definition divides by the *magnitude* of the mean — dividing by a signed
+/// mean would report a negative dispersion for negative-valued statistics.
 pub fn coefficient_of_variation(values: &[f64]) -> f64 {
     let n = values.len();
     if n < 2 {
@@ -69,7 +90,7 @@ pub fn coefficient_of_variation(values: &[f64]) -> f64 {
         return f64::NAN;
     }
     let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
-    var.sqrt() / mean
+    var.sqrt() / mean.abs()
 }
 
 /// Plain accuracy of hard predictions.
@@ -130,6 +151,88 @@ mod tests {
         }
         let s = sensitivity_at_specificity(&pairs, 0.98);
         assert!(s < 0.05, "S@98 = {s}");
+    }
+
+    /// Brute-force reference: max sensitivity over all thresholds whose
+    /// achieved specificity `#{neg <= t} / n_neg` meets the request.
+    fn s_at_s_reference(pairs: &[(f32, u16)], spec: f64) -> f64 {
+        let negs: Vec<f32> = pairs.iter().filter(|(_, l)| *l == 0).map(|(s, _)| *s).collect();
+        let pos: Vec<f32> = pairs.iter().filter(|(_, l)| *l == 1).map(|(s, _)| *s).collect();
+        let mut best = 0.0f64;
+        // Candidate thresholds: every distinct negative score (and -inf when
+        // spec == 0, handled by the required == 0 early return).
+        for &t in &negs {
+            let achieved = negs.iter().filter(|&&x| x <= t).count() as f64 / negs.len() as f64;
+            if achieved + 1e-12 >= spec {
+                let sens =
+                    pos.iter().filter(|&&s| s > t).count() as f64 / pos.len() as f64;
+                best = best.max(sens);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn s_at_s_tie_groups_never_overstate_specificity() {
+        // Heavy ties: 10 negatives all at 1.0, 10 at 2.0, positives at 1.5
+        // and 2.5. At spec 0.95 the threshold cannot sit inside the 2.0 tie
+        // group: it must be 2.0 itself (specificity 1.0), so only the 2.5
+        // positives count — sensitivity 0.5, not 1.0.
+        let mut pairs: Vec<(f32, u16)> = Vec::new();
+        for _ in 0..10 {
+            pairs.push((1.0, 0));
+            pairs.push((2.0, 0));
+            pairs.push((1.5, 1));
+            pairs.push((2.5, 1));
+        }
+        let s = sensitivity_at_specificity(&pairs, 0.95);
+        assert!((s - 0.5).abs() < 1e-12, "S@95 = {s}");
+        // The naive index threshold (negs[k] with k = ceil(0.55 * 20) = 11,
+        // i.e. inside the 2.0 tie group but counting `< t` as screened)
+        // would claim sensitivity 1.0 at spec 0.55; tie-group handling keeps
+        // the whole group below the threshold.
+        let s = sensitivity_at_specificity(&pairs, 0.55);
+        assert!((s - 0.5).abs() < 1e-12, "S@55 = {s}");
+        // Exactly half the negatives fit under a 1.0 threshold.
+        let s = sensitivity_at_specificity(&pairs, 0.5);
+        assert!((s - 1.0).abs() < 1e-12, "S@50 = {s}");
+    }
+
+    #[test]
+    fn s_at_s_matches_bruteforce_on_random_tied_data() {
+        let mut rng = crate::rng::Pcg64::new(17);
+        for trial in 0..50 {
+            let n = 20 + rng.index(60);
+            let pairs: Vec<(f32, u16)> = (0..n)
+                .map(|_| {
+                    // Scores on a coarse grid so ties are common.
+                    let s = rng.index(8) as f32 / 4.0;
+                    let l = rng.bernoulli(0.4) as u16;
+                    (s, l)
+                })
+                .collect();
+            let n_pos = pairs.iter().filter(|(_, l)| *l == 1).count();
+            if n_pos == 0 || n_pos == pairs.len() {
+                continue;
+            }
+            for spec in [0.5, 0.8, 0.98, 1.0] {
+                let got = sensitivity_at_specificity(&pairs, spec);
+                let want = s_at_s_reference(&pairs, spec);
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "trial {trial} spec {spec}: got {got}, reference {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cov_uses_mean_magnitude() {
+        // Negative-valued replicate statistics must not yield a negative CV.
+        let cov = coefficient_of_variation(&[-90.0, -100.0, -110.0]);
+        assert!((cov - 0.1).abs() < 0.01, "{cov}");
+        let pos = coefficient_of_variation(&[90.0, 100.0, 110.0]);
+        assert!((cov - pos).abs() < 1e-12, "sign of mean changed CV: {cov} vs {pos}");
     }
 
     #[test]

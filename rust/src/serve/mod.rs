@@ -1,0 +1,754 @@
+//! Production serving: request batching and batched scoring loops.
+//!
+//! Two workloads share the packed-forest hot path ([`PackedForest`]):
+//!
+//! * **`soforest serve`** — an online loop reading line-delimited requests
+//!   (one CSV feature row per line) from stdin or a TCP socket. A request
+//!   batcher coalesces up to `max_batch` rows or `max_wait`, whichever
+//!   comes first, scores the batch in one cache-blocked traversal and
+//!   writes one response line per request, in order. Malformed lines get
+//!   an `error: ...` response so the 1:1 request/response correspondence
+//!   never breaks.
+//! * **`soforest score`** — offline throughput scoring: stream a CSV in
+//!   fixed-size row blocks through the coordinator's work-stealing pool
+//!   ([`coordinator::run_pool`]), recording per-block latencies.
+//!
+//! Everything is std-only (threads, mpsc, TcpListener) — the same
+//! zero-dependency discipline as the rest of the crate.
+
+use crate::coordinator;
+use crate::forest::predict::argmax;
+use crate::forest::PackedForest;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Knobs of the online serving loop.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Score a batch as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// ... or as soon as the oldest pending request has waited this long.
+    pub max_wait: Duration,
+    /// Threads used to score one batch (1 = score inline; batching already
+    /// amortizes the forest traversal, so >1 only pays off for big batches).
+    pub n_threads: usize,
+    /// Respond with the full posterior instead of just the class index.
+    pub proba: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            n_threads: 1,
+            proba: false,
+        }
+    }
+}
+
+/// Latency samples kept per session — a ring over the most recent
+/// requests, so a run-forever server's memory stays bounded.
+const LATENCY_SAMPLE_CAP: usize = 65_536;
+
+/// Counters and latencies from one serving session.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Lines received (scored rows + malformed requests).
+    pub requests: usize,
+    /// Batches scored.
+    pub batches: usize,
+    /// Malformed requests answered with an error line.
+    pub errors: usize,
+    /// Per-request latency (enqueue → response written), microseconds.
+    /// Bounded sample: the most recent [`LATENCY_SAMPLE_CAP`] requests.
+    pub latencies_us: Vec<f64>,
+}
+
+impl ServeStats {
+    /// Record one request latency, overwriting the oldest sample once the
+    /// ring is full.
+    fn record_latency(&mut self, us: f64) {
+        if self.latencies_us.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.requests % LATENCY_SAMPLE_CAP] = us;
+        }
+    }
+
+    fn merge(&mut self, other: ServeStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.errors += other.errors;
+        self.latencies_us.extend(other.latencies_us);
+        // Keep the most recent samples (the tail), matching the ring's
+        // "latest requests" contract.
+        if self.latencies_us.len() > LATENCY_SAMPLE_CAP {
+            let excess = self.latencies_us.len() - LATENCY_SAMPLE_CAP;
+            self.latencies_us.drain(..excess);
+        }
+    }
+
+    /// One-line human summary with latency percentiles.
+    pub fn summary(&self) -> String {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_by(f64::total_cmp);
+        format!(
+            "{} requests in {} batches ({:.1} rows/batch), {} errors; \
+             latency us: p50 {:.0} p95 {:.0} p99 {:.0} max {:.0}",
+            self.requests,
+            self.batches,
+            self.requests as f64 / self.batches.max(1) as f64,
+            self.errors,
+            percentile(&lat, 50.0),
+            percentile(&lat, 95.0),
+            percentile(&lat, 99.0),
+            lat.last().copied().unwrap_or(f64::NAN),
+        )
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (NaN when empty).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One pending request: the raw line and its arrival time.
+type Pending = (String, Instant);
+
+/// Serve line-delimited requests from `input`, writing one response line
+/// per request to `output`, until `input` reaches EOF. This is the whole
+/// per-connection (and stdin) loop: a reader thread feeds a bounded
+/// channel; the batcher drains it under the `max_batch`/`max_wait` policy.
+pub fn serve_lines<R, W>(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    input: R,
+    output: W,
+) -> Result<ServeStats>
+where
+    R: BufRead + Send,
+    W: Write,
+{
+    let mut stats = ServeStats::default();
+    let mut out = BufWriter::new(output);
+    let (tx, rx) = mpsc::sync_channel::<Pending>(cfg.max_batch.max(1) * 4);
+    std::thread::scope(|scope| -> Result<()> {
+        // Own the receiver inside the scope so any early return drops it,
+        // which unblocks a reader stuck in `send` on a full channel.
+        let rx = rx;
+        scope.spawn(move || {
+            for line in input.lines() {
+                let Ok(line) = line else { break };
+                if tx.send((line, Instant::now())).is_err() {
+                    break; // batcher gone
+                }
+            }
+            // tx drops here: EOF signal for the batcher.
+        });
+        let mut pending: Vec<Pending> = Vec::new();
+        loop {
+            // Block for the first request of the next batch...
+            let Ok(first) = rx.recv() else { break };
+            // ...then coalesce until the batch fills or the OLDEST request
+            // has waited max_wait — measured from its enqueue time, so time
+            // spent scoring the previous batch counts against the bound.
+            let deadline = first.1 + cfg.max_wait;
+            pending.push(first);
+            while pending.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(item) => pending.push(item),
+                    Err(_) => break, // timeout or EOF
+                }
+            }
+            flush_batch(forest, cfg, &mut pending, &mut out, &mut stats)?;
+        }
+        Ok(())
+    })?;
+    Ok(stats)
+}
+
+/// Score one pending batch and write responses in request order.
+fn flush_batch(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    pending: &mut Vec<Pending>,
+    out: &mut impl Write,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    let d = forest.n_features;
+    let c = forest.n_classes;
+    // Parse every line; valid rows go into one row-major buffer.
+    let mut rows: Vec<f32> = Vec::with_capacity(pending.len() * d);
+    let mut parsed: Vec<std::result::Result<(), String>> = Vec::with_capacity(pending.len());
+    for (line, _) in pending.iter() {
+        match parse_row(line, d, &mut rows) {
+            Ok(()) => parsed.push(Ok(())),
+            Err(e) => parsed.push(Err(e)),
+        }
+    }
+    let n = rows.len() / d;
+    let proba = if n > 0 {
+        if cfg.n_threads > 1 {
+            // Shard the batch across scoring threads (big-batch regime).
+            let mut p = vec![0f32; n * c];
+            let shard = n.div_ceil(cfg.n_threads).max(1);
+            std::thread::scope(|scope| {
+                for (rs, ps) in rows.chunks(shard * d).zip(p.chunks_mut(shard * c)) {
+                    scope.spawn(move || forest.predict_proba_batch_into(rs, ps));
+                }
+            });
+            p
+        } else {
+            forest.predict_proba_batch(&rows, n)
+        }
+    } else {
+        Vec::new()
+    };
+    // Responses, in request order.
+    let mut vi = 0usize;
+    for ((line, t0), ok) in pending.iter().zip(&parsed) {
+        match ok {
+            Ok(()) => {
+                let p = &proba[vi * c..(vi + 1) * c];
+                vi += 1;
+                let pred = argmax(p);
+                if cfg.proba {
+                    write!(out, "{pred}")?;
+                    for x in p {
+                        write!(out, ",{x:.6}")?;
+                    }
+                    writeln!(out)?;
+                } else {
+                    writeln!(out, "{pred}")?;
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                writeln!(out, "error: {e} (line {line:?})")?;
+            }
+        }
+        stats.record_latency(t0.elapsed().as_secs_f64() * 1e6);
+        stats.requests += 1;
+    }
+    out.flush()?;
+    stats.batches += 1;
+    pending.clear();
+    Ok(())
+}
+
+/// Parse one request line (`d` comma-separated floats) onto `rows`.
+/// On error `rows` is left unchanged.
+fn parse_row(line: &str, d: usize, rows: &mut Vec<f32>) -> std::result::Result<(), String> {
+    let start = rows.len();
+    for field in line.split(',') {
+        match field.trim().parse::<f32>() {
+            Ok(v) => rows.push(v),
+            Err(_) => {
+                rows.truncate(start);
+                return Err(format!("bad value {:?}", field.trim()));
+            }
+        }
+    }
+    let got = rows.len() - start;
+    if got != d {
+        rows.truncate(start);
+        return Err(format!("expected {d} features, got {got}"));
+    }
+    Ok(())
+}
+
+/// Serve stdin → stdout until EOF.
+pub fn serve_stdio(forest: &PackedForest, cfg: &ServeConfig) -> Result<ServeStats> {
+    // `StdinLock` is not `Send` (the reader runs on its own thread), so
+    // wrap the handle itself.
+    let input = std::io::BufReader::new(std::io::stdin());
+    let stdout = std::io::stdout();
+    serve_lines(forest, cfg, input, stdout.lock())
+}
+
+/// Serve TCP connections on `addr` (e.g. `127.0.0.1:7878`; port 0 binds an
+/// ephemeral port). Each connection runs the line protocol concurrently on
+/// its own scoped thread. `port_file`, when given, receives the bound
+/// address once listening — the readiness signal orchestration (and the
+/// e2e tests) wait on. `max_requests`, when given, stops accepting once
+/// that many requests have been answered and returns the aggregate stats —
+/// in that bounded mode idle connections are dropped after 1 s of read
+/// silence so shutdown cannot be wedged by a client that never hangs up.
+/// Without it the loop runs until the process is killed.
+pub fn serve_tcp(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    addr: &str,
+    port_file: Option<&Path>,
+    max_requests: Option<usize>,
+) -> Result<ServeStats> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    // Non-blocking accept so the loop can observe the max_requests bound
+    // (and, in a future PR, a shutdown signal) between connections.
+    listener.set_nonblocking(true)?;
+    if let Some(pf) = port_file {
+        std::fs::write(pf, local.to_string()).with_context(|| format!("write {pf:?}"))?;
+    }
+    eprintln!(
+        "[serve] listening on {local} (batch <= {}, wait <= {:?})",
+        cfg.max_batch, cfg.max_wait
+    );
+    let answered = AtomicUsize::new(0);
+    let total: Mutex<ServeStats> = Mutex::new(ServeStats::default());
+    std::thread::scope(|scope| -> Result<()> {
+        loop {
+            if let Some(maxr) = max_requests {
+                if answered.load(Ordering::Relaxed) >= maxr {
+                    break;
+                }
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    // Accepted sockets inherit the listener's non-blocking
+                    // mode on some platforms (Windows); serving needs
+                    // blocking reads.
+                    stream.set_nonblocking(false).ok();
+                    // In bounded mode the scope must be able to drain: an
+                    // idle connection would otherwise block its handler in
+                    // a read forever and wedge the shutdown. A read timeout
+                    // turns idleness into EOF for the line reader.
+                    if max_requests.is_some() {
+                        stream
+                            .set_read_timeout(Some(Duration::from_secs(1)))
+                            .ok();
+                    }
+                    let (answered, total, cfg) = (&answered, &total, cfg.clone());
+                    scope.spawn(move || {
+                        let reader = match stream.try_clone() {
+                            Ok(s) => std::io::BufReader::new(s),
+                            Err(e) => {
+                                eprintln!("[serve] {peer}: clone failed: {e}");
+                                return;
+                            }
+                        };
+                        match serve_lines(forest, &cfg, reader, stream) {
+                            Ok(stats) => {
+                                answered.fetch_add(stats.requests, Ordering::Relaxed);
+                                total.lock().unwrap().merge(stats);
+                            }
+                            Err(e) => eprintln!("[serve] {peer}: {e}"),
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+        Ok(())
+    })?;
+    Ok(total.into_inner().unwrap())
+}
+
+// ------------------------------------------------------- offline scoring
+
+/// One block of samples streamed out of a CSV (row-major values plus
+/// optional labels from a trailing column).
+struct Block {
+    n: usize,
+    rows: Vec<f32>,
+    labels: Option<Vec<u16>>,
+}
+
+/// Report from a `score` run.
+#[derive(Clone, Debug, Default)]
+pub struct ScoreReport {
+    pub rows: usize,
+    pub blocks: usize,
+    /// (correct, labeled) — present when the input had a label column.
+    pub correct: Option<(usize, usize)>,
+    pub wall_s: f64,
+    /// Per-block scoring latency, milliseconds, ascending.
+    pub block_ms: Vec<f64>,
+    /// Populated only when `keep_predictions` was requested.
+    pub predictions: Vec<u16>,
+}
+
+impl ScoreReport {
+    pub fn rows_per_s(&self) -> f64 {
+        self.rows as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Stream a CSV through the packed forest in `block_rows`-row blocks,
+/// scored by `n_threads` workers on the coordinator's work-stealing pool.
+/// Memory stays bounded by one *superblock* (`n_threads` blocks) of rows —
+/// plus the predictions, but only when `keep_predictions` asks for them
+/// (throughput runs over huge inputs should not).
+pub fn score_csv_stream(
+    forest: &PackedForest,
+    input: &mut impl BufRead,
+    block_rows: usize,
+    n_threads: usize,
+    keep_predictions: bool,
+) -> Result<ScoreReport> {
+    let d = forest.n_features;
+    let block_rows = block_rows.max(1);
+    let n_threads = n_threads.max(1);
+    let t0 = Instant::now();
+    let mut report = ScoreReport::default();
+    let mut lines = input.lines().enumerate();
+    let mut header_checked = false;
+    // Whether the file carries a label column — fixed by the first block so
+    // a column that vanishes at a block boundary cannot silently shrink the
+    // accuracy denominator.
+    let mut file_labeled: Option<bool> = None;
+    loop {
+        // ---- read one superblock (n_threads blocks) on this thread ----
+        let mut blocks: Vec<Block> = Vec::with_capacity(n_threads);
+        'fill: while blocks.len() < n_threads {
+            let mut block = Block {
+                n: 0,
+                rows: Vec::with_capacity(block_rows * d),
+                labels: None,
+            };
+            while block.n < block_rows {
+                let (lineno, line) = match lines.next() {
+                    Some((i, l)) => (i, l.context("read csv line")?),
+                    None => break,
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_csv_row(&line, d, &mut block) {
+                    Ok(()) => block.n += 1,
+                    Err(e) => {
+                        if !header_checked && lineno == 0 {
+                            // First line that fails numeric parsing is the
+                            // header — skip it.
+                            header_checked = true;
+                            continue;
+                        }
+                        bail!("line {}: {e}", lineno + 1);
+                    }
+                }
+                header_checked = true;
+            }
+            if block.n == 0 {
+                break 'fill;
+            }
+            let labeled = block.labels.is_some();
+            match file_labeled {
+                None => file_labeled = Some(labeled),
+                Some(prev) if prev != labeled => {
+                    bail!("label column {} mid-file", if prev { "vanished" } else { "appeared" })
+                }
+                Some(_) => {}
+            }
+            blocks.push(block);
+        }
+        if blocks.is_empty() {
+            break;
+        }
+        // ---- score the superblock on the pool ----
+        let results: Mutex<Vec<(usize, Vec<u16>, f64)>> = Mutex::new(Vec::new());
+        coordinator::run_pool(n_threads, blocks.len(), |queue| {
+            while let Some(i) = queue.claim() {
+                let b = &blocks[i];
+                let t = Instant::now();
+                let preds = forest.predict_batch(&b.rows, b.n);
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                results.lock().unwrap().push((i, preds, ms));
+            }
+        });
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|(i, _, _)| *i);
+        for ((i, preds, ms), block) in results.into_iter().zip(&blocks) {
+            debug_assert_eq!(preds.len(), blocks[i].n);
+            if let Some(labels) = &block.labels {
+                let (mut c, mut t) = report.correct.unwrap_or((0, 0));
+                c += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+                t += labels.len();
+                report.correct = Some((c, t));
+            }
+            report.rows += preds.len();
+            report.blocks += 1;
+            report.block_ms.push(ms);
+            if keep_predictions {
+                report.predictions.extend(preds);
+            }
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report.block_ms.sort_by(f64::total_cmp);
+    Ok(report)
+}
+
+/// Parse one CSV line with `d` features and an optional trailing label.
+fn parse_csv_row(line: &str, d: usize, block: &mut Block) -> std::result::Result<(), String> {
+    let start = block.rows.len();
+    let mut fields = 0usize;
+    let mut last = 0f32;
+    for field in line.split(',') {
+        match field.trim().parse::<f32>() {
+            Ok(v) => {
+                if fields >= 1 {
+                    block.rows.push(last);
+                }
+                last = v;
+                fields += 1;
+            }
+            Err(_) => {
+                block.rows.truncate(start);
+                return Err(format!("bad value {:?}", field.trim()));
+            }
+        }
+    }
+    if fields == d + 1 {
+        // Trailing label column.
+        let label = last;
+        if label < 0.0 || label > u16::MAX as f32 {
+            block.rows.truncate(start);
+            return Err(format!("bad label {label}"));
+        }
+        let labels = block.labels.get_or_insert_with(Vec::new);
+        if labels.len() != block.n {
+            block.rows.truncate(start);
+            return Err("label column appeared mid-file".to_string());
+        }
+        labels.push(label as u16);
+        Ok(())
+    } else if fields == d {
+        block.rows.push(last);
+        if block.labels.is_some() {
+            block.rows.truncate(start);
+            return Err("row without label in labeled file".to_string());
+        }
+        Ok(())
+    } else {
+        block.rows.truncate(start);
+        Err(format!("expected {d} or {} fields, got {fields}", d + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ForestConfig;
+    use crate::coordinator::train_forest;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+    use std::io::Cursor;
+
+    fn packed_and_data() -> (PackedForest, crate::data::Dataset) {
+        let data = TrunkConfig {
+            n_samples: 400,
+            n_features: 8,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(12));
+        let cfg = ForestConfig {
+            n_trees: 10,
+            n_threads: 1,
+            ..Default::default()
+        };
+        let forest = train_forest(&data, &cfg, 4);
+        (PackedForest::from_forest(&forest).unwrap(), data)
+    }
+
+    fn request_lines(data: &crate::data::Dataset, take: usize) -> String {
+        let mut s = String::new();
+        let mut row = Vec::new();
+        for i in 0..take {
+            data.row(i, &mut row);
+            let fields: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+            s.push_str(&fields.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    #[test]
+    fn serve_lines_answers_every_request_in_order() {
+        let (packed, data) = packed_and_data();
+        let input = request_lines(&data, 50);
+        let mut output = Vec::new();
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
+        assert_eq!(stats.requests, 50);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.batches >= 50 / 8, "batches {}", stats.batches);
+        assert_eq!(stats.latencies_us.len(), 50);
+        // Responses match the engine's own batch predictions, in order.
+        let mut rows = vec![0f32; 50 * data.n_features()];
+        let mut row = Vec::new();
+        for s in 0..50 {
+            data.row(s, &mut row);
+            rows[s * 8..(s + 1) * 8].copy_from_slice(&row);
+        }
+        let want = packed.predict_batch(&rows, 50);
+        let got: Vec<u16> = String::from_utf8(output)
+            .unwrap()
+            .lines()
+            .map(|l| l.parse().unwrap())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn serve_lines_reports_errors_without_desync() {
+        let (packed, data) = packed_and_data();
+        let good = request_lines(&data, 1);
+        let input = format!("not,a,row\n{good}1,2\n{good}");
+        let mut output = Vec::new();
+        let stats =
+            serve_lines(&packed, &ServeConfig::default(), Cursor::new(input), &mut output)
+                .unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.errors, 2);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("error:"), "{}", lines[0]);
+        assert!(!lines[1].starts_with("error:"));
+        assert!(lines[2].starts_with("error:"), "{}", lines[2]);
+        assert!(!lines[3].starts_with("error:"));
+    }
+
+    #[test]
+    fn serve_lines_proba_mode_emits_posteriors() {
+        let (packed, data) = packed_and_data();
+        let input = request_lines(&data, 3);
+        let mut output = Vec::new();
+        let cfg = ServeConfig {
+            proba: true,
+            ..Default::default()
+        };
+        serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
+        let text = String::from_utf8(output).unwrap();
+        for line in text.lines() {
+            let fields: Vec<&str> = line.split(',').collect();
+            assert_eq!(fields.len(), 1 + packed.n_classes, "{line}");
+            let sum: f32 = fields[1..].iter().map(|f| f.parse::<f32>().unwrap()).sum();
+            assert!((sum - 1.0).abs() < 1e-3, "{line}");
+        }
+    }
+
+    #[test]
+    fn serve_tcp_round_trip_on_ephemeral_port() {
+        use std::io::{BufRead, BufReader, Write};
+        let (packed, data) = packed_and_data();
+        let pf = std::env::temp_dir().join("soforest_serve_unit_port");
+        std::fs::remove_file(&pf).ok();
+        let requests = request_lines(&data, 5);
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_tcp(
+                    &packed,
+                    &ServeConfig::default(),
+                    "127.0.0.1:0",
+                    Some(pf.as_path()),
+                    Some(5),
+                )
+                .unwrap()
+            });
+            // Wait for readiness (bounded so a broken server fails the
+            // test instead of hanging it).
+            let mut tries = 0;
+            let addr = loop {
+                if let Ok(s) = std::fs::read_to_string(&pf) {
+                    if !s.is_empty() {
+                        break s;
+                    }
+                }
+                tries += 1;
+                assert!(tries < 2000, "server never wrote the port file");
+                std::thread::sleep(Duration::from_millis(5));
+            };
+            let mut conn = std::net::TcpStream::connect(addr.trim()).unwrap();
+            conn.write_all(requests.as_bytes()).unwrap();
+            conn.shutdown(std::net::Shutdown::Write).unwrap();
+            let reader = BufReader::new(conn);
+            let answers: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+            assert_eq!(answers.len(), 5);
+            for a in &answers {
+                let c: usize = a.parse().unwrap();
+                assert!(c < packed.n_classes);
+            }
+            let stats = server.join().unwrap();
+            assert_eq!(stats.requests, 5);
+        });
+        std::fs::remove_file(&pf).ok();
+    }
+
+    #[test]
+    fn score_stream_matches_batch_predictions() {
+        let (packed, data) = packed_and_data();
+        // Labeled CSV with header, like `gen-data` writes.
+        let mut csv = String::from("f0,f1,f2,f3,f4,f5,f6,f7,label\n");
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            for v in &row {
+                csv.push_str(&format!("{v},"));
+            }
+            csv.push_str(&format!("{}\n", data.label(s)));
+        }
+        let report =
+            score_csv_stream(&packed, &mut Cursor::new(csv.as_bytes()), 64, 3, true).unwrap();
+        assert_eq!(report.rows, data.n_samples());
+        let (correct, labeled) = report.correct.unwrap();
+        assert_eq!(labeled, data.n_samples());
+        assert_eq!(report.blocks, data.n_samples().div_ceil(64));
+        assert_eq!(report.block_ms.len(), report.blocks);
+        // Predictions identical to a one-shot batch over the same rows.
+        let mut rows = vec![0f32; data.n_samples() * 8];
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            rows[s * 8..(s + 1) * 8].copy_from_slice(&row);
+        }
+        let want = packed.predict_batch(&rows, data.n_samples());
+        assert_eq!(report.predictions, want);
+        let acc = correct as f64 / labeled as f64;
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn score_stream_accepts_unlabeled_rows_and_rejects_ragged() {
+        let (packed, _) = packed_and_data();
+        let csv = "1,2,3,4,5,6,7,8\n8,7,6,5,4,3,2,1\n";
+        let report =
+            score_csv_stream(&packed, &mut Cursor::new(csv.as_bytes()), 16, 1, false).unwrap();
+        assert_eq!(report.rows, 2);
+        assert!(report.correct.is_none());
+        assert!(report.predictions.is_empty(), "predictions kept unrequested");
+        let bad = "1,2,3\n";
+        assert!(
+            score_csv_stream(&packed, &mut Cursor::new(bad.as_bytes()), 16, 1, false).is_err()
+        );
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0); // nearest rank rounds up
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

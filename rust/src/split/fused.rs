@@ -111,17 +111,20 @@ pub fn best_split_fused(
         }
         b[..n_real].sort_unstable_by(f32::total_cmp);
         if b[0] == b[n_real - 1] {
-            // All sampled boundaries identical: check whether the projection
-            // itself is constant (one blocked min/max pass — still no full
-            // materialization); if not, fall back to range-anchored
+            // All sampled boundaries collapsed to one value: check whether
+            // the projection itself is constant (one blocked min/max pass —
+            // still no full materialization); keep the sampled boundary when
+            // it still separates, else fall back to range-anchored
             // boundaries. Mirrors `build_boundaries` exactly.
             let (lo, hi) = projected_min_max(data, proj, active, block);
             if lo == hi {
                 continue; // constant projection: no split possible
             }
-            for (i, slot) in b[..n_real].iter_mut().enumerate() {
-                let frac = (i + 1) as f32 / n_bins as f32;
-                *slot = lo + (hi - lo) * frac;
+            if !(lo < b[0] && b[0] <= hi) {
+                for (i, slot) in b[..n_real].iter_mut().enumerate() {
+                    let frac = (i + 1) as f32 / n_bins as f32;
+                    *slot = lo + (hi - lo) * frac;
+                }
             }
         }
         b[n_real] = f32::INFINITY;

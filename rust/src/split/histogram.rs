@@ -44,21 +44,29 @@ pub fn build_boundaries(
     }
     b.sort_unstable_by(f32::total_cmp);
     if b[0] == b[n_real - 1] {
-        // All sampled boundaries identical; check whether the data itself is
-        // constant — if not, fall back to min/max-anchored boundaries so a
-        // split is still findable (rare but happens on tiny nodes).
+        // All sampled boundaries collapsed to one value `v`. That is only
+        // degenerate when `v` cannot separate the data (`bin 0 = {x < v}`
+        // empty or `bin >= 1 = {x >= v}` empty). Note `n_real == 1`
+        // (n_bins == 2) lands here trivially — a single sampled boundary
+        // must be KEPT when it separates, or small bin counts silently lose
+        // the §4.1 sampled-boundary semantics to the min/max fallback.
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
         for &v in values {
             lo = lo.min(v);
             hi = hi.max(v);
         }
         if lo == hi {
-            return false;
+            return false; // constant feature: no split possible
         }
-        b.clear();
-        for i in 0..n_real {
-            let frac = (i + 1) as f32 / n_bins as f32;
-            b.push(lo + (hi - lo) * frac);
+        if !(lo < b[0] && b[0] <= hi) {
+            // The collapsed sampled boundary puts every sample on one side;
+            // fall back to min/max-anchored boundaries so a split is still
+            // findable (rare but happens on tiny nodes).
+            b.clear();
+            for i in 0..n_real {
+                let frac = (i + 1) as f32 / n_bins as f32;
+                b.push(lo + (hi - lo) * frac);
+            }
         }
     }
     b.push(f32::INFINITY); // pad to n_bins slots
@@ -247,6 +255,68 @@ mod tests {
         assert_eq!(route_binary_search(1.0, &bounds, 3), 1); // b <= v counts
         assert_eq!(route_binary_search(2.5, &bounds, 3), 2);
         assert_eq!(route_binary_search(99.0, &bounds, 3), 3);
+    }
+
+    #[test]
+    fn two_bin_boundaries_keep_the_sampled_value() {
+        // Regression: with n_bins == 2 there is a single sampled boundary,
+        // so the "all sampled boundaries identical" degeneracy check was
+        // trivially true and the sampled value was ALWAYS discarded for the
+        // min/max fallback. A sampled boundary that separates the data must
+        // be kept.
+        let values = [0.0f32, 10.0, 10.0, 10.0];
+        let mut kept_sampled = 0usize;
+        for seed in 0..32 {
+            let mut rng = Pcg64::new(seed);
+            let mut scratch = SplitScratch::default();
+            assert!(build_boundaries(&values, 2, &mut rng, &mut scratch));
+            let b = scratch.boundaries[0];
+            if b == 10.0 {
+                // Sampled 10.0 separates ({0.0} | {10.0,10.0,10.0}): kept.
+                kept_sampled += 1;
+            } else {
+                // Sampled 0.0 cannot separate (nothing < 0.0): the min/max
+                // fallback boundary is the midpoint.
+                assert_eq!(b, 5.0, "seed {seed}");
+            }
+            assert_eq!(scratch.boundaries[1], f32::INFINITY);
+            // Either way the boundary must realize a split of this data.
+            let below = values.iter().filter(|&&v| v < b).count();
+            assert!(below > 0 && below < values.len(), "seed {seed}: b = {b}");
+        }
+        assert!(
+            kept_sampled > 0,
+            "sampled boundary was never kept across 32 seeds — degenerate \
+             check is discarding valid single boundaries again"
+        );
+    }
+
+    #[test]
+    fn collapsed_multi_bin_boundaries_kept_when_separating() {
+        // All sampled boundaries collapse onto 5.0 (the overwhelmingly
+        // common value) but 5.0 still separates the lone 0.0: the sampled
+        // boundaries must survive, not be resampled on a min/max grid.
+        let mut values = vec![5.0f32; 400];
+        values[0] = 0.0;
+        // With 3 sampled boundaries from 400 values, P(all == 5.0) is high;
+        // retry seeds until the collapse case is exercised.
+        let mut collapsed: Option<SplitScratch> = None;
+        for seed in 0..16 {
+            let mut r = Pcg64::new(seed);
+            let mut s = SplitScratch::default();
+            assert!(build_boundaries(&values, 4, &mut r, &mut s));
+            if s.boundaries[..3].iter().all(|&b| b == 5.0) {
+                collapsed = Some(s);
+                break;
+            }
+        }
+        let scratch = collapsed.expect("no seed collapsed all sampled boundaries");
+        let below = values.iter().filter(|&&v| v < scratch.boundaries[0]).count();
+        assert_eq!(below, 1);
+        // Constant data still reports unsplittable.
+        let mut rng = Pcg64::new(3);
+        let mut s = SplitScratch::default();
+        assert!(!build_boundaries(&[7.0; 50], 4, &mut rng, &mut s));
     }
 
     #[test]

@@ -185,6 +185,178 @@ fn train_save_predict_roundtrip() {
     }
 }
 
+/// Train a small model + CSV in temp files, returning their paths.
+fn train_model(tag: &str) -> (PathBuf, PathBuf) {
+    let model = tmp(&format!("soforest_e2e_{tag}_model.bin"));
+    let csv = tmp(&format!("soforest_e2e_{tag}_data.csv"));
+    cli::run(&argv(&[
+        "gen-data",
+        "--data",
+        "trunk:300:8",
+        "--out",
+        csv.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        csv.to_str().unwrap(),
+        "--trees",
+        "4",
+        "--threads",
+        "1",
+        "--out",
+        model.to_str().unwrap(),
+    ]))
+    .unwrap();
+    (model, csv)
+}
+
+#[test]
+fn score_streams_csv_through_model() {
+    let (model, csv) = train_model("score");
+    let preds = tmp("soforest_e2e_score_preds.csv");
+    cli::run(&argv(&[
+        "score",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        csv.to_str().unwrap(),
+        "--block",
+        "64",
+        "--threads",
+        "2",
+        "--out",
+        preds.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(&preds).unwrap();
+    assert_eq!(text.lines().count(), 301); // header + 300 predictions
+    // Generator-spec input flows through the same scorer.
+    cli::run(&argv(&[
+        "score",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        "trunk:200:8",
+        "--block",
+        "32",
+        "--threads",
+        "1",
+    ]))
+    .unwrap();
+    // Missing model / wrong width must error.
+    assert!(cli::run(&argv(&["score", "--data", csv.to_str().unwrap()])).is_err());
+    assert!(cli::run(&argv(&[
+        "score",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        "trunk:50:16",
+    ]))
+    .is_err());
+    for p in [model, csv, preds] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn serve_answers_tcp_requests_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+    let (model, csv) = train_model("serve");
+    let port_file = tmp("soforest_e2e_serve_port");
+    std::fs::remove_file(&port_file).ok();
+    let model_arg = model.to_str().unwrap().to_string();
+    let pf_arg = port_file.to_str().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        cli::run(&argv(&[
+            "serve",
+            "--model",
+            &model_arg,
+            "--tcp",
+            "127.0.0.1:0",
+            "--port-file",
+            &pf_arg,
+            "--max-requests",
+            "4",
+            "--max-batch",
+            "2",
+            "--max-wait-us",
+            "500",
+        ]))
+    });
+    let mut tries = 0;
+    let addr = loop {
+        match std::fs::read_to_string(&port_file) {
+            Ok(s) if !s.is_empty() => break s,
+            _ => {
+                tries += 1;
+                assert!(tries < 2000, "serve never wrote the port file");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    };
+    let mut conn = std::net::TcpStream::connect(addr.trim()).unwrap();
+    // 3 valid rows (8 features) + 1 malformed: 4 responses, in order.
+    conn.write_all(b"0,0,0,0,0,0,0,0\n1,1,1,1,1,1,1,1\nnot,a,row\n2,2,2,2,2,2,2,2\n")
+        .unwrap();
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+    let answers: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(answers.len(), 4, "{answers:?}");
+    for (i, a) in answers.iter().enumerate() {
+        if i == 2 {
+            assert!(a.starts_with("error:"), "{a}");
+        } else {
+            let class: usize = a.parse().unwrap();
+            assert!(class < 2, "{a}");
+        }
+    }
+    server.join().unwrap().unwrap();
+    for p in [model, csv, port_file] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn migrate_upgrades_v1_models_that_still_load() {
+    // Write a model in the legacy v1 layout, check every entry point still
+    // reads it, then migrate to v2 and compare predictions.
+    let data = soforest::data::synth::generate(
+        "trunk:200:8",
+        &mut soforest::rng::Pcg64::new(3),
+    )
+    .unwrap();
+    let cfg = soforest::config::ForestConfig {
+        n_trees: 3,
+        n_threads: 1,
+        ..Default::default()
+    };
+    let forest = soforest::coordinator::train_forest(&data, &cfg, 8);
+    let v1_path = tmp("soforest_e2e_v1_model.bin");
+    let v2_path = tmp("soforest_e2e_v2_model.bin");
+    {
+        let f = std::fs::File::create(&v1_path).unwrap();
+        let mut w = std::io::BufWriter::new(f);
+        soforest::forest::serialize::write_forest_v1(&forest, &mut w).unwrap();
+        std::io::Write::flush(&mut w).unwrap();
+    }
+    cli::run(&argv(&[
+        "migrate",
+        "--model",
+        v1_path.to_str().unwrap(),
+        "--out",
+        v2_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let from_v1 = soforest::forest::serialize::load(&v1_path).unwrap();
+    let from_v2 = soforest::forest::serialize::load(&v2_path).unwrap();
+    assert_eq!(from_v1.predict(&data), from_v2.predict(&data));
+    assert_eq!(forest.predict(&data), from_v2.predict(&data));
+    for p in [v1_path, v2_path] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
 #[test]
 fn importance_command_runs() {
     cli::run(&argv(&[
