@@ -1,0 +1,107 @@
+//! Training throughput: depth vs frontier growth at 1 and N threads.
+//!
+//! The frontier scheduler's reason to exist is intra-tree parallelism: a
+//! **single large tree** should scale with cores, where the depth-first
+//! stack is pinned to one. This bench trains one tree to purity on a
+//! ≥100k-row synthetic table under both schedulers at 1 thread and at all
+//! available threads, and emits `BENCH_train.json` so the scaling
+//! trajectory is machine-readable across PRs (alongside
+//! `BENCH_node_split.json` and `BENCH_predict.json`).
+//!
+//! Env overrides: `SOFOREST_BENCH_TRAIN_ROWS` (default 100000),
+//! `SOFOREST_BENCH_TRAIN_FEATURES` (default 64),
+//! `SOFOREST_BENCH_TRAIN_THREADS` (default `1,<all>`).
+
+use soforest::bench::Table;
+use soforest::config::{ForestConfig, GrowthMode};
+use soforest::coordinator::train_forest_with_source;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::tree::ProjectionSource;
+use soforest::rng::Pcg64;
+use std::fmt::Write as _;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let rows = env_usize("SOFOREST_BENCH_TRAIN_ROWS", 100_000);
+    let d = env_usize("SOFOREST_BENCH_TRAIN_FEATURES", 64);
+    let all_threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let threads_sweep: Vec<usize> = std::env::var("SOFOREST_BENCH_TRAIN_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| {
+            if all_threads > 1 {
+                vec![1, all_threads]
+            } else {
+                vec![1]
+            }
+        });
+
+    let data = TrunkConfig {
+        n_samples: rows,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(0x7EA1));
+
+    println!("# single-tree training throughput, trunk:{rows}:{d}, to purity\n");
+    // Speedup is relative to the sweep's FIRST entry (1 thread in the
+    // default sweep); a custom SOFOREST_BENCH_TRAIN_THREADS changes the
+    // baseline accordingly, so the field is named "vs_first", not "vs_1t".
+    let mut table = Table::new(&["growth", "threads", "wall_s", "rows/s", "speedup_vs_first"]);
+    let mut json_rows = String::new();
+    let mut first = true;
+    for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+        let mut base_wall = f64::NAN;
+        for &threads in &threads_sweep {
+            let cfg = ForestConfig {
+                n_trees: 1,
+                n_threads: threads,
+                growth,
+                ..Default::default()
+            };
+            let out =
+                train_forest_with_source(&data, &cfg, 0x5EED, ProjectionSource::SparseOblique);
+            let rows_per_s = rows as f64 / out.wall_s;
+            if threads == threads_sweep[0] {
+                base_wall = out.wall_s;
+            }
+            let speedup = base_wall / out.wall_s;
+            table.row(&[
+                growth.name().to_string(),
+                threads.to_string(),
+                format!("{:.3}", out.wall_s),
+                format!("{rows_per_s:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            if !first {
+                json_rows.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                json_rows,
+                "    {{\"growth\": \"{}\", \"threads\": {threads}, \"rows\": {rows}, \
+                 \"features\": {d}, \"wall_s\": {:.4}, \"rows_per_s\": {rows_per_s:.1}, \
+                 \"speedup_vs_first\": {speedup:.3}}}",
+                growth.name(),
+                out.wall_s
+            );
+        }
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"train_throughput\",\n  \"unit\": \"rows_per_s\",\n  \
+         \"n_trees\": 1,\n  \"results\": [\n{json_rows}\n  ]\n}}\n"
+    );
+    let out = "BENCH_train.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("\n# wrote {out}"),
+        Err(e) => eprintln!("\n# could not write {out}: {e}"),
+    }
+}

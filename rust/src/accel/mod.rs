@@ -45,6 +45,26 @@ impl Bucket {
 /// Histogram bins the accelerated kernel is compiled for (paper default).
 pub const ACCEL_BINS: usize = 256;
 
+/// One node's inputs for the batched `split_nodes_batch` call
+/// ([`NodeAccel::split_nodes_batch`]): the frontier scheduler collects one
+/// request per accelerator-tier node of a level and submits the whole tier
+/// in a single call, amortizing dispatch overhead the way the paper's GPU
+/// path batches "all of a node's projections" — one level up.
+///
+/// Field semantics match [`NodeAccel::best_node_split`]'s parameters:
+/// `values` is the node's `p × n` projected values (row-major), `labels`
+/// its binary labels, `boundaries` the `p × n_bins` padded bin boundaries.
+#[derive(Clone, Debug)]
+pub struct NodeSplitRequest {
+    pub values: Vec<f32>,
+    pub p: usize,
+    pub n: usize,
+    pub labels: Vec<u16>,
+    pub boundaries: Vec<f32>,
+    pub n_bins: usize,
+    pub min_leaf: usize,
+}
+
 /// PJRT-backed batched node-split evaluator.
 pub struct NodeSplitAccel {
     engine: Engine,

@@ -17,6 +17,8 @@ use crate::split::histogram::Routing;
 use crate::split::{
     self, best_split_fused, SplitCriterion, SplitMethod, SplitScratch, SplitThresholds,
 };
+use anyhow::{bail, Context, Result};
+use std::path::Path;
 
 /// Search range for the sort↔histogram crossover (covers every machine the
 /// paper reports: 350–1300).
@@ -307,6 +309,102 @@ pub fn calibrate_fused(n_bins: usize, routing: Routing) -> SplitThresholds {
     }
 }
 
+// ------------------------------------------------------------- persistence
+//
+// `soforest calibrate --out thresholds.json` persists the measured
+// thresholds; `train --thresholds thresholds.json` loads them — so the
+// per-machine microbenchmark is paid once, not once per training run. The
+// format is a flat JSON object (hand-rolled: the offline crate set has no
+// serde); `"off"` encodes a disabled (`usize::MAX`) threshold.
+
+/// Serialize thresholds as JSON. `n_bins` records what the calibration
+/// measured (the crossover depends on it); loaders ignore unknown keys.
+pub fn thresholds_to_json(t: &SplitThresholds, n_bins: usize) -> String {
+    let field = |v: usize| {
+        if v == usize::MAX {
+            "\"off\"".to_string()
+        } else {
+            v.to_string()
+        }
+    };
+    format!(
+        "{{\n  \"sort_below\": {},\n  \"accel_above\": {},\n  \"n_bins\": {}\n}}\n",
+        field(t.sort_below),
+        field(t.accel_above),
+        n_bins
+    )
+}
+
+/// Extract the raw value text of `"key": value` from a flat JSON object.
+fn json_field<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)?;
+    let rest = text[at + needle.len()..].trim_start();
+    let rest = rest.strip_prefix(':')?.trim_start();
+    let end = rest.find(&[',', '}', '\n'][..]).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+fn parse_threshold(raw: &str, key: &str) -> Result<usize> {
+    let raw = raw.trim().trim_matches('"');
+    if raw == "off" {
+        return Ok(usize::MAX);
+    }
+    raw.parse::<usize>()
+        .with_context(|| format!("{key}: cannot parse {raw:?}"))
+}
+
+/// Parse thresholds from the JSON produced by [`thresholds_to_json`].
+pub fn thresholds_from_json(text: &str) -> Result<SplitThresholds> {
+    let sort_raw = match json_field(text, "sort_below") {
+        Some(v) => v,
+        None => bail!("thresholds file missing \"sort_below\""),
+    };
+    let accel_raw = match json_field(text, "accel_above") {
+        Some(v) => v,
+        None => bail!("thresholds file missing \"accel_above\""),
+    };
+    Ok(SplitThresholds {
+        sort_below: parse_threshold(sort_raw, "sort_below")?,
+        accel_above: parse_threshold(accel_raw, "accel_above")?,
+    })
+}
+
+/// Persist measured thresholds (CLI `calibrate --out`).
+pub fn save_thresholds(path: &Path, t: &SplitThresholds, n_bins: usize) -> Result<()> {
+    std::fs::write(path, thresholds_to_json(t, n_bins))
+        .with_context(|| format!("write thresholds to {path:?}"))
+}
+
+/// Load persisted thresholds (CLI `train --thresholds`).
+pub fn load_thresholds(path: &Path) -> Result<SplitThresholds> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read thresholds from {path:?}"))?;
+    thresholds_from_json(&text).with_context(|| format!("parse thresholds from {path:?}"))
+}
+
+/// [`load_thresholds`] plus a bin-count guard: the crossovers depend on
+/// the histogram size they were measured at, so a file recorded for a
+/// different `n_bins` than the training run is an error, not a silent
+/// mis-calibration. Files without an `n_bins` field (hand-written) pass.
+pub fn load_thresholds_for(path: &Path, expected_bins: usize) -> Result<SplitThresholds> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read thresholds from {path:?}"))?;
+    if let Some(raw) = json_field(&text, "n_bins") {
+        let file_bins: usize = raw
+            .trim_matches('"')
+            .parse()
+            .with_context(|| format!("{path:?}: n_bins: cannot parse {raw:?}"))?;
+        if file_bins != expected_bins {
+            bail!(
+                "{path:?} was calibrated for {file_bins} bins but this run uses \
+                 {expected_bins}; re-run `soforest calibrate --bins {expected_bins} --out ...`"
+            );
+        }
+    }
+    thresholds_from_json(&text).with_context(|| format!("parse thresholds from {path:?}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +477,49 @@ mod tests {
         let c_small = fused_node_cost_ns(&small, 256, Routing::TwoLevel, &opts);
         let c_large = fused_node_cost_ns(&large, 256, Routing::TwoLevel, &opts);
         assert!(c_large > c_small * 2.0, "fused: {c_small} vs {c_large}");
+    }
+
+    #[test]
+    fn thresholds_roundtrip_through_json() {
+        for t in [
+            SplitThresholds {
+                sort_below: 882,
+                accel_above: 29_000,
+            },
+            SplitThresholds {
+                sort_below: 1024,
+                accel_above: usize::MAX,
+            },
+            SplitThresholds {
+                sort_below: usize::MAX,
+                accel_above: usize::MAX,
+            },
+        ] {
+            let json = thresholds_to_json(&t, 256);
+            let back = thresholds_from_json(&json).unwrap();
+            assert_eq!(back, t, "json was: {json}");
+        }
+        // Unknown keys are ignored; missing required keys error.
+        let extra = "{\"sort_below\": 7, \"accel_above\": \"off\", \"machine\": \"ci\"}";
+        let t = thresholds_from_json(extra).unwrap();
+        assert_eq!(t.sort_below, 7);
+        assert_eq!(t.accel_above, usize::MAX);
+        assert!(thresholds_from_json("{\"sort_below\": 7}").is_err());
+        assert!(thresholds_from_json("{\"sort_below\": \"soon\", \"accel_above\": 1}").is_err());
+    }
+
+    #[test]
+    fn thresholds_roundtrip_through_file() {
+        let path = std::env::temp_dir().join("soforest_thresholds_test.json");
+        let t = SplitThresholds {
+            sort_below: 1234,
+            accel_above: usize::MAX,
+        };
+        save_thresholds(&path, &t, 64).unwrap();
+        let back = load_thresholds(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&path).ok();
+        assert!(load_thresholds(&path).is_err());
     }
 
     #[test]

@@ -79,12 +79,20 @@ impl Args {
             if matches!(
                 k.as_str(),
                 "data" | "config" | "out" | "test-frac" | "seed" | "replicates" | "list"
-                    | "artifacts" | "model" | "oob" | "repeats" | "top"
+                    | "artifacts" | "model" | "oob" | "repeats" | "top" | "thresholds"
             ) {
                 continue;
             }
             cfg.set(k, v)
                 .with_context(|| format!("flag --{k} {v}"))?;
+        }
+        // Persisted calibration (`calibrate --out` → `train --thresholds`):
+        // applied after the flags so the file can be validated against the
+        // run's actual bin count; it replaces any `--sort_below` /
+        // `--accel_above` flags (use those without --thresholds for manual
+        // control).
+        if let Some(path) = self.get("thresholds") {
+            cfg.thresholds = calibrate::load_thresholds_for(Path::new(path), cfg.n_bins)?;
         }
         Ok(cfg)
     }
@@ -109,7 +117,8 @@ COMMANDS:
   migrate    rewrite a model file in the v2 packed serving format:
              --model old.bin --out new.bin
   importance permutation feature importance of a trained model
-  calibrate  run the §4.1 microbenchmark, print thresholds
+  calibrate  run the §4.1 microbenchmark, print thresholds;
+             --out thresholds.json persists them for train --thresholds
   might      run the MIGHT honest-forest protocol, report AUC / S@98
   gen-data   materialize a synthetic dataset to CSV
   info       show artifact / accelerator status
@@ -125,6 +134,11 @@ COMMON FLAGS:
                     dynamic-vectorized | hybrid
   --fused on|off    fused cache-blocked node-split pipeline (default on;
                     off restores the materialize-then-route path for A/B)
+  --growth <mode>   depth | frontier (default frontier: level-wise growth,
+                    intra-tree parallelism, per-level accelerator batching;
+                    depth restores the classic per-tree stack bit-for-bit)
+  --thresholds <f>  load calibrated split thresholds persisted by
+                    `soforest calibrate --out <f>` (skips re-calibration)
 ";
 
 /// Load `--data`: a generator spec or a CSV path.
@@ -229,6 +243,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
         if cfg.instrument {
             println!("{}", o.stats.depth_table());
+            let frontier = o.stats.frontier_table();
+            if !frontier.is_empty() {
+                println!("{frontier}");
+            }
         }
     }
     println!("train accuracy: {:.4}", trained.accuracy(&data));
@@ -512,12 +530,27 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     );
     // Accelerator crossover, if artifacts exist.
     let dir = args.get_or("artifacts", "artifacts");
-    match accel::NodeSplitAccel::try_load(Path::new(&dir)) {
+    let t_accel = match accel::NodeSplitAccel::try_load(Path::new(&dir)) {
         Ok(mut a) => {
             let t_accel = calibrate::calibrate_accel_threshold(&mut a, 16, 256, 1 << 17);
             println!("cpu<->accelerator crossover: {}", fmt_threshold(t_accel));
+            t_accel
         }
-        Err(e) => println!("accelerator unavailable ({e})"),
+        Err(e) => {
+            println!("accelerator unavailable ({e})");
+            usize::MAX
+        }
+    };
+    // Persist the thresholds the default training path (fused engine) will
+    // use, so calibration is paid once per machine:
+    // `soforest train --thresholds <file>` loads them back.
+    if let Some(out) = args.get("out") {
+        let thresholds = crate::split::SplitThresholds {
+            sort_below: t_fused,
+            accel_above: t_accel,
+        };
+        calibrate::save_thresholds(Path::new(out), &thresholds, bins)?;
+        println!("thresholds saved to {out}");
     }
     println!("calibration took {:?}", t0.elapsed());
     Ok(())
@@ -620,6 +653,53 @@ mod tests {
         let cfg = a.forest_config().unwrap();
         assert_eq!(cfg.n_trees, 5);
         assert_eq!(cfg.strategy, crate::split::SplitStrategy::Exact);
+    }
+
+    #[test]
+    fn thresholds_flag_loads_persisted_calibration() {
+        let path = std::env::temp_dir().join("soforest_cli_thresholds.json");
+        let t = crate::split::SplitThresholds {
+            sort_below: 777,
+            accel_above: 31_000,
+        };
+        calibrate::save_thresholds(&path, &t, 256).unwrap();
+        let a = Args::parse(&argv(&[
+            "train",
+            "--data",
+            "x",
+            "--thresholds",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let cfg = a.forest_config().unwrap();
+        assert_eq!(cfg.thresholds, t);
+        // A file calibrated for a different bin count than the run is a
+        // hard error (the crossover depends on the histogram size)...
+        let a = Args::parse(&argv(&[
+            "train",
+            "--data",
+            "x",
+            "--bins",
+            "64",
+            "--thresholds",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(a.forest_config().is_err());
+        // ...and matching bin counts load fine.
+        calibrate::save_thresholds(&path, &t, 64).unwrap();
+        assert_eq!(a.forest_config().unwrap().thresholds, t);
+        std::fs::remove_file(&path).ok();
+        // A missing file is a hard error, not silent defaults.
+        let a = Args::parse(&argv(&[
+            "train",
+            "--data",
+            "x",
+            "--thresholds",
+            "/nonexistent/t.json",
+        ]))
+        .unwrap();
+        assert!(a.forest_config().is_err());
     }
 
     #[test]

@@ -10,6 +10,38 @@ use crate::split::{SplitCriterion, SplitStrategy, SplitThresholds};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// How the tree trainer schedules node work (CLI `--growth`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrowthMode {
+    /// Classic depth-first work stack: one node at a time, one sequential
+    /// RNG stream per tree. Preserves the pre-frontier forests bit-for-bit.
+    Depth,
+    /// Level-wise frontier scheduler: the whole frontier of open nodes is
+    /// partitioned into sort / histogram / accelerator tiers each level,
+    /// CPU tiers fan out over the worker pool and the accelerator tier is
+    /// submitted as one batched call. Each node draws from its own RNG
+    /// stream keyed by (tree seed, node id), so the trained forest is
+    /// byte-identical for any `--threads`.
+    Frontier,
+}
+
+impl GrowthMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "depth" | "dfs" => Self::Depth,
+            "frontier" | "level" | "bfs" => Self::Frontier,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Depth => "depth",
+            Self::Frontier => "frontier",
+        }
+    }
+}
+
 /// All hyper-parameters of a forest training run.
 #[derive(Clone, Debug)]
 pub struct ForestConfig {
@@ -47,6 +79,11 @@ pub struct ForestConfig {
     /// (`--fused off` restores the materialize-then-route path for A/B).
     /// Both paths produce bit-identical forests for the same seed.
     pub fused: bool,
+    /// Node-scheduling mode (`--growth depth|frontier`). Frontier is the
+    /// default: level-wise growth with intra-tree parallelism and per-level
+    /// accelerator batching; depth restores the classic per-tree stack and
+    /// its historical forests bit-for-bit.
+    pub growth: GrowthMode,
 }
 
 impl Default for ForestConfig {
@@ -68,6 +105,7 @@ impl Default for ForestConfig {
             artifacts_dir: "artifacts".to_string(),
             instrument: false,
             fused: true,
+            growth: GrowthMode::Frontier,
         }
     }
 }
@@ -136,6 +174,10 @@ impl ForestConfig {
                 }
             }
             "fused" => self.fused = parse_bool(v)?,
+            "growth" => {
+                self.growth = GrowthMode::parse(v)
+                    .with_context(|| format!("unknown growth mode {v:?}"))?
+            }
             "auto_calibrate" | "calibrate" => self.auto_calibrate = parse_bool(v)?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "instrument" => self.instrument = parse_bool(v)?,
@@ -182,6 +224,7 @@ mod tests {
         assert_eq!(c.n_bins, 256);
         assert_eq!(c.min_leaf, 1); // train to purity
         assert!(c.fused, "fused engine is the default training path");
+        assert_eq!(c.growth, GrowthMode::Frontier, "frontier is the default scheduler");
         assert_eq!(c.strategy, SplitStrategy::DynamicVectorized);
         assert_eq!(c.sampler, SamplerKind::Floyd);
         assert!((c.projection.row_factor - 1.5).abs() < 1e-12);
@@ -209,9 +252,14 @@ mod tests {
             ("accel_above", "30000"),
             ("instrument", "on"),
             ("fused", "off"),
+            ("growth", "depth"),
         ] {
             c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
         }
+        assert_eq!(c.growth, GrowthMode::Depth);
+        c.set("growth", "frontier").unwrap();
+        assert_eq!(c.growth, GrowthMode::Frontier);
+        assert!(c.set("growth", "sideways").is_err());
         assert_eq!(c.n_trees, 7);
         assert_eq!(c.strategy, SplitStrategy::Hybrid);
         assert_eq!(c.n_bins, 64);

@@ -12,15 +12,15 @@
 //! the paper's "map each thread to a CUDA stream".
 
 use crate::accel::NodeSplitAccel;
-use crate::config::ForestConfig;
+use crate::config::{ForestConfig, GrowthMode};
 use crate::data::{sampling, ActiveSet, Dataset};
-use crate::forest::tree::{ProjectionSource, Tree, TreeTrainer};
+use crate::forest::tree::{ProjectionSource, ScratchPool, Tree, TreeTrainer};
 use crate::forest::Forest;
 use crate::metrics::TrainStats;
 use crate::rng::Pcg64;
 use crate::split::SplitStrategy;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Work-stealing task queue: workers claim indices `0..n_tasks` until
@@ -91,7 +91,19 @@ pub fn train_forest_with_source(
     assert!(data.n_classes() >= 2, "need at least 2 classes");
     let t0 = Instant::now();
 
-    let n_workers = config.threads().min(config.n_trees);
+    let threads = config.threads();
+    let n_workers = threads.min(config.n_trees);
+    // Frontier growth parallelizes *inside* a tree as well: split the
+    // thread budget so outer workers × intra-tree workers ≈ the requested
+    // count. With fewer trees than threads (the single-large-tree case)
+    // the whole budget goes intra-tree; with many trees it degenerates to
+    // the classic one-thread-per-tree pool. Purely a scheduling knob —
+    // frontier forests are byte-identical for any split of the budget.
+    let intra_threads = if config.growth == GrowthMode::Frontier {
+        (threads / n_workers.max(1)).max(1)
+    } else {
+        1
+    };
     let results: Mutex<Vec<(usize, Tree, TrainStats)>> =
         Mutex::new(Vec::with_capacity(config.n_trees));
     let accel_nodes = AtomicUsize::new(0);
@@ -107,6 +119,9 @@ pub fn train_forest_with_source(
         } else {
             None
         };
+        // One scratch pool per outer worker: node buffers are leased per
+        // inner worker and survive across all trees this worker trains.
+        let scratch_pool = Arc::new(ScratchPool::default());
         let mut local: Vec<(usize, Tree, TrainStats)> = Vec::new();
         while let Some(tree_idx) = queue.claim() {
             let (tree, stats) = train_one_tree(
@@ -116,6 +131,8 @@ pub fn train_forest_with_source(
                 tree_idx,
                 source,
                 accel.as_mut().map(|a| a as &mut NodeSplitAccel),
+                intra_threads,
+                Arc::clone(&scratch_pool),
             );
             local.push((tree_idx, tree, stats));
         }
@@ -169,6 +186,7 @@ pub fn tree_bag(
 }
 
 /// Train tree `tree_idx` with its deterministic RNG stream.
+#[allow(clippy::too_many_arguments)]
 fn train_one_tree(
     data: &Dataset,
     config: &ForestConfig,
@@ -176,9 +194,13 @@ fn train_one_tree(
     tree_idx: usize,
     source: ProjectionSource,
     accel: Option<&mut NodeSplitAccel>,
+    intra_threads: usize,
+    scratch_pool: Arc<ScratchPool>,
 ) -> (Tree, TrainStats) {
     let (active, rng) = tree_bag(data.n_samples(), config, seed, tree_idx);
-    let mut trainer = TreeTrainer::new(data, config, source, rng);
+    let mut trainer = TreeTrainer::new(data, config, source, rng)
+        .with_intra_threads(intra_threads)
+        .with_scratch_pool(scratch_pool);
     if let Some(a) = accel {
         trainer = trainer.with_accel(a);
     }
@@ -232,6 +254,34 @@ mod tests {
             for (ta, tb) in a.trees.iter().zip(&b.trees) {
                 assert_eq!(ta.leaf_index(&row), tb.leaf_index(&row), "sample {s}");
             }
+        }
+    }
+
+    #[test]
+    fn single_tree_intra_parallelism_is_deterministic() {
+        // A one-tree forest routes the whole thread budget into the
+        // frontier scheduler's intra-tree pool; the tree must be identical
+        // to the single-threaded one.
+        let data = trunk(800, 8);
+        let mk = |threads| {
+            let cfg = ForestConfig {
+                n_trees: 1,
+                n_threads: threads,
+                ..Default::default()
+            };
+            train_forest(&data, &cfg, 7)
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_eq!(a.trees[0].nodes.len(), b.trees[0].nodes.len());
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            assert_eq!(
+                a.trees[0].leaf_index(&row),
+                b.trees[0].leaf_index(&row),
+                "sample {s}"
+            );
         }
     }
 

@@ -1,15 +1,36 @@
-//! Single-tree training: the recursive node loop of the paper's Figure 2,
-//! with the dynamic method selection of §4.1 and the accelerator hook of
-//! §4.3.
+//! Single-tree training: the node loop of the paper's Figure 2, with the
+//! dynamic method selection of §4.1 and the accelerator hook of §4.3.
 //!
-//! The trainer is written as an explicit work stack (to-purity trees on 1M
-//! samples reach depth > 40; no recursion limits) and owns per-tree scratch
-//! buffers so the node loop performs **no heap allocation** except for the
-//! child active-sets — one of the §Perf items.
+//! Two schedulers share one per-node split search:
+//!
+//! * **Depth** (`--growth depth`) — the classic explicit work stack
+//!   (to-purity trees on 1M samples reach depth > 40; no recursion limits),
+//!   one sequential RNG stream per tree. Kept verbatim so historical
+//!   forests reproduce bit-for-bit.
+//! * **Frontier** (`--growth frontier`, the default) — level-wise growth:
+//!   the frontier of open nodes is partitioned each level into a sort tier,
+//!   a histogram tier and an accelerator tier by [`DynamicSplitter`]; the
+//!   CPU tiers fan out over [`crate::coordinator::run_pool`] (so a single
+//!   large tree saturates every core instead of one) and the accelerator
+//!   tier is submitted as **one** batched [`NodeAccel::split_nodes_batch`]
+//!   call per level. Determinism is a hard requirement: every node draws
+//!   from its own `Pcg64` stream keyed by (tree seed, node id), so the
+//!   trained forest is byte-identical regardless of thread count or
+//!   scheduling order.
+//!
+//! Scratch buffers are leased per worker from a [`ScratchPool`] (instead of
+//! one set per tree), so the CPU node loop performs **no heap allocation**
+//! except for the child active-sets — one of the §Perf items. The
+//! accelerator tier is the deliberate exception: each offloaded node's
+//! request (values, boundaries, labels) is staged in owned buffers so a
+//! whole level can be submitted in one batched call — a handful of large
+//! allocations per level, trivially amortized by the kernel they feed.
 
-use crate::config::ForestConfig;
+use crate::accel::NodeSplitRequest;
+use crate::config::{ForestConfig, GrowthMode};
+use crate::coordinator::run_pool;
 use crate::data::{ActiveSet, Dataset};
-use crate::metrics::{Component, TrainStats};
+use crate::metrics::{Component, LevelStats, TrainStats};
 use crate::projection::apply::{apply_projection, gather_labels};
 use crate::projection::{self, Projection, ProjectionMatrix};
 use crate::rng::Pcg64;
@@ -17,6 +38,7 @@ use crate::split::histogram::Routing;
 use crate::split::{
     best_split, best_split_fused, DynamicSplitter, Split, SplitMethod, SplitScratch,
 };
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// How candidate features are drawn at each node.
@@ -50,6 +72,8 @@ pub enum Node {
 }
 
 /// A trained tree. Nodes are stored in a flat vec; node 0 is the root.
+/// Depth growth lays nodes out in DFS order, frontier growth in BFS order;
+/// both keep every child at a higher index than its parent.
 #[derive(Clone, Debug)]
 pub struct Tree {
     pub nodes: Vec<Node>,
@@ -94,15 +118,23 @@ impl Tree {
             .count()
     }
 
+    /// Maximum leaf depth. Iterative with an explicit stack: to-purity
+    /// trees exceed depth 40 routinely and adversarial chain-shaped trees
+    /// reach depths that overflow the call stack under recursion (test
+    /// `depth_is_iterative_on_degenerate_chain`).
     pub fn depth(&self) -> usize {
-        fn depth_of(nodes: &[Node], i: usize) -> usize {
-            match &nodes[i] {
-                Node::Leaf { .. } => 0,
-                Node::Split { left, right, .. } => 1 + depth_of(nodes, *left as usize)
-                    .max(depth_of(nodes, *right as usize)),
+        let mut max = 0usize;
+        let mut stack: Vec<(u32, usize)> = vec![(0, 0)];
+        while let Some((i, d)) = stack.pop() {
+            match &self.nodes[i as usize] {
+                Node::Leaf { .. } => max = max.max(d),
+                Node::Split { left, right, .. } => {
+                    stack.push((*left, d + 1));
+                    stack.push((*right, d + 1));
+                }
             }
         }
-        depth_of(&self.nodes, 0)
+        max
     }
 
     /// True iff every leaf contains a single class (training-set purity).
@@ -136,6 +168,62 @@ pub trait NodeAccel {
         n_bins: usize,
         min_leaf: usize,
     ) -> Option<(usize, usize, f64)>;
+
+    /// Evaluate a whole batch of nodes — one call per frontier level, the
+    /// amortization the paper's hybrid path (§4.3) relies on. Each response
+    /// slot carries the [`best_node_split`](Self::best_node_split)
+    /// semantics for the matching request: `None` ⇒ that node falls back to
+    /// the CPU engines. The default implementation evaluates requests one
+    /// by one; devices that can pipeline submissions should override it.
+    fn split_nodes_batch(
+        &mut self,
+        requests: &[NodeSplitRequest],
+    ) -> Vec<Option<(usize, usize, f64)>> {
+        requests
+            .iter()
+            .map(|r| {
+                self.best_node_split(
+                    &r.values,
+                    r.p,
+                    r.n,
+                    &r.labels,
+                    &r.boundaries,
+                    r.n_bins,
+                    r.min_leaf,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Per-node scratch buffers (no allocation in the node loop). Leased from a
+/// [`ScratchPool`] by whichever worker processes the node.
+#[derive(Default)]
+pub struct NodeScratch {
+    scratch: SplitScratch,
+    values: Vec<f32>,
+    best_values: Vec<f32>,
+    labels: Vec<u16>,
+    matrix: ProjectionMatrix,
+}
+
+/// Lease-based scratch ownership: workers `lease()` a [`NodeScratch`] for a
+/// stretch of node work and `release()` it afterwards, so buffers are
+/// reused across levels *and* trees instead of being owned (and kept hot)
+/// by a single tree. The coordinator shares one pool per outer worker.
+#[derive(Default)]
+pub struct ScratchPool {
+    free: Mutex<Vec<NodeScratch>>,
+}
+
+impl ScratchPool {
+    pub fn lease(&self) -> NodeScratch {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn release(&self, ns: NodeScratch) {
+        self.free.lock().unwrap().push(ns);
+    }
 }
 
 /// Per-tree trainer. Create one per (tree × worker); reuse is allowed.
@@ -147,22 +235,45 @@ pub struct TreeTrainer<'a> {
     pub rng: Pcg64,
     pub stats: TrainStats,
     pub accel: Option<&'a mut dyn NodeAccel>,
-    // Scratch (no allocation in the node loop):
-    scratch: SplitScratch,
-    values: Vec<f32>,
-    best_values: Vec<f32>,
-    labels: Vec<u16>,
-    matrix: ProjectionMatrix,
-    accel_values: Vec<f32>,
-    accel_boundaries: Vec<f32>,
+    /// Worker threads for intra-tree (frontier-level) parallelism. Purely a
+    /// throughput knob: the trained tree is identical for any value.
+    intra_threads: usize,
+    pool: Arc<ScratchPool>,
 }
 
-/// Work item: (active set, depth, slot in `nodes` to patch with the child).
+/// Depth-mode work item: (active set, depth, link to patch in `nodes`).
 struct WorkItem {
     active: ActiveSet,
     depth: usize,
     /// (parent node index, is_left) — None for the root.
     link: Option<(usize, bool)>,
+}
+
+/// Frontier-mode work item: the node id is pre-assigned (BFS order), which
+/// keys the node's private RNG stream.
+struct FrontierItem {
+    node_id: usize,
+    active: ActiveSet,
+    depth: usize,
+}
+
+/// Result of processing one frontier node.
+enum NodeOutcome {
+    Split {
+        projection: Projection,
+        split: Split,
+        left: ActiveSet,
+        right: ActiveSet,
+    },
+    Leaf(Node),
+}
+
+/// The immutable per-tree context shared by every node worker.
+struct NodeEnv<'a> {
+    data: &'a Dataset,
+    config: &'a ForestConfig,
+    source: ProjectionSource,
+    splitter: DynamicSplitter,
 }
 
 impl<'a> TreeTrainer<'a> {
@@ -180,13 +291,8 @@ impl<'a> TreeTrainer<'a> {
             rng,
             stats: TrainStats::new(config.instrument),
             accel: None,
-            scratch: SplitScratch::default(),
-            values: Vec::new(),
-            best_values: Vec::new(),
-            labels: Vec::new(),
-            matrix: ProjectionMatrix::default(),
-            accel_values: Vec::new(),
-            accel_boundaries: Vec::new(),
+            intra_threads: 1,
+            pool: Arc::new(ScratchPool::default()),
         }
     }
 
@@ -195,9 +301,43 @@ impl<'a> TreeTrainer<'a> {
         self
     }
 
+    /// Set the intra-tree worker count (frontier growth only).
+    pub fn with_intra_threads(mut self, n: usize) -> Self {
+        self.intra_threads = n.max(1);
+        self
+    }
+
+    /// Share a scratch pool (the coordinator passes one per outer worker so
+    /// buffers survive across the trees that worker trains).
+    pub fn with_scratch_pool(mut self, pool: Arc<ScratchPool>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    fn env(&self) -> NodeEnv<'a> {
+        NodeEnv {
+            data: self.data,
+            config: self.config,
+            source: self.source,
+            splitter: self.splitter,
+        }
+    }
+
     /// Train one tree on the given active sample set.
     pub fn train(&mut self, root_active: ActiveSet) -> Tree {
+        match self.config.growth {
+            GrowthMode::Depth => self.train_depth(root_active),
+            GrowthMode::Frontier => self.train_frontier(root_active),
+        }
+    }
+
+    /// Classic depth-first growth: one node at a time off an explicit
+    /// stack, the tree's single RNG stream consumed sequentially. This path
+    /// is bit-for-bit the pre-frontier trainer.
+    fn train_depth(&mut self, root_active: ActiveSet) -> Tree {
         let t0 = Instant::now();
+        let env = self.env();
+        let mut ns = self.pool.lease();
         let mut nodes: Vec<Node> = Vec::new();
         let mut stack = vec![WorkItem {
             active: root_active,
@@ -215,7 +355,16 @@ impl<'a> TreeTrainer<'a> {
                     }
                 }
             }
-            match self.split_node(&item.active, item.depth) {
+            let outcome = split_node(
+                &env,
+                &mut self.rng,
+                &mut self.stats,
+                &mut ns,
+                self.accel.as_deref_mut(),
+                &item.active,
+                item.depth,
+            );
+            match outcome {
                 Some((projection, split, left_set, right_set)) => {
                     nodes.push(Node::Split {
                         projection,
@@ -237,10 +386,79 @@ impl<'a> TreeTrainer<'a> {
                     });
                 }
                 None => {
-                    nodes.push(self.make_leaf(&item.active));
+                    nodes.push(make_leaf(env.data, &item.active));
                     self.stats.record_leaf();
                 }
             }
+        }
+        self.pool.release(ns);
+        self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+        Tree {
+            nodes,
+            n_classes: self.data.n_classes(),
+        }
+    }
+
+    /// Level-wise frontier growth with intra-tree parallelism and per-level
+    /// accelerator batching. Node ids are assigned in BFS order as nodes
+    /// are opened, and each node's RNG is `Pcg64::with_stream(node_seed,
+    /// node_id)` — a pure function of (seed, tree index, node id) — so the
+    /// result is independent of worker count and completion order.
+    fn train_frontier(&mut self, root_active: ActiveSet) -> Tree {
+        let t0 = Instant::now();
+        let env = self.env();
+        // One draw from the tree's sequential stream (post-bag state) keys
+        // every node stream of this tree.
+        let node_seed = self.rng.next_u64();
+        let mut nodes: Vec<Node> = vec![placeholder_leaf()];
+        let mut frontier = vec![FrontierItem {
+            node_id: 0,
+            active: root_active,
+            depth: 0,
+        }];
+        let mut level = 0usize;
+        while !frontier.is_empty() {
+            let lt0 = Instant::now();
+            let (outcomes, mut lstats) = self.process_level(&env, node_seed, &frontier);
+            lstats.width = frontier.len() as u64;
+            lstats.wall_ns = lt0.elapsed().as_nanos() as u64;
+            self.stats.record_level(level, lstats);
+            // Apply outcomes in frontier order: child ids (and therefore
+            // their RNG streams) depend only on this deterministic order.
+            let mut next = Vec::new();
+            for (item, outcome) in frontier.drain(..).zip(outcomes) {
+                match outcome {
+                    NodeOutcome::Leaf(node) => nodes[item.node_id] = node,
+                    NodeOutcome::Split {
+                        projection,
+                        split,
+                        left,
+                        right,
+                    } => {
+                        let li = nodes.len();
+                        nodes.push(placeholder_leaf());
+                        nodes.push(placeholder_leaf());
+                        nodes[item.node_id] = Node::Split {
+                            projection,
+                            threshold: split.threshold,
+                            left: li as u32,
+                            right: li as u32 + 1,
+                        };
+                        next.push(FrontierItem {
+                            node_id: li,
+                            active: left,
+                            depth: item.depth + 1,
+                        });
+                        next.push(FrontierItem {
+                            node_id: li + 1,
+                            active: right,
+                            depth: item.depth + 1,
+                        });
+                    }
+                }
+            }
+            frontier = next;
+            level += 1;
         }
         self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
         Tree {
@@ -249,295 +467,663 @@ impl<'a> TreeTrainer<'a> {
         }
     }
 
-    fn make_leaf(&mut self, active: &ActiveSet) -> Node {
-        let counts = active.class_counts(self.data);
-        let total = counts.iter().sum::<usize>().max(1) as f32;
-        let posterior: Vec<f32> = counts.iter().map(|&c| c as f32 / total).collect();
-        let majority = counts
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, &c)| c)
-            .map_or(0, |(i, _)| i as u16);
-        Node::Leaf {
-            posterior,
-            majority,
-            n: active.len() as u32,
-        }
-    }
-
-    /// Attempt to split a node; `None` ⇒ leaf.
-    fn split_node(
+    /// Process one frontier level: classify into tiers, fan the CPU tiers
+    /// out over the worker pool, submit the accelerator tier as one batched
+    /// call. Returns outcomes in frontier order plus tier statistics.
+    fn process_level(
         &mut self,
-        active: &ActiveSet,
-        depth: usize,
-    ) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
-        let n = active.len();
-        let cfg = self.config;
-        if n < 2 * cfg.min_leaf.max(1)
-            || (cfg.max_depth > 0 && depth >= cfg.max_depth)
-            || active.is_pure(self.data)
-        {
-            return None;
-        }
-        let parent_counts = active.class_counts(self.data);
-        let mut method = self.splitter.choose(n);
-        self.stats.record_node(depth, method, n);
-
-        // Candidate projections.
-        self.stats.time(depth, Component::SampleProjections, || {
-            sample_projections(
-                &mut self.matrix,
-                &mut self.rng,
-                self.data.n_features(),
-                self.source,
-                cfg,
-            )
-        });
-
-        // Labels gathered once per node, shared across projections.
-        gather_labels(self.data, &active.indices, &mut self.labels);
-
-        if method == SplitMethod::Accelerator {
-            if let Some(result) = self.try_accel_split(active, depth, &parent_counts) {
-                return result.map(|(proj, split)| {
-                    let (l, r) = self.partition(active, &proj, split.threshold, depth);
-                    (proj, split, l, r)
-                });
-            }
-            // Accelerator unavailable / shape mismatch: CPU fallback.
-            method = SplitMethod::VectorizedHistogram;
-        }
-
-        // Fused engine (default): one blocked gather→route→accumulate pass
-        // over all projections — no materialized projection vectors. Exact
-        // (sort-based) nodes keep the classic path: the sort needs the full
-        // value vector anyway, so there is nothing to fuse away.
-        if cfg.fused
-            && matches!(
-                method,
-                SplitMethod::Histogram | SplitMethod::VectorizedHistogram
-            )
-        {
-            let routing = match method {
-                SplitMethod::Histogram => Routing::BinarySearch,
-                _ => Routing::TwoLevel,
-            };
-            let fused_best = {
-                let data = self.data;
-                let projections = &self.matrix.projections;
-                let indices = &active.indices;
-                let labels = &self.labels;
-                let rng = &mut self.rng;
-                let scratch = &mut self.scratch;
-                self.stats.time(depth, Component::FusedSplit, || {
-                    best_split_fused(
-                        data,
-                        projections,
-                        indices,
-                        labels,
-                        &parent_counts,
-                        cfg.criterion,
-                        cfg.n_bins,
-                        cfg.min_leaf,
-                        routing,
-                        rng,
-                        scratch,
-                    )
-                })
-            };
-            let (pi, split) = fused_best?;
-            let proj = self.matrix.projections[pi].clone();
-            // Only the winner is ever materialized: re-apply it once for
-            // the partition (classic kept a full buffer per projection).
-            let (l, r) = self.partition(active, &proj, split.threshold, depth);
-            debug_assert_eq!(l.len(), split.n_left);
-            debug_assert_eq!(r.len(), split.n_right);
-            return Some((proj, split, l, r));
-        }
-
-        let mut best: Option<(usize, Split)> = None;
-        for pi in 0..self.matrix.projections.len() {
-            let proj = &self.matrix.projections[pi];
-            if proj.is_empty() {
+        env: &NodeEnv<'a>,
+        node_seed: u64,
+        frontier: &[FrontierItem],
+    ) -> (Vec<NodeOutcome>, LevelStats) {
+        let cfg = env.config;
+        let mut lstats = LevelStats::default();
+        let mut cpu: Vec<usize> = Vec::new();
+        let mut accel_tier: Vec<usize> = Vec::new();
+        for (i, item) in frontier.iter().enumerate() {
+            let n = item.active.len();
+            let splittable = n >= 2 * cfg.min_leaf.max(1)
+                && (cfg.max_depth == 0 || item.depth < cfg.max_depth);
+            if !splittable {
+                lstats.leaf_nodes += 1;
+                cpu.push(i);
                 continue;
             }
-            {
-                // Borrow dance: apply_projection needs &self.data and the
-                // buffers disjointly.
-                let data = self.data;
-                let values = &mut self.values;
-                let indices = &active.indices;
-                self.stats.time(depth, Component::ApplyProjection, || {
-                    apply_projection(data, proj, indices, values);
-                });
-            }
-            let split = {
-                let values = &self.values;
-                let labels = &self.labels;
-                let rng = &mut self.rng;
-                let scratch = &mut self.scratch;
-                let stats = &mut self.stats;
-                // Exact's sort and histogram's boundary+fill both count as
-                // "build"; best_split fuses build and edge-scan, so the
-                // whole search is attributed to BuildHistogram — the
-                // dominant part (paper Fig 5; the scan is O(bins), the
-                // fill O(n)).
-                stats.time(depth, Component::BuildHistogram, || {
-                    best_split(
-                        method,
-                        values,
-                        labels,
-                        &parent_counts,
-                        cfg.criterion,
-                        cfg.n_bins,
-                        cfg.min_leaf,
-                        rng,
-                        scratch,
-                    )
-                })
-            };
-            if let Some(s) = split {
-                if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
-                    best = Some((pi, s));
-                    std::mem::swap(&mut self.values, &mut self.best_values);
+            match env.splitter.choose(n) {
+                SplitMethod::Accelerator if self.accel.is_some() => {
+                    lstats.accel_nodes += 1;
+                    accel_tier.push(i);
+                }
+                SplitMethod::Exact => {
+                    lstats.sort_nodes += 1;
+                    cpu.push(i);
+                }
+                _ => {
+                    lstats.hist_nodes += 1;
+                    cpu.push(i);
                 }
             }
         }
 
-        let (pi, split) = best?;
-        let proj = self.matrix.projections[pi].clone();
-        // best_values currently holds the winning projection's values.
-        let (l, r) = {
-            let best_values = &self.best_values;
-            let threshold = split.threshold;
-            let indices = &active.indices;
-            self.stats.time(depth, Component::Partition, || {
-                partition_by_values(indices, best_values, threshold)
-            })
-        };
-        debug_assert_eq!(l.len(), split.n_left);
-        debug_assert_eq!(r.len(), split.n_right);
-        Some((proj, split, l, r))
-    }
+        let mut outcomes: Vec<Option<NodeOutcome>> = Vec::with_capacity(frontier.len());
+        outcomes.resize_with(frontier.len(), || None);
 
-    /// Partition by re-applying a projection (accelerator path, where the
-    /// winning values buffer lives on the device).
-    fn partition(
-        &mut self,
-        active: &ActiveSet,
-        proj: &Projection,
-        threshold: f32,
-        depth: usize,
-    ) -> (ActiveSet, ActiveSet) {
-        let data = self.data;
-        let values = &mut self.values;
-        apply_projection(data, proj, &active.indices, values);
-        let indices = &active.indices;
-        let values = &self.values;
-        self.stats.time(depth, Component::Partition, || {
-            partition_by_values(indices, values, threshold)
-        })
-    }
-
-    /// Batched accelerator evaluation of all projections (§4.3).
-    ///
-    /// Returns `None` when the accelerator declined (caller falls back);
-    /// `Some(None)` when the accelerator ran but found no valid split.
-    #[allow(clippy::type_complexity)]
-    fn try_accel_split(
-        &mut self,
-        active: &ActiveSet,
-        depth: usize,
-        parent_counts: &[usize],
-    ) -> Option<Option<(Projection, Split)>> {
-        self.accel.as_ref()?;
-        if parent_counts.len() != 2 {
-            return None; // accelerated kernel is binary-class only
+        let workers = self.intra_threads.min(cpu.len()).max(1);
+        if workers <= 1 {
+            let mut ns = self.pool.lease();
+            for &i in &cpu {
+                let item = &frontier[i];
+                let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+                outcomes[i] = Some(process_cpu_node(
+                    env,
+                    &mut rng,
+                    &mut self.stats,
+                    &mut ns,
+                    item,
+                ));
+            }
+            self.pool.release(ns);
+        } else {
+            let pool = &self.pool;
+            let instrument = cfg.instrument;
+            let results: Mutex<Vec<(usize, NodeOutcome)>> =
+                Mutex::new(Vec::with_capacity(cpu.len()));
+            let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
+            let cpu_ref = &cpu;
+            run_pool(workers, cpu.len(), |queue| {
+                let mut ns = pool.lease();
+                let mut local_stats = TrainStats::new(instrument);
+                let mut local: Vec<(usize, NodeOutcome)> = Vec::new();
+                while let Some(k) = queue.claim() {
+                    let i = cpu_ref[k];
+                    let item = &frontier[i];
+                    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+                    local.push((
+                        i,
+                        process_cpu_node(env, &mut rng, &mut local_stats, &mut ns, item),
+                    ));
+                }
+                pool.release(ns);
+                results.lock().unwrap().extend(local);
+                worker_stats.lock().unwrap().push(local_stats);
+            });
+            for (i, o) in results.into_inner().unwrap() {
+                outcomes[i] = Some(o);
+            }
+            for s in worker_stats.into_inner().unwrap() {
+                self.stats.merge(&s);
+            }
         }
-        let n = active.len();
-        let projs: Vec<usize> = (0..self.matrix.projections.len())
-            .filter(|&pi| !self.matrix.projections[pi].is_empty())
+
+        if !accel_tier.is_empty() {
+            lstats.accel_batches +=
+                self.process_accel_tier(env, node_seed, frontier, &accel_tier, &mut outcomes);
+        }
+
+        let outcomes: Vec<NodeOutcome> = outcomes
+            .into_iter()
+            .map(|o| o.expect("frontier node left unprocessed"))
             .collect();
-        let p = projs.len();
-        if p == 0 {
-            return Some(None);
+        (outcomes, lstats)
+    }
+
+    /// Prepare the accelerator tier's requests, submit them as one batched
+    /// call, and finalize each node (partition the winner on the CPU, or
+    /// fall back to the vectorized CPU engine on decline — continuing the
+    /// node's own RNG stream, exactly like the depth path's fallback).
+    /// Returns the number of batched calls issued (0 or 1).
+    fn process_accel_tier(
+        &mut self,
+        env: &NodeEnv<'a>,
+        node_seed: u64,
+        frontier: &[FrontierItem],
+        tier: &[usize],
+        outcomes: &mut [Option<NodeOutcome>],
+    ) -> u64 {
+        struct Pending {
+            idx: usize,
+            rng: Pcg64,
+            matrix: ProjectionMatrix,
+            parent_counts: Vec<usize>,
+            projs: Vec<usize>,
         }
-        let n_bins = self.config.n_bins;
-        // Materialize values [p, n] and per-projection boundaries [p, n_bins]
-        // (padded layout, same as the CPU histogram path).
-        self.accel_values.clear();
-        self.accel_values.reserve(p * n);
-        self.accel_boundaries.clear();
-        self.accel_boundaries.reserve(p * n_bins);
-        {
-            let data = self.data;
-            let indices = &active.indices;
-            for &pi in &projs {
-                let proj = &self.matrix.projections[pi];
-                let base = self.accel_values.len();
-                self.stats.time(depth, Component::ApplyProjection, || {
-                    apply_projection(data, proj, indices, &mut self.values);
+        let mut ns = self.pool.lease();
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut requests: Vec<NodeSplitRequest> = Vec::new();
+        for &i in tier {
+            let item = &frontier[i];
+            let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+            if item.active.is_pure(env.data) {
+                outcomes[i] = Some(NodeOutcome::Leaf(make_leaf(env.data, &item.active)));
+                self.stats.record_leaf();
+                continue;
+            }
+            let parent_counts = item.active.class_counts(env.data);
+            self.stats
+                .record_node(item.depth, SplitMethod::Accelerator, item.active.len());
+            {
+                let matrix = &mut ns.matrix;
+                let n_features = env.data.n_features();
+                let source = env.source;
+                let rng = &mut rng;
+                self.stats.time(item.depth, Component::SampleProjections, || {
+                    sample_projections(matrix, rng, n_features, source, env.config)
                 });
-                self.accel_values.extend_from_slice(&self.values);
-                debug_assert_eq!(self.accel_values.len(), base + n);
-                let ok = crate::split::histogram::build_boundaries(
-                    &self.values,
-                    n_bins,
-                    &mut self.rng,
-                    &mut self.scratch,
-                );
-                if ok {
-                    self.accel_boundaries.extend_from_slice(&self.scratch.boundaries);
-                } else {
-                    // Constant feature: all-∞ boundaries yield zero gain.
-                    self.accel_boundaries
-                        .extend(std::iter::repeat(f32::INFINITY).take(n_bins));
+            }
+            gather_labels(env.data, &item.active.indices, &mut ns.labels);
+            // The accelerated kernel is binary-class only, like the depth
+            // path's gate in `try_accel_split`.
+            if parent_counts.len() == 2 {
+                if let Some((req, projs)) = build_accel_request(
+                    env,
+                    &mut rng,
+                    &mut self.stats,
+                    &mut ns,
+                    &item.active,
+                    item.depth,
+                ) {
+                    requests.push(req);
+                    pending.push(Pending {
+                        idx: i,
+                        rng,
+                        matrix: ns.matrix.clone(),
+                        parent_counts,
+                        projs,
+                    });
+                    continue;
                 }
             }
+            // No request possible (multi-class, or no usable projection):
+            // CPU fallback with the already-sampled projections.
+            outcomes[i] = Some(self.finish_on_cpu(env, &mut rng, &mut ns, &parent_counts, item));
         }
-        let accel = self.accel.as_mut()?;
-        let result = {
-            let accel_values = &self.accel_values;
-            let accel_boundaries = &self.accel_boundaries;
-            let labels = &self.labels;
-            let min_leaf = self.config.min_leaf;
-            self.stats.time(depth, Component::Accelerator, || {
-                accel.best_node_split(
-                    accel_values,
-                    p,
-                    n,
+
+        let mut batches = 0u64;
+        let responses: Vec<Option<(usize, usize, f64)>> = if requests.is_empty() {
+            Vec::new()
+        } else {
+            match self.accel.as_deref_mut() {
+                Some(accel) => {
+                    batches = 1;
+                    let depth = frontier[tier[0]].depth;
+                    let reqs = &requests;
+                    self.stats
+                        .time(depth, Component::Accelerator, || accel.split_nodes_batch(reqs))
+                }
+                None => vec![None; requests.len()],
+            }
+        };
+        debug_assert_eq!(responses.len(), requests.len());
+
+        for ((pend, req), resp) in pending.into_iter().zip(requests).zip(responses) {
+            let item = &frontier[pend.idx];
+            let mut rng = pend.rng;
+            let outcome = match decode_accel_response(&req, &pend.projs, &pend.matrix, resp) {
+                AccelDecision::Split(proj, split) => {
+                    let (l, r) = partition_reapply(
+                        env,
+                        &mut self.stats,
+                        &mut ns,
+                        &item.active,
+                        &proj,
+                        split.threshold,
+                        item.depth,
+                    );
+                    NodeOutcome::Split {
+                        projection: proj,
+                        split,
+                        left: l,
+                        right: r,
+                    }
+                }
+                AccelDecision::NoSplit => {
+                    self.stats.record_leaf();
+                    NodeOutcome::Leaf(make_leaf(env.data, &item.active))
+                }
+                AccelDecision::Declined => {
+                    // Device declined: continue the node's RNG stream on the
+                    // CPU with the projections (and labels) it already
+                    // sampled — the request carries the gathered labels.
+                    ns.matrix = pend.matrix;
+                    ns.labels = req.labels;
+                    self.finish_on_cpu(env, &mut rng, &mut ns, &pend.parent_counts, item)
+                }
+            };
+            outcomes[pend.idx] = Some(outcome);
+        }
+        self.pool.release(ns);
+        batches
+    }
+
+    /// Run the vectorized CPU search for a node whose projections are
+    /// already in `ns.matrix` / labels in `ns.labels` (the accelerator
+    /// fallback, mirroring the depth path's decline handling).
+    fn finish_on_cpu(
+        &mut self,
+        env: &NodeEnv<'a>,
+        rng: &mut Pcg64,
+        ns: &mut NodeScratch,
+        parent_counts: &[usize],
+        item: &FrontierItem,
+    ) -> NodeOutcome {
+        let searched = search_cpu(
+            env,
+            rng,
+            &mut self.stats,
+            ns,
+            SplitMethod::VectorizedHistogram,
+            parent_counts,
+            &item.active,
+            item.depth,
+        );
+        match searched {
+            Some((projection, split, left, right)) => NodeOutcome::Split {
+                projection,
+                split,
+                left,
+                right,
+            },
+            None => {
+                self.stats.record_leaf();
+                NodeOutcome::Leaf(make_leaf(env.data, &item.active))
+            }
+        }
+    }
+}
+
+fn placeholder_leaf() -> Node {
+    Node::Leaf {
+        posterior: Vec::new(),
+        majority: 0,
+        n: 0,
+    }
+}
+
+/// Build the leaf node for an active set.
+fn make_leaf(data: &Dataset, active: &ActiveSet) -> Node {
+    let counts = active.class_counts(data);
+    let total = counts.iter().sum::<usize>().max(1) as f32;
+    let posterior: Vec<f32> = counts.iter().map(|&c| c as f32 / total).collect();
+    let majority = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map_or(0, |(i, _)| i as u16);
+    Node::Leaf {
+        posterior,
+        majority,
+        n: active.len() as u32,
+    }
+}
+
+/// Process one CPU-tier frontier node end to end.
+fn process_cpu_node(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    item: &FrontierItem,
+) -> NodeOutcome {
+    match split_node(env, rng, stats, ns, None, &item.active, item.depth) {
+        Some((projection, split, left, right)) => NodeOutcome::Split {
+            projection,
+            split,
+            left,
+            right,
+        },
+        None => {
+            stats.record_leaf();
+            NodeOutcome::Leaf(make_leaf(env.data, &item.active))
+        }
+    }
+}
+
+/// Attempt to split a node; `None` ⇒ leaf. The single split search shared
+/// by both growth modes (the frontier accelerator tier batches the
+/// accelerator call separately and reuses [`search_cpu`] for fallback).
+fn split_node(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    accel: Option<&mut dyn NodeAccel>,
+    active: &ActiveSet,
+    depth: usize,
+) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
+    let n = active.len();
+    let cfg = env.config;
+    if n < 2 * cfg.min_leaf.max(1)
+        || (cfg.max_depth > 0 && depth >= cfg.max_depth)
+        || active.is_pure(env.data)
+    {
+        return None;
+    }
+    let parent_counts = active.class_counts(env.data);
+    let mut method = env.splitter.choose(n);
+    stats.record_node(depth, method, n);
+
+    // Candidate projections.
+    {
+        let matrix = &mut ns.matrix;
+        let n_features = env.data.n_features();
+        let source = env.source;
+        let rng = &mut *rng;
+        stats.time(depth, Component::SampleProjections, || {
+            sample_projections(matrix, rng, n_features, source, cfg)
+        });
+    }
+
+    // Labels gathered once per node, shared across projections.
+    gather_labels(env.data, &active.indices, &mut ns.labels);
+
+    if method == SplitMethod::Accelerator {
+        if let Some(acc) = accel {
+            match try_accel_split(env, rng, stats, ns, acc, active, depth, &parent_counts) {
+                Some(Some((proj, split))) => {
+                    let (l, r) =
+                        partition_reapply(env, stats, ns, active, &proj, split.threshold, depth);
+                    return Some((proj, split, l, r));
+                }
+                Some(None) => return None,
+                None => {} // accelerator declined: CPU fallback
+            }
+        }
+        // Accelerator unavailable / shape mismatch: CPU fallback.
+        method = SplitMethod::VectorizedHistogram;
+    }
+
+    search_cpu(env, rng, stats, ns, method, &parent_counts, active, depth)
+}
+
+/// CPU split search over the projections already sampled into `ns.matrix`
+/// (labels already gathered into `ns.labels`): fused engine by default,
+/// classic materialize-then-route otherwise, plus the winning partition.
+#[allow(clippy::too_many_arguments)]
+fn search_cpu(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    method: SplitMethod,
+    parent_counts: &[usize],
+    active: &ActiveSet,
+    depth: usize,
+) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
+    let cfg = env.config;
+    // Fused engine (default): one blocked gather→route→accumulate pass
+    // over all projections — no materialized projection vectors. Exact
+    // (sort-based) nodes keep the classic path: the sort needs the full
+    // value vector anyway, so there is nothing to fuse away.
+    if cfg.fused
+        && matches!(
+            method,
+            SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+        )
+    {
+        let routing = match method {
+            SplitMethod::Histogram => Routing::BinarySearch,
+            _ => Routing::TwoLevel,
+        };
+        let fused_best = {
+            let data = env.data;
+            let projections = &ns.matrix.projections;
+            let indices = &active.indices;
+            let labels = &ns.labels;
+            let scratch = &mut ns.scratch;
+            let rng = &mut *rng;
+            stats.time(depth, Component::FusedSplit, || {
+                best_split_fused(
+                    data,
+                    projections,
+                    indices,
                     labels,
-                    accel_boundaries,
-                    n_bins,
-                    min_leaf,
+                    parent_counts,
+                    cfg.criterion,
+                    cfg.n_bins,
+                    cfg.min_leaf,
+                    routing,
+                    rng,
+                    scratch,
                 )
             })
         };
-        let (local_pi, edge, gain) = result?;
-        if gain <= 1e-12 || local_pi >= p || edge >= n_bins - 1 {
-            return Some(None);
-        }
-        let pi = projs[local_pi];
-        let threshold = self.accel_boundaries[local_pi * n_bins + edge];
-        if !threshold.is_finite() {
-            return Some(None);
-        }
-        // Reconstruct exact left/right counts on CPU (cheap single pass).
-        let vals = &self.accel_values[local_pi * n..(local_pi + 1) * n];
-        let n_left = vals.iter().filter(|&&v| v < threshold).count();
-        if n_left == 0 || n_left == n {
-            return Some(None);
-        }
-        Some(Some((
-            self.matrix.projections[pi].clone(),
-            Split {
-                threshold,
-                gain,
-                n_left,
-                n_right: n - n_left,
-            },
-        )))
+        let (pi, split) = fused_best?;
+        let proj = ns.matrix.projections[pi].clone();
+        // Only the winner is ever materialized: re-apply it once for
+        // the partition (classic kept a full buffer per projection).
+        let (l, r) = partition_reapply(env, stats, ns, active, &proj, split.threshold, depth);
+        debug_assert_eq!(l.len(), split.n_left);
+        debug_assert_eq!(r.len(), split.n_right);
+        return Some((proj, split, l, r));
     }
+
+    let mut best: Option<(usize, Split)> = None;
+    for pi in 0..ns.matrix.projections.len() {
+        if ns.matrix.projections[pi].is_empty() {
+            continue;
+        }
+        {
+            // Borrow dance: apply_projection needs the data and the
+            // buffers disjointly.
+            let data = env.data;
+            let proj = &ns.matrix.projections[pi];
+            let values = &mut ns.values;
+            let indices = &active.indices;
+            stats.time(depth, Component::ApplyProjection, || {
+                apply_projection(data, proj, indices, values);
+            });
+        }
+        let split = {
+            let values = &ns.values;
+            let labels = &ns.labels;
+            let scratch = &mut ns.scratch;
+            let rng = &mut *rng;
+            // Exact's sort and histogram's boundary+fill both count as
+            // "build"; best_split fuses build and edge-scan, so the
+            // whole search is attributed to BuildHistogram — the
+            // dominant part (paper Fig 5; the scan is O(bins), the
+            // fill O(n)).
+            stats.time(depth, Component::BuildHistogram, || {
+                best_split(
+                    method,
+                    values,
+                    labels,
+                    parent_counts,
+                    cfg.criterion,
+                    cfg.n_bins,
+                    cfg.min_leaf,
+                    rng,
+                    scratch,
+                )
+            })
+        };
+        if let Some(s) = split {
+            if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                best = Some((pi, s));
+                std::mem::swap(&mut ns.values, &mut ns.best_values);
+            }
+        }
+    }
+
+    let (pi, split) = best?;
+    let proj = ns.matrix.projections[pi].clone();
+    // best_values currently holds the winning projection's values.
+    let (l, r) = {
+        let best_values = &ns.best_values;
+        let threshold = split.threshold;
+        let indices = &active.indices;
+        stats.time(depth, Component::Partition, || {
+            partition_by_values(indices, best_values, threshold)
+        })
+    };
+    debug_assert_eq!(l.len(), split.n_left);
+    debug_assert_eq!(r.len(), split.n_right);
+    Some((proj, split, l, r))
+}
+
+/// Partition by re-applying a projection (used when the winning values
+/// buffer no longer exists: fused winners and accelerator winners).
+fn partition_reapply(
+    env: &NodeEnv,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    active: &ActiveSet,
+    proj: &Projection,
+    threshold: f32,
+    depth: usize,
+) -> (ActiveSet, ActiveSet) {
+    apply_projection(env.data, proj, &active.indices, &mut ns.values);
+    let indices = &active.indices;
+    let values = &ns.values;
+    stats.time(depth, Component::Partition, || {
+        partition_by_values(indices, values, threshold)
+    })
+}
+
+/// Batched accelerator evaluation of all projections (§4.3), depth mode.
+///
+/// Composed from the same primitives the frontier tier uses —
+/// [`build_accel_request`] to materialize, [`decode_accel_response`] to
+/// validate the winner — so the two growth modes' accelerator semantics
+/// cannot drift apart.
+///
+/// Returns `None` when the accelerator declined (caller falls back);
+/// `Some(None)` when the accelerator ran but found no valid split.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn try_accel_split(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    accel: &mut dyn NodeAccel,
+    active: &ActiveSet,
+    depth: usize,
+    parent_counts: &[usize],
+) -> Option<Option<(Projection, Split)>> {
+    if parent_counts.len() != 2 {
+        return None; // accelerated kernel is binary-class only
+    }
+    let (req, projs) = match build_accel_request(env, rng, stats, ns, active, depth) {
+        Some(x) => x,
+        None => return Some(None), // no usable projection: leaf
+    };
+    let resp = stats.time(depth, Component::Accelerator, || {
+        accel.best_node_split(
+            &req.values,
+            req.p,
+            req.n,
+            &req.labels,
+            &req.boundaries,
+            req.n_bins,
+            req.min_leaf,
+        )
+    });
+    match decode_accel_response(&req, &projs, &ns.matrix, resp) {
+        AccelDecision::Split(proj, split) => Some(Some((proj, split))),
+        AccelDecision::NoSplit => Some(None),
+        AccelDecision::Declined => None,
+    }
+}
+
+/// Materialize one node's accelerator request (values, labels,
+/// boundaries) from the projections already in `ns.matrix` — the single
+/// materialization used by both growth modes ([`try_accel_split`] submits
+/// it immediately; the frontier tier collects a whole level's worth before
+/// one batched call). Returns `None` when no projection is usable (caller
+/// falls back to the CPU engines).
+fn build_accel_request(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    active: &ActiveSet,
+    depth: usize,
+) -> Option<(NodeSplitRequest, Vec<usize>)> {
+    let n = active.len();
+    let projs: Vec<usize> = (0..ns.matrix.projections.len())
+        .filter(|&pi| !ns.matrix.projections[pi].is_empty())
+        .collect();
+    let p = projs.len();
+    if p == 0 {
+        return None;
+    }
+    let n_bins = env.config.n_bins;
+    let mut values: Vec<f32> = Vec::with_capacity(p * n);
+    let mut boundaries: Vec<f32> = Vec::with_capacity(p * n_bins);
+    for &pi in &projs {
+        {
+            let data = env.data;
+            let proj = &ns.matrix.projections[pi];
+            let indices = &active.indices;
+            let out = &mut ns.values;
+            stats.time(depth, Component::ApplyProjection, || {
+                apply_projection(data, proj, indices, out);
+            });
+        }
+        values.extend_from_slice(&ns.values);
+        let ok =
+            crate::split::histogram::build_boundaries(&ns.values, n_bins, rng, &mut ns.scratch);
+        if ok {
+            boundaries.extend_from_slice(&ns.scratch.boundaries);
+        } else {
+            // Constant feature: all-∞ boundaries yield zero gain.
+            boundaries.extend(std::iter::repeat(f32::INFINITY).take(n_bins));
+        }
+    }
+    let req = NodeSplitRequest {
+        values,
+        p,
+        n,
+        labels: ns.labels.clone(),
+        boundaries,
+        n_bins,
+        min_leaf: env.config.min_leaf,
+    };
+    Some((req, projs))
+}
+
+/// What one batched-response slot means for its node.
+enum AccelDecision {
+    Split(Projection, Split),
+    NoSplit,
+    Declined,
+}
+
+/// Decode one response of a batched call, mirroring the depth path's
+/// winner validation in [`try_accel_split`].
+fn decode_accel_response(
+    req: &NodeSplitRequest,
+    projs: &[usize],
+    matrix: &ProjectionMatrix,
+    resp: Option<(usize, usize, f64)>,
+) -> AccelDecision {
+    let (local_pi, edge, gain) = match resp {
+        Some(r) => r,
+        None => return AccelDecision::Declined,
+    };
+    let (p, n, n_bins) = (req.p, req.n, req.n_bins);
+    if gain <= 1e-12 || local_pi >= p || edge >= n_bins - 1 {
+        return AccelDecision::NoSplit;
+    }
+    let threshold = req.boundaries[local_pi * n_bins + edge];
+    if !threshold.is_finite() {
+        return AccelDecision::NoSplit;
+    }
+    // Reconstruct exact left/right counts on CPU (cheap single pass).
+    let vals = &req.values[local_pi * n..(local_pi + 1) * n];
+    let n_left = vals.iter().filter(|&&v| v < threshold).count();
+    if n_left == 0 || n_left == n {
+        return AccelDecision::NoSplit;
+    }
+    AccelDecision::Split(
+        matrix.projections[projs[local_pi]].clone(),
+        Split {
+            threshold,
+            gain,
+            n_left,
+            n_right: n - n_left,
+        },
+    )
 }
 
 /// Split an active set by `values[i] < threshold`.
@@ -582,7 +1168,7 @@ fn sample_projections(
 mod tests {
     use super::*;
     use crate::data::synth::trunk::TrunkConfig;
-    use crate::split::SplitStrategy;
+    use crate::split::{SplitCriterion, SplitStrategy};
 
     fn trunk(n: usize, d: usize, seed: u64) -> Dataset {
         TrunkConfig {
@@ -647,6 +1233,97 @@ mod tests {
     }
 
     #[test]
+    fn both_growth_modes_reach_purity_and_respect_limits() {
+        let data = trunk(700, 8, 19);
+        for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+            let cfg = ForestConfig {
+                growth,
+                ..Default::default()
+            };
+            let tree = train_one(&data, &cfg, 20);
+            assert!(tree.is_pure(), "{growth:?}");
+            let capped = ForestConfig {
+                growth,
+                max_depth: 4,
+                min_leaf: 10,
+                ..Default::default()
+            };
+            let tree = train_one(&data, &capped, 20);
+            assert!(tree.depth() <= 4, "{growth:?}");
+            for node in &tree.nodes {
+                if let Node::Leaf { n, .. } = node {
+                    assert!(*n >= 10 || tree.nodes.len() == 1, "{growth:?}: leaf {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_is_invariant_to_intra_thread_count() {
+        let data = trunk(900, 12, 23);
+        for strategy in [SplitStrategy::Exact, SplitStrategy::DynamicVectorized] {
+            let cfg = ForestConfig {
+                strategy,
+                growth: GrowthMode::Frontier,
+                ..Default::default()
+            };
+            let train_with = |threads: usize| {
+                let mut t = TreeTrainer::new(
+                    &data,
+                    &cfg,
+                    ProjectionSource::SparseOblique,
+                    Pcg64::new(24),
+                )
+                .with_intra_threads(threads);
+                t.train(ActiveSet::full(data.n_samples()))
+            };
+            let a = train_with(1);
+            for threads in [2, 5] {
+                let b = train_with(threads);
+                assert_eq!(a.nodes.len(), b.nodes.len(), "{strategy:?} x{threads}");
+                for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                    match (x, y) {
+                        (
+                            Node::Split {
+                                projection: pa,
+                                threshold: ta,
+                                left: la,
+                                right: ra,
+                            },
+                            Node::Split {
+                                projection: pb,
+                                threshold: tb,
+                                left: lb,
+                                right: rb,
+                            },
+                        ) => {
+                            assert_eq!(pa, pb, "{strategy:?} x{threads}");
+                            assert_eq!(ta.to_bits(), tb.to_bits(), "{strategy:?} x{threads}");
+                            assert_eq!((la, ra), (lb, rb), "{strategy:?} x{threads}");
+                        }
+                        (
+                            Node::Leaf {
+                                posterior: pa,
+                                majority: ma,
+                                n: na,
+                            },
+                            Node::Leaf {
+                                posterior: pb,
+                                majority: mb,
+                                n: nb,
+                            },
+                        ) => {
+                            assert_eq!(pa, pb, "{strategy:?} x{threads}");
+                            assert_eq!((ma, na), (mb, nb), "{strategy:?} x{threads}");
+                        }
+                        _ => panic!("{strategy:?} x{threads}: node kind differs"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn max_depth_respected() {
         let data = trunk(2000, 8, 5);
         let cfg = ForestConfig {
@@ -675,22 +1352,58 @@ mod tests {
     #[test]
     fn node_links_are_consistent() {
         let data = trunk(400, 8, 9);
-        let cfg = ForestConfig::default();
-        let tree = train_one(&data, &cfg, 10);
-        let mut seen = vec![false; tree.nodes.len()];
-        // BFS from root must reach every node exactly once.
-        let mut queue = vec![0usize];
-        while let Some(i) = queue.pop() {
-            assert!(!seen[i], "node {i} reachable twice");
-            seen[i] = true;
-            if let Node::Split { left, right, .. } = &tree.nodes[i] {
-                assert_ne!(*left, u32::MAX);
-                assert_ne!(*right, u32::MAX);
-                queue.push(*left as usize);
-                queue.push(*right as usize);
+        for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+            let cfg = ForestConfig {
+                growth,
+                ..Default::default()
+            };
+            let tree = train_one(&data, &cfg, 10);
+            let mut seen = vec![false; tree.nodes.len()];
+            // BFS from root must reach every node exactly once.
+            let mut queue = vec![0usize];
+            while let Some(i) = queue.pop() {
+                assert!(!seen[i], "{growth:?}: node {i} reachable twice");
+                seen[i] = true;
+                if let Node::Split { left, right, .. } = &tree.nodes[i] {
+                    assert_ne!(*left, u32::MAX);
+                    assert_ne!(*right, u32::MAX);
+                    assert!(*left as usize > i, "{growth:?}: child before parent");
+                    queue.push(*left as usize);
+                    queue.push(*right as usize);
+                }
             }
+            assert!(seen.iter().all(|&s| s), "{growth:?}: orphan nodes");
         }
-        assert!(seen.iter().all(|&s| s), "orphan nodes");
+    }
+
+    #[test]
+    fn depth_is_iterative_on_degenerate_chain() {
+        // A pure right-spine chain deep enough that the old recursive
+        // depth() would overflow the (2 MiB test-thread) stack.
+        let k = 150_000usize;
+        let mut nodes = Vec::with_capacity(2 * k + 1);
+        for i in 0..k {
+            let base = (2 * i) as u32;
+            nodes.push(Node::Split {
+                projection: Projection::axis(0),
+                threshold: 0.5,
+                left: base + 1,
+                right: base + 2,
+            });
+            nodes.push(Node::Leaf {
+                posterior: vec![1.0, 0.0],
+                majority: 0,
+                n: 1,
+            });
+        }
+        nodes.push(Node::Leaf {
+            posterior: vec![0.0, 1.0],
+            majority: 1,
+            n: 1,
+        });
+        let tree = Tree { nodes, n_classes: 2 };
+        assert_eq!(tree.depth(), k);
+        assert_eq!(tree.n_leaves(), k + 1);
     }
 
     #[test]
@@ -717,7 +1430,7 @@ mod tests {
     }
 
     #[test]
-    fn instrumentation_counts_nodes() {
+    fn instrumentation_counts_nodes_and_levels() {
         let data = trunk(400, 8, 13);
         let cfg = ForestConfig {
             instrument: true,
@@ -732,6 +1445,13 @@ mod tests {
         assert_eq!(t.stats.n_leaves as usize, tree.n_leaves());
         assert!(t.stats.wall_ns > 0);
         assert!(!t.stats.by_depth.is_empty());
+        // Frontier growth (the default) also records per-level stats: one
+        // entry per level, level 0 has width 1 (the root).
+        assert_eq!(t.stats.by_level.len(), tree.depth() + 1);
+        assert_eq!(t.stats.by_level[0].width, 1);
+        let widths: u64 = t.stats.by_level.iter().map(|l| l.width).sum();
+        assert_eq!(widths as usize, tree.nodes.len());
+        assert!(!t.stats.frontier_table().is_empty());
     }
 
     /// A mock accelerator that replays the CPU vectorized path, letting us
@@ -755,7 +1475,7 @@ mod tests {
             for &l in labels {
                 parent[l as usize] += 1;
             }
-            let crit = crate::split::SplitCriterion::Entropy;
+            let crit = SplitCriterion::Entropy;
             let mut best: Option<(usize, usize, f64)> = None;
             for pi in 0..p {
                 let vals = &values[pi * n..(pi + 1) * n];
@@ -807,13 +1527,96 @@ mod tests {
         };
         cfg.thresholds.sort_below = 64;
         cfg.thresholds.accel_above = 200;
-        let mut accel = MockAccel { calls: 0 };
-        let mut t =
-            TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(16))
-                .with_accel(&mut accel);
+        for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+            cfg.growth = growth;
+            let mut accel = MockAccel { calls: 0 };
+            let mut t =
+                TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(16))
+                    .with_accel(&mut accel);
+            let tree = t.train(ActiveSet::full(data.n_samples()));
+            assert!(tree.is_pure(), "{growth:?}");
+            assert!(accel.calls > 0, "{growth:?}: accelerator never invoked");
+        }
+    }
+
+    /// Counts batched submissions to assert the frontier scheduler sends
+    /// the whole accelerator tier as one call per level.
+    struct BatchMockAccel {
+        inner: MockAccel,
+        batch_calls: usize,
+        batch_sizes: Vec<usize>,
+    }
+    impl NodeAccel for BatchMockAccel {
+        fn best_node_split(
+            &mut self,
+            values: &[f32],
+            p: usize,
+            n: usize,
+            labels: &[u16],
+            boundaries: &[f32],
+            n_bins: usize,
+            min_leaf: usize,
+        ) -> Option<(usize, usize, f64)> {
+            self.inner
+                .best_node_split(values, p, n, labels, boundaries, n_bins, min_leaf)
+        }
+
+        fn split_nodes_batch(
+            &mut self,
+            requests: &[NodeSplitRequest],
+        ) -> Vec<Option<(usize, usize, f64)>> {
+            self.batch_calls += 1;
+            self.batch_sizes.push(requests.len());
+            requests
+                .iter()
+                .map(|r| {
+                    self.inner.best_node_split(
+                        &r.values,
+                        r.p,
+                        r.n,
+                        &r.labels,
+                        &r.boundaries,
+                        r.n_bins,
+                        r.min_leaf,
+                    )
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn frontier_batches_accelerator_tier_once_per_level() {
+        let data = trunk(1600, 8, 21);
+        let mut cfg = ForestConfig {
+            strategy: SplitStrategy::Hybrid,
+            growth: GrowthMode::Frontier,
+            ..Default::default()
+        };
+        cfg.thresholds.sort_below = 64;
+        cfg.thresholds.accel_above = 100;
+        let mut accel = BatchMockAccel {
+            inner: MockAccel { calls: 0 },
+            batch_calls: 0,
+            batch_sizes: Vec::new(),
+        };
+        let mut t = TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(22))
+            .with_accel(&mut accel);
         let tree = t.train(ActiveSet::full(data.n_samples()));
         assert!(tree.is_pure());
-        assert!(accel.calls > 0, "accelerator never invoked");
+        assert!(accel.batch_calls > 0, "accelerator tier never submitted");
+        // At most one batched call per level.
+        assert!(
+            accel.batch_calls <= tree.depth() + 1,
+            "{} batches for a depth-{} tree",
+            accel.batch_calls,
+            tree.depth()
+        );
+        // And batching is real: some level carried several nodes at once.
+        assert!(
+            accel.batch_sizes.iter().any(|&s| s >= 2),
+            "no level batched >= 2 nodes: {:?}",
+            accel.batch_sizes
+        );
     }
 
     #[test]

@@ -109,10 +109,48 @@ impl DepthStats {
     }
 }
 
+/// Accumulators for one frontier level (frontier growth only): how wide
+/// the level was, how its nodes tiered, and how long the level took. Feeds
+/// the Fig-4-style "which engine at which cardinality" output with the
+/// scheduler's actual per-level decisions.
+#[derive(Clone, Debug, Default)]
+pub struct LevelStats {
+    /// Open nodes in the frontier at this level.
+    pub width: u64,
+    /// Nodes routed to the exact (sort) tier.
+    pub sort_nodes: u64,
+    /// Nodes routed to a histogram tier (binary-search or vectorized).
+    pub hist_nodes: u64,
+    /// Nodes routed to the accelerator tier.
+    pub accel_nodes: u64,
+    /// Nodes already known to be leaves at classification time (too small
+    /// or at the depth cap; purity-leaves surface in the tiers instead).
+    pub leaf_nodes: u64,
+    /// Batched accelerator submissions (0 or 1 per level per tree).
+    pub accel_batches: u64,
+    /// Wall-clock nanoseconds spent on the level.
+    pub wall_ns: u64,
+}
+
+impl LevelStats {
+    fn merge(&mut self, other: &LevelStats) {
+        self.width += other.width;
+        self.sort_nodes += other.sort_nodes;
+        self.hist_nodes += other.hist_nodes;
+        self.accel_nodes += other.accel_nodes;
+        self.leaf_nodes += other.leaf_nodes;
+        self.accel_batches += other.accel_batches;
+        self.wall_ns += other.wall_ns;
+    }
+}
+
 /// Per-tree (later per-forest) instrumentation record.
 #[derive(Clone, Debug, Default)]
 pub struct TrainStats {
     pub by_depth: Vec<DepthStats>,
+    /// Per-frontier-level scheduler stats (frontier growth only; empty
+    /// under depth growth).
+    pub by_level: Vec<LevelStats>,
     /// (node cardinality bucket log2, method) counts — Fig 4's scatter.
     pub method_by_cardinality: Vec<[u64; 4]>,
     pub n_nodes: u64,
@@ -178,6 +216,17 @@ impl TrainStats {
         self.n_leaves += 1;
     }
 
+    /// Record one frontier level's scheduler stats (frontier growth).
+    pub fn record_level(&mut self, level: usize, ls: LevelStats) {
+        if !self.enabled {
+            return;
+        }
+        if self.by_level.len() <= level {
+            self.by_level.resize(level + 1, LevelStats::default());
+        }
+        self.by_level[level].merge(&ls);
+    }
+
     pub fn merge(&mut self, other: &TrainStats) {
         if self.by_depth.len() < other.by_depth.len() {
             self.by_depth
@@ -185,6 +234,13 @@ impl TrainStats {
         }
         for (d, o) in self.by_depth.iter_mut().zip(&other.by_depth) {
             d.merge(o);
+        }
+        if self.by_level.len() < other.by_level.len() {
+            self.by_level
+                .resize(other.by_level.len(), LevelStats::default());
+        }
+        for (l, o) in self.by_level.iter_mut().zip(&other.by_level) {
+            l.merge(o);
         }
         if self.method_by_cardinality.len() < other.method_by_cardinality.len() {
             self.method_by_cardinality
@@ -204,6 +260,30 @@ impl TrainStats {
         self.max_depth = self.max_depth.max(other.max_depth);
         self.wall_ns += other.wall_ns;
         self.enabled |= other.enabled;
+    }
+
+    /// Render the frontier scheduler's per-level table (empty string when
+    /// no levels were recorded, i.e. depth growth or instrumentation off).
+    pub fn frontier_table(&self) -> String {
+        if self.by_level.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "level  width     sort/hist/accel/leaf         batches   wall_ms\n",
+        );
+        for (level, l) in self.by_level.iter().enumerate() {
+            out.push_str(&format!(
+                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>7}  {:>9.3}\n",
+                l.width,
+                l.sort_nodes,
+                l.hist_nodes,
+                l.accel_nodes,
+                l.leaf_nodes,
+                l.accel_batches,
+                l.wall_ns as f64 / 1e6,
+            ));
+        }
+        out
     }
 
     /// Render the Fig-1-style per-depth table.
@@ -265,6 +345,49 @@ mod tests {
         assert_eq!(s.method_by_cardinality[1][0], 1);
         assert_eq!(s.method_by_cardinality[10][1], 1);
         assert_eq!(s.method_by_cardinality[11][1], 1);
+    }
+
+    #[test]
+    fn level_stats_record_and_merge() {
+        let mut a = TrainStats::new(true);
+        a.record_level(
+            0,
+            LevelStats {
+                width: 1,
+                hist_nodes: 1,
+                ..Default::default()
+            },
+        );
+        a.record_level(
+            1,
+            LevelStats {
+                width: 2,
+                sort_nodes: 2,
+                wall_ns: 5,
+                ..Default::default()
+            },
+        );
+        let mut b = TrainStats::new(true);
+        b.record_level(
+            0,
+            LevelStats {
+                width: 1,
+                accel_nodes: 1,
+                accel_batches: 1,
+                ..Default::default()
+            },
+        );
+        a.merge(&b);
+        assert_eq!(a.by_level.len(), 2);
+        assert_eq!(a.by_level[0].width, 2);
+        assert_eq!(a.by_level[0].accel_batches, 1);
+        assert_eq!(a.by_level[1].sort_nodes, 2);
+        assert!(!a.frontier_table().is_empty());
+        // Disabled stats skip level recording entirely.
+        let mut c = TrainStats::new(false);
+        c.record_level(0, LevelStats::default());
+        assert!(c.by_level.is_empty());
+        assert!(c.frontier_table().is_empty());
     }
 
     #[test]

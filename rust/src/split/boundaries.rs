@@ -1,0 +1,226 @@
+//! Shared histogram-boundary construction (paper §4.1, footnote 1).
+//!
+//! Both histogram engines — the materializing path
+//! ([`super::histogram::build_boundaries`]) and the fused blocked pipeline
+//! ([`super::fused`]) — sample `n_bins − 1` random-position boundaries from
+//! the node's projected values, sort them, and fall back to range-anchored
+//! boundaries when every sampled boundary collapses onto a value that
+//! cannot separate the data. Until this module existed, that logic lived
+//! as two hand-mirrored copies whose bit-equivalence contract had to be
+//! maintained by editing both identically (the PR 2 `n_bins = 2` fix had
+//! to be applied twice). Now there is exactly one implementation, generic
+//! over how a value is fetched: the materializing path indexes a dense
+//! buffer, the fused path projects single rows on demand — the RNG call
+//! sequence (`rng.index(n)` per boundary) and every f32 comparison are
+//! shared, so the two engines *cannot* drift apart.
+
+use super::vectorized::TwoLevelLayout;
+use crate::rng::Pcg64;
+
+/// Fill `b` (length `n_bins − 1`) with sampled, sorted boundaries.
+///
+/// * `n` — number of addressable values; boundary positions are drawn as
+///   `rng.index(n)`, one draw per slot, in slot order.
+/// * `sample(i)` — the i-th value (dense buffer lookup or on-demand
+///   projection; must be bit-identical arithmetic between engines).
+/// * `min_max()` — full (min, max) of the values, evaluated **only** on
+///   the degenerate all-boundaries-equal path so the fused engine never
+///   pays a full materialization for the common case.
+///
+/// Returns `false` when the values are constant (no split possible); `b`
+/// contents are unspecified in that case. Otherwise `b` holds sorted
+/// boundaries that realize at least one non-trivial partition.
+pub fn sample_into(
+    b: &mut [f32],
+    n: usize,
+    rng: &mut Pcg64,
+    sample: impl Fn(usize) -> f32,
+    min_max: impl FnOnce() -> (f32, f32),
+) -> bool {
+    let n_real = b.len();
+    debug_assert!(n_real >= 1);
+    for slot in b.iter_mut() {
+        *slot = sample(rng.index(n));
+    }
+    b.sort_unstable_by(f32::total_cmp);
+    if b[0] == b[n_real - 1] {
+        // All sampled boundaries collapsed to one value `v`. That is only
+        // degenerate when `v` cannot separate the data (`bin 0 = {x < v}`
+        // empty or `bin >= 1 = {x >= v}` empty). Note `n_real == 1`
+        // (n_bins == 2) lands here trivially — a single sampled boundary
+        // must be KEPT when it separates, or small bin counts silently lose
+        // the §4.1 sampled-boundary semantics to the min/max fallback.
+        let (lo, hi) = min_max();
+        if lo == hi {
+            return false; // constant feature: no split possible
+        }
+        if !(lo < b[0] && b[0] <= hi) {
+            // The collapsed sampled boundary puts every sample on one side;
+            // fall back to min/max-anchored boundaries so a split is still
+            // findable (rare but happens on tiny nodes).
+            let n_bins = n_real + 1;
+            for (i, slot) in b.iter_mut().enumerate() {
+                let frac = (i + 1) as f32 / n_bins as f32;
+                *slot = lo + (hi - lo) * frac;
+            }
+        }
+    }
+    true
+}
+
+/// Coarse-vector padding for two-level routing: the last boundary of each
+/// group. `boundaries` must be sorted and +∞-padded to
+/// `groups · group_size` slots; `coarse` must be `groups` slots. The final
+/// coarse slot is the +∞ pad, so the group count can never overflow.
+#[inline]
+pub fn coarse_into(boundaries: &[f32], layout: TwoLevelLayout, coarse: &mut [f32]) {
+    debug_assert_eq!(boundaries.len(), layout.groups * layout.group_size);
+    debug_assert_eq!(coarse.len(), layout.groups);
+    for (g, c) in coarse.iter_mut().enumerate() {
+        *c = boundaries[g * layout.group_size + layout.group_size - 1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::split::SplitScratch;
+
+    /// The materializing engine's wrapper and a direct `sample_into` call
+    /// over the same dense values must agree bit-for-bit — including the
+    /// RNG state left behind. Together with the fused-engine test below,
+    /// this pins both engines to this single implementation.
+    #[test]
+    fn histogram_wrapper_is_the_shared_function() {
+        let mut meta = Pcg64::new(0xB0DA);
+        for case in 0..40u64 {
+            let seed = meta.next_u64();
+            let mut rng = Pcg64::new(seed);
+            let n = 2 + rng.index(500);
+            let n_bins = if case % 2 == 0 { 256 } else { 2 + rng.index(62) };
+            let values: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.bernoulli(0.3) {
+                        rng.index(3) as f32 // heavy duplicates
+                    } else {
+                        rng.normal() as f32
+                    }
+                })
+                .collect();
+
+            let mut rng_a = Pcg64::new(seed ^ 0xA);
+            let mut rng_b = Pcg64::new(seed ^ 0xA);
+            let mut scratch = SplitScratch::default();
+            let ok_a = crate::split::histogram::build_boundaries(
+                &values,
+                n_bins,
+                &mut rng_a,
+                &mut scratch,
+            );
+            let mut b = vec![0f32; n_bins - 1];
+            let ok_b = sample_into(
+                &mut b,
+                values.len(),
+                &mut rng_b,
+                |i| values[i],
+                || {
+                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                    for &v in &values {
+                        lo = lo.min(v);
+                        hi = hi.max(v);
+                    }
+                    (lo, hi)
+                },
+            );
+            assert_eq!(ok_a, ok_b, "seed {seed}");
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "seed {seed}: rng diverged");
+            if ok_a {
+                assert_eq!(scratch.boundaries.len(), n_bins, "seed {seed}");
+                for (k, (&x, &y)) in scratch.boundaries[..n_bins - 1].iter().zip(&b).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} boundary {k}");
+                }
+                assert_eq!(scratch.boundaries[n_bins - 1], f32::INFINITY);
+            }
+        }
+    }
+
+    /// The fused engine's per-projection boundary segments must equal the
+    /// materializing wrapper's output for the same RNG stream — i.e. both
+    /// engines consume this module, not private mirrors.
+    #[test]
+    fn fused_segments_match_histogram_wrapper() {
+        use crate::data::Dataset;
+        use crate::projection::apply::{apply_projection, gather_labels};
+        use crate::projection::Projection;
+        use crate::split::histogram::Routing;
+        use crate::split::{best_split_fused, SplitCriterion};
+
+        let mut rng = Pcg64::new(0x5EED5);
+        let n = 700;
+        let d = 6;
+        let columns: Vec<Vec<f32>> = (0..d)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let labels_raw: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+        let data = Dataset::from_columns(columns, labels_raw);
+        let projections: Vec<Projection> = (0..4)
+            .map(|_| Projection {
+                terms: vec![
+                    (rng.index(d) as u32, rng.sign()),
+                    (rng.index(d) as u32, rng.sign()),
+                ],
+            })
+            .collect();
+        let active: Vec<u32> = (0..n as u32).collect();
+        let mut labels = Vec::new();
+        gather_labels(&data, &active, &mut labels);
+        let parent = vec![n / 2, n - n / 2];
+        let n_bins = 256;
+
+        let mut rng_f = Pcg64::new(42);
+        let mut scratch = SplitScratch::default();
+        best_split_fused(
+            &data,
+            &projections,
+            &active,
+            &labels,
+            &parent,
+            SplitCriterion::Entropy,
+            n_bins,
+            1,
+            Routing::TwoLevel,
+            &mut rng_f,
+            &mut scratch,
+        );
+
+        let mut rng_c = Pcg64::new(42);
+        let mut ref_scratch = SplitScratch::default();
+        let mut values = Vec::new();
+        for (pi, proj) in projections.iter().enumerate() {
+            apply_projection(&data, proj, &active, &mut values);
+            assert!(crate::split::histogram::build_boundaries(
+                &values,
+                n_bins,
+                &mut rng_c,
+                &mut ref_scratch,
+            ));
+            let seg = &scratch.fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+            for (k, (&x, &y)) in ref_scratch.boundaries.iter().zip(seg).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "projection {pi} boundary {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_matches_vectorized_builder() {
+        let layout = TwoLevelLayout::for_bins(64).unwrap();
+        let mut boundaries: Vec<f32> = (0..63).map(|i| i as f32 * 0.5).collect();
+        boundaries.push(f32::INFINITY);
+        let mut via_vec = Vec::new();
+        crate::split::vectorized::build_coarse(&boundaries, layout, &mut via_vec);
+        let mut direct = vec![0f32; layout.groups];
+        coarse_into(&boundaries, layout, &mut direct);
+        assert_eq!(via_vec, direct);
+        assert_eq!(direct.last().copied(), Some(f32::INFINITY));
+    }
+}

@@ -106,33 +106,24 @@ pub fn best_split_fused(
             continue; // classic path skips before touching the RNG
         }
         let b = &mut fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
-        for slot in b[..n_real].iter_mut() {
-            *slot = project_row(data, proj, active[rng.index(n)]);
-        }
-        b[..n_real].sort_unstable_by(f32::total_cmp);
-        if b[0] == b[n_real - 1] {
-            // All sampled boundaries collapsed to one value: check whether
-            // the projection itself is constant (one blocked min/max pass —
-            // still no full materialization); keep the sampled boundary when
-            // it still separates, else fall back to range-anchored
-            // boundaries. Mirrors `build_boundaries` exactly.
-            let (lo, hi) = projected_min_max(data, proj, active, block);
-            if lo == hi {
-                continue; // constant projection: no split possible
-            }
-            if !(lo < b[0] && b[0] <= hi) {
-                for (i, slot) in b[..n_real].iter_mut().enumerate() {
-                    let frac = (i + 1) as f32 / n_bins as f32;
-                    *slot = lo + (hi - lo) * frac;
-                }
-            }
+        // The shared builder (`super::boundaries`, also behind the
+        // materializing path's `build_boundaries`) samples boundary values
+        // by projecting single rows on demand; the degenerate fallback's
+        // min/max is one blocked pass — still no full materialization.
+        let ok = super::boundaries::sample_into(
+            &mut b[..n_real],
+            n,
+            rng,
+            |i| project_row(data, proj, active[i]),
+            || projected_min_max(data, proj, active, &mut *block),
+        );
+        if !ok {
+            continue; // constant projection: no split possible
         }
         b[n_real] = f32::INFINITY;
         if let Some(layout) = layout {
             let coarse = &mut fused_coarse[pi * groups..(pi + 1) * groups];
-            for (g, c) in coarse.iter_mut().enumerate() {
-                *c = b[g * layout.group_size + layout.group_size - 1];
-            }
+            super::boundaries::coarse_into(b, layout, coarse);
         }
         fused_ok[pi] = true;
     }

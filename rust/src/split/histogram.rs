@@ -28,7 +28,12 @@ pub enum Routing {
 /// Sample `n_bins − 1` boundaries from `values` at random positions and lay
 /// them out (sorted, padded with +∞ to `n_bins` slots) in
 /// `scratch.boundaries`; fills `scratch.coarse` when a two-level layout
-/// applies. Returns `false` if the feature is constant (no split possible).
+/// applies. Returns `false` if the feature is constant (no split possible;
+/// `scratch.boundaries` is left shorter than `n_bins`, which the fused
+/// equivalence tests use to observe "did not fill").
+///
+/// Thin wrapper over [`super::boundaries::sample_into`] — the single
+/// boundary-construction implementation shared with the fused engine.
 pub fn build_boundaries(
     values: &[f32],
     n_bins: usize,
@@ -38,36 +43,17 @@ pub fn build_boundaries(
     debug_assert!(n_bins >= 2);
     let b = &mut scratch.boundaries;
     b.clear();
-    let n_real = n_bins - 1;
-    for _ in 0..n_real {
-        b.push(values[rng.index(values.len())]);
-    }
-    b.sort_unstable_by(f32::total_cmp);
-    if b[0] == b[n_real - 1] {
-        // All sampled boundaries collapsed to one value `v`. That is only
-        // degenerate when `v` cannot separate the data (`bin 0 = {x < v}`
-        // empty or `bin >= 1 = {x >= v}` empty). Note `n_real == 1`
-        // (n_bins == 2) lands here trivially — a single sampled boundary
-        // must be KEPT when it separates, or small bin counts silently lose
-        // the §4.1 sampled-boundary semantics to the min/max fallback.
+    b.resize(n_bins - 1, 0.0);
+    let ok = super::boundaries::sample_into(b, values.len(), rng, |i| values[i], || {
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
         for &v in values {
             lo = lo.min(v);
             hi = hi.max(v);
         }
-        if lo == hi {
-            return false; // constant feature: no split possible
-        }
-        if !(lo < b[0] && b[0] <= hi) {
-            // The collapsed sampled boundary puts every sample on one side;
-            // fall back to min/max-anchored boundaries so a split is still
-            // findable (rare but happens on tiny nodes).
-            b.clear();
-            for i in 0..n_real {
-                let frac = (i + 1) as f32 / n_bins as f32;
-                b.push(lo + (hi - lo) * frac);
-            }
-        }
+        (lo, hi)
+    });
+    if !ok {
+        return false; // constant feature: no split possible
     }
     b.push(f32::INFINITY); // pad to n_bins slots
     if let Some(layout) = TwoLevelLayout::for_bins(n_bins) {

@@ -16,6 +16,7 @@
 //! * [`dynamic`] — the paper's §4.1: pick exact vs histogram per node from
 //!   the calibrated cardinality thresholds.
 
+pub mod boundaries;
 pub mod criterion;
 pub mod dynamic;
 pub mod exact;

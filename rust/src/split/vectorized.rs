@@ -48,9 +48,8 @@ impl TwoLevelLayout {
 pub fn build_coarse(boundaries: &[f32], layout: TwoLevelLayout, coarse: &mut Vec<f32>) {
     debug_assert_eq!(boundaries.len(), layout.groups * layout.group_size);
     coarse.clear();
-    for g in 0..layout.groups {
-        coarse.push(boundaries[g * layout.group_size + layout.group_size - 1]);
-    }
+    coarse.resize(layout.groups, 0.0);
+    super::boundaries::coarse_into(boundaries, layout, coarse);
 }
 
 /// Route one value through the 16×16 structure. `coarse` and `fine` must be

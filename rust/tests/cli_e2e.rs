@@ -29,6 +29,45 @@ fn train_on_generated_data() {
 }
 
 #[test]
+fn train_with_growth_modes_and_persisted_thresholds() {
+    // Both schedulers train through the CLI; frontier is the default, depth
+    // is selectable. The thresholds file (the `calibrate --out` format) is
+    // loaded by `--thresholds` instead of re-running calibration.
+    let thresholds = tmp("soforest_e2e_thresholds.json");
+    soforest::calibrate::save_thresholds(
+        &thresholds,
+        &soforest::split::SplitThresholds {
+            sort_below: 96,
+            accel_above: usize::MAX,
+        },
+        256,
+    )
+    .unwrap();
+    for growth in ["depth", "frontier"] {
+        cli::run(&argv(&[
+            "train",
+            "--data",
+            "trunk:300:8",
+            "--trees",
+            "2",
+            "--threads",
+            "2",
+            "--growth",
+            growth,
+            "--thresholds",
+            thresholds.to_str().unwrap(),
+        ]))
+        .unwrap();
+    }
+    std::fs::remove_file(&thresholds).ok();
+    // Unknown growth mode is a hard error.
+    assert!(cli::run(&argv(&[
+        "train", "--data", "trunk:100:8", "--trees", "1", "--growth", "sideways",
+    ]))
+    .is_err());
+}
+
+#[test]
 fn train_with_instrumentation_and_dynamic_strategy() {
     cli::run(&argv(&[
         "train",

@@ -1,0 +1,134 @@
+//! Frontier-scheduler equivalence properties (in the style of
+//! `fused_equivalence.rs`): frontier growth must produce **byte-identical**
+//! forests — same v2 serialization — for any thread count, across every
+//! split strategy; and `--growth depth` must keep behaving exactly like the
+//! pre-frontier trainer (its own thread-count invariance and purity
+//! guarantees).
+
+use soforest::config::{ForestConfig, GrowthMode};
+use soforest::coordinator::train_forest;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::data::Dataset;
+use soforest::forest::serialize::write_packed;
+use soforest::forest::{Forest, PackedForest};
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+
+fn trunk(n: usize, d: usize, seed: u64) -> Dataset {
+    TrunkConfig {
+        n_samples: n,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+/// Canonical v2 bytes of a forest (the serving format the acceptance bar
+/// is stated in).
+fn v2_bytes(forest: &Forest) -> Vec<u8> {
+    let packed = PackedForest::from_forest(forest).expect("packable forest");
+    let mut bytes = Vec::new();
+    write_packed(&packed, &mut bytes).expect("in-memory serialization");
+    bytes
+}
+
+const ALL_STRATEGIES: [SplitStrategy; 6] = [
+    SplitStrategy::Exact,
+    SplitStrategy::Histogram,
+    SplitStrategy::VectorizedHistogram,
+    SplitStrategy::Dynamic,
+    SplitStrategy::DynamicVectorized,
+    SplitStrategy::Hybrid,
+];
+
+#[test]
+fn frontier_forests_are_byte_identical_across_thread_counts() {
+    let data = trunk(500, 10, 0xF0);
+    for strategy in ALL_STRATEGIES {
+        let train_with = |threads: usize| {
+            let mut cfg = ForestConfig {
+                n_trees: 3,
+                n_threads: threads,
+                strategy,
+                growth: GrowthMode::Frontier,
+                ..Default::default()
+            };
+            // Exercise all three tiers: small nodes sort, mid nodes
+            // histogram, large nodes classify to the accelerator tier (and
+            // deterministically fall back — no device in the test env).
+            cfg.thresholds.sort_below = 48;
+            if strategy == SplitStrategy::Hybrid {
+                cfg.thresholds.accel_above = 150;
+            }
+            v2_bytes(&train_forest(&data, &cfg, 0xBEEF))
+        };
+        let reference = train_with(1);
+        for threads in [2, 8] {
+            assert_eq!(
+                reference,
+                train_with(threads),
+                "{strategy:?}: forest bytes differ between 1 and {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn frontier_single_large_tree_is_thread_invariant() {
+    // The single-tree case routes the entire thread budget into the
+    // intra-tree frontier pool — the headline scaling scenario.
+    let data = trunk(1500, 12, 0xF1);
+    let train_with = |threads: usize| {
+        let cfg = ForestConfig {
+            n_trees: 1,
+            n_threads: threads,
+            growth: GrowthMode::Frontier,
+            ..Default::default()
+        };
+        v2_bytes(&train_forest(&data, &cfg, 7))
+    };
+    let reference = train_with(1);
+    for threads in [2, 8] {
+        assert_eq!(reference, train_with(threads), "{threads} threads");
+    }
+}
+
+#[test]
+fn depth_growth_is_thread_invariant_too() {
+    // The classic scheduler's (pre-existing) guarantee must survive the
+    // refactor: per-tree RNG streams make it thread-invariant as well.
+    let data = trunk(400, 8, 0xF2);
+    for strategy in [SplitStrategy::Exact, SplitStrategy::DynamicVectorized] {
+        let train_with = |threads: usize| {
+            let cfg = ForestConfig {
+                n_trees: 4,
+                n_threads: threads,
+                strategy,
+                growth: GrowthMode::Depth,
+                ..Default::default()
+            };
+            v2_bytes(&train_forest(&data, &cfg, 11))
+        };
+        assert_eq!(train_with(1), train_with(3), "{strategy:?}");
+    }
+}
+
+#[test]
+fn frontier_and_depth_forests_are_both_pure_and_accurate() {
+    // The two schedulers draw different per-node RNG streams, so the trees
+    // differ — but both must train to purity and classify their training
+    // data perfectly (to-purity regime, min_leaf = 1).
+    let data = trunk(600, 8, 0xF3);
+    for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+        let cfg = ForestConfig {
+            n_trees: 5,
+            n_threads: 2,
+            bootstrap_fraction: 1.0,
+            growth,
+            ..Default::default()
+        };
+        let forest = train_forest(&data, &cfg, 3);
+        let acc = forest.accuracy(&data);
+        assert!(acc > 0.99, "{growth:?}: train accuracy {acc}");
+    }
+}
