@@ -1,12 +1,18 @@
-//! Training throughput: depth vs frontier growth at 1 and N threads.
+//! Training throughput: depth vs frontier growth at 1 and N threads, and
+//! frontier with sibling-histogram subtraction on vs off.
 //!
 //! The frontier scheduler's reason to exist is intra-tree parallelism: a
 //! **single large tree** should scale with cores, where the depth-first
-//! stack is pinned to one. This bench trains one tree to purity on a
-//! ≥100k-row synthetic table under both schedulers at 1 thread and at all
-//! available threads, and emits `BENCH_train.json` so the scaling
-//! trajectory is machine-readable across PRs (alongside
-//! `BENCH_node_split.json` and `BENCH_predict.json`).
+//! stack is pinned to one. Sibling-histogram subtraction rides on the same
+//! scheduler: the larger half of each eligible sibling pair gets its count
+//! tables by subtraction instead of an `O(n · p)` fill, so `frontier +
+//! subtraction` rows should beat `frontier + no-subtraction` rows on the
+//! wide histogram levels. This bench trains one tree to purity on a
+//! ≥100k-row synthetic table under both schedulers (and both subtraction
+//! settings for frontier) at 1 thread and at all available threads, and
+//! emits `BENCH_train.json` so the scaling trajectory is machine-readable
+//! across PRs (alongside `BENCH_node_split.json` and `BENCH_predict.json`)
+//! and gate-checked by `ci/bench_gate.py` against `BENCH_baseline/`.
 //!
 //! Env overrides: `SOFOREST_BENCH_TRAIN_ROWS` (default 100000),
 //! `SOFOREST_BENCH_TRAIN_FEATURES` (default 64),
@@ -50,19 +56,34 @@ fn main() {
     .generate(&mut Pcg64::new(0x7EA1));
 
     println!("# single-tree training throughput, trunk:{rows}:{d}, to purity\n");
-    // Speedup is relative to the sweep's FIRST entry (1 thread in the
-    // default sweep); a custom SOFOREST_BENCH_TRAIN_THREADS changes the
-    // baseline accordingly, so the field is named "vs_first", not "vs_1t".
-    let mut table = Table::new(&["growth", "threads", "wall_s", "rows/s", "speedup_vs_first"]);
+    // Speedup is relative to each (growth, subtraction) group's FIRST
+    // sweep entry (1 thread in the default sweep); a custom
+    // SOFOREST_BENCH_TRAIN_THREADS changes the baseline accordingly, so
+    // the field is named "vs_first", not "vs_1t". Depth growth has no
+    // sibling pairs, so only the subtraction=on default is timed there.
+    let mut table = Table::new(&[
+        "growth",
+        "subtraction",
+        "threads",
+        "wall_s",
+        "rows/s",
+        "speedup_vs_first",
+    ]);
     let mut json_rows = String::new();
     let mut first = true;
-    for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+    let configs = [
+        (GrowthMode::Depth, true),
+        (GrowthMode::Frontier, true),
+        (GrowthMode::Frontier, false),
+    ];
+    for (growth, subtraction) in configs {
         let mut base_wall = f64::NAN;
         for &threads in &threads_sweep {
             let cfg = ForestConfig {
                 n_trees: 1,
                 n_threads: threads,
                 growth,
+                hist_subtraction: subtraction,
                 ..Default::default()
             };
             let out =
@@ -74,6 +95,7 @@ fn main() {
             let speedup = base_wall / out.wall_s;
             table.row(&[
                 growth.name().to_string(),
+                if subtraction { "on" } else { "off" }.to_string(),
                 threads.to_string(),
                 format!("{:.3}", out.wall_s),
                 format!("{rows_per_s:.0}"),
@@ -85,7 +107,8 @@ fn main() {
             first = false;
             let _ = write!(
                 json_rows,
-                "    {{\"growth\": \"{}\", \"threads\": {threads}, \"rows\": {rows}, \
+                "    {{\"growth\": \"{}\", \"hist_subtraction\": {subtraction}, \
+                 \"threads\": {threads}, \"rows\": {rows}, \
                  \"features\": {d}, \"wall_s\": {:.4}, \"rows_per_s\": {rows_per_s:.1}, \
                  \"speedup_vs_first\": {speedup:.3}}}",
                 growth.name(),

@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the soforest CI.
+
+Compares the three bench JSONs emitted by `cargo bench`
+(BENCH_train.json, BENCH_node_split.json, BENCH_predict.json) against
+the committed snapshots in BENCH_baseline/, prints a markdown delta
+table to the job summary ($GITHUB_STEP_SUMMARY, falling back to
+stdout), and exits non-zero when any matched row regresses by more
+than TOLERANCE on its bench's throughput metric.
+
+Baseline lifecycle:
+  * a baseline file that is missing, has no rows, or carries
+    `"provisional": true` is RECORD-ONLY — current numbers are printed
+    and the job passes (you cannot gate against numbers that were never
+    measured on CI hardware);
+  * to arm (or refresh) the gate, download the `bench-baseline-candidate`
+    artifact from a trusted run of this job and commit its files over
+    BENCH_baseline/*.json with `"provisional": true` removed.
+
+Rows are matched between baseline and current by per-bench key fields;
+rows present on only one side are reported but never gated (bench
+sweeps may grow or shrink across PRs).
+"""
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.15  # fail on >15% regression of the gated metric
+
+# bench file -> (key fields, gated metric, higher_is_better)
+SPECS = {
+    "BENCH_train.json": {
+        "keys": ("growth", "threads", "hist_subtraction"),
+        "metric": "rows_per_s",
+        "higher_is_better": True,
+    },
+    "BENCH_node_split.json": {
+        "keys": ("n",),
+        "metric": "fused_ns_per_sample",
+        "higher_is_better": False,
+    },
+    "BENCH_predict.json": {
+        "keys": ("rows",),
+        "metric": "batched_mt_rows_per_s",
+        "higher_is_better": True,
+    },
+}
+
+BASELINE_DIR = "BENCH_baseline"
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"::error::{path} is not valid JSON: {e}")
+        sys.exit(2)
+
+
+def row_key(row, keys):
+    # Absent key fields (older baseline schema) map to None so old rows
+    # simply fail to match new ones instead of crashing the gate.
+    return tuple(row.get(k) for k in keys)
+
+
+def fmt_key(key, keys):
+    return ", ".join(f"{k}={v}" for k, v in zip(keys, key))
+
+
+def main():
+    lines = ["# Bench-regression gate", ""]
+    regressions = []
+    for fname, spec in SPECS.items():
+        current = load(fname)
+        baseline = load(os.path.join(BASELINE_DIR, fname))
+        lines.append(f"## {fname}")
+        if current is None:
+            print(f"::error::{fname} missing — did the bench step run?")
+            regressions.append(f"{fname}: current results missing")
+            lines.append("**current results missing** :x:\n")
+            continue
+        cur_rows = {row_key(r, spec["keys"]): r for r in current.get("results", [])}
+        provisional = (
+            baseline is None
+            or baseline.get("provisional", False)
+            or not baseline.get("results")
+        )
+        base_rows = (
+            {}
+            if baseline is None
+            else {row_key(r, spec["keys"]): r for r in baseline.get("results", [])}
+        )
+        metric, higher = spec["metric"], spec["higher_is_better"]
+        arrow = "higher is better" if higher else "lower is better"
+        if provisional:
+            lines.append(
+                "_baseline provisional or empty — **recording only**, not gating._ "
+                "Commit this run's `bench-baseline-candidate` artifact into "
+                f"`{BASELINE_DIR}/` (dropping `\"provisional\": true`) to arm the gate."
+            )
+        lines.append("")
+        lines.append(f"| {', '.join(spec['keys'])} | baseline {metric} | current {metric} | delta ({arrow}) | status |")
+        lines.append("|---|---|---|---|---|")
+        for key, cur in cur_rows.items():
+            cur_v = cur.get(metric)
+            base = base_rows.get(key)
+            if cur_v is None:
+                lines.append(f"| {fmt_key(key, spec['keys'])} | — | missing `{metric}` | — | :warning: |")
+                continue
+            if base is None or base.get(metric) is None:
+                lines.append(f"| {fmt_key(key, spec['keys'])} | — | {cur_v:.1f} | new row | recorded |")
+                continue
+            base_v = base[metric]
+            delta = (cur_v - base_v) / base_v if base_v else 0.0
+            regressed = (delta < -TOLERANCE) if higher else (delta > TOLERANCE)
+            status = ":x: REGRESSION" if regressed else ":white_check_mark:"
+            lines.append(
+                f"| {fmt_key(key, spec['keys'])} | {base_v:.1f} | {cur_v:.1f} | {delta:+.1%} | {status} |"
+            )
+            if regressed and not provisional:
+                regressions.append(
+                    f"{fname} [{fmt_key(key, spec['keys'])}]: {metric} {base_v:.1f} -> {cur_v:.1f} ({delta:+.1%})"
+                )
+        for key in base_rows:
+            if key not in cur_rows:
+                lines.append(f"| {fmt_key(key, spec['keys'])} | (baseline only) | dropped | — | :warning: |")
+        lines.append("")
+
+    if regressions:
+        lines.append(f"**FAILED** — {len(regressions)} regression(s) beyond {TOLERANCE:.0%}:")
+        lines.extend(f"- {r}" for r in regressions)
+    else:
+        lines.append(f"**PASSED** — no gated metric regressed beyond {TOLERANCE:.0%}.")
+
+    report = "\n".join(lines) + "\n"
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report)
+    print(report)
+    if regressions:
+        for r in regressions:
+            print(f"::error::bench regression: {r}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -134,6 +134,12 @@ COMMON FLAGS:
                     dynamic-vectorized | hybrid
   --fused on|off    fused cache-blocked node-split pipeline (default on;
                     off restores the materialize-then-route path for A/B)
+  --hist_subtraction on|off
+                    sibling-histogram subtraction in the frontier trainer
+                    (default on): build only the smaller child's count
+                    tables, derive the larger child's from the parent's by
+                    subtraction; off direct-fills both children for A/B —
+                    forests are byte-identical either way
   --growth <mode>   depth | frontier (default frontier: level-wise growth,
                     intra-tree parallelism, per-level accelerator batching;
                     depth restores the classic per-tree stack bit-for-bit)

@@ -84,6 +84,14 @@ pub struct ForestConfig {
     /// accelerator batching; depth restores the classic per-tree stack and
     /// its historical forests bit-for-bit.
     pub growth: GrowthMode,
+    /// Sibling-histogram subtraction in the frontier scheduler
+    /// (`--hist_subtraction on|off`, default on): when both children of a
+    /// histogram-split node are histogram-tier, only the smaller child's
+    /// count tables are filled and the larger child's are derived by
+    /// saturating subtraction from the parent's retained tables. `off`
+    /// direct-fills both children instead (the A/B control) — forests are
+    /// byte-identical either way, at any thread count.
+    pub hist_subtraction: bool,
 }
 
 impl Default for ForestConfig {
@@ -106,6 +114,7 @@ impl Default for ForestConfig {
             instrument: false,
             fused: true,
             growth: GrowthMode::Frontier,
+            hist_subtraction: true,
         }
     }
 }
@@ -174,6 +183,7 @@ impl ForestConfig {
                 }
             }
             "fused" => self.fused = parse_bool(v)?,
+            "hist_subtraction" | "subtraction" => self.hist_subtraction = parse_bool(v)?,
             "growth" => {
                 self.growth = GrowthMode::parse(v)
                     .with_context(|| format!("unknown growth mode {v:?}"))?
@@ -225,6 +235,7 @@ mod tests {
         assert_eq!(c.min_leaf, 1); // train to purity
         assert!(c.fused, "fused engine is the default training path");
         assert_eq!(c.growth, GrowthMode::Frontier, "frontier is the default scheduler");
+        assert!(c.hist_subtraction, "sibling-histogram subtraction is on by default");
         assert_eq!(c.strategy, SplitStrategy::DynamicVectorized);
         assert_eq!(c.sampler, SamplerKind::Floyd);
         assert!((c.projection.row_factor - 1.5).abs() < 1e-12);
@@ -252,6 +263,7 @@ mod tests {
             ("accel_above", "30000"),
             ("instrument", "on"),
             ("fused", "off"),
+            ("hist_subtraction", "off"),
             ("growth", "depth"),
         ] {
             c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
@@ -267,6 +279,9 @@ mod tests {
         assert_eq!(c.thresholds.accel_above, 30_000);
         assert!(c.instrument);
         assert!(!c.fused);
+        assert!(!c.hist_subtraction);
+        c.set("subtraction", "on").unwrap();
+        assert!(c.hist_subtraction);
         c.set("accel_above", "off").unwrap();
         assert_eq!(c.thresholds.accel_above, usize::MAX);
     }

@@ -25,6 +25,21 @@
 //! request (values, boundaries, labels) is staged in owned buffers so a
 //! whole level can be submitted in one batched call — a handful of large
 //! allocations per level, trivially amortized by the kernel they feed.
+//!
+//! **Sibling-histogram subtraction** (the LightGBM/XGBoost trick, enabled
+//! by level-wise growth): a frontier node that splits via a histogram
+//! method retains its per-projection boundaries and count tables
+//! ([`RetainedTables`]) for exactly one level. When both children clear
+//! the pairing floor ([`pair_eligible`]), they are scheduled as ONE work
+//! unit: the smaller child direct-fills the inherited tables over its own
+//! active set and the larger child's tables are derived by saturating
+//! subtraction `parent − smaller` — exact, because the children partition
+//! the parent bin-by-bin. `--hist_subtraction off` direct-fills both
+//! children instead; the derived tables are bit-identical either way, so
+//! the flag (like the thread count) never changes the trained forest. A
+//! child whose inherited candidates admit no positive-gain split falls
+//! back to the fresh per-node search on its own — so far untouched — RNG
+//! stream, preserving the baseline's purity guarantee.
 
 use crate::accel::NodeSplitRequest;
 use crate::config::{ForestConfig, GrowthMode};
@@ -34,7 +49,8 @@ use crate::metrics::{Component, LevelStats, TrainStats};
 use crate::projection::apply::{apply_projection, gather_labels};
 use crate::projection::{self, Projection, ProjectionMatrix};
 use crate::rng::Pcg64;
-use crate::split::histogram::Routing;
+use crate::split::histogram::{best_edge_over_tables, subtract_tables, Routing};
+use crate::split::vectorized::TwoLevelLayout;
 use crate::split::{
     best_split, best_split_fused, DynamicSplitter, Split, SplitMethod, SplitScratch,
 };
@@ -205,6 +221,12 @@ pub struct NodeScratch {
     best_values: Vec<f32>,
     labels: Vec<u16>,
     matrix: ProjectionMatrix,
+    // Sibling-subtraction pair buffers: the smaller child's direct-filled
+    // tables, the larger child's derived tables, and the rebuilt coarse
+    // vectors for routing over inherited boundaries.
+    pair_small: Vec<u32>,
+    pair_large: Vec<u32>,
+    pair_coarse: Vec<f32>,
 }
 
 /// Lease-based scratch ownership: workers `lease()` a [`NodeScratch`] for a
@@ -255,17 +277,114 @@ struct FrontierItem {
     node_id: usize,
     active: ActiveSet,
     depth: usize,
+    /// Sibling-subtraction pairing, set at creation time when this node
+    /// and its sibling were judged an eligible pair.
+    pair: Option<PairState>,
+}
+
+/// Histogram state a split node retains for exactly one level: the
+/// candidate projections it sampled, their bin boundaries and the filled
+/// `p × n_bins × n_classes` count tables. The children partition the
+/// parent's active set, so for the SAME (projection, boundaries) each
+/// parent bin count is exactly the sum of the two children's — the basis
+/// of the sibling-subtraction trick. Produced by [`search_cpu`] for
+/// histogram-method nodes big enough that a child pair could qualify
+/// ([`retention_worthwhile`]; both engines produce bit-identical state,
+/// preserving the fused/classic forest-identity contract); never
+/// produced by inherited winners, so inherited
+/// boundaries are at most one level stale — the adaptive-histogram
+/// property the paper's per-node boundary sampling buys is re-established
+/// every other level at the latest.
+struct RetainedTables {
+    projections: Vec<Projection>,
+    /// Per-projection usable flag (false: empty or constant projection).
+    ok: Vec<bool>,
+    /// `p × n_bins` boundary segments, each +∞-padded.
+    boundaries: Vec<f32>,
+    /// `p × n_bins × n_classes` count tables over the parent's actives.
+    counts: Vec<u32>,
+    n_bins: usize,
+    n_classes: usize,
+}
+
+impl RetainedTables {
+    fn empty(projections: Vec<Projection>, n_bins: usize, n_classes: usize) -> Self {
+        let p = projections.len();
+        Self {
+            projections,
+            ok: vec![false; p],
+            boundaries: vec![f32::INFINITY; p * n_bins],
+            counts: vec![0; p * n_bins * n_classes],
+            n_bins,
+            n_classes,
+        }
+    }
+
+    /// Capture one projection's boundaries + counts from the classic
+    /// engine's per-projection scratch (valid right after its
+    /// `best_split` call). A short boundary vector means
+    /// `build_boundaries` bailed on a constant projection — nothing to
+    /// retain, mirroring the fused engine's `fused_ok`.
+    fn capture_classic(&mut self, pi: usize, scratch: &SplitScratch) {
+        if scratch.boundaries.len() != self.n_bins {
+            return;
+        }
+        let stride = self.n_bins * self.n_classes;
+        debug_assert_eq!(scratch.counts.len(), stride);
+        self.ok[pi] = true;
+        self.boundaries[pi * self.n_bins..(pi + 1) * self.n_bins]
+            .copy_from_slice(&scratch.boundaries);
+        self.counts[pi * stride..(pi + 1) * stride].copy_from_slice(&scratch.counts);
+    }
+}
+
+/// Sibling-pair role. The frontier scheduler claims a `Lead` and its
+/// adjacent `Follow` (always the very next frontier item — children are
+/// pushed left-then-right) as one work unit, so the subtraction's
+/// smaller-before-larger data dependency never crosses workers.
+enum PairState {
+    /// Left child; carries the parent's retained tables.
+    Lead(Arc<RetainedTables>),
+    /// Right child; processed by whichever worker claims its Lead.
+    Follow,
+}
+
+/// A successful node split: the winner, the children's active sets, and
+/// the histogram state retained for the sibling-subtraction trick
+/// (`None` for sort/accelerator winners, inherited winners, and depth
+/// growth).
+struct NodeSplit {
+    projection: Projection,
+    split: Split,
+    left: ActiveSet,
+    right: ActiveSet,
+    retained: Option<RetainedTables>,
 }
 
 /// Result of processing one frontier node.
 enum NodeOutcome {
-    Split {
-        projection: Projection,
-        split: Split,
-        left: ActiveSet,
-        right: ActiveSet,
-    },
+    Split(NodeSplit),
     Leaf(Node),
+}
+
+/// How a frontier node's histogram tables were obtained (instrumentation:
+/// the `sub/ifill` columns of the `--instrument` frontier table).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FillTag {
+    /// Fresh per-node search (or a leaf) — the baseline path.
+    Fresh,
+    /// Direct fill over inherited parent boundaries.
+    InheritedFill,
+    /// Derived by saturating subtraction from the parent's tables.
+    Subtracted,
+}
+
+/// One claimable unit of CPU-tier work in a frontier level.
+#[derive(Clone, Copy)]
+enum CpuUnit {
+    One(usize),
+    /// `frontier[i]` is a pair `Lead`; `frontier[i + 1]` is its `Follow`.
+    Pair(usize),
 }
 
 /// The immutable per-tree context shared by every node worker.
@@ -355,6 +474,10 @@ impl<'a> TreeTrainer<'a> {
                     }
                 }
             }
+            // Depth growth never retains tables: there is no level to pair
+            // siblings in (the second child runs after the first's whole
+            // subtree), and the historical bit-for-bit contract forbids
+            // any extra work on this path.
             let outcome = split_node(
                 &env,
                 &mut self.rng,
@@ -363,24 +486,25 @@ impl<'a> TreeTrainer<'a> {
                 self.accel.as_deref_mut(),
                 &item.active,
                 item.depth,
+                false,
             );
             match outcome {
-                Some((projection, split, left_set, right_set)) => {
+                Some(s) => {
                     nodes.push(Node::Split {
-                        projection,
-                        threshold: split.threshold,
+                        projection: s.projection,
+                        threshold: s.split.threshold,
                         left: u32::MAX,
                         right: u32::MAX,
                     });
                     // Push right first so left is processed (and allocated)
                     // immediately after its parent — better locality.
                     stack.push(WorkItem {
-                        active: right_set,
+                        active: s.right,
                         depth: item.depth + 1,
                         link: Some((node_idx, false)),
                     });
                     stack.push(WorkItem {
-                        active: left_set,
+                        active: s.left,
                         depth: item.depth + 1,
                         link: Some((node_idx, true)),
                     });
@@ -415,6 +539,7 @@ impl<'a> TreeTrainer<'a> {
             node_id: 0,
             active: root_active,
             depth: 0,
+            pair: None,
         }];
         let mut level = 0usize;
         while !frontier.is_empty() {
@@ -429,12 +554,14 @@ impl<'a> TreeTrainer<'a> {
             for (item, outcome) in frontier.drain(..).zip(outcomes) {
                 match outcome {
                     NodeOutcome::Leaf(node) => nodes[item.node_id] = node,
-                    NodeOutcome::Split {
-                        projection,
-                        split,
-                        left,
-                        right,
-                    } => {
+                    NodeOutcome::Split(s) => {
+                        let NodeSplit {
+                            projection,
+                            split,
+                            left,
+                            right,
+                            retained,
+                        } = s;
                         let li = nodes.len();
                         nodes.push(placeholder_leaf());
                         nodes.push(placeholder_leaf());
@@ -444,15 +571,39 @@ impl<'a> TreeTrainer<'a> {
                             left: li as u32,
                             right: li as u32 + 1,
                         };
+                        let child_depth = item.depth + 1;
+                        // Sibling-subtraction pairing: hand the parent's
+                        // retained tables to both children when they are
+                        // an eligible pair (the decision is a pure
+                        // function of the deterministic child sizes, so
+                        // it is identical for any thread count and for
+                        // `--hist_subtraction on|off`).
+                        let rt = retained
+                            .filter(|_| {
+                                pair_eligible(
+                                    env.config,
+                                    &env.splitter,
+                                    left.len(),
+                                    right.len(),
+                                    child_depth,
+                                )
+                            })
+                            .map(Arc::new);
+                        let (lead, follow) = match rt {
+                            Some(rt) => (Some(PairState::Lead(rt)), Some(PairState::Follow)),
+                            None => (None, None),
+                        };
                         next.push(FrontierItem {
                             node_id: li,
                             active: left,
-                            depth: item.depth + 1,
+                            depth: child_depth,
+                            pair: lead,
                         });
                         next.push(FrontierItem {
                             node_id: li + 1,
                             active: right,
-                            depth: item.depth + 1,
+                            depth: child_depth,
+                            pair: follow,
                         });
                     }
                 }
@@ -467,9 +618,10 @@ impl<'a> TreeTrainer<'a> {
         }
     }
 
-    /// Process one frontier level: classify into tiers, fan the CPU tiers
-    /// out over the worker pool, submit the accelerator tier as one batched
-    /// call. Returns outcomes in frontier order plus tier statistics.
+    /// Process one frontier level: classify into tiers (sibling pairs are
+    /// one claimable unit), fan the CPU tiers out over the worker pool,
+    /// submit the accelerator tier as one batched call. Returns outcomes
+    /// in frontier order plus tier statistics.
     fn process_level(
         &mut self,
         env: &NodeEnv<'a>,
@@ -478,15 +630,29 @@ impl<'a> TreeTrainer<'a> {
     ) -> (Vec<NodeOutcome>, LevelStats) {
         let cfg = env.config;
         let mut lstats = LevelStats::default();
-        let mut cpu: Vec<usize> = Vec::new();
+        let mut units: Vec<CpuUnit> = Vec::new();
         let mut accel_tier: Vec<usize> = Vec::new();
         for (i, item) in frontier.iter().enumerate() {
+            match &item.pair {
+                // A Follow is claimed by the worker that claims its Lead.
+                Some(PairState::Follow) => continue,
+                Some(PairState::Lead(_)) => {
+                    debug_assert!(
+                        matches!(frontier[i + 1].pair, Some(PairState::Follow)),
+                        "pair Lead without adjacent Follow"
+                    );
+                    lstats.hist_nodes += 2;
+                    units.push(CpuUnit::Pair(i));
+                    continue;
+                }
+                None => {}
+            }
             let n = item.active.len();
             let splittable = n >= 2 * cfg.min_leaf.max(1)
                 && (cfg.max_depth == 0 || item.depth < cfg.max_depth);
             if !splittable {
                 lstats.leaf_nodes += 1;
-                cpu.push(i);
+                units.push(CpuUnit::One(i));
                 continue;
             }
             match env.splitter.choose(n) {
@@ -496,11 +662,11 @@ impl<'a> TreeTrainer<'a> {
                 }
                 SplitMethod::Exact => {
                     lstats.sort_nodes += 1;
-                    cpu.push(i);
+                    units.push(CpuUnit::One(i));
                 }
                 _ => {
                     lstats.hist_nodes += 1;
-                    cpu.push(i);
+                    units.push(CpuUnit::One(i));
                 }
             }
         }
@@ -508,51 +674,61 @@ impl<'a> TreeTrainer<'a> {
         let mut outcomes: Vec<Option<NodeOutcome>> = Vec::with_capacity(frontier.len());
         outcomes.resize_with(frontier.len(), || None);
 
-        let workers = self.intra_threads.min(cpu.len()).max(1);
-        if workers <= 1 {
+        let workers = self.intra_threads.min(units.len()).max(1);
+        let produced: Vec<(usize, NodeOutcome, FillTag)> = if workers <= 1 {
             let mut ns = self.pool.lease();
-            for &i in &cpu {
-                let item = &frontier[i];
-                let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
-                outcomes[i] = Some(process_cpu_node(
+            let mut local = Vec::with_capacity(frontier.len());
+            for &unit in &units {
+                process_cpu_unit(
                     env,
-                    &mut rng,
+                    node_seed,
+                    frontier,
+                    unit,
                     &mut self.stats,
                     &mut ns,
-                    item,
-                ));
+                    &mut local,
+                );
             }
             self.pool.release(ns);
+            local
         } else {
             let pool = &self.pool;
             let instrument = cfg.instrument;
-            let results: Mutex<Vec<(usize, NodeOutcome)>> =
-                Mutex::new(Vec::with_capacity(cpu.len()));
+            let results: Mutex<Vec<(usize, NodeOutcome, FillTag)>> =
+                Mutex::new(Vec::with_capacity(frontier.len()));
             let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
-            let cpu_ref = &cpu;
-            run_pool(workers, cpu.len(), |queue| {
+            let units_ref = &units;
+            run_pool(workers, units.len(), |queue| {
                 let mut ns = pool.lease();
                 let mut local_stats = TrainStats::new(instrument);
-                let mut local: Vec<(usize, NodeOutcome)> = Vec::new();
+                let mut local: Vec<(usize, NodeOutcome, FillTag)> = Vec::new();
                 while let Some(k) = queue.claim() {
-                    let i = cpu_ref[k];
-                    let item = &frontier[i];
-                    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
-                    local.push((
-                        i,
-                        process_cpu_node(env, &mut rng, &mut local_stats, &mut ns, item),
-                    ));
+                    process_cpu_unit(
+                        env,
+                        node_seed,
+                        frontier,
+                        units_ref[k],
+                        &mut local_stats,
+                        &mut ns,
+                        &mut local,
+                    );
                 }
                 pool.release(ns);
                 results.lock().unwrap().extend(local);
                 worker_stats.lock().unwrap().push(local_stats);
             });
-            for (i, o) in results.into_inner().unwrap() {
-                outcomes[i] = Some(o);
-            }
             for s in worker_stats.into_inner().unwrap() {
                 self.stats.merge(&s);
             }
+            results.into_inner().unwrap()
+        };
+        for (i, o, tag) in produced {
+            match tag {
+                FillTag::Subtracted => lstats.sub_nodes += 1,
+                FillTag::InheritedFill => lstats.inherit_fill_nodes += 1,
+                FillTag::Fresh => {}
+            }
+            outcomes[i] = Some(o);
         }
 
         if !accel_tier.is_empty() {
@@ -669,12 +845,13 @@ impl<'a> TreeTrainer<'a> {
                         split.threshold,
                         item.depth,
                     );
-                    NodeOutcome::Split {
+                    NodeOutcome::Split(NodeSplit {
                         projection: proj,
                         split,
                         left: l,
                         right: r,
-                    }
+                        retained: None,
+                    })
                 }
                 AccelDecision::NoSplit => {
                     self.stats.record_leaf();
@@ -697,7 +874,9 @@ impl<'a> TreeTrainer<'a> {
 
     /// Run the vectorized CPU search for a node whose projections are
     /// already in `ns.matrix` / labels in `ns.labels` (the accelerator
-    /// fallback, mirroring the depth path's decline handling).
+    /// fallback, mirroring the depth path's decline handling). Declined
+    /// nodes never retain tables: a real device's accept/decline behavior
+    /// is outside the deterministic pairing contract.
     fn finish_on_cpu(
         &mut self,
         env: &NodeEnv<'a>,
@@ -715,14 +894,10 @@ impl<'a> TreeTrainer<'a> {
             parent_counts,
             &item.active,
             item.depth,
+            false,
         );
         match searched {
-            Some((projection, split, left, right)) => NodeOutcome::Split {
-                projection,
-                split,
-                left,
-                right,
-            },
+            Some(s) => NodeOutcome::Split(s),
             None => {
                 self.stats.record_leaf();
                 NodeOutcome::Leaf(make_leaf(env.data, &item.active))
@@ -756,6 +931,27 @@ fn make_leaf(data: &Dataset, active: &ActiveSet) -> Node {
     }
 }
 
+/// Process one claimed CPU work unit: a single node, or a sibling pair.
+fn process_cpu_unit(
+    env: &NodeEnv,
+    node_seed: u64,
+    frontier: &[FrontierItem],
+    unit: CpuUnit,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    out: &mut Vec<(usize, NodeOutcome, FillTag)>,
+) {
+    match unit {
+        CpuUnit::One(i) => {
+            let item = &frontier[i];
+            let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+            let o = process_cpu_node(env, &mut rng, stats, ns, item);
+            out.push((i, o, FillTag::Fresh));
+        }
+        CpuUnit::Pair(lead) => process_pair(env, node_seed, frontier, lead, stats, ns, out),
+    }
+}
+
 /// Process one CPU-tier frontier node end to end.
 fn process_cpu_node(
     env: &NodeEnv,
@@ -764,13 +960,8 @@ fn process_cpu_node(
     ns: &mut NodeScratch,
     item: &FrontierItem,
 ) -> NodeOutcome {
-    match split_node(env, rng, stats, ns, None, &item.active, item.depth) {
-        Some((projection, split, left, right)) => NodeOutcome::Split {
-            projection,
-            split,
-            left,
-            right,
-        },
+    match split_node(env, rng, stats, ns, None, &item.active, item.depth, true) {
+        Some(s) => NodeOutcome::Split(s),
         None => {
             stats.record_leaf();
             NodeOutcome::Leaf(make_leaf(env.data, &item.active))
@@ -778,9 +969,294 @@ fn process_cpu_node(
     }
 }
 
+/// Are a just-split node's two children an eligible subtraction pair?
+/// Both must be splittable, both must land in a histogram tier (the
+/// smaller through the subtraction-aware cost model,
+/// [`DynamicSplitter::choose_paired_small`]), and both must clear the
+/// `n_bins` floor — scanning a 256-bin table under a few dozen samples
+/// costs more than it saves and degrades the inherited-candidate search.
+/// A pure function of deterministic per-node state, so pairing is
+/// identical for any thread count and either `--hist_subtraction` value.
+fn pair_eligible(
+    cfg: &ForestConfig,
+    splitter: &DynamicSplitter,
+    n_left: usize,
+    n_right: usize,
+    depth: usize,
+) -> bool {
+    let small = n_left.min(n_right);
+    let large = n_left.max(n_right);
+    if small < cfg.n_bins || small < 2 * cfg.min_leaf.max(1) {
+        return false;
+    }
+    if cfg.max_depth > 0 && depth >= cfg.max_depth {
+        return false;
+    }
+    matches!(
+        splitter.choose(large),
+        SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+    ) && matches!(
+        splitter.choose_paired_small(small),
+        SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+    )
+}
+
+/// Cheap necessary condition (tight in practice): could ANY split of an
+/// `n`-sample node produce a [`pair_eligible`] pair? Used to skip
+/// retention copies that can never pay (~`p · n_bins · n_classes` counts
+/// per node). Every strategy's histogram band is one interval of node
+/// sizes, so probing the splitter at the most pair-friendly feasible
+/// large-child size — the sort crossover clamped into `[n/2, n − n_bins]`
+/// — decides the large side exactly; only the min-leaf floor and depth
+/// cap (re-checked by `pair_eligible`) can still reject.
+fn retention_worthwhile(cfg: &ForestConfig, splitter: &DynamicSplitter, n: usize) -> bool {
+    if n < 2 * cfg.n_bins {
+        return false;
+    }
+    let probe = splitter.thresholds.sort_below.clamp(n / 2, n - cfg.n_bins);
+    matches!(
+        splitter.choose(probe),
+        SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+    )
+}
+
+/// Process one eligible sibling pair (the tentpole): the smaller child
+/// direct-fills the parent's retained candidate tables over its own
+/// active set; the larger child's tables are the parent's minus the
+/// smaller's (`--hist_subtraction on`, saturating) or a second direct
+/// fill (`off`, the A/B control) — bit-identical either way, which is
+/// what keeps forests byte-identical across the flag.
+fn process_pair(
+    env: &NodeEnv,
+    node_seed: u64,
+    frontier: &[FrontierItem],
+    lead: usize,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    out: &mut Vec<(usize, NodeOutcome, FillTag)>,
+) {
+    let rt = match &frontier[lead].pair {
+        Some(PairState::Lead(rt)) => Arc::clone(rt),
+        _ => unreachable!("process_pair invoked on a non-Lead frontier item"),
+    };
+    // Ties break to the left child, which is deterministic frontier state.
+    let lead_is_small = frontier[lead].active.len() <= frontier[lead + 1].active.len();
+    let (small_idx, large_idx) = if lead_is_small {
+        (lead, lead + 1)
+    } else {
+        (lead + 1, lead)
+    };
+    let small = &frontier[small_idx];
+    let large = &frontier[large_idx];
+    let small_pure = small.active.is_pure(env.data);
+    let large_pure = large.active.is_pure(env.data);
+    let subtraction = env.config.hist_subtraction;
+
+    // The smaller child's fill feeds both its own scan and the sibling
+    // subtraction; skip it only when nobody will read the tables.
+    let mut small_tables = std::mem::take(&mut ns.pair_small);
+    let small_filled = !small_pure || (!large_pure && subtraction);
+    if small_filled {
+        let method = env.splitter.choose_paired_small(small.active.len());
+        fill_inherited_tables(env, stats, ns, &rt, small, method, &mut small_tables);
+    }
+
+    if small_pure {
+        stats.record_leaf();
+        out.push((
+            small_idx,
+            NodeOutcome::Leaf(make_leaf(env.data, &small.active)),
+            FillTag::Fresh,
+        ));
+    } else {
+        let method = env.splitter.choose_paired_small(small.active.len());
+        let (o, tag) = finish_inherited(
+            env,
+            node_seed,
+            stats,
+            ns,
+            &rt,
+            small,
+            method,
+            &small_tables,
+            FillTag::InheritedFill,
+        );
+        out.push((small_idx, o, tag));
+    }
+
+    if large_pure {
+        stats.record_leaf();
+        out.push((
+            large_idx,
+            NodeOutcome::Leaf(make_leaf(env.data, &large.active)),
+            FillTag::Fresh,
+        ));
+    } else {
+        let method = env.splitter.choose(large.active.len());
+        let mut large_tables = std::mem::take(&mut ns.pair_large);
+        let tag = if subtraction {
+            debug_assert!(small_filled);
+            stats.time(large.depth, Component::EvaluateSplit, || {
+                subtract_tables(&rt.counts, &small_tables, &mut large_tables)
+            });
+            FillTag::Subtracted
+        } else {
+            fill_inherited_tables(env, stats, ns, &rt, large, method, &mut large_tables);
+            FillTag::InheritedFill
+        };
+        let (o, tag) = finish_inherited(
+            env,
+            node_seed,
+            stats,
+            ns,
+            &rt,
+            large,
+            method,
+            &large_tables,
+            tag,
+        );
+        out.push((large_idx, o, tag));
+        ns.pair_large = large_tables;
+    }
+    ns.pair_small = small_tables;
+}
+
+/// Direct-fill a child's count tables over the parent's retained
+/// projections and boundaries. Consumes no RNG — the boundaries are
+/// inherited, not sampled — and always uses the blocked gather of the
+/// fused engine: `--fused` A/Bs the *fresh-search* engines, this path has
+/// no classic twin (its results feed both flag values identically).
+fn fill_inherited_tables(
+    env: &NodeEnv,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    rt: &RetainedTables,
+    item: &FrontierItem,
+    method: SplitMethod,
+    tables: &mut Vec<u32>,
+) {
+    let routing = match method {
+        SplitMethod::Histogram => Routing::BinarySearch,
+        _ => Routing::TwoLevel,
+    };
+    let NodeScratch {
+        labels,
+        scratch,
+        pair_coarse,
+        ..
+    } = ns;
+    gather_labels(env.data, &item.active.indices, labels);
+    // Rebuild the coarse vectors from the inherited boundaries (cheap:
+    // `groups` entries per projection, vs `n` routed samples).
+    let layout = TwoLevelLayout::for_bins(rt.n_bins);
+    let groups = layout.map_or(0, |l| l.groups);
+    pair_coarse.clear();
+    pair_coarse.resize(rt.projections.len() * groups, f32::INFINITY);
+    if let Some(layout) = layout {
+        for (pi, ok) in rt.ok.iter().enumerate() {
+            if !*ok {
+                continue;
+            }
+            crate::split::boundaries::coarse_into(
+                &rt.boundaries[pi * rt.n_bins..(pi + 1) * rt.n_bins],
+                layout,
+                &mut pair_coarse[pi * groups..(pi + 1) * groups],
+            );
+        }
+    }
+    let labels: &[u16] = labels;
+    let coarse: &[f32] = pair_coarse;
+    stats.time(item.depth, Component::BuildHistogram, || {
+        crate::split::fused::fill_tables_blocked(
+            env.data,
+            &rt.projections,
+            &rt.ok,
+            &item.active.indices,
+            labels,
+            &rt.boundaries,
+            coarse,
+            rt.n_bins,
+            rt.n_classes,
+            routing,
+            &mut scratch.block,
+            tables,
+        )
+    });
+}
+
+/// Scan a child's inherited tables for its winning split; fall back to
+/// the fresh per-node search — on the node's own, so far untouched, RNG
+/// stream — when none of the inherited candidates splits this child
+/// (which preserves the baseline trainer's purity guarantee).
+#[allow(clippy::too_many_arguments)]
+fn finish_inherited(
+    env: &NodeEnv,
+    node_seed: u64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    rt: &RetainedTables,
+    item: &FrontierItem,
+    method: SplitMethod,
+    tables: &[u32],
+    tag: FillTag,
+) -> (NodeOutcome, FillTag) {
+    let cfg = env.config;
+    let parent_counts = item.active.class_counts(env.data);
+    debug_assert_eq!(parent_counts.len(), rt.n_classes);
+    let best = stats.time(item.depth, Component::EvaluateSplit, || {
+        best_edge_over_tables(
+            &parent_counts,
+            cfg.criterion,
+            rt.n_bins,
+            cfg.min_leaf,
+            &rt.ok,
+            tables,
+            &rt.boundaries,
+        )
+    });
+    if let Some((pi, split)) = best {
+        stats.record_node(item.depth, method, item.active.len());
+        let proj = rt.projections[pi].clone();
+        let (l, r) = partition_reapply(
+            env,
+            stats,
+            ns,
+            &item.active,
+            &proj,
+            split.threshold,
+            item.depth,
+        );
+        debug_assert_eq!(l.len(), split.n_left);
+        debug_assert_eq!(r.len(), split.n_right);
+        return (
+            NodeOutcome::Split(NodeSplit {
+                projection: proj,
+                split,
+                left: l,
+                right: r,
+                // Inherited winners never retain: boundaries would go two
+                // levels stale, losing the adaptive-histogram property.
+                retained: None,
+            }),
+            tag,
+        );
+    }
+    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+    match split_node(env, &mut rng, stats, ns, None, &item.active, item.depth, true) {
+        Some(s) => (NodeOutcome::Split(s), FillTag::Fresh),
+        None => {
+            stats.record_leaf();
+            (NodeOutcome::Leaf(make_leaf(env.data, &item.active)), FillTag::Fresh)
+        }
+    }
+}
+
 /// Attempt to split a node; `None` ⇒ leaf. The single split search shared
 /// by both growth modes (the frontier accelerator tier batches the
 /// accelerator call separately and reuses [`search_cpu`] for fallback).
+/// `retain` asks histogram-method winners to keep their tables for the
+/// sibling-subtraction trick (frontier callers only).
+#[allow(clippy::too_many_arguments)]
 fn split_node(
     env: &NodeEnv,
     rng: &mut Pcg64,
@@ -789,7 +1265,8 @@ fn split_node(
     accel: Option<&mut dyn NodeAccel>,
     active: &ActiveSet,
     depth: usize,
-) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
+    retain: bool,
+) -> Option<NodeSplit> {
     let n = active.len();
     let cfg = env.config;
     if n < 2 * cfg.min_leaf.max(1)
@@ -822,7 +1299,13 @@ fn split_node(
                 Some(Some((proj, split))) => {
                     let (l, r) =
                         partition_reapply(env, stats, ns, active, &proj, split.threshold, depth);
-                    return Some((proj, split, l, r));
+                    return Some(NodeSplit {
+                        projection: proj,
+                        split,
+                        left: l,
+                        right: r,
+                        retained: None,
+                    });
                 }
                 Some(None) => return None,
                 None => {} // accelerator declined: CPU fallback
@@ -832,12 +1315,29 @@ fn split_node(
         method = SplitMethod::VectorizedHistogram;
     }
 
-    search_cpu(env, rng, stats, ns, method, &parent_counts, active, depth)
+    search_cpu(
+        env,
+        rng,
+        stats,
+        ns,
+        method,
+        &parent_counts,
+        active,
+        depth,
+        retain,
+    )
 }
 
 /// CPU split search over the projections already sampled into `ns.matrix`
 /// (labels already gathered into `ns.labels`): fused engine by default,
 /// classic materialize-then-route otherwise, plus the winning partition.
+///
+/// With `retain`, histogram-method winners on nodes of `≥ 2·n_bins`
+/// samples carry their per-projection boundary + count tables out in
+/// [`NodeSplit::retained`] for the sibling-subtraction trick. Both
+/// engines produce bit-identical retained state (the boundaries and
+/// counts are already proven bit-equal by the fused-equivalence tests),
+/// so `--fused on|off` keeps building identical forests.
 #[allow(clippy::too_many_arguments)]
 fn search_cpu(
     env: &NodeEnv,
@@ -848,8 +1348,15 @@ fn search_cpu(
     parent_counts: &[usize],
     active: &ActiveSet,
     depth: usize,
-) -> Option<(Projection, Split, ActiveSet, ActiveSet)> {
+    retain: bool,
+) -> Option<NodeSplit> {
     let cfg = env.config;
+    let retain = retain
+        && matches!(
+            method,
+            SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+        )
+        && retention_worthwhile(cfg, &env.splitter, active.len());
     // Fused engine (default): one blocked gather→route→accumulate pass
     // over all projections — no materialized projection vectors. Exact
     // (sort-based) nodes keep the classic path: the sort needs the full
@@ -888,15 +1395,38 @@ fn search_cpu(
             })
         };
         let (pi, split) = fused_best?;
+        // The fused scratch still holds every projection's boundaries and
+        // tables — retention is a straight copy.
+        let retained = retain.then(|| RetainedTables {
+            projections: ns.matrix.projections.clone(),
+            ok: ns.scratch.fused_ok.clone(),
+            boundaries: ns.scratch.fused_boundaries.clone(),
+            counts: ns.scratch.fused_counts.clone(),
+            n_bins: cfg.n_bins,
+            n_classes: parent_counts.len(),
+        });
         let proj = ns.matrix.projections[pi].clone();
         // Only the winner is ever materialized: re-apply it once for
         // the partition (classic kept a full buffer per projection).
         let (l, r) = partition_reapply(env, stats, ns, active, &proj, split.threshold, depth);
         debug_assert_eq!(l.len(), split.n_left);
         debug_assert_eq!(r.len(), split.n_right);
-        return Some((proj, split, l, r));
+        return Some(NodeSplit {
+            projection: proj,
+            split,
+            left: l,
+            right: r,
+            retained,
+        });
     }
 
+    let mut retained = retain.then(|| {
+        RetainedTables::empty(
+            ns.matrix.projections.clone(),
+            cfg.n_bins,
+            parent_counts.len(),
+        )
+    });
     let mut best: Option<(usize, Split)> = None;
     for pi in 0..ns.matrix.projections.len() {
         if ns.matrix.projections[pi].is_empty() {
@@ -937,6 +1467,12 @@ fn search_cpu(
                 )
             })
         };
+        // Retention captures this projection's boundaries + counts even
+        // when no positive-gain edge exists (the tables are still valid —
+        // a child may split where the parent could not).
+        if let Some(rt) = retained.as_mut() {
+            rt.capture_classic(pi, &ns.scratch);
+        }
         if let Some(s) = split {
             if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
                 best = Some((pi, s));
@@ -958,7 +1494,13 @@ fn search_cpu(
     };
     debug_assert_eq!(l.len(), split.n_left);
     debug_assert_eq!(r.len(), split.n_right);
-    Some((proj, split, l, r))
+    Some(NodeSplit {
+        projection: proj,
+        split,
+        left: l,
+        right: r,
+        retained,
+    })
 }
 
 /// Partition by re-applying a projection (used when the winning values
@@ -1320,6 +1862,108 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Node-for-node tree equality (projections, thresholds bit-for-bit,
+    /// links, posteriors).
+    fn assert_trees_equal(a: &Tree, b: &Tree, what: &str) {
+        assert_eq!(a.nodes.len(), b.nodes.len(), "{what}: node counts");
+        for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+            match (x, y) {
+                (
+                    Node::Split {
+                        projection: pa,
+                        threshold: ta,
+                        left: la,
+                        right: ra,
+                    },
+                    Node::Split {
+                        projection: pb,
+                        threshold: tb,
+                        left: lb,
+                        right: rb,
+                    },
+                ) => {
+                    assert_eq!(pa, pb, "{what}: node {i}");
+                    assert_eq!(ta.to_bits(), tb.to_bits(), "{what}: node {i}");
+                    assert_eq!((la, ra), (lb, rb), "{what}: node {i}");
+                }
+                (
+                    Node::Leaf {
+                        posterior: pa,
+                        majority: ma,
+                        n: na,
+                    },
+                    Node::Leaf {
+                        posterior: pb,
+                        majority: mb,
+                        n: nb,
+                    },
+                ) => {
+                    assert_eq!(pa, pb, "{what}: node {i}");
+                    assert_eq!((ma, na), (mb, nb), "{what}: node {i}");
+                }
+                _ => panic!("{what}: node {i} kind differs"),
+            }
+        }
+    }
+
+    #[test]
+    fn sibling_subtraction_engages_and_matches_direct_fill_run() {
+        // Big enough that root children clear the pairing floor (>= n_bins
+        // samples each) over several levels; sort_below lowered so the
+        // histogram tier is reachable by mid-sized nodes.
+        let data = trunk(3000, 10, 31);
+        let train_with = |sub: bool, fused: bool| {
+            let mut cfg = ForestConfig {
+                instrument: true,
+                hist_subtraction: sub,
+                fused,
+                ..Default::default()
+            };
+            cfg.thresholds.sort_below = 512;
+            let mut t =
+                TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(32));
+            let tree = t.train(ActiveSet::full(data.n_samples()));
+            let subs: u64 = t.stats.by_level.iter().map(|l| l.sub_nodes).sum();
+            let fills: u64 = t.stats.by_level.iter().map(|l| l.inherit_fill_nodes).sum();
+            (tree, subs, fills)
+        };
+        let (on, subs_on, fills_on) = train_with(true, true);
+        let (off, subs_off, fills_off) = train_with(false, true);
+        assert!(subs_on > 0, "subtraction never engaged");
+        assert!(fills_on > 0, "no sibling ever direct-filled inherited tables");
+        assert_eq!(subs_off, 0, "subtraction counted with the flag off");
+        assert!(
+            fills_off > fills_on,
+            "with subtraction off both pair halves must direct-fill \
+             (on: {fills_on}, off: {fills_off})"
+        );
+        assert!(on.is_pure(), "inherited-candidate fallback lost purity");
+        assert_trees_equal(&on, &off, "hist_subtraction on vs off");
+        // The classic engine must retain bit-identical tables, so the
+        // fused/classic forest-identity contract survives pairing.
+        let (classic_on, classic_subs, _) = train_with(true, false);
+        assert!(classic_subs > 0);
+        assert_trees_equal(&on, &classic_on, "fused vs classic with subtraction");
+    }
+
+    #[test]
+    fn sibling_pairs_are_intra_thread_invariant() {
+        let data = trunk(2500, 8, 41);
+        let mut cfg = ForestConfig::default();
+        cfg.thresholds.sort_below = 512;
+        let train_with = |threads: usize| {
+            let mut t =
+                TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(42))
+                    .with_intra_threads(threads);
+            t.train(ActiveSet::full(data.n_samples()))
+        };
+        let a = train_with(1);
+        for threads in [2, 7] {
+            let b = train_with(threads);
+            assert_trees_equal(&a, &b, &format!("pairs x{threads} threads"));
         }
     }
 

@@ -126,6 +126,13 @@ pub struct LevelStats {
     /// Nodes already known to be leaves at classification time (too small
     /// or at the depth cap; purity-leaves surface in the tiers instead).
     pub leaf_nodes: u64,
+    /// Histogram-tier nodes whose count tables were derived by sibling
+    /// subtraction (parent − smaller child) instead of a fill.
+    pub sub_nodes: u64,
+    /// Histogram-tier nodes that direct-filled inherited (parent)
+    /// boundaries: the smaller half of each pair, plus both halves under
+    /// `--hist_subtraction off`.
+    pub inherit_fill_nodes: u64,
     /// Batched accelerator submissions (0 or 1 per level per tree).
     pub accel_batches: u64,
     /// Wall-clock nanoseconds spent on the level.
@@ -139,6 +146,8 @@ impl LevelStats {
         self.hist_nodes += other.hist_nodes;
         self.accel_nodes += other.accel_nodes;
         self.leaf_nodes += other.leaf_nodes;
+        self.sub_nodes += other.sub_nodes;
+        self.inherit_fill_nodes += other.inherit_fill_nodes;
         self.accel_batches += other.accel_batches;
         self.wall_ns += other.wall_ns;
     }
@@ -269,16 +278,18 @@ impl TrainStats {
             return String::new();
         }
         let mut out = String::from(
-            "level  width     sort/hist/accel/leaf         batches   wall_ms\n",
+            "level  width     sort/hist/accel/leaf          sub/ifill    batches   wall_ms\n",
         );
         for (level, l) in self.by_level.iter().enumerate() {
             out.push_str(&format!(
-                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>7}  {:>9.3}\n",
+                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>6}/{:<6} {:>7}  {:>9.3}\n",
                 l.width,
                 l.sort_nodes,
                 l.hist_nodes,
                 l.accel_nodes,
                 l.leaf_nodes,
+                l.sub_nodes,
+                l.inherit_fill_nodes,
                 l.accel_batches,
                 l.wall_ns as f64 / 1e6,
             ));
@@ -374,6 +385,8 @@ mod tests {
                 width: 1,
                 accel_nodes: 1,
                 accel_batches: 1,
+                sub_nodes: 3,
+                inherit_fill_nodes: 4,
                 ..Default::default()
             },
         );
@@ -381,6 +394,8 @@ mod tests {
         assert_eq!(a.by_level.len(), 2);
         assert_eq!(a.by_level[0].width, 2);
         assert_eq!(a.by_level[0].accel_batches, 1);
+        assert_eq!(a.by_level[0].sub_nodes, 3);
+        assert_eq!(a.by_level[0].inherit_fill_nodes, 4);
         assert_eq!(a.by_level[1].sort_nodes, 2);
         assert!(!a.frontier_table().is_empty());
         // Disabled stats skip level recording entirely.

@@ -177,7 +177,12 @@ ENTRY main {
         p
     }
 
+    // These runtime tests need a REAL xla crate (libxla install): with the
+    // vendored type-surface stub (the default `pjrt` dependency, kept so CI
+    // can `cargo check --features pjrt`), Engine::cpu() errors by design.
+    // Run them with the git xla-rs dependency swapped in.
     #[test]
+    #[ignore = "needs the real xla-rs bindings; the vendored xla stub only type-checks"]
     fn engine_compiles_and_executes_hlo_text() {
         let path = write_tmp("soforest_add.hlo.txt", ADD_HLO);
         let mut engine = Engine::cpu().unwrap();
@@ -195,12 +200,14 @@ ENTRY main {
     }
 
     #[test]
+    #[ignore = "needs the real xla-rs bindings; the vendored xla stub only type-checks"]
     fn missing_executable_is_error() {
         let mut engine = Engine::cpu().unwrap();
         assert!(engine.execute("nope", &[]).is_err());
     }
 
     #[test]
+    #[ignore = "needs the real xla-rs bindings; the vendored xla stub only type-checks"]
     fn load_artifact_dir_picks_up_hlo_files() {
         let dir = std::env::temp_dir().join("soforest_artifacts_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -79,6 +79,30 @@ impl DynamicSplitter {
             }
         }
     }
+
+    /// Tier choice for the *smaller* half of an eligible sibling pair —
+    /// the §4.1 cost model made subtraction-aware. The calibrated
+    /// `sort_below` crossover prices in the boundary build and histogram
+    /// fill a fresh node pays; a paired node inherits its boundaries (no
+    /// RNG draws, no boundary pass) and its fill is the very pass that
+    /// makes the sibling's table ~free by subtraction — so the sort
+    /// tier's advantage below `sort_below` evaporates, and the adaptive
+    /// strategies histogram the smaller child from (almost) any
+    /// cardinality. Static strategies are honored unchanged: forcing
+    /// `--strategy exact` must never histogram.
+    #[inline]
+    pub fn choose_paired_small(&self, n: usize) -> SplitMethod {
+        match self.choose(n) {
+            SplitMethod::Exact => match self.strategy {
+                SplitStrategy::Dynamic => SplitMethod::Histogram,
+                SplitStrategy::DynamicVectorized | SplitStrategy::Hybrid => {
+                    SplitMethod::VectorizedHistogram
+                }
+                _ => SplitMethod::Exact,
+            },
+            m => m,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +153,32 @@ mod tests {
         assert_eq!(d.choose(5000), SplitMethod::VectorizedHistogram);
         assert_eq!(d.choose(29_000), SplitMethod::Accelerator);
         assert_eq!(d.choose(1_000_000), SplitMethod::Accelerator);
+    }
+
+    #[test]
+    fn paired_small_cost_model_histograms_below_the_sort_crossover() {
+        let t = SplitThresholds {
+            sort_below: 1024,
+            accel_above: 50_000,
+        };
+        // Adaptive strategies: the sort tier's edge vanishes for the
+        // paired smaller child, whose fill feeds the sibling subtraction.
+        let d = DynamicSplitter::new(SplitStrategy::DynamicVectorized, t);
+        assert_eq!(d.choose(500), SplitMethod::Exact);
+        assert_eq!(d.choose_paired_small(500), SplitMethod::VectorizedHistogram);
+        assert_eq!(d.choose_paired_small(5000), SplitMethod::VectorizedHistogram);
+        let d = DynamicSplitter::new(SplitStrategy::Dynamic, t);
+        assert_eq!(d.choose_paired_small(500), SplitMethod::Histogram);
+        let d = DynamicSplitter::new(SplitStrategy::Hybrid, t);
+        assert_eq!(d.choose_paired_small(500), SplitMethod::VectorizedHistogram);
+        // Accelerator-sized nodes pass through (pair eligibility filters
+        // them out upstream).
+        assert_eq!(d.choose_paired_small(60_000), SplitMethod::Accelerator);
+        // Static strategies are never overridden.
+        let d = DynamicSplitter::new(SplitStrategy::Exact, t);
+        assert_eq!(d.choose_paired_small(500), SplitMethod::Exact);
+        let d = DynamicSplitter::new(SplitStrategy::Histogram, t);
+        assert_eq!(d.choose_paired_small(500), SplitMethod::Histogram);
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! trained with `fused = off`.
 
 use super::criterion::SplitCriterion;
-use super::histogram::{best_edge_in, route_binary_search, Routing};
+use super::histogram::{best_edge_over_tables, route_binary_search, Routing};
 use super::scan::{self, SCAN_MAX_BINS};
 use super::vectorized::{self, TwoLevelLayout};
 use super::{Split, SplitScratch};
@@ -129,62 +129,102 @@ pub fn best_split_fused(
     }
 
     // ---- Phase 2: block-major gather + route + accumulate ----
+    fill_tables_blocked(
+        data,
+        projections,
+        &*fused_ok,
+        active,
+        labels,
+        &*fused_boundaries,
+        &*fused_coarse,
+        n_bins,
+        n_classes,
+        routing,
+        block,
+        fused_counts,
+    );
+
+    // ---- Phase 3: edge scan per projection, same tie-breaking as the ----
+    // classic projection loop (first strictly-greater gain wins). Shared
+    // with the sibling-subtraction path.
+    best_edge_over_tables(
+        parent_counts,
+        criterion,
+        n_bins,
+        min_leaf,
+        &*fused_ok,
+        &*fused_counts,
+        &*fused_boundaries,
+    )
+}
+
+/// Fill a `p × n_bins × n_classes` stack of count tables over `active`
+/// for a FIXED, pre-built boundary set — the direct-fill half of the
+/// sibling-subtraction path, and phase 2 of [`best_split_fused`]. No RNG
+/// is consumed: boundaries (one `n_bins` segment per projection, each
+/// +∞-padded) come from the caller, sampled or inherited. `coarse` must
+/// hold one `groups`-slot segment per projection when `n_bins` has a
+/// two-level layout (ignored otherwise). Projections with `!ok[pi]` keep
+/// all-zero tables.
+///
+/// Labels are range-checked here in every build (promoted from the fill
+/// fast paths' `debug_assert`s): an out-of-range label would silently
+/// corrupt a neighboring bin's counts, and the subtraction trick makes a
+/// corrupt table contagious to the sibling.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_tables_blocked(
+    data: &Dataset,
+    projections: &[Projection],
+    ok: &[bool],
+    active: &[u32],
+    labels: &[u16],
+    boundaries: &[f32],
+    coarse: &[f32],
+    n_bins: usize,
+    n_classes: usize,
+    routing: Routing,
+    block: &mut Vec<f32>,
+    counts: &mut Vec<u32>,
+) {
+    let p = projections.len();
+    debug_assert_eq!(active.len(), labels.len());
+    debug_assert_eq!(ok.len(), p);
+    debug_assert_eq!(boundaries.len(), p * n_bins);
+    super::check_labels(labels, n_classes);
+    let n_real = n_bins - 1;
+    let layout = TwoLevelLayout::for_bins(n_bins);
+    let groups = layout.map_or(0, |l| l.groups);
+    debug_assert!(layout.is_none() || coarse.len() == p * groups);
     let stride = n_bins * n_classes;
-    fused_counts.clear();
-    fused_counts.resize(p * stride, 0);
+    counts.clear();
+    counts.resize(p * stride, 0);
     block.resize(FUSED_BLOCK, 0.0);
     for (ablock, lblock) in active.chunks(FUSED_BLOCK).zip(labels.chunks(FUSED_BLOCK)) {
         let vals = &mut block[..ablock.len()];
         for (pi, proj) in projections.iter().enumerate() {
-            if !fused_ok[pi] {
+            if !ok[pi] {
                 continue;
             }
             apply_projection_into(data, proj, ablock, vals);
-            let bounds = &fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
-            let counts = &mut fused_counts[pi * stride..(pi + 1) * stride];
+            let bounds = &boundaries[pi * n_bins..(pi + 1) * n_bins];
+            let cnt = &mut counts[pi * stride..(pi + 1) * stride];
             match (routing, layout) {
                 (Routing::TwoLevel, Some(layout)) => {
-                    let coarse = &fused_coarse[pi * groups..(pi + 1) * groups];
-                    vectorized::fill_two_level(
-                        vals, lblock, bounds, coarse, layout, n_classes, counts,
-                    );
+                    let c = &coarse[pi * groups..(pi + 1) * groups];
+                    vectorized::fill_two_level(vals, lblock, bounds, c, layout, n_classes, cnt);
                 }
                 _ if n_bins <= SCAN_MAX_BINS => {
-                    scan::fill_scan(vals, lblock, bounds, n_bins, n_classes, counts);
+                    scan::fill_scan(vals, lblock, bounds, n_bins, n_classes, cnt);
                 }
                 _ => {
-                    // Same out-of-range-label guard as fill_two_level: a bad
-                    // label would silently corrupt a neighboring bin's slots
-                    // in release builds.
-                    debug_assert!(
-                        lblock.iter().all(|&l| (l as usize) < n_classes),
-                        "label out of range for {n_classes} classes"
-                    );
                     for (&v, &l) in vals.iter().zip(lblock) {
                         let bin = route_binary_search(v, bounds, n_real);
-                        counts[bin * n_classes + l as usize] += 1;
+                        cnt[bin * n_classes + l as usize] += 1;
                     }
                 }
             }
         }
     }
-
-    // ---- Phase 3: edge scan per projection, same tie-breaking as the ----
-    // classic projection loop (first strictly-greater gain wins).
-    let mut best: Option<(usize, Split)> = None;
-    for pi in 0..p {
-        if !fused_ok[pi] {
-            continue;
-        }
-        let bounds = &fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
-        let counts = &fused_counts[pi * stride..(pi + 1) * stride];
-        if let Some(s) = best_edge_in(parent_counts, criterion, n_bins, min_leaf, counts, bounds) {
-            if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
-                best = Some((pi, s));
-            }
-        }
-    }
-    best
 }
 
 /// Blocked min/max of a projection over the active set (degenerate-boundary

@@ -98,6 +98,10 @@ pub fn route_upper_bound_branchy(v: f32, boundaries: &[f32], n_real: usize) -> u
 
 /// Fill the `n_bins × n_classes` count table in `scratch.counts`.
 /// `boundaries`/`coarse` must be prepared by [`build_boundaries`].
+///
+/// Labels are range-checked here in every build (not just debug): the
+/// fast fill loops index `counts[bin * n_classes + label]` unchecked, and
+/// a silently corrupt table is contagious under sibling subtraction.
 pub fn fill_histogram(
     values: &[f32],
     labels: &[u16],
@@ -106,6 +110,7 @@ pub fn fill_histogram(
     routing: Routing,
     scratch: &mut SplitScratch,
 ) {
+    super::check_labels(labels, n_classes);
     let counts = &mut scratch.counts;
     counts.clear();
     counts.resize(n_bins * n_classes, 0);
@@ -185,6 +190,54 @@ pub fn best_edge_in(
         }
     }
     best
+}
+
+/// Scan a `p × n_bins × n_classes` stack of per-projection count tables
+/// for the winning `(projection index, split)` — the scan half of the
+/// sibling-subtraction path, also phase 3 of the fused engine. `ok[pi]`
+/// gates projections with no usable boundaries (empty or constant).
+/// Tie-breaking matches the classic per-projection search loop: the first
+/// strictly-greater gain wins, so both callers stay bit-identical to it.
+pub fn best_edge_over_tables(
+    parent_counts: &[usize],
+    criterion: SplitCriterion,
+    n_bins: usize,
+    min_leaf: usize,
+    ok: &[bool],
+    counts: &[u32],
+    boundaries: &[f32],
+) -> Option<(usize, Split)> {
+    let n_classes = parent_counts.len();
+    let stride = n_bins * n_classes;
+    debug_assert_eq!(counts.len(), ok.len() * stride);
+    debug_assert_eq!(boundaries.len(), ok.len() * n_bins);
+    let mut best: Option<(usize, Split)> = None;
+    for (pi, &usable) in ok.iter().enumerate() {
+        if !usable {
+            continue;
+        }
+        let c = &counts[pi * stride..(pi + 1) * stride];
+        let b = &boundaries[pi * n_bins..(pi + 1) * n_bins];
+        if let Some(s) = best_edge_in(parent_counts, criterion, n_bins, min_leaf, c, b) {
+            if best.as_ref().map_or(true, |(_, x)| s.gain > x.gain) {
+                best = Some((pi, s));
+            }
+        }
+    }
+    best
+}
+
+/// Sibling-histogram subtraction: derive one child's count tables from
+/// the parent's minus the other child's. Exact — the two children
+/// partition the parent's active set, so for identical boundaries every
+/// bin count is additive. `saturating_sub` turns a corrupt parent table
+/// into a clamped (and loudly wrong downstream) sibling table instead of
+/// a wrapped-around one; [`super::check_labels`] at the fill entry points
+/// keeps such corruption from arising silently in the first place.
+pub fn subtract_tables(parent: &[u32], child: &[u32], out: &mut Vec<u32>) {
+    debug_assert_eq!(parent.len(), child.len());
+    out.clear();
+    out.extend(parent.iter().zip(child).map(|(&p, &c)| p.saturating_sub(c)));
 }
 
 /// Full histogram split search (boundaries → fill → scan).
@@ -443,6 +496,107 @@ mod tests {
         )
         .unwrap();
         assert!(a.gain > 0.1);
+    }
+
+    #[test]
+    fn subtract_then_scan_is_pinned_to_direct_fill() {
+        // 4 bins with boundaries at 0,1,2. The left child occupies bins
+        // 0..=2 with an empty bin (3) and a class-count tie in bin 0
+        // ([1,1]); the right child is everything at 2.5/3.5. The
+        // subtraction path must reproduce the direct-fill tables — and
+        // therefore the scan's winner — bit-for-bit.
+        let n_bins = 4;
+        let mut scratch = scratch_with_boundaries(&[0.0, 1.0, 2.0], n_bins);
+        let boundaries = scratch.boundaries.clone();
+        let left_vals = [-1.0f32, -1.0, 0.5, 0.5, 1.5, 1.5];
+        let left_labels = [0u16, 1, 0, 0, 1, 1];
+        let right_vals = [2.5f32, 2.5, 3.5];
+        let right_labels = [0u16, 1, 0];
+        let parent_vals: Vec<f32> = left_vals.iter().chain(&right_vals).copied().collect();
+        let parent_labels: Vec<u16> =
+            left_labels.iter().chain(&right_labels).copied().collect();
+
+        fill_histogram(
+            &parent_vals,
+            &parent_labels,
+            n_bins,
+            2,
+            Routing::BinarySearch,
+            &mut scratch,
+        );
+        let parent_table = scratch.counts.clone();
+        fill_histogram(
+            &left_vals,
+            &left_labels,
+            n_bins,
+            2,
+            Routing::BinarySearch,
+            &mut scratch,
+        );
+        let left_table = scratch.counts.clone();
+        // Left child's table has an empty bin and a tied bin.
+        assert_eq!(left_table, vec![1, 1, 2, 0, 0, 2, 0, 0]);
+        fill_histogram(
+            &right_vals,
+            &right_labels,
+            n_bins,
+            2,
+            Routing::BinarySearch,
+            &mut scratch,
+        );
+        let right_direct = scratch.counts.clone();
+
+        let mut derived = Vec::new();
+        subtract_tables(&parent_table, &left_table, &mut derived);
+        assert_eq!(derived, right_direct, "subtraction must equal direct fill");
+        let mut derived_left = Vec::new();
+        subtract_tables(&parent_table, &right_direct, &mut derived_left);
+        assert_eq!(derived_left, left_table, "subtraction is symmetric");
+
+        // The scan over the derived left table picks the same edge, with
+        // bit-identical gain, as over the direct-fill table.
+        let parent_counts = counts_of(&left_labels, 2);
+        let ok = [true];
+        let scan = |t: &[u32]| {
+            best_edge_over_tables(
+                &parent_counts,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                &ok,
+                t,
+                &boundaries,
+            )
+        };
+        let a = scan(&derived_left).expect("left child has a positive-gain edge");
+        let b = scan(&left_table).unwrap();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.threshold.to_bits(), b.1.threshold.to_bits());
+        assert_eq!(a.1.gain.to_bits(), b.1.gain.to_bits());
+        assert_eq!((a.1.n_left, a.1.n_right), (b.1.n_left, b.1.n_right));
+        // Bin 0 is a pure class tie, so the winning edge is at 1.0 (bins
+        // 0..=1 vs bin 2), not at the tied boundary.
+        assert_eq!(a.1.threshold, 1.0);
+        assert_eq!(a.1.n_left, 4);
+
+        // Saturating subtraction: a corrupt parent bin below the child's
+        // count clamps to zero instead of wrapping to u32::MAX.
+        let mut corrupt = parent_table.clone();
+        corrupt[0] = 0;
+        subtract_tables(&corrupt, &left_table, &mut derived);
+        assert_eq!(derived[0], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn out_of_range_label_is_a_checked_error() {
+        // Promoted from a debug_assert: must fire in release builds too —
+        // a bad label would otherwise corrupt a neighboring bin's counts,
+        // and subtraction would propagate the damage to the sibling.
+        let mut scratch = scratch_with_boundaries(&[0.0, 1.0, 2.0], 4);
+        let values = [0.5f32, 1.5];
+        let labels = [0u16, 7]; // label 7 with n_classes = 2
+        fill_histogram(&values, &labels, 4, 2, Routing::BinarySearch, &mut scratch);
     }
 
     #[test]

@@ -124,6 +124,24 @@ pub struct SplitScratch {
     pub fused_counts: Vec<u32>,
 }
 
+/// Validate that every label indexes a class — promoted from a
+/// `debug_assert!` to an always-on check at the public fill entry points
+/// ([`histogram::fill_histogram`], [`fused::fill_tables_blocked`]).
+///
+/// The specialized 2-class fill loops write `counts[bin * 2 + label]`
+/// without a bounds check (the buffer is large enough), so an
+/// out-of-range label silently corrupts a *neighboring bin's* slots in
+/// release builds — and sibling-histogram subtraction makes a corrupt
+/// parent table contagious: the sibling inherits the damage through
+/// `parent − child`. The interior fast paths keep their `debug_assert`s.
+#[inline]
+pub fn check_labels(labels: &[u16], n_classes: usize) {
+    assert!(
+        labels.iter().all(|&l| (l as usize) < n_classes),
+        "label out of range for {n_classes} classes"
+    );
+}
+
 /// Find the best split of `values`/`labels` with a specific engine.
 /// `parent_counts` are the node's class counts (computed once per node).
 pub fn best_split(

@@ -68,6 +68,34 @@ fn train_with_growth_modes_and_persisted_thresholds() {
 }
 
 #[test]
+fn train_with_hist_subtraction_flag() {
+    // The sibling-subtraction A/B flag parses from the CLI and both values
+    // train end-to-end (byte-identity of the forests is enforced by
+    // frontier_equivalence.rs; this drives the user-facing surface).
+    for sub in ["on", "off"] {
+        cli::run(&argv(&[
+            "train",
+            "--data",
+            "trunk:800:8",
+            "--trees",
+            "1",
+            "--threads",
+            "2",
+            "--sort_below",
+            "128",
+            "--hist_subtraction",
+            sub,
+            "--instrument",
+        ]))
+        .unwrap();
+    }
+    assert!(cli::run(&argv(&[
+        "train", "--data", "trunk:100:8", "--trees", "1", "--hist_subtraction", "sideways",
+    ]))
+    .is_err());
+}
+
+#[test]
 fn train_with_instrumentation_and_dynamic_strategy() {
     cli::run(&argv(&[
         "train",

@@ -94,6 +94,85 @@ fn frontier_single_large_tree_is_thread_invariant() {
 }
 
 #[test]
+fn subtraction_on_off_forests_are_byte_identical_across_threads() {
+    // Sibling-histogram subtraction must be a pure optimization: the v2
+    // bytes are identical for `--hist_subtraction on|off` at any thread
+    // count. Data is big enough that pairs actually form (root children
+    // comfortably clear the n_bins floor over several levels), and
+    // sort_below is lowered so mid-sized nodes reach the histogram tier.
+    // Histogram (static) pins the Routing::BinarySearch inherited-fill
+    // arm, VectorizedHistogram (static) the TwoLevel arm, and
+    // DynamicVectorized the adaptive tiers + the cost-model upgrade of
+    // the smaller pair half.
+    let data = trunk(4000, 12, 0xF4);
+    for strategy in [
+        SplitStrategy::Histogram,
+        SplitStrategy::VectorizedHistogram,
+        SplitStrategy::DynamicVectorized,
+    ] {
+        let train_with = |sub: bool, threads: usize| {
+            let mut cfg = ForestConfig {
+                n_trees: 2,
+                n_threads: threads,
+                strategy,
+                growth: GrowthMode::Frontier,
+                hist_subtraction: sub,
+                ..Default::default()
+            };
+            cfg.thresholds.sort_below = 512;
+            v2_bytes(&train_forest(&data, &cfg, 0xAB))
+        };
+        let reference = train_with(true, 1);
+        for threads in [1, 2, 8] {
+            for sub in [true, false] {
+                if sub && threads == 1 {
+                    continue; // the reference itself
+                }
+                assert_eq!(
+                    reference,
+                    train_with(sub, threads),
+                    "{strategy:?}: forest bytes differ for hist_subtraction={sub} \
+                     at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn subtraction_engages_on_this_workload() {
+    // Guard against the equivalence test above passing vacuously: the
+    // same workload must actually route sibling pairs through the
+    // subtraction path (visible in the per-level instrumentation).
+    use soforest::coordinator::train_forest_with_source;
+    use soforest::forest::tree::ProjectionSource;
+    let data = trunk(4000, 12, 0xF4);
+    let mut cfg = ForestConfig {
+        n_trees: 1,
+        n_threads: 1,
+        strategy: SplitStrategy::DynamicVectorized,
+        growth: GrowthMode::Frontier,
+        instrument: true,
+        ..Default::default()
+    };
+    cfg.thresholds.sort_below = 512;
+    let out = train_forest_with_source(&data, &cfg, 0xAB, ProjectionSource::SparseOblique);
+    let subs: u64 = out.stats.by_level.iter().map(|l| l.sub_nodes).sum();
+    let fills: u64 = out.stats.by_level.iter().map(|l| l.inherit_fill_nodes).sum();
+    assert!(subs > 0, "no node's tables were derived by subtraction");
+    assert!(fills > 0, "no sibling direct-filled inherited tables");
+    cfg.hist_subtraction = false;
+    let off = train_forest_with_source(&data, &cfg, 0xAB, ProjectionSource::SparseOblique);
+    let subs_off: u64 = off.stats.by_level.iter().map(|l| l.sub_nodes).sum();
+    let fills_off: u64 = off.stats.by_level.iter().map(|l| l.inherit_fill_nodes).sum();
+    assert_eq!(subs_off, 0, "subtraction counted with the flag off");
+    assert!(
+        fills_off > fills,
+        "with subtraction off, both pair halves must direct-fill"
+    );
+}
+
+#[test]
 fn depth_growth_is_thread_invariant_too() {
     // The classic scheduler's (pre-existing) guarantee must survive the
     // refactor: per-tree RNG streams make it thread-invariant as well.
