@@ -1,5 +1,6 @@
-//! Training throughput: depth vs frontier growth at 1 and N threads, and
-//! frontier with sibling-histogram subtraction on vs off.
+//! Training throughput: depth vs frontier growth at 1 and N threads,
+//! frontier with sibling-histogram subtraction on vs off, and the
+//! in-memory vs memory-mapped storage backend.
 //!
 //! The frontier scheduler's reason to exist is intra-tree parallelism: a
 //! **single large tree** should scale with cores, where the depth-first
@@ -7,12 +8,16 @@
 //! scheduler: the larger half of each eligible sibling pair gets its count
 //! tables by subtraction instead of an `O(n · p)` fill, so `frontier +
 //! subtraction` rows should beat `frontier + no-subtraction` rows on the
-//! wide histogram levels. This bench trains one tree to purity on a
-//! ≥100k-row synthetic table under both schedulers (and both subtraction
-//! settings for frontier) at 1 thread and at all available threads, and
-//! emits `BENCH_train.json` so the scaling trajectory is machine-readable
-//! across PRs (alongside `BENCH_node_split.json` and `BENCH_predict.json`)
-//! and gate-checked by `ci/bench_gate.py` against `BENCH_baseline/`.
+//! wide histogram levels. The `storage=mmap` rows train the same
+//! workload off a packed `.sofc` column file (written to a temp dir, page
+//! cache warm after the first pass), so the chunk-view read path is
+//! gate-checked against the in-memory backend: with the table fully
+//! cached the two should be within noise of each other — a widening gap
+//! means the mapped chunk path grew overhead. This bench trains one tree
+//! to purity on a ≥100k-row synthetic table and emits `BENCH_train.json`
+//! so the scaling trajectory is machine-readable across PRs (alongside
+//! `BENCH_node_split.json` and `BENCH_predict.json`) and gate-checked by
+//! `ci/bench_gate.py` against `BENCH_baseline/`.
 //!
 //! Env overrides: `SOFOREST_BENCH_TRAIN_ROWS` (default 100000),
 //! `SOFOREST_BENCH_TRAIN_FEATURES` (default 64),
@@ -22,6 +27,7 @@ use soforest::bench::Table;
 use soforest::config::{ForestConfig, GrowthMode};
 use soforest::coordinator::train_forest_with_source;
 use soforest::data::synth::trunk::TrunkConfig;
+use soforest::data::{colfile, Dataset};
 use soforest::forest::tree::ProjectionSource;
 use soforest::rng::Pcg64;
 use std::fmt::Write as _;
@@ -55,15 +61,34 @@ fn main() {
     }
     .generate(&mut Pcg64::new(0x7EA1));
 
+    // Mapped twin of the same table: pack once, map read-only. Training
+    // values are bit-identical (tests/storage_equivalence.rs), so the
+    // mmap rows isolate pure storage-path overhead.
+    // Pid-suffixed so concurrent bench runs on one machine never truncate
+    // a file the other still has mapped.
+    let sofc_path =
+        std::env::temp_dir().join(format!("soforest_bench_train_{}.sofc", std::process::id()));
+    let mapped: Option<Dataset> = match colfile::write_dataset(&data, &sofc_path)
+        .and_then(|()| colfile::load_mapped(&sofc_path))
+    {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("# skipping storage=mmap rows: {e}");
+            None
+        }
+    };
+
     println!("# single-tree training throughput, trunk:{rows}:{d}, to purity\n");
-    // Speedup is relative to each (growth, subtraction) group's FIRST
-    // sweep entry (1 thread in the default sweep); a custom
+    // Speedup is relative to each (growth, subtraction, storage) group's
+    // FIRST sweep entry (1 thread in the default sweep); a custom
     // SOFOREST_BENCH_TRAIN_THREADS changes the baseline accordingly, so
     // the field is named "vs_first", not "vs_1t". Depth growth has no
-    // sibling pairs, so only the subtraction=on default is timed there.
+    // sibling pairs, so only the subtraction=on default is timed there;
+    // the mmap backend is swept at the frontier default config.
     let mut table = Table::new(&[
         "growth",
         "subtraction",
+        "storage",
         "threads",
         "wall_s",
         "rows/s",
@@ -71,12 +96,18 @@ fn main() {
     ]);
     let mut json_rows = String::new();
     let mut first = true;
-    let configs = [
-        (GrowthMode::Depth, true),
-        (GrowthMode::Frontier, true),
-        (GrowthMode::Frontier, false),
-    ];
-    for (growth, subtraction) in configs {
+    let configs: Vec<(GrowthMode, bool, &str, &Dataset)> = {
+        let mut c: Vec<(GrowthMode, bool, &str, &Dataset)> = vec![
+            (GrowthMode::Depth, true, "ram", &data),
+            (GrowthMode::Frontier, true, "ram", &data),
+            (GrowthMode::Frontier, false, "ram", &data),
+        ];
+        if let Some(m) = &mapped {
+            c.push((GrowthMode::Frontier, true, "mmap", m));
+        }
+        c
+    };
+    for (growth, subtraction, storage, bench_data) in configs {
         let mut base_wall = f64::NAN;
         for &threads in &threads_sweep {
             let cfg = ForestConfig {
@@ -86,8 +117,12 @@ fn main() {
                 hist_subtraction: subtraction,
                 ..Default::default()
             };
-            let out =
-                train_forest_with_source(&data, &cfg, 0x5EED, ProjectionSource::SparseOblique);
+            let out = train_forest_with_source(
+                bench_data,
+                &cfg,
+                0x5EED,
+                ProjectionSource::SparseOblique,
+            );
             let rows_per_s = rows as f64 / out.wall_s;
             if threads == threads_sweep[0] {
                 base_wall = out.wall_s;
@@ -96,6 +131,7 @@ fn main() {
             table.row(&[
                 growth.name().to_string(),
                 if subtraction { "on" } else { "off" }.to_string(),
+                storage.to_string(),
                 threads.to_string(),
                 format!("{:.3}", out.wall_s),
                 format!("{rows_per_s:.0}"),
@@ -108,7 +144,7 @@ fn main() {
             let _ = write!(
                 json_rows,
                 "    {{\"growth\": \"{}\", \"hist_subtraction\": {subtraction}, \
-                 \"threads\": {threads}, \"rows\": {rows}, \
+                 \"storage\": \"{storage}\", \"threads\": {threads}, \"rows\": {rows}, \
                  \"features\": {d}, \"wall_s\": {:.4}, \"rows_per_s\": {rows_per_s:.1}, \
                  \"speedup_vs_first\": {speedup:.3}}}",
                 growth.name(),
@@ -117,6 +153,7 @@ fn main() {
         }
     }
     table.print();
+    std::fs::remove_file(&sofc_path).ok();
 
     let json = format!(
         "{{\n  \"bench\": \"train_throughput\",\n  \"unit\": \"rows_per_s\",\n  \

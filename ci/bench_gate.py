@@ -31,7 +31,11 @@ TOLERANCE = 0.15  # fail on >15% regression of the gated metric
 # bench file -> (key fields, gated metric, higher_is_better)
 SPECS = {
     "BENCH_train.json": {
-        "keys": ("growth", "threads", "hist_subtraction"),
+        # "storage" distinguishes the in-memory backend from the
+        # memory-mapped column-file backend (rows keyed `ram` | `mmap`);
+        # older baselines without the field simply stop matching and are
+        # reported as dropped rows until re-recorded.
+        "keys": ("growth", "threads", "hist_subtraction", "storage"),
         "metric": "rows_per_s",
         "higher_is_better": True,
     },

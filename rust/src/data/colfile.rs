@@ -1,0 +1,553 @@
+//! The `.sofc` binary columnar file format (`soforest pack` writes it,
+//! `train --data table.sofc` maps it read-only).
+//!
+//! Layout (all integers native-endian; an endianness mark rejects files
+//! packed on a foreign-endian host — zero-copy reinterpretation must never
+//! silently byte-swap):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"SOFC0001"
+//!      8     4  endianness mark u32 = 0x01020304 (reads swapped on the
+//!               wrong-endian side -> hard error)
+//!     12     4  page size u32 (4096; power of two, sections align to it)
+//!     16     8  n_samples u64
+//!     24     8  n_features u64
+//!     32     8  n_classes u64
+//!     40     8  names_len u64 (0 = unnamed features)
+//!     48   var  names block: per feature, u16 length + UTF-8 bytes
+//!   -- pad to page boundary -> data_offset --
+//!   data_offset + f * col_stride : feature f section, n_samples x f32
+//!               (col_stride = n_samples*4 rounded up to a page)
+//!   labels_offset = data_offset + n_features * col_stride :
+//!               n_samples x u16 labels
+//! ```
+//!
+//! Page-aligned sections give every mapped column a 4-byte-aligned `f32`
+//! view for free and keep each column's pages disjoint, so training only
+//! faults in the columns (and the row ranges) it actually gathers. The
+//! loader validates every bound before the first reinterpretation; the
+//! mapped dataset then serves [`crate::data::Dataset::column_chunk`]
+//! requests straight from the mapping — the table is never copied into
+//! RAM, which is the whole point (tables larger than memory train through
+//! the OS page cache; see EXPERIMENTS.md §Out-of-core).
+
+use super::csv::{CsvRows, LabelColumn};
+use super::mmap::Mmap;
+use super::store::{ColumnStore, MappedColumns};
+use super::{Dataset, Label, CHUNK_ROWS};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs::File;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+pub const MAGIC: [u8; 8] = *b"SOFC0001";
+pub const ENDIAN_MARK: u32 = 0x0102_0304;
+/// Section alignment. 4096 matches every platform this crate targets;
+/// larger system pages (16k Apple Silicon) still map 4096-aligned offsets
+/// correctly — alignment only has to guarantee `f32` validity.
+pub const PAGE: u64 = 4096;
+/// Fixed header bytes before the names block.
+const HEADER_FIXED: u64 = 48;
+/// Byte offset of the `n_classes` field (patched after a streaming pack).
+const N_CLASSES_OFFSET: u64 = 32;
+
+/// Derived section offsets of a file with the given shape.
+struct Layout {
+    data_offset: u64,
+    col_stride: u64,
+    labels_offset: u64,
+    file_len: u64,
+}
+
+fn round_up(x: u64, to: u64) -> Option<u64> {
+    debug_assert!(to.is_power_of_two());
+    x.checked_add(to - 1).map(|v| v & !(to - 1))
+}
+
+fn layout(n_samples: u64, n_features: u64, names_len: u64, page: u64) -> Result<Layout> {
+    let err = || anyhow!("column-file shape overflows the addressable range");
+    let data_offset =
+        round_up(HEADER_FIXED.checked_add(names_len).ok_or_else(err)?, page).ok_or_else(err)?;
+    let col_bytes = n_samples
+        .checked_mul(std::mem::size_of::<f32>() as u64)
+        .ok_or_else(err)?;
+    let col_stride = round_up(col_bytes, page).ok_or_else(err)?;
+    let labels_offset = data_offset
+        .checked_add(n_features.checked_mul(col_stride).ok_or_else(err)?)
+        .ok_or_else(err)?;
+    let file_len = labels_offset
+        .checked_add(
+            n_samples
+                .checked_mul(std::mem::size_of::<Label>() as u64)
+                .ok_or_else(err)?,
+        )
+        .ok_or_else(err)?;
+    Ok(Layout {
+        data_offset,
+        col_stride,
+        labels_offset,
+        file_len,
+    })
+}
+
+fn encode_names(names: &[String]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    for name in names {
+        let b = name.as_bytes();
+        if b.len() > u16::MAX as usize {
+            bail!("feature name longer than 64k bytes: {name:?}");
+        }
+        out.extend_from_slice(&(b.len() as u16).to_ne_bytes());
+        out.extend_from_slice(b);
+    }
+    Ok(out)
+}
+
+fn write_header(
+    w: &mut impl Write,
+    n_samples: u64,
+    n_features: u64,
+    n_classes: u64,
+    names_block: &[u8],
+) -> std::io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&ENDIAN_MARK.to_ne_bytes())?;
+    w.write_all(&(PAGE as u32).to_ne_bytes())?;
+    w.write_all(&n_samples.to_ne_bytes())?;
+    w.write_all(&n_features.to_ne_bytes())?;
+    w.write_all(&n_classes.to_ne_bytes())?;
+    w.write_all(&(names_block.len() as u64).to_ne_bytes())?;
+    w.write_all(names_block)
+}
+
+#[inline]
+fn f32_bytes(vals: &[f32]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation; the format is native-endian.
+    unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, std::mem::size_of_val(vals)) }
+}
+
+#[inline]
+fn label_bytes(vals: &[Label]) -> &[u8] {
+    // SAFETY: as above.
+    unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, std::mem::size_of_val(vals)) }
+}
+
+fn write_zeros(w: &mut impl Write, mut count: u64) -> std::io::Result<()> {
+    let zeros = [0u8; 4096];
+    while count > 0 {
+        let take = count.min(zeros.len() as u64) as usize;
+        w.write_all(&zeros[..take])?;
+        count -= take as u64;
+    }
+    Ok(())
+}
+
+/// Write an (in-memory or mapped) dataset as a `.sofc` column file. One
+/// sequential streaming pass through the chunk-view API — peak extra
+/// memory is one column chunk.
+pub fn write_dataset(data: &Dataset, path: &Path) -> Result<()> {
+    let n = data.n_samples() as u64;
+    let d = data.n_features() as u64;
+    if n == 0 || d == 0 {
+        bail!("refusing to pack an empty dataset");
+    }
+    if n > u32::MAX as u64 {
+        bail!("column files cap at 2^32-1 samples (active sets index with u32)");
+    }
+    let names_block = encode_names(data.feature_names())?;
+    let lay = layout(n, d, names_block.len() as u64, PAGE)?;
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    write_header(&mut w, n, d, data.n_classes() as u64, &names_block)?;
+    write_zeros(&mut w, lay.data_offset - HEADER_FIXED - names_block.len() as u64)?;
+    let col_pad = lay.col_stride - n * std::mem::size_of::<f32>() as u64;
+    for f in 0..data.n_features() {
+        for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
+            w.write_all(f32_bytes(chunk))?;
+        }
+        write_zeros(&mut w, col_pad)?;
+    }
+    for (_, chunk) in data.labels_blocks(CHUNK_ROWS) {
+        w.write_all(label_bytes(chunk))?;
+    }
+    w.flush().with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Result of a streaming CSV pack.
+pub struct PackSummary {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub file_len: u64,
+}
+
+/// Convert a CSV to a `.sofc` column file **without materializing the
+/// table in RAM**: pass 1 counts samples (so section offsets are known),
+/// pass 2 re-reads the CSV into fixed-size per-feature chunk buffers
+/// ([`CHUNK_ROWS`] rows) and scatters each chunk to its feature section by
+/// offset. Peak memory is `n_features x CHUNK_ROWS x 4` bytes regardless
+/// of table size. `n_classes` is patched into the header after the data
+/// pass (labels are only known then).
+pub fn pack_csv(
+    csv_path: &Path,
+    out: &Path,
+    label: LabelColumn,
+    has_header: bool,
+) -> Result<PackSummary> {
+    // Pass 1: shape.
+    let mut rows = CsvRows::open(csv_path, label, has_header)?;
+    let mut feats: Vec<f32> = Vec::new();
+    let mut n = 0u64;
+    while rows.next_row(&mut feats)?.is_some() {
+        n += 1;
+    }
+    if n == 0 {
+        bail!("{csv_path:?} contains no samples");
+    }
+    if n > u32::MAX as u64 {
+        bail!("column files cap at 2^32-1 samples (active sets index with u32)");
+    }
+    let d = rows.n_features().expect("rows seen implies known width");
+    let names = rows.names(d);
+    let names_block = encode_names(&names)?;
+    let lay = layout(n, d as u64, names_block.len() as u64, PAGE)?;
+
+    let mut file = File::create(out).with_context(|| format!("create {out:?}"))?;
+    // n_classes placeholder 0 — patched after the data pass.
+    write_header(&mut file, n, d as u64, 0, &names_block)?;
+    // Pre-size so chunk scatter can seek anywhere; unwritten gaps (section
+    // padding) read back as zeros on every mainstream filesystem.
+    file.set_len(lay.file_len)
+        .with_context(|| format!("resize {out:?}"))?;
+
+    // Pass 2: chunked transpose straight into the file sections.
+    let mut rows = CsvRows::open(csv_path, label, has_header)?;
+    let mut cols: Vec<Vec<f32>> = (0..d).map(|_| Vec::with_capacity(CHUNK_ROWS)).collect();
+    let mut labs: Vec<Label> = Vec::with_capacity(CHUNK_ROWS);
+    let mut base = 0u64;
+    let mut max_label: Label = 0;
+    loop {
+        labs.clear();
+        while labs.len() < CHUNK_ROWS {
+            match rows.next_row(&mut feats)? {
+                None => break,
+                Some(lab) => {
+                    if feats.len() != d {
+                        bail!("{csv_path:?} changed between pack passes (row width)");
+                    }
+                    for (col, &v) in cols.iter_mut().zip(feats.iter()) {
+                        col.push(v);
+                    }
+                    max_label = max_label.max(lab);
+                    labs.push(lab);
+                }
+            }
+        }
+        if labs.is_empty() {
+            break;
+        }
+        let rows_in_chunk = labs.len() as u64;
+        if base + rows_in_chunk > n {
+            bail!("{csv_path:?} grew between pack passes");
+        }
+        for (f, col) in cols.iter_mut().enumerate() {
+            let off = lay.data_offset
+                + f as u64 * lay.col_stride
+                + base * std::mem::size_of::<f32>() as u64;
+            file.seek(SeekFrom::Start(off))?;
+            file.write_all(f32_bytes(col))?;
+            col.clear();
+        }
+        let off = lay.labels_offset + base * std::mem::size_of::<Label>() as u64;
+        file.seek(SeekFrom::Start(off))?;
+        file.write_all(label_bytes(&labs))?;
+        base += rows_in_chunk;
+    }
+    if base != n {
+        bail!("{csv_path:?} shrank between pack passes ({base} of {n} rows)");
+    }
+    let n_classes = max_label as u64 + 1;
+    file.seek(SeekFrom::Start(N_CLASSES_OFFSET))?;
+    file.write_all(&n_classes.to_ne_bytes())?;
+    file.flush()?;
+    Ok(PackSummary {
+        n_samples: n as usize,
+        n_features: d,
+        n_classes: n_classes as usize,
+        file_len: lay.file_len,
+    })
+}
+
+/// True when the file starts with the column-file magic (used by the CLI
+/// to dispatch `--data` paths between CSV and `.sofc`).
+pub fn sniff(path: &Path) -> bool {
+    let mut head = [0u8; 8];
+    match File::open(path) {
+        Ok(mut f) => {
+            use std::io::Read;
+            f.read_exact(&mut head).is_ok() && head == MAGIC
+        }
+        Err(_) => false,
+    }
+}
+
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_ne_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn read_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_ne_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Map a `.sofc` column file read-only and wrap it as a [`Dataset`] on the
+/// mapped backend. Every section bound, the magic, the endianness mark and
+/// the label range are validated before the first zero-copy view is
+/// handed out; the file contents are **not** read eagerly (beyond the
+/// header and one streaming label-validation pass, which the trainer's
+/// first `class_counts` would fault in anyway).
+pub fn load_mapped(path: &Path) -> Result<Dataset> {
+    let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    if file_len < HEADER_FIXED {
+        bail!("{path:?}: truncated column file (no header)");
+    }
+    let map_len: usize = file_len
+        .try_into()
+        .map_err(|_| anyhow!("{path:?}: file too large for this address space"))?;
+    let map = Mmap::map(&mut file, map_len).with_context(|| format!("mmap {path:?}"))?;
+    let b = map.as_slice();
+    if b[..8] != MAGIC {
+        bail!("{path:?}: bad magic — not a soforest column file");
+    }
+    let mark = read_u32(b, 8);
+    if mark == ENDIAN_MARK.swap_bytes() {
+        bail!(
+            "{path:?}: endianness mismatch — the file was packed on a host with the \
+             opposite byte order; re-pack it on a matching host"
+        );
+    }
+    if mark != ENDIAN_MARK {
+        bail!("{path:?}: corrupt header (endianness mark)");
+    }
+    let page = read_u32(b, 12) as u64;
+    if !page.is_power_of_two() || page < 8 || page > (1 << 24) {
+        bail!("{path:?}: corrupt header (page size {page})");
+    }
+    let n_samples = read_u64(b, 16);
+    let n_features = read_u64(b, 24);
+    let n_classes = read_u64(b, 32);
+    let names_len = read_u64(b, 40);
+    if n_samples == 0 || n_features == 0 {
+        bail!("{path:?}: empty table ({n_samples} samples x {n_features} features)");
+    }
+    if n_samples > u32::MAX as u64 {
+        bail!("{path:?}: {n_samples} samples exceed the u32 active-set range");
+    }
+    if n_classes == 0 || n_classes > u16::MAX as u64 + 1 {
+        bail!("{path:?}: corrupt header (n_classes {n_classes})");
+    }
+    if names_len > file_len - HEADER_FIXED {
+        bail!("{path:?}: truncated column file (names block)");
+    }
+    let lay = layout(n_samples, n_features, names_len, page)
+        .with_context(|| format!("{path:?}: header shape"))?;
+    if lay.file_len > file_len {
+        bail!(
+            "{path:?}: truncated column file ({file_len} bytes, layout needs {})",
+            lay.file_len
+        );
+    }
+
+    // Names block.
+    let mut names: Vec<String> = Vec::new();
+    if names_len > 0 {
+        let block = &b[HEADER_FIXED as usize..(HEADER_FIXED + names_len) as usize];
+        let mut at = 0usize;
+        for f in 0..n_features {
+            if at + 2 > block.len() {
+                bail!("{path:?}: corrupt names block (feature {f})");
+            }
+            let len = u16::from_ne_bytes(block[at..at + 2].try_into().unwrap()) as usize;
+            at += 2;
+            if at + len > block.len() {
+                bail!("{path:?}: corrupt names block (feature {f})");
+            }
+            let name = std::str::from_utf8(&block[at..at + len])
+                .map_err(|_| anyhow!("{path:?}: feature {f} name is not UTF-8"))?;
+            names.push(name.to_string());
+            at += len;
+        }
+        if at != block.len() {
+            bail!("{path:?}: corrupt names block (trailing bytes)");
+        }
+    }
+
+    let map = Arc::new(map);
+    let store = MappedColumns::new(
+        Arc::clone(&map),
+        n_samples as usize,
+        n_features as usize,
+        lay.data_offset as usize,
+        lay.col_stride as usize,
+        lay.labels_offset as usize,
+    );
+
+    // One streaming pass over the labels: an out-of-range label would
+    // otherwise corrupt histogram fills deep inside training (the fill
+    // entry points would panic, but with a far less actionable message).
+    let labels: &[Label] = map.typed_slice(lay.labels_offset as usize, n_samples as usize);
+    if let Some(&bad) = labels.iter().find(|&&l| l as u64 >= n_classes) {
+        bail!("{path:?}: label {bad} out of range for {n_classes} classes");
+    }
+
+    Ok(Dataset::from_store(
+        ColumnStore::Mapped(store),
+        n_classes as usize,
+        names,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    fn sample_data() -> Dataset {
+        TrunkConfig {
+            n_samples: 500,
+            n_features: 7,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(9))
+        .with_feature_names((0..7).map(|f| format!("feat_{f}")).collect())
+    }
+
+    fn assert_datasets_bit_equal(a: &Dataset, b: &Dataset) {
+        assert_eq!(a.n_samples(), b.n_samples());
+        assert_eq!(a.n_features(), b.n_features());
+        assert_eq!(a.n_classes(), b.n_classes());
+        assert_eq!(a.feature_names(), b.feature_names());
+        assert_eq!(a.labels(), b.labels());
+        for f in 0..a.n_features() {
+            let (ca, cb) = (a.column(f), b.column(f));
+            assert_eq!(ca.len(), cb.len());
+            for (x, y) in ca.iter().zip(cb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "feature {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_load_roundtrip_is_bit_exact() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_roundtrip.sofc");
+        write_dataset(&data, &path).unwrap();
+        assert!(sniff(&path));
+        let mapped = load_mapped(&path).unwrap();
+        assert_eq!(mapped.backend_name(), "mmap");
+        assert_datasets_bit_equal(&data, &mapped);
+        // Chunk views line up with full columns on the mapped backend too.
+        assert_eq!(mapped.column_chunk(3, 17..180), &data.column(3)[17..180]);
+        assert_eq!(mapped.labels_chunk(490..500), &data.labels()[490..500]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unnamed_datasets_roundtrip_without_names() {
+        let data = Dataset::from_columns(
+            vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.5, 9.0]],
+            vec![0, 1, 1],
+        );
+        let path = tmp("soforest_colfile_unnamed.sofc");
+        write_dataset(&data, &path).unwrap();
+        let mapped = load_mapped(&path).unwrap();
+        assert!(mapped.feature_names().is_empty());
+        assert_datasets_bit_equal(&data, &mapped);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_files() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_trunc.sofc");
+        write_dataset(&data, &path).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        let full = pristine.len();
+        for keep in [10usize, HEADER_FIXED as usize + 2, full - 1] {
+            // Rewrite from pristine bytes each round (a second set_len on
+            // an already-truncated file would zero-extend it instead).
+            std::fs::write(&path, &pristine[..keep]).unwrap();
+            let err = load_mapped(&path).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "keep={keep}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_foreign_endianness() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_corrupt.sofc");
+        write_dataset(&data, &path).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        let mut bad = pristine.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(!sniff(&path));
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // A file packed on an opposite-endian host carries a byte-swapped
+        // mark when read natively.
+        let mut swapped = pristine.clone();
+        swapped[8..12].copy_from_slice(&ENDIAN_MARK.swap_bytes().to_ne_bytes());
+        std::fs::write(&path, &swapped).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("endianness"), "{err}");
+
+        // Arbitrary junk in the mark is corrupt, not foreign.
+        let mut junk = pristine;
+        junk[8..12].copy_from_slice(&0xDEAD_BEEFu32.to_ne_bytes());
+        std::fs::write(&path, &junk).unwrap();
+        assert!(load_mapped(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_badlabel.sofc");
+        write_dataset(&data, &path).unwrap();
+        // Patch the header's n_classes below the actual label range.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[N_CLASSES_OFFSET as usize..N_CLASSES_OFFSET as usize + 8]
+            .copy_from_slice(&1u64.to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn layout_is_page_aligned_and_ordered() {
+        let lay = layout(1000, 5, 37, PAGE).unwrap();
+        assert_eq!(lay.data_offset % PAGE, 0);
+        assert_eq!(lay.col_stride % PAGE, 0);
+        assert!(lay.col_stride >= 4000);
+        assert_eq!(lay.labels_offset, lay.data_offset + 5 * lay.col_stride);
+        assert_eq!(lay.file_len, lay.labels_offset + 2000);
+        assert!(layout(u64::MAX / 2, u64::MAX / 2, 0, PAGE).is_err());
+    }
+}

@@ -3,10 +3,19 @@
 //! Supports the UCI-style layout the paper's datasets use: one sample per
 //! line, numeric features, label in a configurable column (first or last),
 //! optional header. No quoting/escaping — these files are purely numeric.
+//!
+//! Ingestion is **streaming**: [`CsvRows`] parses one line at a time into
+//! a caller-owned row buffer, so consumers decide how much to hold.
+//! [`load_csv`] accumulates fixed-size row-major chunks and flushes them
+//! through the blocked transpose ([`crate::data::transpose_block_into`])
+//! instead of pushing one value per column per row (the old scalar
+//! transpose touched `d` column tails per row — cache-hostile for wide
+//! tables); [`crate::data::colfile::pack_csv`] drives the same reader
+//! twice to convert CSV → `.sofc` without ever materializing the table.
 
-use super::{Dataset, Label};
+use super::{transpose_block_into, Dataset, Label, CHUNK_ROWS};
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
 use std::path::Path;
 
 /// Where the label lives in each row.
@@ -16,65 +25,158 @@ pub enum LabelColumn {
     Last,
 }
 
-/// Load a numeric CSV. `has_header` skips (and records) the first line.
-pub fn load_csv(path: &Path, label: LabelColumn, has_header: bool) -> Result<Dataset> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut lines = BufReader::new(file).lines();
-    let mut header: Vec<String> = Vec::new();
-    if has_header {
-        if let Some(h) = lines.next() {
-            header = h?.split(',').map(|s| s.trim().to_string()).collect();
+/// Streaming row reader: yields one parsed row at a time. The feature
+/// width locks on the first data row; later rows of a different width are
+/// a hard error (same contract the slurping loader enforced).
+pub struct CsvRows {
+    lines: Lines<BufReader<std::fs::File>>,
+    label: LabelColumn,
+    header: Vec<String>,
+    n_features: Option<usize>,
+    /// 1-based data-line counter for error messages.
+    lineno: usize,
+}
+
+impl CsvRows {
+    pub fn open(path: &Path, label: LabelColumn, has_header: bool) -> Result<Self> {
+        let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut lines = BufReader::new(file).lines();
+        let mut header = Vec::new();
+        if has_header {
+            if let Some(h) = lines.next() {
+                header = h?.split(',').map(|s| s.trim().to_string()).collect();
+            }
+        }
+        Ok(Self {
+            lines,
+            label,
+            header,
+            n_features: None,
+            lineno: 0,
+        })
+    }
+
+    /// Feature width, known once the first data row has been read.
+    pub fn n_features(&self) -> Option<usize> {
+        self.n_features
+    }
+
+    /// Header-derived feature names (label column stripped), or empty when
+    /// there is no header / the header width disagrees with the data.
+    pub fn names(&self, n_features: usize) -> Vec<String> {
+        if self.header.is_empty() {
+            return Vec::new();
+        }
+        let names: Vec<String> = match self.label {
+            LabelColumn::First => self.header.iter().skip(1).cloned().collect(),
+            LabelColumn::Last => self.header[..self.header.len() - 1].to_vec(),
+        };
+        if names.len() == n_features {
+            names
+        } else {
+            Vec::new()
         }
     }
+
+    /// Parse the next data row into `feats` (cleared first). Returns the
+    /// row's label, or `None` at end of file. Blank lines are skipped.
+    pub fn next_row(&mut self, feats: &mut Vec<f32>) -> Result<Option<Label>> {
+        for line in self.lines.by_ref() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.lineno += 1;
+            let lineno = self.lineno;
+            let mut fields = line.split(',').map(str::trim);
+            feats.clear();
+            // Labels may be written as floats (HIGGS uses
+            // "1.000000000000000e+00").
+            let parse_label = |s: &str| -> Result<Label> {
+                let lab_f: f64 = s
+                    .parse()
+                    .with_context(|| format!("line {lineno}: bad label {s:?}"))?;
+                Ok(lab_f as Label)
+            };
+            let label = match self.label {
+                LabelColumn::First => {
+                    let Some(first) = fields.next() else {
+                        bail!("line {lineno}: need at least 2 fields");
+                    };
+                    let label = parse_label(first)?;
+                    for v in fields {
+                        feats.push(v.parse().with_context(|| {
+                            format!("line {lineno}: bad value {v:?}")
+                        })?);
+                    }
+                    label
+                }
+                LabelColumn::Last => {
+                    let mut pending: Option<&str> = None;
+                    for v in fields {
+                        if let Some(prev) = pending.replace(v) {
+                            feats.push(prev.parse().with_context(|| {
+                                format!("line {lineno}: bad value {prev:?}")
+                            })?);
+                        }
+                    }
+                    let Some(last) = pending else {
+                        bail!("line {lineno}: need at least 2 fields");
+                    };
+                    parse_label(last)?
+                }
+            };
+            if feats.is_empty() {
+                bail!("line {lineno}: need at least 2 fields");
+            }
+            match self.n_features {
+                None => self.n_features = Some(feats.len()),
+                Some(d) if d != feats.len() => {
+                    bail!("line {lineno}: {} features, expected {d}", feats.len())
+                }
+                Some(_) => {}
+            }
+            return Ok(Some(label));
+        }
+        Ok(None)
+    }
+}
+
+/// Load a numeric CSV into an in-memory dataset. `has_header` skips (and
+/// records) the first line. Rows stream through a fixed-size chunk buffer
+/// and a blocked transpose; peak transient memory beyond the final
+/// columns is one `CHUNK_ROWS x d` chunk.
+pub fn load_csv(path: &Path, label: LabelColumn, has_header: bool) -> Result<Dataset> {
+    let mut rows = CsvRows::open(path, label, has_header)?;
+    let mut feats: Vec<f32> = Vec::new();
+    let mut chunk: Vec<f32> = Vec::new();
+    let mut chunk_rows = 0usize;
     let mut columns: Vec<Vec<f32>> = Vec::new();
     let mut labels: Vec<Label> = Vec::new();
-    for (lineno, line) in lines.enumerate() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        if fields.len() < 2 {
-            bail!("line {}: need at least 2 fields", lineno + 1);
-        }
-        let (label_str, feats): (&str, &[&str]) = match label {
-            LabelColumn::First => (fields[0], &fields[1..]),
-            LabelColumn::Last => (fields[fields.len() - 1], &fields[..fields.len() - 1]),
-        };
+    while let Some(lab) = rows.next_row(&mut feats)? {
         if columns.is_empty() {
             columns = vec![Vec::new(); feats.len()];
-        } else if columns.len() != feats.len() {
-            bail!(
-                "line {}: {} features, expected {}",
-                lineno + 1,
-                feats.len(),
-                columns.len()
-            );
         }
-        // Labels may be written as floats (HIGGS uses "1.000000000000000e+00").
-        let lab_f: f64 = label_str
-            .parse()
-            .with_context(|| format!("line {}: bad label {label_str:?}", lineno + 1))?;
-        labels.push(lab_f as Label);
-        for (f, v) in feats.iter().enumerate() {
-            columns[f].push(
-                v.parse()
-                    .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?,
-            );
+        labels.push(lab);
+        chunk.extend_from_slice(&feats);
+        chunk_rows += 1;
+        if chunk_rows == CHUNK_ROWS {
+            transpose_block_into(&chunk, chunk_rows, columns.len(), &mut columns);
+            chunk.clear();
+            chunk_rows = 0;
         }
     }
     if labels.is_empty() {
         bail!("{path:?} contains no samples");
     }
+    if chunk_rows > 0 {
+        transpose_block_into(&chunk, chunk_rows, columns.len(), &mut columns);
+    }
+    let d = columns.len();
     let mut ds = Dataset::from_columns(columns, labels);
-    if !header.is_empty() {
-        let names: Vec<String> = match label {
-            LabelColumn::First => header[1..].to_vec(),
-            LabelColumn::Last => header[..header.len() - 1].to_vec(),
-        };
-        if names.len() == ds.n_features() {
-            ds = ds.with_feature_names(names);
-        }
+    let names = rows.names(d);
+    if !names.is_empty() {
+        ds = ds.with_feature_names(names);
     }
     Ok(ds)
 }
@@ -139,6 +241,45 @@ mod tests {
         let tmp = std::env::temp_dir().join("soforest_csv_ragged.csv");
         std::fs::write(&tmp, "0,1,2\n0,1\n").unwrap();
         assert!(load_csv(&tmp, LabelColumn::Last, false).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn chunked_load_crosses_chunk_boundaries_intact() {
+        // More rows than one chunk, with values that encode (row, col) so
+        // any transpose slip is caught.
+        let tmp = std::env::temp_dir().join("soforest_csv_chunky.csv");
+        let n = CHUNK_ROWS * 2 + 137;
+        let mut text = String::new();
+        for r in 0..n {
+            text.push_str(&format!("{}.0,{}.5,{}\n", r, r, r % 2));
+        }
+        std::fs::write(&tmp, &text).unwrap();
+        let d = load_csv(&tmp, LabelColumn::Last, false).unwrap();
+        assert_eq!(d.n_samples(), n);
+        assert_eq!(d.n_features(), 2);
+        for r in (0..n).step_by(61) {
+            assert_eq!(d.value(r, 0), r as f32);
+            assert_eq!(d.value(r, 1), r as f32 + 0.5);
+            assert_eq!(d.label(r), (r % 2) as Label);
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn streaming_reader_reports_width_and_names() {
+        let tmp = std::env::temp_dir().join("soforest_csv_rows.csv");
+        std::fs::write(&tmp, "a,b,label\n1,2,0\n\n3,4,1\n").unwrap();
+        let mut rows = CsvRows::open(&tmp, LabelColumn::Last, true).unwrap();
+        assert_eq!(rows.n_features(), None);
+        let mut feats = Vec::new();
+        assert_eq!(rows.next_row(&mut feats).unwrap(), Some(0));
+        assert_eq!(feats, vec![1.0, 2.0]);
+        assert_eq!(rows.n_features(), Some(2));
+        assert_eq!(rows.next_row(&mut feats).unwrap(), Some(1));
+        assert_eq!(rows.next_row(&mut feats).unwrap(), None);
+        assert_eq!(rows.names(2), vec!["a".to_string(), "b".to_string()]);
+        assert!(rows.names(3).is_empty());
         std::fs::remove_file(tmp).ok();
     }
 }

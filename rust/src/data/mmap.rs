@@ -1,0 +1,226 @@
+//! Minimal read-only memory mapping.
+//!
+//! The offline crate set has no `memmap2`, so the mapped column-file
+//! backend ([`super::colfile`]) declares `mmap(2)`/`munmap(2)` directly
+//! against the system libc (which every Rust binary on unix already links).
+//! On non-unix targets — or unix targets without a 64-bit `off_t` ABI we
+//! can declare portably — [`Mmap::map`] degrades to reading the file into
+//! an 8-byte-aligned heap buffer: same API, same alignment guarantees, no
+//! page-cache residency benefit.
+//!
+//! Safety model: mappings are `PROT_READ` + `MAP_PRIVATE` over a file the
+//! process opened read-only, and the mapping outlives every borrow because
+//! the [`Mmap`] is held behind an `Arc` by the dataset backend. The one
+//! hazard shared with every mmap consumer: truncating the underlying file
+//! from *outside* the process while it is mapped turns reads into SIGBUS.
+//! We accept that (documented) risk for training data, exactly like
+//! LightGBM's and numpy's mapped readers do.
+
+use std::fs::File;
+use std::io;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        /// `off_t` is 64-bit on every 64-bit unix this crate targets; the
+        /// cfg gate above keeps this declaration off ABIs where it is not.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// A read-only byte view of a whole file. Page-aligned base on the mmap
+/// path, 8-byte-aligned on the buffered fallback — either way, any file
+/// offset that is a multiple of 4 yields a validly aligned `f32`/`u16`
+/// reinterpretation (the column-file layout only uses page-multiple
+/// section offsets).
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    /// Buffered fallback storage (`u64` for 8-byte base alignment). Empty
+    /// on the true-mmap path.
+    fallback: Vec<u64>,
+}
+
+// SAFETY: the mapping is read-only for the whole lifetime of the value and
+// freeing it is single-owner (Drop); concurrent `&self` reads are plain
+// loads from immutable memory.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map (or, on fallback targets, read) the file's first `len` bytes.
+    pub fn map(file: &mut File, len: usize) -> io::Result<Mmap> {
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "cannot map an empty file",
+            ));
+        }
+        Self::map_impl(file, len)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn map_impl(file: &mut File, len: usize) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() || ptr.is_null() {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap {
+            ptr: ptr as *const u8,
+            len,
+            fallback: Vec::new(),
+        })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn map_impl(file: &mut File, len: usize) -> io::Result<Mmap> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut fallback = vec![0u64; len.div_ceil(8)];
+        // SAFETY: u64 -> u8 reinterpretation of an initialized buffer.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(fallback.as_mut_ptr() as *mut u8, fallback.len() * 8)
+        };
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut bytes[..len])?;
+        let ptr = fallback.as_ptr() as *const u8;
+        Ok(Mmap { ptr, len, fallback })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` points at `len` mapped (or buffered) read-only
+        // bytes that live as long as `self`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Reinterpret `count` values of `T` at byte offset `off`.
+    ///
+    /// # Panics
+    /// When the range escapes the mapping or `off` is misaligned for `T` —
+    /// both are format-validation bugs, not runtime data conditions (the
+    /// column-file loader checks every section bound before constructing
+    /// its backend).
+    #[inline]
+    pub fn typed_slice<T: Copy>(&self, off: usize, count: usize) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        let end = off
+            .checked_add(count.checked_mul(size).expect("section size overflow"))
+            .expect("section offset overflow");
+        assert!(end <= self.len, "section escapes the mapping");
+        let ptr = unsafe { self.ptr.add(off) };
+        assert_eq!(
+            ptr as usize % std::mem::align_of::<T>(),
+            0,
+            "misaligned section offset"
+        );
+        // SAFETY: bounds and alignment checked above; T: Copy rules out
+        // drop/ownership concerns and the file bytes are plain data.
+        unsafe { std::slice::from_raw_parts(ptr as *const T, count) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.fallback.is_empty() && !self.ptr.is_null() {
+            // SAFETY: `ptr`/`len` came from a successful mmap call and are
+            // unmapped exactly once.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len)
+            .field("buffered_fallback", &!self.fallback.is_empty())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_bytes_and_typed_views() {
+        let path = std::env::temp_dir().join("soforest_mmap_test.bin");
+        {
+            let mut f = File::create(&path).unwrap();
+            let vals: [f32; 4] = [1.0, -2.5, 3.25, f32::INFINITY];
+            for v in vals {
+                f.write_all(&v.to_ne_bytes()).unwrap();
+            }
+            f.write_all(&7u16.to_ne_bytes()).unwrap();
+        }
+        let mut f = File::open(&path).unwrap();
+        let len = f.metadata().unwrap().len() as usize;
+        let m = Mmap::map(&mut f, len).unwrap();
+        assert_eq!(m.len(), 18);
+        let floats: &[f32] = m.typed_slice(0, 4);
+        assert_eq!(floats, &[1.0, -2.5, 3.25, f32::INFINITY]);
+        let label: &[u16] = m.typed_slice(16, 1);
+        assert_eq!(label, &[7]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_empty_files() {
+        let path = std::env::temp_dir().join("soforest_mmap_empty.bin");
+        File::create(&path).unwrap();
+        let mut f = File::open(&path).unwrap();
+        assert!(Mmap::map(&mut f, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "escapes the mapping")]
+    fn typed_slice_bounds_checked() {
+        let path = std::env::temp_dir().join("soforest_mmap_oob.bin");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        let mut f = File::open(&path).unwrap();
+        let m = Mmap::map(&mut f, 16).unwrap();
+        let _: &[f32] = m.typed_slice(8, 4);
+    }
+}

@@ -6,25 +6,71 @@
 //! member columns) touches a handful of dense arrays instead of striding
 //! through row-major memory. The table is immutable during training; nodes
 //! address it through index sets of *active samples* (see [`ActiveSet`]).
+//!
+//! Storage is pluggable ([`store::ColumnStore`]): the classic in-memory
+//! `Vec<Vec<f32>>` backend, or a read-only memory-mapped `.sofc` column
+//! file ([`colfile`], written by `soforest pack`) for tables larger than
+//! RAM. Consumers read through the **chunk-view API** —
+//! [`Dataset::column_chunk`] / [`Dataset::labels_chunk`] and the blocked
+//! iterators — so no code path requires the whole table to be resident;
+//! on the mapped backend the OS page cache manages residency and the
+//! trained forest is byte-identical to the in-memory backend's
+//! (`tests/storage_equivalence.rs`).
 
+pub mod colfile;
 pub mod csv;
-pub mod transform;
+pub mod mmap;
 pub mod sampling;
+pub mod store;
 pub mod synth;
+pub mod transform;
+
+use std::ops::Range;
+
+pub use store::ColumnStore;
 
 /// Class label type. Two-class problems dominate the paper's evaluation but
 /// the library supports up to 65k classes.
 pub type Label = u16;
 
+/// Default rows per chunk for blocked sequential scans (transforms, CSV
+/// ingestion, column-file writing). Matches the order of the split
+/// engines' cache blocks (`FUSED_BLOCK`, the 256-row predict blocks): big
+/// enough to amortize per-chunk overhead, small enough to stay L1/L2
+/// resident next to the consumer's own state.
+pub const CHUNK_ROWS: usize = 1024;
+
 /// An immutable, feature-major table of `f32` features plus labels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    /// `columns[f][s]` = value of feature `f` for sample `s`.
-    columns: Vec<Vec<f32>>,
-    labels: Vec<Label>,
+    store: ColumnStore,
     n_classes: usize,
     /// Optional feature names (CSV header); empty if unnamed.
     feature_names: Vec<String>,
+}
+
+/// Blocked transpose of a row-major buffer (`rows[r * d + f]`, exactly
+/// `n_rows * d` elements) appended onto per-feature columns. Row tiles
+/// keep the strided reads of the row-major side inside a cache-resident
+/// window instead of re-striding the whole buffer once per feature — the
+/// scalar transpose this replaces was one of the CSV-ingestion hot spots.
+pub(crate) fn transpose_block_into(
+    rows: &[f32],
+    n_rows: usize,
+    d: usize,
+    columns: &mut [Vec<f32>],
+) {
+    debug_assert_eq!(rows.len(), n_rows * d);
+    debug_assert_eq!(columns.len(), d);
+    const TILE: usize = 128;
+    let mut base = 0;
+    while base < n_rows {
+        let end = (base + TILE).min(n_rows);
+        for (f, col) in columns.iter_mut().enumerate() {
+            col.extend((base..end).map(|r| rows[r * d + f]));
+        }
+        base = end;
+    }
 }
 
 impl Dataset {
@@ -36,24 +82,34 @@ impl Dataset {
         }
         let n_classes = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
         Self {
-            columns,
-            labels,
+            store: ColumnStore::Ram(store::RamColumns { columns, labels }),
             n_classes,
             feature_names: Vec::new(),
         }
     }
 
-    /// Build from a row-major buffer (`rows[s * d + f]`).
+    /// Build from a row-major buffer (`rows[s * d + f]`) with a blocked
+    /// transpose.
     pub fn from_rows(rows: &[f32], n_features: usize, labels: Vec<Label>) -> Self {
         let n = labels.len();
         assert_eq!(rows.len(), n * n_features);
-        let mut columns = vec![vec![0f32; n]; n_features];
-        for s in 0..n {
-            for f in 0..n_features {
-                columns[f][s] = rows[s * n_features + f];
-            }
-        }
+        let mut columns: Vec<Vec<f32>> = (0..n_features).map(|_| Vec::with_capacity(n)).collect();
+        transpose_block_into(rows, n, n_features, &mut columns);
         Self::from_columns(columns, labels)
+    }
+
+    /// Wrap an already-validated storage backend (the column-file loader's
+    /// constructor).
+    pub(crate) fn from_store(
+        store: ColumnStore,
+        n_classes: usize,
+        feature_names: Vec<String>,
+    ) -> Self {
+        Self {
+            store,
+            n_classes,
+            feature_names,
+        }
     }
 
     pub fn with_feature_names(mut self, names: Vec<String>) -> Self {
@@ -65,19 +121,19 @@ impl Dataset {
     /// Force the class count (e.g. when a split of the data happens to miss
     /// the last class).
     pub fn with_n_classes(mut self, n_classes: usize) -> Self {
-        assert!(n_classes > self.labels.iter().copied().max().unwrap_or(0) as usize);
+        assert!(n_classes > self.labels().iter().copied().max().unwrap_or(0) as usize);
         self.n_classes = n_classes;
         self
     }
 
     #[inline]
     pub fn n_samples(&self) -> usize {
-        self.labels.len()
+        self.store.n_samples()
     }
 
     #[inline]
     pub fn n_features(&self) -> usize {
-        self.columns.len()
+        self.store.n_features()
     }
 
     #[inline]
@@ -85,24 +141,74 @@ impl Dataset {
         self.n_classes
     }
 
+    /// The whole column as one chunk. Zero-copy on both backends — on the
+    /// mapped backend this borrows the file mapping, and only the pages a
+    /// consumer actually touches (e.g. a gather over a deep node's narrow
+    /// active-id span) need residency.
     #[inline]
     pub fn column(&self, f: usize) -> &[f32] {
-        &self.columns[f]
+        self.store.column_chunk(f, 0..self.n_samples())
+    }
+
+    /// Borrow `range` of feature `f`'s column — the chunk-view primitive
+    /// every training consumer reads through.
+    #[inline]
+    pub fn column_chunk(&self, f: usize, range: Range<usize>) -> &[f32] {
+        self.store.column_chunk(f, range)
+    }
+
+    /// Iterate feature `f` in blocks of `block` rows (`(start, chunk)`
+    /// pairs, in order). The blocked twin of [`Dataset::column`] for
+    /// sequential scans.
+    pub fn column_blocks(
+        &self,
+        f: usize,
+        block: usize,
+    ) -> impl Iterator<Item = (usize, &[f32])> + '_ {
+        let n = self.n_samples();
+        let block = block.max(1);
+        (0..n).step_by(block).map(move |start| {
+            let end = (start + block).min(n);
+            (start, self.store.column_chunk(f, start..end))
+        })
     }
 
     #[inline]
     pub fn labels(&self) -> &[Label] {
-        &self.labels
+        self.store.labels_chunk(0..self.n_samples())
+    }
+
+    /// Borrow `range` of the labels.
+    #[inline]
+    pub fn labels_chunk(&self, range: Range<usize>) -> &[Label] {
+        self.store.labels_chunk(range)
+    }
+
+    /// Iterate the labels in blocks of `block` rows (`(start, chunk)`
+    /// pairs, in order).
+    pub fn labels_blocks(&self, block: usize) -> impl Iterator<Item = (usize, &[Label])> + '_ {
+        let n = self.n_samples();
+        let block = block.max(1);
+        (0..n).step_by(block).map(move |start| {
+            let end = (start + block).min(n);
+            (start, self.store.labels_chunk(start..end))
+        })
     }
 
     #[inline]
     pub fn label(&self, s: usize) -> Label {
-        self.labels[s]
+        self.store.labels_chunk(s..s + 1)[0]
     }
 
     #[inline]
     pub fn value(&self, s: usize, f: usize) -> f32 {
-        self.columns[f][s]
+        self.store.value(s, f)
+    }
+
+    /// Backend tag (`ram` | `mmap`) for logs and bench rows.
+    #[inline]
+    pub fn backend_name(&self) -> &'static str {
+        self.store.backend_name()
     }
 
     pub fn feature_names(&self) -> &[String] {
@@ -112,41 +218,46 @@ impl Dataset {
     /// Gather one sample as a dense row (prediction path).
     pub fn row(&self, s: usize, out: &mut Vec<f32>) {
         out.clear();
-        out.extend(self.columns.iter().map(|c| c[s]));
+        out.extend((0..self.n_features()).map(|f| self.store.value(s, f)));
     }
 
     /// Class frequency vector over the whole table.
     pub fn class_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.n_classes];
-        for &l in &self.labels {
-            counts[l as usize] += 1;
+        for (_, chunk) in self.labels_blocks(CHUNK_ROWS) {
+            for &l in chunk {
+                counts[l as usize] += 1;
+            }
         }
         counts
     }
 
-    /// Select a subset of samples into a new (materialized) dataset. Used by
-    /// the MIGHT protocol to carve out calibration/validation sets, never on
-    /// the per-node hot path.
+    /// Select a subset of samples into a new (materialized, in-memory)
+    /// dataset. Used by the MIGHT protocol to carve out
+    /// calibration/validation sets, never on the per-node hot path.
     pub fn subset(&self, indices: &[u32]) -> Dataset {
-        let columns = self
-            .columns
-            .iter()
-            .map(|col| indices.iter().map(|&i| col[i as usize]).collect())
+        let columns: Vec<Vec<f32>> = (0..self.n_features())
+            .map(|f| {
+                let col = self.column(f);
+                indices.iter().map(|&i| col[i as usize]).collect()
+            })
             .collect();
-        let labels = indices.iter().map(|&i| self.labels[i as usize]).collect();
+        let full = self.labels();
+        let labels = indices.iter().map(|&i| full[i as usize]).collect();
         Dataset {
-            columns,
-            labels,
+            store: ColumnStore::Ram(store::RamColumns { columns, labels }),
             n_classes: self.n_classes,
             feature_names: self.feature_names.clone(),
         }
     }
 
     /// Approximate in-memory size in bytes (reported by the CLI, mirrors the
-    /// "Model" column of the paper's Table 1).
+    /// "Model" column of the paper's Table 1). For the mapped backend this
+    /// is the *logical* table size — resident memory is whatever the page
+    /// cache currently holds.
     pub fn nbytes(&self) -> usize {
-        self.columns.len() * self.n_samples() * std::mem::size_of::<f32>()
-            + self.labels.len() * std::mem::size_of::<Label>()
+        self.n_features() * self.n_samples() * std::mem::size_of::<f32>()
+            + self.n_samples() * std::mem::size_of::<Label>()
     }
 }
 
@@ -238,6 +349,40 @@ mod tests {
         assert_eq!(d.column(0), &[0.0, 1.0, 2.0, 3.0]);
         assert_eq!(d.column(1), &[5.0, 4.0, 3.0, 2.0]);
         assert_eq!(d.value(3, 1), 2.0);
+        assert_eq!(d.backend_name(), "ram");
+    }
+
+    #[test]
+    fn blocked_transpose_matches_scalar_on_odd_sizes() {
+        // Sizes straddling the transpose tile (128 rows) and a prime
+        // feature count, checked against the scalar definition.
+        for (n, d) in [(1usize, 1usize), (127, 3), (128, 3), (129, 7), (300, 5)] {
+            let rows: Vec<f32> = (0..n * d).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let ds = Dataset::from_rows(&rows, d, vec![0; n]);
+            for f in 0..d {
+                for s in 0..n {
+                    assert_eq!(ds.value(s, f), rows[s * d + f], "n={n} d={d} s={s} f={f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_views_agree_with_full_columns() {
+        let d = toy();
+        assert_eq!(d.column_chunk(0, 1..3), &[1.0, 2.0]);
+        assert_eq!(d.labels_chunk(2..4), &[1, 1]);
+        let mut rebuilt = Vec::new();
+        for (start, chunk) in d.column_blocks(1, 3) {
+            assert_eq!(start, rebuilt.len());
+            rebuilt.extend_from_slice(chunk);
+        }
+        assert_eq!(rebuilt, d.column(1));
+        let mut labs = Vec::new();
+        for (_, chunk) in d.labels_blocks(3) {
+            labs.extend_from_slice(chunk);
+        }
+        assert_eq!(labs, d.labels());
     }
 
     #[test]

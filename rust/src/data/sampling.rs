@@ -5,7 +5,7 @@
 //! the leaves) and *validation* (scoring). [`might_split`] produces that
 //! three-way split; plain forests use [`bootstrap`] / [`subsample`].
 
-use super::{ActiveSet, Dataset};
+use super::{ActiveSet, Dataset, CHUNK_ROWS};
 use crate::rng::Pcg64;
 
 /// Sample `k` ids from `[0, n)` **with replacement** (classic bagging).
@@ -31,6 +31,19 @@ pub fn subsample(rng: &mut Pcg64, n: usize, k: usize) -> ActiveSet {
     ActiveSet::from_vec(pool)
 }
 
+/// Sample ids grouped by class, via a blocked scan of the label chunks
+/// (in order, so the per-class id lists are identical to a whole-slice
+/// enumerate on either storage backend).
+fn ids_by_class(data: &Dataset) -> Vec<Vec<u32>> {
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); data.n_classes()];
+    for (start, chunk) in data.labels_blocks(CHUNK_ROWS) {
+        for (k, &l) in chunk.iter().enumerate() {
+            by_class[l as usize].push((start + k) as u32);
+        }
+    }
+    by_class
+}
+
 /// Stratified subsample: preserves class proportions (± rounding).
 pub fn stratified_subsample(
     rng: &mut Pcg64,
@@ -38,10 +51,7 @@ pub fn stratified_subsample(
     fraction: f64,
 ) -> ActiveSet {
     assert!((0.0..=1.0).contains(&fraction));
-    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); data.n_classes()];
-    for (i, &l) in data.labels().iter().enumerate() {
-        by_class[l as usize].push(i as u32);
-    }
+    let mut by_class = ids_by_class(data);
     let mut out = Vec::new();
     for ids in by_class.iter_mut() {
         rng.shuffle(ids);
@@ -71,10 +81,7 @@ pub fn might_split(
 ) -> MightSplit {
     let psum: f64 = proportions.iter().sum();
     assert!((psum - 1.0).abs() < 1e-9, "proportions must sum to 1");
-    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); data.n_classes()];
-    for (i, &l) in data.labels().iter().enumerate() {
-        by_class[l as usize].push(i as u32);
-    }
+    let mut by_class = ids_by_class(data);
     let mut parts: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
     for ids in by_class.iter_mut() {
         rng.shuffle(ids);

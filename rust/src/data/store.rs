@@ -1,0 +1,157 @@
+//! Storage backends behind [`super::Dataset`].
+//!
+//! The training pipeline never borrows whole-table state directly; it asks
+//! the dataset for **column chunks** (`column_chunk(f, range)`) and label
+//! chunks. This module provides the two backends those requests dispatch
+//! to:
+//!
+//! * [`RamColumns`] — the classic owned `Vec<Vec<f32>>` feature-major
+//!   table (every in-memory constructor: CSV load, synthetic generators,
+//!   `subset`, transforms).
+//! * [`MappedColumns`] — a read-only view into a memory-mapped `.sofc`
+//!   column file ([`super::colfile`]): page-aligned per-feature `f32`
+//!   sections plus a label section. Chunk requests reinterpret mapped
+//!   bytes in place — **no column is ever copied into RAM**, the OS page
+//!   cache decides residency, and tables larger than physical memory
+//!   train through the same fused gather→route→accumulate pipeline.
+//!
+//! Enum dispatch (not a trait object) keeps chunk access monomorphic-ish
+//! and `Dataset: Clone + Send + Sync` trivial; the branch is perfectly
+//! predicted inside any per-node loop since a dataset never changes
+//! backend mid-life.
+
+use super::mmap::Mmap;
+use super::Label;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// The storage backend of a dataset. See the module docs.
+#[derive(Clone, Debug)]
+pub enum ColumnStore {
+    Ram(RamColumns),
+    Mapped(MappedColumns),
+}
+
+/// Owned feature-major columns (the pre-backend representation).
+#[derive(Clone, Debug, Default)]
+pub struct RamColumns {
+    pub(crate) columns: Vec<Vec<f32>>,
+    pub(crate) labels: Vec<Label>,
+}
+
+/// Zero-copy view into a mapped `.sofc` column file. All offsets are
+/// validated once by the loader ([`super::colfile::load_mapped`]); chunk
+/// accessors only re-check logical bounds (`f < n_features`,
+/// `range.end <= n_samples`).
+#[derive(Clone, Debug)]
+pub struct MappedColumns {
+    map: Arc<Mmap>,
+    n_samples: usize,
+    n_features: usize,
+    /// Byte offset of feature 0's section (page-aligned).
+    data_offset: usize,
+    /// Byte stride between consecutive feature sections (page-padded).
+    col_stride: usize,
+    /// Byte offset of the label section.
+    labels_offset: usize,
+}
+
+impl MappedColumns {
+    /// Wrap a validated mapping. The caller (the column-file loader) must
+    /// have checked that every section lies inside the mapping and that
+    /// `data_offset`/`col_stride`/`labels_offset` are 4-byte multiples;
+    /// the assertions here are a second line of defense, not the
+    /// validation itself.
+    pub(crate) fn new(
+        map: Arc<Mmap>,
+        n_samples: usize,
+        n_features: usize,
+        data_offset: usize,
+        col_stride: usize,
+        labels_offset: usize,
+    ) -> Self {
+        assert!(col_stride >= n_samples * std::mem::size_of::<f32>());
+        assert!(data_offset % std::mem::size_of::<f32>() == 0);
+        assert!(col_stride % std::mem::size_of::<f32>() == 0);
+        assert!(labels_offset % std::mem::size_of::<Label>() == 0);
+        assert!(labels_offset + n_samples * std::mem::size_of::<Label>() <= map.len());
+        assert!(data_offset + n_features * col_stride <= labels_offset);
+        Self {
+            map,
+            n_samples,
+            n_features,
+            data_offset,
+            col_stride,
+            labels_offset,
+        }
+    }
+
+    #[inline]
+    fn column_chunk(&self, f: usize, range: Range<usize>) -> &[f32] {
+        assert!(f < self.n_features, "feature {f} out of range");
+        assert!(range.end <= self.n_samples, "chunk escapes the column");
+        let off =
+            self.data_offset + f * self.col_stride + range.start * std::mem::size_of::<f32>();
+        self.map.typed_slice(off, range.len())
+    }
+
+    #[inline]
+    fn labels_chunk(&self, range: Range<usize>) -> &[Label] {
+        assert!(range.end <= self.n_samples, "chunk escapes the labels");
+        let off = self.labels_offset + range.start * std::mem::size_of::<Label>();
+        self.map.typed_slice(off, range.len())
+    }
+}
+
+impl ColumnStore {
+    #[inline]
+    pub fn n_samples(&self) -> usize {
+        match self {
+            ColumnStore::Ram(r) => r.labels.len(),
+            ColumnStore::Mapped(m) => m.n_samples,
+        }
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        match self {
+            ColumnStore::Ram(r) => r.columns.len(),
+            ColumnStore::Mapped(m) => m.n_features,
+        }
+    }
+
+    /// Borrow `range` of feature `f`'s column. Zero-copy on both backends;
+    /// on the mapped backend only the touched pages need residency.
+    #[inline]
+    pub fn column_chunk(&self, f: usize, range: Range<usize>) -> &[f32] {
+        match self {
+            ColumnStore::Ram(r) => &r.columns[f][range],
+            ColumnStore::Mapped(m) => m.column_chunk(f, range),
+        }
+    }
+
+    /// Borrow `range` of the label vector.
+    #[inline]
+    pub fn labels_chunk(&self, range: Range<usize>) -> &[Label] {
+        match self {
+            ColumnStore::Ram(r) => &r.labels[range],
+            ColumnStore::Mapped(m) => m.labels_chunk(range),
+        }
+    }
+
+    #[inline]
+    pub fn value(&self, s: usize, f: usize) -> f32 {
+        match self {
+            ColumnStore::Ram(r) => r.columns[f][s],
+            ColumnStore::Mapped(m) => m.column_chunk(f, s..s + 1)[0],
+        }
+    }
+
+    /// Backend tag for logs/benches (`ram` | `mmap`).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            ColumnStore::Ram(_) => "ram",
+            ColumnStore::Mapped(_) => "mmap",
+        }
+    }
+}

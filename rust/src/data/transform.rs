@@ -7,7 +7,7 @@
 //! reproduces that, and [`train_test_split`] centralizes the shuffled
 //! holdout split used by the CLI, benches and examples.
 
-use super::Dataset;
+use super::{Dataset, CHUNK_ROWS};
 use crate::rng::Pcg64;
 
 /// Per-feature standardization parameters (fit on training data only).
@@ -19,19 +19,29 @@ pub struct Standardizer {
 }
 
 impl Standardizer {
-    /// Fit mean/std per feature.
+    /// Fit mean/std per feature. Reads each column through the blocked
+    /// chunk iterator — in order, with a single accumulator, so the f64
+    /// summation sequence (and therefore the fitted parameters) is
+    /// bit-identical to a whole-column scan on either storage backend.
     pub fn fit(data: &Dataset) -> Self {
         let n = data.n_samples() as f64;
         let mut means = Vec::with_capacity(data.n_features());
         let mut inv_stds = Vec::with_capacity(data.n_features());
         for f in 0..data.n_features() {
-            let col = data.column(f);
-            let mean = col.iter().map(|&v| v as f64).sum::<f64>() / n;
-            let var = col
-                .iter()
-                .map(|&v| (v as f64 - mean).powi(2))
-                .sum::<f64>()
-                / n;
+            let mut sum = 0f64;
+            for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
+                for &v in chunk {
+                    sum += v as f64;
+                }
+            }
+            let mean = sum / n;
+            let mut sq = 0f64;
+            for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
+                for &v in chunk {
+                    sq += (v as f64 - mean).powi(2);
+                }
+            }
+            let var = sq / n;
             means.push(mean as f32);
             inv_stds.push(if var > 1e-24 {
                 (1.0 / var.sqrt()) as f32
@@ -42,13 +52,17 @@ impl Standardizer {
         Self { means, inv_stds }
     }
 
-    /// Apply to a dataset (returns a new standardized dataset).
+    /// Apply to a dataset (returns a new standardized, in-memory dataset).
     pub fn transform(&self, data: &Dataset) -> Dataset {
         assert_eq!(self.means.len(), data.n_features());
         let columns: Vec<Vec<f32>> = (0..data.n_features())
             .map(|f| {
                 let (m, s) = (self.means[f], self.inv_stds[f]);
-                data.column(f).iter().map(|&v| (v - m) * s).collect()
+                let mut col = Vec::with_capacity(data.n_samples());
+                for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
+                    col.extend(chunk.iter().map(|&v| (v - m) * s));
+                }
+                col
             })
             .collect();
         Dataset::from_columns(columns, data.labels().to_vec())
@@ -128,7 +142,10 @@ mod tests {
 
     #[test]
     fn constant_feature_maps_to_zero() {
-        let d = Dataset::from_columns(vec![vec![5.0; 10], (0..10).map(|i| i as f32).collect()], vec![0; 10]);
+        let d = Dataset::from_columns(
+            vec![vec![5.0; 10], (0..10).map(|i| i as f32).collect()],
+            vec![0; 10],
+        );
         let std = Standardizer::fit(&d);
         let t = std.transform(&d);
         assert!(t.column(0).iter().all(|&v| v == 0.0));

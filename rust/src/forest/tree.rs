@@ -748,6 +748,14 @@ impl<'a> TreeTrainer<'a> {
     /// fall back to the vectorized CPU engine on decline — continuing the
     /// node's own RNG stream, exactly like the depth path's fallback).
     /// Returns the number of batched calls issued (0 or 1).
+    ///
+    /// Request **materialization** (projection apply + boundary build per
+    /// node) fans out over the intra-tree pool exactly like the CPU tiers:
+    /// each node's prep consumes only its own `(node_seed, node_id)` RNG
+    /// stream and its own leased scratch, so the prepared requests are
+    /// independent of worker count; restoring tier order before the batch
+    /// submission keeps the device call (and the response pairing)
+    /// deterministic too.
     fn process_accel_tier(
         &mut self,
         env: &NodeEnv<'a>,
@@ -756,62 +764,59 @@ impl<'a> TreeTrainer<'a> {
         tier: &[usize],
         outcomes: &mut [Option<NodeOutcome>],
     ) -> u64 {
-        struct Pending {
-            idx: usize,
-            rng: Pcg64,
-            matrix: ProjectionMatrix,
-            parent_counts: Vec<usize>,
-            projs: Vec<usize>,
-        }
+        let workers = self.intra_threads.min(tier.len()).max(1);
+        let prepped: Vec<AccelPrep> = if workers <= 1 {
+            let mut ns = self.pool.lease();
+            let out = tier
+                .iter()
+                .map(|&i| {
+                    prep_accel_node(env, node_seed, &frontier[i], i, &mut self.stats, &mut ns)
+                })
+                .collect();
+            self.pool.release(ns);
+            out
+        } else {
+            let pool = &self.pool;
+            let instrument = env.config.instrument;
+            let results: Mutex<Vec<(usize, AccelPrep)>> =
+                Mutex::new(Vec::with_capacity(tier.len()));
+            let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
+            run_pool(workers, tier.len(), |queue| {
+                let mut ns = pool.lease();
+                let mut local_stats = TrainStats::new(instrument);
+                let mut local: Vec<(usize, AccelPrep)> = Vec::new();
+                while let Some(k) = queue.claim() {
+                    let i = tier[k];
+                    local.push((
+                        k,
+                        prep_accel_node(env, node_seed, &frontier[i], i, &mut local_stats, &mut ns),
+                    ));
+                }
+                pool.release(ns);
+                results.lock().unwrap().extend(local);
+                worker_stats.lock().unwrap().push(local_stats);
+            });
+            for s in worker_stats.into_inner().unwrap() {
+                self.stats.merge(&s);
+            }
+            let mut collected = results.into_inner().unwrap();
+            // Tier order, not completion order: the batched device call
+            // must see requests in the same sequence at any worker count.
+            collected.sort_by_key(|(k, _)| *k);
+            collected.into_iter().map(|(_, p)| p).collect()
+        };
+
         let mut ns = self.pool.lease();
         let mut pending: Vec<Pending> = Vec::new();
         let mut requests: Vec<NodeSplitRequest> = Vec::new();
-        for &i in tier {
-            let item = &frontier[i];
-            let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
-            if item.active.is_pure(env.data) {
-                outcomes[i] = Some(NodeOutcome::Leaf(make_leaf(env.data, &item.active)));
-                self.stats.record_leaf();
-                continue;
-            }
-            let parent_counts = item.active.class_counts(env.data);
-            self.stats
-                .record_node(item.depth, SplitMethod::Accelerator, item.active.len());
-            {
-                let matrix = &mut ns.matrix;
-                let n_features = env.data.n_features();
-                let source = env.source;
-                let rng = &mut rng;
-                self.stats.time(item.depth, Component::SampleProjections, || {
-                    sample_projections(matrix, rng, n_features, source, env.config)
-                });
-            }
-            gather_labels(env.data, &item.active.indices, &mut ns.labels);
-            // The accelerated kernel is binary-class only, like the depth
-            // path's gate in `try_accel_split`.
-            if parent_counts.len() == 2 {
-                if let Some((req, projs)) = build_accel_request(
-                    env,
-                    &mut rng,
-                    &mut self.stats,
-                    &mut ns,
-                    &item.active,
-                    item.depth,
-                ) {
+        for prep in prepped {
+            match prep {
+                AccelPrep::Done(i, o) => outcomes[i] = Some(o),
+                AccelPrep::Request(p, req) => {
+                    pending.push(p);
                     requests.push(req);
-                    pending.push(Pending {
-                        idx: i,
-                        rng,
-                        matrix: ns.matrix.clone(),
-                        parent_counts,
-                        projs,
-                    });
-                    continue;
                 }
             }
-            // No request possible (multi-class, or no usable projection):
-            // CPU fallback with the already-sampled projections.
-            outcomes[i] = Some(self.finish_on_cpu(env, &mut rng, &mut ns, &parent_counts, item));
         }
 
         let mut batches = 0u64;
@@ -863,7 +868,8 @@ impl<'a> TreeTrainer<'a> {
                     // sampled — the request carries the gathered labels.
                     ns.matrix = pend.matrix;
                     ns.labels = req.labels;
-                    self.finish_on_cpu(env, &mut rng, &mut ns, &pend.parent_counts, item)
+                    let stats = &mut self.stats;
+                    finish_on_cpu(env, &mut rng, stats, &mut ns, &pend.parent_counts, item)
                 }
             };
             outcomes[pend.idx] = Some(outcome);
@@ -871,37 +877,112 @@ impl<'a> TreeTrainer<'a> {
         self.pool.release(ns);
         batches
     }
+}
 
-    /// Run the vectorized CPU search for a node whose projections are
-    /// already in `ns.matrix` / labels in `ns.labels` (the accelerator
-    /// fallback, mirroring the depth path's decline handling). Declined
-    /// nodes never retain tables: a real device's accept/decline behavior
-    /// is outside the deterministic pairing contract.
-    fn finish_on_cpu(
-        &mut self,
-        env: &NodeEnv<'a>,
-        rng: &mut Pcg64,
-        ns: &mut NodeScratch,
-        parent_counts: &[usize],
-        item: &FrontierItem,
-    ) -> NodeOutcome {
-        let searched = search_cpu(
-            env,
-            rng,
-            &mut self.stats,
-            ns,
-            SplitMethod::VectorizedHistogram,
-            parent_counts,
-            &item.active,
-            item.depth,
-            false,
-        );
-        match searched {
-            Some(s) => NodeOutcome::Split(s),
-            None => {
-                self.stats.record_leaf();
-                NodeOutcome::Leaf(make_leaf(env.data, &item.active))
-            }
+/// A prepared accelerator-tier node awaiting its batched response: the
+/// post-prep RNG state (the decline fallback continues it), the sampled
+/// projections and the bookkeeping to decode the response slot.
+struct Pending {
+    idx: usize,
+    rng: Pcg64,
+    matrix: ProjectionMatrix,
+    parent_counts: Vec<usize>,
+    projs: Vec<usize>,
+}
+
+/// Outcome of materializing one accelerator-tier node's request.
+enum AccelPrep {
+    /// Resolved without the device (pure leaf, multi-class or
+    /// no-usable-projection CPU fallback) — `(frontier index, outcome)`.
+    Done(usize, NodeOutcome),
+    /// A request for the level's batched device call.
+    Request(Pending, NodeSplitRequest),
+}
+
+/// Materialize one accelerator-tier node's request (projection sampling,
+/// label gather, projection apply + boundary build), or resolve the node
+/// on the CPU when no request is possible. Consumes only the node's own
+/// `(node_seed, node_id)` RNG stream and the worker's leased scratch, so
+/// the intra-tree pool can run preps concurrently without affecting the
+/// trained tree.
+fn prep_accel_node(
+    env: &NodeEnv,
+    node_seed: u64,
+    item: &FrontierItem,
+    i: usize,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+) -> AccelPrep {
+    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+    if item.active.is_pure(env.data) {
+        stats.record_leaf();
+        return AccelPrep::Done(i, NodeOutcome::Leaf(make_leaf(env.data, &item.active)));
+    }
+    let parent_counts = item.active.class_counts(env.data);
+    stats.record_node(item.depth, SplitMethod::Accelerator, item.active.len());
+    {
+        let matrix = &mut ns.matrix;
+        let n_features = env.data.n_features();
+        let source = env.source;
+        let rng = &mut rng;
+        stats.time(item.depth, Component::SampleProjections, || {
+            sample_projections(matrix, rng, n_features, source, env.config)
+        });
+    }
+    gather_labels(env.data, &item.active.indices, &mut ns.labels);
+    // The accelerated kernel is binary-class only, like the depth path's
+    // gate in `try_accel_split`.
+    if parent_counts.len() == 2 {
+        if let Some((req, projs)) =
+            build_accel_request(env, &mut rng, stats, ns, &item.active, item.depth)
+        {
+            return AccelPrep::Request(
+                Pending {
+                    idx: i,
+                    rng,
+                    matrix: ns.matrix.clone(),
+                    parent_counts,
+                    projs,
+                },
+                req,
+            );
+        }
+    }
+    // No request possible (multi-class, or no usable projection): CPU
+    // fallback with the already-sampled projections.
+    let outcome = finish_on_cpu(env, &mut rng, stats, ns, &parent_counts, item);
+    AccelPrep::Done(i, outcome)
+}
+
+/// Run the vectorized CPU search for a node whose projections are
+/// already in `ns.matrix` / labels in `ns.labels` (the accelerator
+/// fallback, mirroring the depth path's decline handling). Declined
+/// nodes never retain tables: a real device's accept/decline behavior
+/// is outside the deterministic pairing contract.
+fn finish_on_cpu(
+    env: &NodeEnv,
+    rng: &mut Pcg64,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    parent_counts: &[usize],
+    item: &FrontierItem,
+) -> NodeOutcome {
+    let searched = search_cpu(
+        env,
+        rng,
+        stats,
+        ns,
+        SplitMethod::VectorizedHistogram,
+        parent_counts,
+        &item.active,
+        item.depth,
+        false,
+    );
+    match searched {
+        Some(s) => NodeOutcome::Split(s),
+        None => {
+            stats.record_leaf();
+            NodeOutcome::Leaf(make_leaf(env.data, &item.active))
         }
     }
 }

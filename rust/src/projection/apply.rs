@@ -6,9 +6,34 @@
 //! per member column — sequential in the projection output, random-ish in
 //! the source column (the active set is sorted but sparse deep in the
 //! tree), which is why Figure 5 shows "sparse access" growing with depth.
+//!
+//! All gathers read through the dataset's **chunk-view API**: the kernel
+//! borrows `column_chunk(f, span)` for the id span of the block it is
+//! gathering, so on the mapped backend only the pages covering that span
+//! need residency (deep nodes have narrow spans — precisely where the
+//! table no longer fits in RAM). The arithmetic is identical for any
+//! span choice, which keeps the fused/classic bit-equivalence and the
+//! ram/mmap byte-identity contracts trivially true.
 
 use super::Projection;
 use crate::data::Dataset;
+use std::ops::Range;
+
+/// Smallest sample-id range covering every id in `active` (`0..0` when
+/// empty). One sequential pass over the ids — cheap next to the gather it
+/// bounds, and valid for unsorted id sets (bootstrap bags).
+#[inline]
+pub fn active_span(active: &[u32]) -> Range<usize> {
+    let Some(&first) = active.first() else {
+        return 0..0;
+    };
+    let (mut lo, mut hi) = (first, first);
+    for &i in &active[1..] {
+        lo = lo.min(i);
+        hi = hi.max(i);
+    }
+    lo as usize..hi as usize + 1
+}
 
 /// Apply `proj` over the given active-sample ids, writing into `out`
 /// (resized to `active.len()`). The 1/2/general-term cases are split so the
@@ -24,36 +49,54 @@ pub fn apply_projection(data: &Dataset, proj: &Projection, active: &[u32], out: 
 }
 
 /// Apply `proj` over a *block* of active-sample ids, writing into an
-/// existing slice (`out.len() == active.len()`). This is the shared gather
-/// kernel: [`apply_projection`] delegates to it for the materializing
-/// path, and the fused split engine ([`crate::split::fused`]) calls it on
-/// cache-sized blocks so the projection values never round-trip through a
-/// full `n`-element buffer. Keep the per-element arithmetic in sync with
-/// [`project_row`] — the fused engine's bit-equivalence with the
-/// materializing path depends on it.
+/// existing slice (`out.len() == active.len()`). Computes the block's id
+/// span itself; blocked callers that already know the span (the fused
+/// engine computes one span per block, not per projection) should call
+/// [`apply_projection_into_span`] directly.
 pub fn apply_projection_into(data: &Dataset, proj: &Projection, active: &[u32], out: &mut [f32]) {
+    apply_projection_into_span(data, proj, active, active_span(active), out);
+}
+
+/// The shared gather kernel: [`apply_projection`] delegates to it for the
+/// materializing path, and the fused split engine
+/// ([`crate::split::fused`]) calls it on cache-sized blocks so the
+/// projection values never round-trip through a full `n`-element buffer.
+/// `span` must cover every id in `active` (see [`active_span`]); member
+/// columns are borrowed as `column_chunk(f, span)` and indexed rebased.
+/// Keep the per-element arithmetic in sync with [`project_row`] — the
+/// fused engine's bit-equivalence with the materializing path depends on
+/// it.
+pub fn apply_projection_into_span(
+    data: &Dataset,
+    proj: &Projection,
+    active: &[u32],
+    span: Range<usize>,
+    out: &mut [f32],
+) {
     debug_assert_eq!(active.len(), out.len());
+    debug_assert!(active.iter().all(|&i| span.contains(&(i as usize))));
+    let lo = span.start as u32;
     match proj.terms.as_slice() {
         [] => out.fill(0.0),
         [(f, w)] => {
-            let col = data.column(*f as usize);
+            let col = data.column_chunk(*f as usize, span);
             for (o, &i) in out.iter_mut().zip(active) {
-                *o = w * col[i as usize];
+                *o = w * col[(i - lo) as usize];
             }
         }
         [(f0, w0), (f1, w1)] => {
-            let c0 = data.column(*f0 as usize);
-            let c1 = data.column(*f1 as usize);
+            let c0 = data.column_chunk(*f0 as usize, span.clone());
+            let c1 = data.column_chunk(*f1 as usize, span);
             for (o, &i) in out.iter_mut().zip(active) {
-                *o = w0 * c0[i as usize] + w1 * c1[i as usize];
+                *o = w0 * c0[(i - lo) as usize] + w1 * c1[(i - lo) as usize];
             }
         }
         terms => {
             out.fill(0.0);
             for &(f, w) in terms {
-                let col = data.column(f as usize);
+                let col = data.column_chunk(f as usize, span.clone());
                 for (o, &i) in out.iter_mut().zip(active) {
-                    *o += w * col[i as usize];
+                    *o += w * col[(i - lo) as usize];
                 }
             }
         }
@@ -62,20 +105,20 @@ pub fn apply_projection_into(data: &Dataset, proj: &Projection, active: &[u32], 
 
 /// Projection value of a single sample — used by the fused engine to gather
 /// boundary samples without materializing the projection vector. Must stay
-/// arithmetically identical to [`apply_projection_into`] (see above).
+/// arithmetically identical to [`apply_projection_into_span`] (see above).
 #[inline]
 pub fn project_row(data: &Dataset, proj: &Projection, row: u32) -> f32 {
     let s = row as usize;
     match proj.terms.as_slice() {
         [] => 0.0,
-        [(f, w)] => w * data.column(*f as usize)[s],
+        [(f, w)] => w * data.value(s, *f as usize),
         [(f0, w0), (f1, w1)] => {
-            w0 * data.column(*f0 as usize)[s] + w1 * data.column(*f1 as usize)[s]
+            w0 * data.value(s, *f0 as usize) + w1 * data.value(s, *f1 as usize)
         }
         terms => {
             let mut v = 0.0f32;
             for &(f, w) in terms {
-                v += w * data.column(f as usize)[s];
+                v += w * data.value(s, f as usize);
             }
             v
         }
@@ -84,11 +127,14 @@ pub fn project_row(data: &Dataset, proj: &Projection, row: u32) -> f32 {
 
 /// Gather the labels of the active samples once per node (shared by every
 /// projection's split search — pulling this out of the per-projection loop
-/// was one of the §Perf wins, see EXPERIMENTS.md).
+/// was one of the §Perf wins, see EXPERIMENTS.md). Reads a label chunk
+/// covering the active span.
 pub fn gather_labels(data: &Dataset, active: &[u32], out: &mut Vec<u16>) {
     out.clear();
-    let labels = data.labels();
-    out.extend(active.iter().map(|&i| labels[i as usize]));
+    let span = active_span(active);
+    let lo = span.start as u32;
+    let labels = data.labels_chunk(span);
+    out.extend(active.iter().map(|&i| labels[(i - lo) as usize]));
 }
 
 #[cfg(test)]
@@ -147,6 +193,14 @@ mod tests {
     }
 
     #[test]
+    fn active_span_covers_unsorted_ids() {
+        assert_eq!(active_span(&[]), 0..0);
+        assert_eq!(active_span(&[5]), 5..6);
+        assert_eq!(active_span(&[3, 0, 2]), 0..4);
+        assert_eq!(active_span(&[7, 9, 8]), 7..10);
+    }
+
+    #[test]
     fn block_gather_and_row_gather_match_materialized() {
         let d = data();
         let projections = [
@@ -159,13 +213,17 @@ mod tests {
                 terms: vec![(0, 1.0), (1, 0.5), (2, -2.0)],
             },
         ];
-        let active = [3u32, 0, 2, 1];
+        // Unsorted AND not starting at zero: exercises span rebasing.
+        let active = [3u32, 1, 2];
         for p in &projections {
             let mut full = Vec::new();
             apply_projection(&d, p, &active, &mut full);
             let mut block = vec![0f32; active.len()];
             apply_projection_into(&d, p, &active, &mut block);
             assert_eq!(full, block, "{p:?}");
+            let mut spanned = vec![0f32; active.len()];
+            apply_projection_into_span(&d, p, &active, active_span(&active), &mut spanned);
+            assert_eq!(full, spanned, "{p:?}");
             for (k, &i) in active.iter().enumerate() {
                 assert_eq!(project_row(&d, p, i).to_bits(), full[k].to_bits(), "{p:?}");
             }

@@ -35,7 +35,7 @@ use super::scan::{self, SCAN_MAX_BINS};
 use super::vectorized::{self, TwoLevelLayout};
 use super::{Split, SplitScratch};
 use crate::data::Dataset;
-use crate::projection::apply::{apply_projection_into, project_row};
+use crate::projection::apply::{active_span, apply_projection_into_span, project_row};
 use crate::projection::Projection;
 use crate::rng::Pcg64;
 
@@ -201,11 +201,14 @@ pub fn fill_tables_blocked(
     block.resize(FUSED_BLOCK, 0.0);
     for (ablock, lblock) in active.chunks(FUSED_BLOCK).zip(labels.chunks(FUSED_BLOCK)) {
         let vals = &mut block[..ablock.len()];
+        // One id span per block (not per projection): every projection's
+        // member-column chunks for this block cover the same sample range.
+        let span = active_span(ablock);
         for (pi, proj) in projections.iter().enumerate() {
             if !ok[pi] {
                 continue;
             }
-            apply_projection_into(data, proj, ablock, vals);
+            apply_projection_into_span(data, proj, ablock, span.clone(), vals);
             let bounds = &boundaries[pi * n_bins..(pi + 1) * n_bins];
             let cnt = &mut counts[pi * stride..(pi + 1) * stride];
             match (routing, layout) {
@@ -241,7 +244,7 @@ fn projected_min_max(
     let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
     for ablock in active.chunks(FUSED_BLOCK) {
         let vals = &mut block[..ablock.len()];
-        apply_projection_into(data, proj, ablock, vals);
+        apply_projection_into_span(data, proj, ablock, active_span(ablock), vals);
         for &v in vals.iter() {
             lo = lo.min(v);
             hi = hi.max(v);

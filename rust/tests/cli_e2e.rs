@@ -441,3 +441,168 @@ fn importance_command_runs() {
     ]))
     .unwrap();
 }
+
+#[test]
+fn pack_and_train_from_column_file() {
+    // gen-data -> CSV -> pack -> .sofc -> train: the full out-of-core
+    // round trip through the CLI surface. The packed file must sniff as a
+    // column file, train end-to-end on the mapped backend, and produce
+    // the same model bytes as training off the CSV directly.
+    let csv_path = tmp("soforest_e2e_pack.csv");
+    let sofc_path = tmp("soforest_e2e_pack.sofc");
+    let model_csv = tmp("soforest_e2e_pack_csv.bin");
+    let model_sofc = tmp("soforest_e2e_pack_sofc.bin");
+    cli::run(&argv(&[
+        "gen-data",
+        "--data",
+        "trunk:600:6",
+        "--seed",
+        "7",
+        "--out",
+        csv_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "pack",
+        "--data",
+        csv_path.to_str().unwrap(),
+        "--out",
+        sofc_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert!(soforest::data::colfile::sniff(&sofc_path));
+    for (data, model) in [(&csv_path, &model_csv), (&sofc_path, &model_sofc)] {
+        cli::run(&argv(&[
+            "train",
+            "--data",
+            data.to_str().unwrap(),
+            "--trees",
+            "3",
+            "--threads",
+            "2",
+            "--seed",
+            "11",
+            "--out",
+            model.to_str().unwrap(),
+        ]))
+        .unwrap();
+    }
+    assert_eq!(
+        std::fs::read(&model_csv).unwrap(),
+        std::fs::read(&model_sofc).unwrap(),
+        "training off the packed column file changed the model bytes"
+    );
+    // The packed file also predicts through the blocked row-gather path.
+    cli::run(&argv(&[
+        "predict",
+        "--model",
+        model_sofc.to_str().unwrap(),
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--threads",
+        "2",
+    ]))
+    .unwrap();
+    for p in [csv_path, sofc_path, model_csv, model_sofc] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn pack_from_generator_spec() {
+    let sofc_path = tmp("soforest_e2e_pack_spec.sofc");
+    cli::run(&argv(&[
+        "pack",
+        "--data",
+        "sparse-parity:300:8",
+        "--seed",
+        "3",
+        "--out",
+        sofc_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    cli::run(&argv(&[
+        "train",
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--trees",
+        "2",
+        "--threads",
+        "1",
+    ]))
+    .unwrap();
+    // Re-packing an already-packed file is a hard error, not silent
+    // double-encoding.
+    assert!(cli::run(&argv(&[
+        "pack",
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--out",
+        tmp("soforest_e2e_repack.sofc").to_str().unwrap(),
+    ]))
+    .is_err());
+    std::fs::remove_file(&sofc_path).ok();
+}
+
+#[test]
+fn corrupt_column_files_are_rejected() {
+    let sofc_path = tmp("soforest_e2e_pack_corrupt.sofc");
+    cli::run(&argv(&[
+        "pack",
+        "--data",
+        "trunk:200:5",
+        "--out",
+        sofc_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let pristine = std::fs::read(&sofc_path).unwrap();
+
+    // Truncated: cut the file mid-column-section.
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&sofc_path)
+        .unwrap();
+    f.set_len(pristine.len() as u64 / 2).unwrap();
+    drop(f);
+    let err = cli::run(&argv(&[
+        "train",
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--trees",
+        "1",
+    ]))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // Bad magic: the file no longer sniffs as a column file and the CSV
+    // fallback rejects the binary junk — either way, a hard error.
+    let mut bad = pristine.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&sofc_path, &bad).unwrap();
+    assert!(cli::run(&argv(&[
+        "train",
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--trees",
+        "1",
+    ]))
+    .is_err());
+
+    // Wrong endianness: byte-swapped mark (a file packed on an
+    // opposite-endian host) must be refused with a pointed message.
+    let mut swapped = pristine;
+    swapped[8..12].reverse();
+    std::fs::write(&sofc_path, &swapped).unwrap();
+    let err = cli::run(&argv(&[
+        "train",
+        "--data",
+        sofc_path.to_str().unwrap(),
+        "--trees",
+        "1",
+    ]))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("endianness"), "{err}");
+    std::fs::remove_file(&sofc_path).ok();
+}

@@ -1,0 +1,193 @@
+//! Storage-backend equivalence properties (the acceptance bar of the
+//! chunked-columnar-storage refactor): a forest trained off the
+//! memory-mapped `.sofc` backend must serialize to **byte-identical** v2
+//! files as one trained off the in-memory backend — at any thread count,
+//! for every split strategy, both growth modes and both
+//! `--hist_subtraction` values. The storage layer may only change where
+//! slices come from, never a single bit that reaches the trainer.
+
+use soforest::config::{ForestConfig, GrowthMode};
+use soforest::coordinator::train_forest;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::data::{colfile, csv, Dataset};
+use soforest::forest::serialize::write_packed;
+use soforest::forest::{Forest, PackedForest};
+use soforest::rng::Pcg64;
+use soforest::split::SplitStrategy;
+use std::path::PathBuf;
+
+fn trunk(n: usize, d: usize, seed: u64) -> Dataset {
+    TrunkConfig {
+        n_samples: n,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// Write `data` to a column file and map it back.
+fn mapped_twin(data: &Dataset, name: &str) -> (Dataset, PathBuf) {
+    let path = tmp(name);
+    colfile::write_dataset(data, &path).expect("pack");
+    let mapped = colfile::load_mapped(&path).expect("map");
+    assert_eq!(mapped.backend_name(), "mmap");
+    (mapped, path)
+}
+
+/// Canonical v2 bytes of a forest (the serving format the acceptance bar
+/// is stated in).
+fn v2_bytes(forest: &Forest) -> Vec<u8> {
+    let packed = PackedForest::from_forest(forest).expect("packable forest");
+    let mut bytes = Vec::new();
+    write_packed(&packed, &mut bytes).expect("in-memory serialization");
+    bytes
+}
+
+const ALL_STRATEGIES: [SplitStrategy; 6] = [
+    SplitStrategy::Exact,
+    SplitStrategy::Histogram,
+    SplitStrategy::VectorizedHistogram,
+    SplitStrategy::Dynamic,
+    SplitStrategy::DynamicVectorized,
+    SplitStrategy::Hybrid,
+];
+
+#[test]
+fn mapped_backend_forests_are_byte_identical_for_all_strategies_and_threads() {
+    let ram = trunk(500, 10, 0x50FC);
+    let (mapped, path) = mapped_twin(&ram, "soforest_storage_eq_strategies.sofc");
+    for strategy in ALL_STRATEGIES {
+        let train_with = |data: &Dataset, threads: usize| {
+            let mut cfg = ForestConfig {
+                n_trees: 3,
+                n_threads: threads,
+                strategy,
+                growth: GrowthMode::Frontier,
+                ..Default::default()
+            };
+            // Exercise all three tiers (and the deterministic accelerator
+            // fallback for Hybrid — no device in the test env).
+            cfg.thresholds.sort_below = 48;
+            if strategy == SplitStrategy::Hybrid {
+                cfg.thresholds.accel_above = 150;
+            }
+            v2_bytes(&train_forest(data, &cfg, 0xBEEF))
+        };
+        let reference = train_with(&ram, 1);
+        for threads in [1, 2, 8] {
+            assert_eq!(
+                reference,
+                train_with(&mapped, threads),
+                "{strategy:?}: mmap-backend forest bytes differ at {threads} threads"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mapped_backend_matches_across_growth_and_subtraction() {
+    // Big enough that sibling pairs actually form under the lowered sort
+    // crossover, so the subtraction path runs off the mapped backend too.
+    let ram = trunk(2500, 10, 0x50FD);
+    let (mapped, path) = mapped_twin(&ram, "soforest_storage_eq_growth.sofc");
+    for growth in [GrowthMode::Depth, GrowthMode::Frontier] {
+        let train_with = |data: &Dataset, threads: usize, sub: bool| {
+            let mut cfg = ForestConfig {
+                n_trees: 2,
+                n_threads: threads,
+                strategy: SplitStrategy::DynamicVectorized,
+                growth,
+                hist_subtraction: sub,
+                ..Default::default()
+            };
+            cfg.thresholds.sort_below = 512;
+            v2_bytes(&train_forest(data, &cfg, 0xAB))
+        };
+        let reference = train_with(&ram, 1, true);
+        for threads in [1, 2, 8] {
+            for sub in [true, false] {
+                assert_eq!(
+                    reference,
+                    train_with(&mapped, threads, sub),
+                    "{growth:?}: mmap bytes differ (threads={threads}, subtraction={sub})"
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn csv_pack_stream_equals_in_memory_csv_load() {
+    // gen -> CSV -> (a) slurp to RAM, (b) streaming pack -> mmap: the two
+    // datasets must be bit-identical feature-for-feature (the pack path
+    // parses the same text with the same f32 conversions).
+    let data =
+        trunk(1500, 6, 0x50FE).with_feature_names((0..6).map(|f| format!("c{f}")).collect());
+    let csv_path = tmp("soforest_storage_eq.csv");
+    let sofc_path = tmp("soforest_storage_eq_packed.sofc");
+    csv::save_csv(&data, &csv_path).unwrap();
+    let ram = csv::load_csv(&csv_path, csv::LabelColumn::Last, true).unwrap();
+    let summary = colfile::pack_csv(&csv_path, &sofc_path, csv::LabelColumn::Last, true).unwrap();
+    assert_eq!(summary.n_samples, ram.n_samples());
+    assert_eq!(summary.n_features, ram.n_features());
+    let mapped = colfile::load_mapped(&sofc_path).unwrap();
+    assert_eq!(mapped.n_samples(), ram.n_samples());
+    assert_eq!(mapped.n_classes(), ram.n_classes());
+    assert_eq!(mapped.feature_names(), ram.feature_names());
+    assert_eq!(mapped.labels(), ram.labels());
+    for f in 0..ram.n_features() {
+        let (a, b) = (ram.column(f), mapped.column(f));
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "feature {f}");
+        }
+    }
+    // And the forests trained off either are byte-identical.
+    let cfg = ForestConfig {
+        n_trees: 2,
+        n_threads: 2,
+        ..Default::default()
+    };
+    assert_eq!(
+        v2_bytes(&train_forest(&ram, &cfg, 0xCAFE)),
+        v2_bytes(&train_forest(&mapped, &cfg, 0xCAFE)),
+        "csv-loaded vs streamed-packed forests differ"
+    );
+    std::fs::remove_file(&csv_path).ok();
+    std::fs::remove_file(&sofc_path).ok();
+}
+
+#[test]
+fn mapped_backend_serves_subset_transform_and_prediction_paths() {
+    // The non-training consumers (subset carving, standardization,
+    // row-gather prediction) read through the same chunk views.
+    use soforest::data::transform::Standardizer;
+    let ram = trunk(800, 5, 0x50FF);
+    let (mapped, path) = mapped_twin(&ram, "soforest_storage_eq_aux.sofc");
+    let idx: Vec<u32> = (0..800).step_by(3).collect();
+    let (sa, sb) = (ram.subset(&idx), mapped.subset(&idx));
+    assert_eq!(sa.labels(), sb.labels());
+    for f in 0..sa.n_features() {
+        assert_eq!(sa.column(f), sb.column(f), "subset feature {f}");
+    }
+    let (ta, tb) = (Standardizer::fit(&ram), Standardizer::fit(&mapped));
+    for (x, y) in ta.means.iter().zip(&tb.means) {
+        assert_eq!(x.to_bits(), y.to_bits(), "standardizer means diverge");
+    }
+    for (x, y) in ta.inv_stds.iter().zip(&tb.inv_stds) {
+        assert_eq!(x.to_bits(), y.to_bits(), "standardizer stds diverge");
+    }
+    let mut ra = Vec::new();
+    let mut rb = Vec::new();
+    for s in (0..800).step_by(97) {
+        ram.row(s, &mut ra);
+        mapped.row(s, &mut rb);
+        assert_eq!(ra, rb, "row {s}");
+    }
+    std::fs::remove_file(&path).ok();
+}
