@@ -1,0 +1,321 @@
+//! Open-loop load harness for the serve tier: what do tail latency and
+//! shed rate look like when clients send at a *fixed arrival rate*,
+//! regardless of how fast the server answers?
+//!
+//! Closed-loop clients (send, wait, send) self-throttle under overload
+//! and hide queueing collapse; this harness schedules every request up
+//! front (request `j` fires at `t0 + j/qps`, round-robin over the
+//! connections) and measures latency from the **scheduled** send time to
+//! the response — so a server falling behind shows up as growing tail
+//! latency and `!timeout` shed, exactly like coordinated-omission-safe
+//! load generators do.
+//!
+//! Sweeps connections × target QPS, each point against a fresh server on
+//! an ephemeral port. Emits `BENCH_serve.json` (p50/p99/p999 latency,
+//! shed rate, achieved QPS per point) for `ci/bench_gate.py`.
+//!
+//! Overrides: `SOFOREST_BENCH_SERVE_SECS=2` (seconds per point),
+//! `SOFOREST_BENCH_SERVE_QPS=500,2000`, `SOFOREST_BENCH_SERVE_CONNS=1,4`.
+
+use soforest::bench::Table;
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::PackedForest;
+use soforest::rng::Pcg64;
+use soforest::serve::{percentile, serve_tcp, ServeConfig, Shutdown};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+fn env_usize_list(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+/// What one connection observed, client-side.
+#[derive(Default)]
+struct ConnOutcome {
+    sent: usize,
+    ok: usize,
+    timeouts: usize,
+    errors: usize,
+    /// The connection was refused with `!busy` (or never connected).
+    refused: bool,
+    /// Scheduled-send → response latency of the scored answers, us.
+    lat_us: Vec<f64>,
+}
+
+/// One sweep point, aggregated over its connections.
+struct Point {
+    scheduled: usize,
+    sent: usize,
+    ok: usize,
+    timeouts: usize,
+    errors: usize,
+    refused_conns: usize,
+    lat_us: Vec<f64>,
+    wall_s: f64,
+}
+
+/// Writer thread + in-thread reader for one connection. Responses are
+/// 1:1 and in order with sent lines, so response `i` pairs with
+/// `sched[i]` — latency is measured from that scheduled instant.
+fn drive_conn(addr: &str, line: &str, sched: &[Duration], t0: Instant) -> ConnOutcome {
+    let mut out = ConnOutcome::default();
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            out.refused = true;
+            return out;
+        }
+    };
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            out.refused = true;
+            return out;
+        }
+    };
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(|| {
+            let mut w = stream;
+            let msg = format!("{line}\n");
+            let mut sent = 0usize;
+            for off in sched {
+                // Open loop: sleep until the scheduled instant, never
+                // until the previous response.
+                if let Some(d) = (t0 + *off).checked_duration_since(Instant::now()) {
+                    std::thread::sleep(d);
+                }
+                if w.write_all(msg.as_bytes()).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+            let _ = w.shutdown(std::net::Shutdown::Write);
+            sent
+        });
+        let mut r = BufReader::new(reader_stream);
+        let mut text = String::new();
+        let mut i = 0usize;
+        loop {
+            text.clear();
+            match r.read_line(&mut text) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            let now = Instant::now();
+            let resp = text.trim_end();
+            if resp == "!busy" {
+                out.refused = true;
+                break;
+            }
+            if resp.starts_with("!timeout") {
+                out.timeouts += 1;
+            } else if resp.starts_with("!err") {
+                out.errors += 1;
+            } else {
+                out.ok += 1;
+                if let Some(off) = sched.get(i) {
+                    let lat = now.saturating_duration_since(t0 + *off);
+                    out.lat_us.push(lat.as_secs_f64() * 1e6);
+                }
+            }
+            i += 1;
+        }
+        out.sent = writer.join().expect("writer thread");
+    });
+    out
+}
+
+/// Run one (conns, qps) point against a fresh server.
+fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs: f64) -> Point {
+    let conns = conns.max(1);
+    let pf = std::env::temp_dir().join(format!("soforest_bench_serve_{conns}_{qps}"));
+    std::fs::remove_file(&pf).ok();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        // One worker per connection: the point measures batching and
+        // scoring under arrival pressure, not pool starvation.
+        workers: conns,
+        queue_depth: conns,
+        max_wait: Duration::from_micros(500),
+        deadline: Duration::from_millis(100),
+        drain: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let scheduled = ((qps as f64) * secs).round().max(1.0) as usize;
+    let mut scheds: Vec<Vec<Duration>> = vec![Vec::new(); conns];
+    for j in 0..scheduled {
+        scheds[j % conns].push(Duration::from_secs_f64(j as f64 / qps as f64));
+    }
+    let outcomes: Mutex<Vec<ConnOutcome>> = Mutex::new(Vec::new());
+    let mut wall_s = 0.0;
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_tcp(packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown)
+                .expect("serve_tcp")
+        });
+        let addr = loop {
+            match std::fs::read_to_string(&pf) {
+                Ok(s) if !s.is_empty() => break s,
+                _ => std::thread::sleep(Duration::from_millis(2)),
+            }
+        };
+        let addr = addr.trim().to_string();
+        // Common epoch slightly in the future so every connection is up
+        // before its first scheduled request.
+        let t0 = Instant::now() + Duration::from_millis(50);
+        let clients: Vec<_> = scheds
+            .iter()
+            .map(|sched| {
+                let addr = &addr;
+                let outcomes = &outcomes;
+                scope.spawn(move || {
+                    let out = drive_conn(addr, line, sched, t0);
+                    outcomes.lock().unwrap().push(out);
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("client thread");
+        }
+        wall_s = t0.elapsed().as_secs_f64();
+        shutdown.request_stop();
+        let stats = server.join().expect("server thread");
+        eprintln!("  [server] {}", stats.summary());
+    });
+    std::fs::remove_file(&pf).ok();
+    let mut point = Point {
+        scheduled,
+        sent: 0,
+        ok: 0,
+        timeouts: 0,
+        errors: 0,
+        refused_conns: 0,
+        lat_us: Vec::new(),
+        wall_s,
+    };
+    for o in outcomes.into_inner().expect("outcomes") {
+        point.sent += o.sent;
+        point.ok += o.ok;
+        point.timeouts += o.timeouts;
+        point.errors += o.errors;
+        point.refused_conns += usize::from(o.refused);
+        point.lat_us.extend(o.lat_us);
+    }
+    point.lat_us.sort_by(f64::total_cmp);
+    point
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let secs: f64 = std::env::var("SOFOREST_BENCH_SERVE_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    let qps_sweep = env_usize_list("SOFOREST_BENCH_SERVE_QPS", &[1000, 4000]);
+    let conns_sweep = env_usize_list("SOFOREST_BENCH_SERVE_CONNS", &[1, 4]);
+
+    let d = 16;
+    let data = TrunkConfig {
+        n_samples: 4000,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(0x5E12E));
+    let cfg = ForestConfig {
+        n_trees: 32,
+        ..Default::default()
+    };
+    let forest = train_forest(&data, &cfg, 9);
+    let packed = PackedForest::from_forest(&forest).expect("pack forest");
+    let mut row = Vec::new();
+    data.row(0, &mut row);
+    let line = row
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+
+    println!(
+        "# serve tier under open-loop load (d={d}, 32 trees, {:.1} kB model, \
+         {secs:.1}s per point, deadline 100ms)\n",
+        packed.nbytes() as f64 / 1e3
+    );
+    let mut table = Table::new(&[
+        "conns",
+        "target_qps",
+        "scheduled",
+        "answered",
+        "p50_us",
+        "p99_us",
+        "p999_us",
+        "shed_rate",
+        "achieved_qps",
+    ]);
+    let mut json_rows = String::new();
+    let mut first = true;
+    for &conns in &conns_sweep {
+        for &qps in &qps_sweep {
+            eprintln!("# point: conns={conns} target_qps={qps}");
+            let p = drive_point(&packed, &line, conns, qps, secs);
+            let p50 = finite(percentile(&p.lat_us, 50.0));
+            let p99 = finite(percentile(&p.lat_us, 99.0));
+            let p999 = finite(percentile(&p.lat_us, 99.9));
+            // Shed = every scheduled request that did not come back as a
+            // scored answer: timeouts, refused connections, request lines
+            // never sent or never answered.
+            let shed_rate = 1.0 - p.ok as f64 / p.scheduled.max(1) as f64;
+            let achieved = p.ok as f64 / p.wall_s.max(1e-9);
+            table.row(&[
+                conns.to_string(),
+                qps.to_string(),
+                p.scheduled.to_string(),
+                p.ok.to_string(),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
+                format!("{p999:.0}"),
+                format!("{shed_rate:.4}"),
+                format!("{achieved:.0}"),
+            ]);
+            if !first {
+                json_rows.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                json_rows,
+                "    {{\"conns\": {conns}, \"target_qps\": {qps}, \"secs\": {secs}, \
+                 \"scheduled\": {}, \"sent\": {}, \"answered\": {}, \
+                 \"timeouts\": {}, \"errors\": {}, \"refused_conns\": {}, \
+                 \"p50_us\": {p50:.1}, \"p99_us\": {p99:.1}, \"p999_us\": {p999:.1}, \
+                 \"shed_rate\": {shed_rate:.6}, \"achieved_qps\": {achieved:.1}}}",
+                p.scheduled, p.sent, p.ok, p.timeouts, p.errors, p.refused_conns,
+            );
+        }
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"unit\": \"us\",\n  \
+         \"results\": [\n{json_rows}\n  ]\n}}\n"
+    );
+    let out = "BENCH_serve.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("\n# wrote {out}"),
+        Err(e) => eprintln!("\n# could not write {out}: {e}"),
+    }
+}

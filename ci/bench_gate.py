@@ -49,6 +49,14 @@ SPECS = {
         "metric": "batched_mt_rows_per_s",
         "higher_is_better": True,
     },
+    "BENCH_serve.json": {
+        # Open-loop serve-load harness (benches/serve_load.rs): rows are
+        # (connections, target arrival rate) sweep points; the gated
+        # metric is tail latency measured from the *scheduled* send time.
+        "keys": ("conns", "target_qps"),
+        "metric": "p99_us",
+        "higher_is_better": False,
+    },
 }
 
 BASELINE_DIR = "BENCH_baseline"

@@ -18,7 +18,7 @@ use soforest::data::synth::trunk::TrunkConfig;
 use soforest::forest::serialize;
 use soforest::forest::tree::ProjectionSource;
 use soforest::rng::Pcg64;
-use soforest::serve::{percentile, serve_tcp, ServeConfig};
+use soforest::serve::{percentile, serve_tcp, ServeConfig, Shutdown};
 use soforest::split::SplitStrategy;
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -91,7 +91,9 @@ fn main() {
                 &serve_cfg,
                 "127.0.0.1:0",
                 Some(port_file.as_path()),
-                Some(n_requests),
+                // Exact request budget: the server drains and returns by
+                // itself once the client's last request is answered.
+                &Shutdown::with_budget(Some(n_requests)),
             )
             .expect("serve")
         });

@@ -113,7 +113,16 @@ COMMANDS:
   serve      online serving loop with request batching; stdin -> stdout, or
              --tcp host:port (port 0 = ephemeral); --max-batch 64,
              --max-wait-us 2000, --proba, --port-file ready.addr,
-             --max-requests N (stop after N answers; default: run forever)
+             --max-requests N (stop after exactly N answers; default: run
+             forever). Robustness knobs: --workers 4 (fixed TCP pool),
+             --queue-depth 64 (full queue sheds new connections with
+             `!busy`), --deadline-ms 1000 (late requests answer
+             `!timeout <seq>`), --max-line-bytes 1048576 (longer lines
+             answer `!err` and close), --idle-ms 30000 (drop silent
+             connections), --drain-ms 2000 (grace window after SIGINT/
+             SIGTERM or the `!shutdown` admin line in stdio mode);
+             malformed rows answer `!err <reason>` — always one response
+             line per request line, in order
   migrate    rewrite a model file in the v2 packed serving format:
              --model old.bin --out new.bin
   importance permutation feature importance of a trained model
@@ -445,11 +454,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("model")
         .ok_or_else(|| anyhow!("--model <file> is required"))?;
     let packed = forest::serialize::load_packed(Path::new(model_path))?;
-    let cfg = serve::ServeConfig {
+    let mut cfg = serve::ServeConfig {
         max_batch: args.get_parse("max-batch", 64usize)?.max(1),
         max_wait: Duration::from_micros(args.get_parse("max-wait-us", 2000u64)?),
         n_threads: args.get_parse("threads", 1usize)?.max(1),
         proba: args.get("proba").is_some(),
+        workers: args.get_parse("workers", 4usize)?.max(1),
+        queue_depth: args.get_parse("queue-depth", 64usize)?.max(1),
+        deadline: Duration::from_millis(args.get_parse("deadline-ms", 1000u64)?),
+        idle_timeout: Duration::from_millis(args.get_parse("idle-ms", 30_000u64)?.max(1)),
+        drain: Duration::from_millis(args.get_parse("drain-ms", 2000u64)?),
+        max_line_bytes: args.get_parse("max-line-bytes", 1usize << 20)?.max(16),
+        ..Default::default()
     };
     let max_requests = match args.get("max-requests") {
         None => None,
@@ -458,6 +474,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .map_err(|_| anyhow!("--max-requests: cannot parse {v:?}"))?,
         ),
     };
+    // SIGINT/SIGTERM turn into a graceful drain instead of a hard kill;
+    // the request budget (--max-requests) rides the same stop signal.
+    let shutdown = serve::Shutdown::with_budget(max_requests);
+    serve::install_signal_handlers();
     eprintln!(
         "[serve] model {model_path}: {} trees, {} features, {} classes, {:.1} kB packed",
         packed.n_trees(),
@@ -471,9 +491,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &cfg,
             addr,
             args.get("port-file").map(Path::new),
-            max_requests,
+            &shutdown,
         )?,
-        None => serve::serve_stdio(&packed, &cfg)?,
+        None => {
+            // stdin has no OS-level read tick, so stdio mode gets the
+            // `!shutdown` admin line as its drain trigger.
+            cfg.admin = true;
+            serve::serve_stdio(&packed, &cfg, &shutdown)?
+        }
     };
     eprintln!("[serve] {}", stats.summary());
     Ok(())

@@ -48,18 +48,34 @@ impl TaskQueue {
     }
 }
 
+/// Run `worker(i)` on `n_workers` scoped threads (`i` = worker index) and
+/// collect the per-worker results in index order. This is the crate's one
+/// fixed-pool primitive: [`run_pool`] layers the work-stealing queue on
+/// top for task-shaped work, and the serve tier runs its connection
+/// workers on it directly (each worker returns its local `ServeStats`, so
+/// aggregation needs no shared mutex that a panicking handler could
+/// poison).
+pub fn run_workers<T: Send>(n_workers: usize, worker: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let n_workers = n_workers.max(1);
+    let worker = &worker;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_workers)
+            .map(|i| scope.spawn(move || worker(i)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
 /// Run `worker(&queue)` on up to `n_workers` scoped threads over a queue of
 /// `n_tasks` tasks. Each worker owns its closure invocation for its whole
 /// lifetime, so per-worker state (scratch buffers, accelerator clients)
 /// lives in the closure body — the pattern both training and serving use.
 pub fn run_pool(n_workers: usize, n_tasks: usize, worker: impl Fn(&TaskQueue) + Sync) {
     let queue = TaskQueue::new(n_tasks);
-    let n_workers = n_workers.max(1).min(n_tasks.max(1));
-    std::thread::scope(|scope| {
-        for _ in 0..n_workers {
-            scope.spawn(|| worker(&queue));
-        }
-    });
+    run_workers(n_workers.max(1).min(n_tasks.max(1)), |_| worker(&queue));
 }
 
 /// Result of a coordinated training run.
@@ -327,6 +343,14 @@ mod tests {
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         // Zero tasks must not hang or panic.
         run_pool(3, 0, |q| assert!(q.claim().is_none()));
+    }
+
+    #[test]
+    fn run_workers_collects_in_index_order() {
+        let results = run_workers(7, |i| i * 10);
+        assert_eq!(results, vec![0, 10, 20, 30, 40, 50, 60]);
+        // Zero workers clamps to one.
+        assert_eq!(run_workers(0, |i| i), vec![0]);
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Per-connection line protocol: bounded line reading, request batching,
+//! deadlines, and the drain handshake.
+//!
+//! One connection = one reader thread + one batcher (the caller's thread).
+//! The reader turns the byte stream into protocol events over a bounded
+//! channel; the batcher coalesces them under the `max_batch`/`max_wait`
+//! policy, scores, and answers **one line per request line, in order** —
+//! the 1:1 correspondence invariant every response path preserves:
+//!
+//! * scored request → the class index (or posterior in `--proba` mode)
+//! * malformed request → `!err <reason>`
+//! * request older than `--deadline-ms` at scoring time → `!timeout <seq>`
+//!   (`seq` = 1-based request index on this connection)
+//! * line over `--max-line-bytes` → `!err line exceeds ...`, then close
+//! * admin `!shutdown` (stdio mode) → `!ok shutdown`, then stop
+//!
+//! Exit paths are all deadlock-free by construction: the batcher dropping
+//! the channel receiver unblocks a reader stuck in `send`, the
+//! [`AliveGuard`] flag unblocks a reader whose batcher panicked, and the
+//! per-stream read timeout (the 100 ms tick) bounds how long a reader can
+//! sit in a blocking read without observing any of it.
+
+use super::shutdown::Shutdown;
+use super::{ServeConfig, ServeStats};
+use crate::forest::predict::argmax;
+use crate::forest::PackedForest;
+use anyhow::Result;
+use std::io::{BufRead, BufWriter, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One pending request: the raw line and its arrival time.
+type Pending = (String, Instant);
+
+/// Protocol events the reader feeds the batcher.
+enum Inbound {
+    /// A complete request line.
+    Line(String, Instant),
+    /// The reader hit the line-length cap; answered `!err`, then close.
+    Oversized,
+    /// Admin `!shutdown`: acknowledged `!ok shutdown`, then stop.
+    Shutdown,
+}
+
+/// What the reader's bounded line read produced.
+enum ReadEvent {
+    /// A complete line accumulated in the caller's buffer.
+    Line,
+    /// Clean EOF with no pending bytes.
+    Eof,
+    /// The line exceeded the cap.
+    Oversized,
+    /// Read-timeout tick — no new bytes; caller checks shutdown/idle.
+    Tick,
+    /// Hard I/O error (disconnect).
+    Err,
+}
+
+/// Read one `\n`-terminated line into `buf` (newline excluded), tolerating
+/// read-timeout ticks — partial bytes stay in `buf` across ticks — and
+/// capping the accumulated line at `max` bytes *before* copying, so an
+/// adversarial unterminated stream can never grow `buf` past the cap.
+fn read_bounded_line(r: &mut impl BufRead, buf: &mut Vec<u8>, max: usize) -> ReadEvent {
+    loop {
+        let avail = match r.fill_buf() {
+            Ok(a) => a,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return ReadEvent::Tick;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return ReadEvent::Err,
+        };
+        if avail.is_empty() {
+            // EOF. A final unterminated line still gets an answer.
+            return if buf.is_empty() {
+                ReadEvent::Eof
+            } else {
+                ReadEvent::Line
+            };
+        }
+        let (take, done) = match avail.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (avail.len(), false),
+        };
+        let line_bytes = take - usize::from(done);
+        if buf.len() + line_bytes > max {
+            r.consume(take);
+            return ReadEvent::Oversized;
+        }
+        buf.extend_from_slice(&avail[..line_bytes]);
+        r.consume(take);
+        if done {
+            return ReadEvent::Line;
+        }
+    }
+}
+
+/// Drop guard the batcher holds so a panicking batcher still flips the
+/// flag its reader checks every tick.
+struct AliveGuard<'a>(&'a AtomicBool);
+
+impl Drop for AliveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+/// The reader half: bytes → [`Inbound`] events, until EOF, error, idle
+/// cutoff, a dead batcher, or the post-stop drain window closing.
+fn reader_loop(
+    mut input: impl BufRead,
+    tx: mpsc::SyncSender<Inbound>,
+    cfg: &ServeConfig,
+    shutdown: &Shutdown,
+    batcher_alive: &AtomicBool,
+) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut last_activity = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        if shutdown.stop_requested() {
+            // First observation starts the drain window: lines already on
+            // the wire still get answers until it closes.
+            let d = *drain_deadline.get_or_insert_with(|| Instant::now() + cfg.drain);
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        if !batcher_alive.load(Ordering::Acquire) {
+            break;
+        }
+        match read_bounded_line(&mut input, &mut buf, cfg.max_line_bytes) {
+            ReadEvent::Tick => {
+                if last_activity.elapsed() > cfg.idle_timeout {
+                    break;
+                }
+            }
+            ReadEvent::Eof | ReadEvent::Err => break,
+            ReadEvent::Oversized => {
+                buf.clear();
+                let _ = tx.send(Inbound::Oversized);
+                break;
+            }
+            ReadEvent::Line => {
+                last_activity = Instant::now();
+                let mut line = String::from_utf8_lossy(&buf).into_owned();
+                buf.clear();
+                if line.ends_with('\r') {
+                    line.pop();
+                }
+                if cfg.admin && line.trim() == "!shutdown" {
+                    shutdown.request_stop();
+                    let _ = tx.send(Inbound::Shutdown);
+                    break;
+                }
+                if tx.send(Inbound::Line(line, Instant::now())).is_err() {
+                    break; // batcher gone
+                }
+            }
+        }
+    }
+    // tx drops here: EOF signal for the batcher.
+}
+
+/// Whether the connection keeps going after a batch.
+enum BatchOutcome {
+    Continue,
+    /// The request budget ran out mid-batch: stop answering, close.
+    Close,
+}
+
+/// Serve one connection's line protocol. Stats accumulate into the
+/// caller-owned `stats`, so partial per-connection work survives even if a
+/// panic unwinds out of here (the TCP worker catches it one frame up).
+pub(crate) fn serve_conn<R, W>(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    input: R,
+    output: W,
+    shutdown: &Shutdown,
+    stats: &mut ServeStats,
+) -> Result<()>
+where
+    R: BufRead + Send,
+    W: Write,
+{
+    stats.conns += 1;
+    let mut out = BufWriter::new(output);
+    let (tx, rx) = mpsc::sync_channel::<Inbound>(cfg.max_batch.max(1) * 4);
+    let alive = AtomicBool::new(true);
+    let alive_ref = &alive;
+    std::thread::scope(|scope| -> Result<()> {
+        // Own the receiver inside the scope so any exit (including an
+        // unwind) drops it, which unblocks a reader stuck in `send`.
+        let rx = rx;
+        let _guard = AliveGuard(alive_ref);
+        scope.spawn(move || reader_loop(input, tx, cfg, shutdown, alive_ref));
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut seq: u64 = 0;
+        let mut terminal: Option<Inbound> = None;
+        let mut budget_closed = false;
+        'serve: loop {
+            let first = match rx.recv() {
+                Ok(Inbound::Line(l, t)) => (l, t),
+                Ok(other) => {
+                    terminal = Some(other);
+                    break 'serve;
+                }
+                Err(_) => break 'serve,
+            };
+            // Coalesce until the batch fills or the OLDEST request has
+            // waited max_wait — measured from its enqueue time, so time
+            // spent scoring the previous batch counts against the bound.
+            let wait_deadline = first.1 + cfg.max_wait;
+            pending.push(first);
+            while pending.len() < cfg.max_batch && terminal.is_none() {
+                let now = Instant::now();
+                if now >= wait_deadline {
+                    break;
+                }
+                match rx.recv_timeout(wait_deadline - now) {
+                    Ok(Inbound::Line(l, t)) => pending.push((l, t)),
+                    Ok(other) => terminal = Some(other),
+                    Err(_) => break, // timeout or EOF
+                }
+            }
+            match flush_batch(forest, cfg, &mut pending, &mut out, shutdown, stats, &mut seq)? {
+                BatchOutcome::Continue => {}
+                BatchOutcome::Close => {
+                    budget_closed = true;
+                    break 'serve;
+                }
+            }
+            if terminal.is_some() {
+                break 'serve;
+            }
+        }
+        // Terminal events are answered after any batched work so the
+        // response order matches the request order.
+        if let Some(ev) = terminal {
+            if !budget_closed {
+                match ev {
+                    Inbound::Oversized => {
+                        stats.requests += 1;
+                        stats.errors += 1;
+                        stats.oversized += 1;
+                        writeln!(out, "!err line exceeds {} bytes", cfg.max_line_bytes)?;
+                    }
+                    Inbound::Shutdown => {
+                        writeln!(out, "!ok shutdown")?;
+                    }
+                    Inbound::Line(..) => unreachable!("terminal is never a request line"),
+                }
+                out.flush()?;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Score one pending batch and write responses in request order. Every
+/// answered request line (scored, `!err`, `!timeout`) takes one ticket
+/// from the request budget first; a refused ticket closes the connection
+/// without answering further.
+#[allow(clippy::too_many_arguments)]
+fn flush_batch(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    pending: &mut Vec<Pending>,
+    out: &mut impl Write,
+    shutdown: &Shutdown,
+    stats: &mut ServeStats,
+    seq: &mut u64,
+) -> Result<BatchOutcome> {
+    #[cfg(any(test, feature = "serve-fault"))]
+    if let Some(f) = &cfg.fault {
+        f.on_batch();
+    }
+    enum Disposition {
+        Score,
+        Timeout,
+        Bad(String),
+    }
+    let d = forest.n_features;
+    let c = forest.n_classes;
+    let now = Instant::now();
+    // Classify every line: deadline first (a request that waited past its
+    // deadline is answered `!timeout`, not scored — late answers would be
+    // useless to the client anyway), then parse. Valid, in-deadline rows
+    // go into one row-major buffer.
+    let mut rows: Vec<f32> = Vec::with_capacity(pending.len() * d);
+    let mut dispo: Vec<Disposition> = Vec::with_capacity(pending.len());
+    for (line, t0) in pending.iter() {
+        if now.duration_since(*t0) > cfg.deadline {
+            dispo.push(Disposition::Timeout);
+            continue;
+        }
+        match parse_row(line, d, &mut rows) {
+            Ok(()) => dispo.push(Disposition::Score),
+            Err(e) => dispo.push(Disposition::Bad(e)),
+        }
+    }
+    let n = rows.len() / d.max(1);
+    let proba = if n > 0 {
+        if cfg.n_threads > 1 {
+            // Shard the batch across scoring threads (big-batch regime).
+            let mut p = vec![0f32; n * c];
+            let shard = n.div_ceil(cfg.n_threads).max(1);
+            std::thread::scope(|scope| {
+                for (rs, ps) in rows.chunks(shard * d).zip(p.chunks_mut(shard * c)) {
+                    scope.spawn(move || forest.predict_proba_batch_into(rs, ps));
+                }
+            });
+            p
+        } else {
+            forest.predict_proba_batch(&rows, n)
+        }
+    } else {
+        Vec::new()
+    };
+    // Responses, in request order.
+    let mut vi = 0usize;
+    let mut outcome = BatchOutcome::Continue;
+    for ((line, t0), disp) in pending.iter().zip(&dispo) {
+        if !shutdown.take_ticket() {
+            outcome = BatchOutcome::Close;
+            break;
+        }
+        *seq += 1;
+        match disp {
+            Disposition::Score => {
+                let p = &proba[vi * c..(vi + 1) * c];
+                vi += 1;
+                let pred = argmax(p);
+                if cfg.proba {
+                    write!(out, "{pred}")?;
+                    for x in p {
+                        write!(out, ",{x:.6}")?;
+                    }
+                    writeln!(out)?;
+                } else {
+                    writeln!(out, "{pred}")?;
+                }
+            }
+            Disposition::Timeout => {
+                stats.timeouts += 1;
+                writeln!(out, "!timeout {seq}")?;
+            }
+            Disposition::Bad(e) => {
+                stats.errors += 1;
+                writeln!(out, "!err {e} (line {line:?})")?;
+            }
+        }
+        stats.record_latency(t0.elapsed().as_secs_f64() * 1e6);
+        stats.requests += 1;
+    }
+    out.flush()?;
+    stats.batches += 1;
+    pending.clear();
+    Ok(outcome)
+}
+
+/// Parse one request line (`d` comma-separated finite floats) onto `rows`.
+/// On error `rows` is left unchanged. Non-finite values (NaN/inf) are
+/// rejected: the forest's threshold comparisons would route them
+/// arbitrarily, which is a client bug better surfaced than served.
+pub(crate) fn parse_row(
+    line: &str,
+    d: usize,
+    rows: &mut Vec<f32>,
+) -> std::result::Result<(), String> {
+    let start = rows.len();
+    for field in line.split(',') {
+        match field.trim().parse::<f32>() {
+            Ok(v) if v.is_finite() => rows.push(v),
+            Ok(_) => {
+                rows.truncate(start);
+                return Err(format!("non-finite value {:?}", field.trim()));
+            }
+            Err(_) => {
+                rows.truncate(start);
+                return Err(format!("bad value {:?}", field.trim()));
+            }
+        }
+    }
+    let got = rows.len() - start;
+    if got != d {
+        rows.truncate(start);
+        return Err(format!("expected {d} features, got {got}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+    use std::time::Duration;
+
+    #[test]
+    fn bounded_line_reader_splits_and_caps() {
+        let mut input = Cursor::new(b"short\nexactly8\nway too long line\ntail".to_vec());
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 16),
+            ReadEvent::Line
+        ));
+        assert_eq!(buf, b"short");
+        buf.clear();
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 16),
+            ReadEvent::Line
+        ));
+        assert_eq!(buf, b"exactly8");
+        buf.clear();
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 16),
+            ReadEvent::Oversized
+        ));
+        buf.clear();
+        // Final unterminated line is still delivered, then clean EOF.
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 16),
+            ReadEvent::Line
+        ));
+        assert_eq!(buf, b"tail");
+        buf.clear();
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 16),
+            ReadEvent::Eof
+        ));
+    }
+
+    #[test]
+    fn bounded_line_reader_never_grows_buf_past_cap() {
+        // One unterminated 1000-byte line against a 64-byte cap: the
+        // buffer must never exceed the cap no matter the chunking.
+        let big = vec![b'z'; 1000];
+        let mut input = std::io::BufReader::with_capacity(16, Cursor::new(big));
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_bounded_line(&mut input, &mut buf, 64),
+            ReadEvent::Oversized
+        ));
+        assert!(buf.len() <= 64, "buf grew to {}", buf.len());
+    }
+
+    #[test]
+    fn parse_row_rejects_non_finite_and_ragged() {
+        let mut rows = Vec::new();
+        assert!(parse_row("1,2,3", 3, &mut rows).is_ok());
+        assert_eq!(rows, vec![1.0, 2.0, 3.0]);
+        let before = rows.clone();
+        assert!(parse_row("NaN,2,3", 3, &mut rows)
+            .unwrap_err()
+            .contains("non-finite"));
+        assert!(parse_row("inf,2,3", 3, &mut rows)
+            .unwrap_err()
+            .contains("non-finite"));
+        assert!(parse_row("1,2", 3, &mut rows)
+            .unwrap_err()
+            .contains("expected 3"));
+        assert!(parse_row("a,b,c", 3, &mut rows)
+            .unwrap_err()
+            .contains("bad value"));
+        assert!(parse_row("", 3, &mut rows).is_err());
+        assert_eq!(rows, before, "failed parses must not leave partial rows");
+    }
+
+    #[test]
+    fn reader_loop_honors_admin_shutdown() {
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig {
+            admin: true,
+            ..Default::default()
+        };
+        let alive = AtomicBool::new(true);
+        let (tx, rx) = mpsc::sync_channel(16);
+        let input = Cursor::new(b"1,2\n!shutdown\n3,4\n".to_vec());
+        reader_loop(input, tx, &cfg, &shutdown, &alive);
+        assert!(shutdown.stop_requested());
+        let events: Vec<Inbound> = rx.into_iter().collect();
+        assert_eq!(events.len(), 2, "nothing after !shutdown is read");
+        assert!(matches!(&events[0], Inbound::Line(l, _) if l == "1,2"));
+        assert!(matches!(events[1], Inbound::Shutdown));
+    }
+
+    #[test]
+    fn reader_loop_without_admin_passes_shutdown_line_through() {
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig::default();
+        let alive = AtomicBool::new(true);
+        let (tx, rx) = mpsc::sync_channel(16);
+        reader_loop(
+            Cursor::new(b"!shutdown\n".to_vec()),
+            tx,
+            &cfg,
+            &shutdown,
+            &alive,
+        );
+        assert!(!shutdown.stop_requested());
+        let events: Vec<Inbound> = rx.into_iter().collect();
+        assert!(matches!(&events[0], Inbound::Line(l, _) if l == "!shutdown"));
+    }
+
+    #[test]
+    fn reader_loop_stops_when_batcher_dies() {
+        // A reader ticking on an empty stream must exit promptly once the
+        // alive flag drops, even though EOF never arrives.
+        struct ForeverTick;
+        impl std::io::Read for ForeverTick {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                std::thread::sleep(Duration::from_millis(10));
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"))
+            }
+        }
+        impl BufRead for ForeverTick {
+            fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+                std::thread::sleep(Duration::from_millis(10));
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"))
+            }
+            fn consume(&mut self, _amt: usize) {}
+        }
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig::default();
+        let alive = AtomicBool::new(true);
+        let (tx, _rx) = mpsc::sync_channel(16);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| reader_loop(ForeverTick, tx, &cfg, &shutdown, &alive));
+            std::thread::sleep(Duration::from_millis(30));
+            alive.store(false, Ordering::Release);
+            h.join().unwrap();
+        });
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "reader failed to notice the dead batcher"
+        );
+    }
+}

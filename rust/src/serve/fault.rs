@@ -1,0 +1,247 @@
+//! Deterministic fault injection for the serve tier.
+//!
+//! Compiled only under `cfg(test)` or the `serve-fault` feature, so the
+//! production binary carries none of it. Faults are **counter-based**
+//! ("every k-th batch / connection"), which makes the integration suite
+//! deterministic regardless of thread scheduling: the k-th accepted
+//! connection dies mid-line no matter which worker picks it up. The seeded
+//! [`Pcg64`] only jitters stall *durations* — never whether a fault fires.
+//!
+//! Two injection points:
+//!
+//! * [`FaultState::on_batch`] — called by the batcher at the top of every
+//!   flush; realizes read-stall and handler-panic faults.
+//! * [`FaultReader`] — a `BufRead` wrapper applied per connection;
+//!   realizes mid-line disconnects (reads start failing with
+//!   `ConnectionReset` after a byte budget) and oversized lines (a
+//!   synthetic unterminated prefix served before the real stream).
+
+use crate::rng::Pcg64;
+use std::io::{self, BufRead, Read};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What to inject and how often.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for the stall-duration jitter.
+    pub seed: u64,
+    /// Stall the batcher before scoring every k-th batch...
+    pub stall_every_batch: Option<u64>,
+    /// ...for this long (±50% seeded jitter).
+    pub stall: Duration,
+    /// Panic the batcher on every k-th batch.
+    pub panic_every_batch: Option<u64>,
+    /// Disconnect every k-th connection mid-line.
+    pub kill_conn_every: Option<u64>,
+    /// Feed every k-th connection a synthetic unterminated line...
+    pub oversize_conn_every: Option<u64>,
+    /// ...of this many bytes.
+    pub oversize_len: usize,
+}
+
+/// Faults assigned to one connection by [`FaultState::on_conn`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnFault {
+    /// Serve this many real bytes, then fail reads with `ConnectionReset`.
+    pub kill_after: Option<usize>,
+    /// Prepend a synthetic unterminated line of this many bytes.
+    pub oversize: Option<usize>,
+}
+
+impl ConnFault {
+    pub fn is_clean(&self) -> bool {
+        self.kill_after.is_none() && self.oversize.is_none()
+    }
+}
+
+/// Shared fault state: the plan plus global batch/connection counters.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    batches: AtomicU64,
+    conns: AtomicU64,
+    rng: Mutex<Pcg64>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        let rng = Pcg64::new(plan.seed);
+        FaultState {
+            plan,
+            batches: AtomicU64::new(0),
+            conns: AtomicU64::new(0),
+            rng: Mutex::new(rng),
+        }
+    }
+
+    /// Batch hook: may sleep (stall fault) or panic (handler-panic fault).
+    /// Called by the batcher before scoring each batch.
+    pub fn on_batch(&self) {
+        let n = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(k) = self.plan.stall_every_batch {
+            if k > 0 && n % k == 0 {
+                let jitter = self
+                    .rng
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .unif01();
+                let secs = self.plan.stall.as_secs_f64() * (0.5 + jitter);
+                std::thread::sleep(Duration::from_secs_f64(secs));
+            }
+        }
+        if let Some(k) = self.plan.panic_every_batch {
+            if k > 0 && n % k == 0 {
+                panic!("injected handler panic (batch {n})");
+            }
+        }
+    }
+
+    /// Connection hook: the k-counters decide this connection's faults.
+    pub fn on_conn(&self) -> ConnFault {
+        let n = self.conns.fetch_add(1, Ordering::SeqCst) + 1;
+        let kill = matches!(self.plan.kill_conn_every, Some(k) if k > 0 && n % k == 0);
+        let oversize = matches!(self.plan.oversize_conn_every, Some(k) if k > 0 && n % k == 0);
+        ConnFault {
+            // One real byte, then the wire "cuts": guarantees the cut lands
+            // mid-line for any non-empty request.
+            kill_after: kill.then_some(1),
+            oversize: oversize.then_some(self.plan.oversize_len.max(1)),
+        }
+    }
+}
+
+fn injected_disconnect() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset, "injected disconnect")
+}
+
+/// `BufRead` wrapper that realizes a [`ConnFault`] on top of a real stream.
+pub struct FaultReader<R> {
+    inner: R,
+    /// Synthetic bytes served before the real stream (oversize fault).
+    prefix: Vec<u8>,
+    prefix_pos: usize,
+    /// Real bytes remaining before the connection "dies"; `None` = no kill.
+    kill_after: Option<usize>,
+    dead: bool,
+}
+
+impl<R: BufRead> FaultReader<R> {
+    pub fn new(inner: R, fault: ConnFault) -> Self {
+        FaultReader {
+            inner,
+            prefix: fault.oversize.map_or_else(Vec::new, |n| vec![b'x'; n]),
+            prefix_pos: 0,
+            kill_after: fault.kill_after,
+            dead: false,
+        }
+    }
+}
+
+impl<R: BufRead> Read for FaultReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let avail = self.fill_buf()?;
+        let n = avail.len().min(buf.len());
+        buf[..n].copy_from_slice(&avail[..n]);
+        self.consume(n);
+        Ok(n)
+    }
+}
+
+impl<R: BufRead> BufRead for FaultReader<R> {
+    fn fill_buf(&mut self) -> io::Result<&[u8]> {
+        if self.prefix_pos < self.prefix.len() {
+            return Ok(&self.prefix[self.prefix_pos..]);
+        }
+        if self.dead {
+            return Err(injected_disconnect());
+        }
+        if self.kill_after == Some(0) {
+            self.dead = true;
+            return Err(injected_disconnect());
+        }
+        let avail = self.inner.fill_buf()?;
+        match self.kill_after {
+            Some(limit) => Ok(&avail[..avail.len().min(limit)]),
+            None => Ok(avail),
+        }
+    }
+
+    fn consume(&mut self, amt: usize) {
+        // A fill_buf never mixes prefix and real bytes, so consume applies
+        // to exactly one of them.
+        if self.prefix_pos < self.prefix.len() {
+            self.prefix_pos = (self.prefix_pos + amt).min(self.prefix.len());
+            return;
+        }
+        if let Some(limit) = &mut self.kill_after {
+            *limit = limit.saturating_sub(amt);
+        }
+        self.inner.consume(amt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn clean_fault_is_transparent() {
+        let r = FaultReader::new(Cursor::new(b"a,b\nc,d\n".to_vec()), ConnFault::default());
+        let lines: Vec<String> = r.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines, vec!["a,b", "c,d"]);
+    }
+
+    #[test]
+    fn kill_after_cuts_mid_line() {
+        let fault = ConnFault {
+            kill_after: Some(3),
+            oversize: None,
+        };
+        let mut r = FaultReader::new(Cursor::new(b"abcdef\n".to_vec()), fault);
+        let mut buf = Vec::new();
+        let err = r.read_to_end(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(buf, b"abc", "exactly the byte budget before the cut");
+    }
+
+    #[test]
+    fn oversize_prefix_precedes_real_bytes() {
+        let fault = ConnFault {
+            kill_after: None,
+            oversize: Some(5),
+        };
+        let mut r = FaultReader::new(Cursor::new(b"1,2\n".to_vec()), fault);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf).unwrap();
+        assert_eq!(buf, b"xxxxx1,2\n");
+    }
+
+    #[test]
+    fn counters_fire_every_kth() {
+        let state = FaultState::new(FaultPlan {
+            kill_conn_every: Some(3),
+            oversize_conn_every: Some(2),
+            oversize_len: 10,
+            ..Default::default()
+        });
+        let faults: Vec<ConnFault> = (0..6).map(|_| state.on_conn()).collect();
+        let kills: Vec<bool> = faults.iter().map(|f| f.kill_after.is_some()).collect();
+        let overs: Vec<bool> = faults.iter().map(|f| f.oversize.is_some()).collect();
+        assert_eq!(kills, vec![false, false, true, false, false, true]);
+        assert_eq!(overs, vec![false, true, false, true, false, true]);
+        assert!(faults[0].is_clean());
+    }
+
+    #[test]
+    #[should_panic(expected = "injected handler panic")]
+    fn panic_hook_fires() {
+        let state = FaultState::new(FaultPlan {
+            panic_every_batch: Some(1),
+            ..Default::default()
+        });
+        state.on_batch();
+    }
+}

@@ -1,31 +1,59 @@
-//! Production serving: request batching and batched scoring loops.
+//! Production serving: a bounded, shedding, drainable front door over the
+//! packed-forest hot path ([`PackedForest`]).
 //!
-//! Two workloads share the packed-forest hot path ([`PackedForest`]):
+//! Two workloads share the batched scorer:
 //!
 //! * **`soforest serve`** — an online loop reading line-delimited requests
-//!   (one CSV feature row per line) from stdin or a TCP socket. A request
-//!   batcher coalesces up to `max_batch` rows or `max_wait`, whichever
-//!   comes first, scores the batch in one cache-blocked traversal and
-//!   writes one response line per request, in order. Malformed lines get
-//!   an `error: ...` response so the 1:1 request/response correspondence
-//!   never breaks.
+//!   (one CSV feature row per line) from stdin or TCP. The serve tier is
+//!   organized for overload, not just throughput:
+//!   - a poll(2)-ticked accept loop feeds a **fixed worker pool** through a
+//!     **bounded connection queue** ([`queue`]); a full queue sheds new
+//!     connections with an explicit `!busy` line and a clean close,
+//!   - every connection runs the batching line protocol ([`conn`]) with
+//!     **always-on deadlines**: requests older than `--deadline-ms` at
+//!     scoring time answer `!timeout <seq>`, slow clients are bounded by
+//!     read/write timeouts, oversized lines (> `--max-line-bytes`) answer
+//!     `!err` and close instead of growing without bound,
+//!   - **graceful drain** ([`shutdown`]): SIGINT/SIGTERM (or the
+//!     `!shutdown` admin line in stdio mode, or an exhausted
+//!     `--max-requests` budget) stops accepting, sheds the queued backlog,
+//!     answers in-flight requests within `--drain-ms`, and returns the
+//!     aggregate [`ServeStats`] — merged from per-worker stats, so a
+//!     panicking handler loses at most its own connection, never the
+//!     aggregate (workers `catch_unwind` per connection),
+//!   - a fault-injection layer ([`fault`], tests/`serve-fault` builds
+//!     only) makes all of the above *tested* properties.
 //! * **`soforest score`** — offline throughput scoring: stream a CSV in
 //!   fixed-size row blocks through the coordinator's work-stealing pool
 //!   ([`coordinator::run_pool`]), recording per-block latencies.
 //!
-//! Everything is std-only (threads, mpsc, TcpListener) — the same
-//! zero-dependency discipline as the rest of the crate.
+//! Everything is std-only (threads, mpsc, TcpListener, and two libc calls
+//! — `poll(2)`, `signal(2)` — declared directly, the same pattern as
+//! [`crate::data::mmap`]).
+
+mod conn;
+#[cfg(any(test, feature = "serve-fault"))]
+pub mod fault;
+mod queue;
+pub mod shutdown;
+
+pub use shutdown::{install_signal_handlers, Shutdown};
 
 use crate::coordinator;
-use crate::forest::predict::argmax;
 use crate::forest::PackedForest;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufWriter, Write};
-use std::net::TcpListener;
+use std::io::{BufRead, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Tick granularity for blocking reads and the accept loop: the longest
+/// any serving thread can go without observing the shutdown flag.
+pub(crate) const READ_TICK: Duration = Duration::from_millis(100);
+const READ_TICK_MS: i32 = 100;
 
 /// Knobs of the online serving loop.
 #[derive(Clone, Debug)]
@@ -39,6 +67,24 @@ pub struct ServeConfig {
     pub n_threads: usize,
     /// Respond with the full posterior instead of just the class index.
     pub proba: bool,
+    /// Fixed TCP worker pool size (concurrently served connections).
+    pub workers: usize,
+    /// Bounded connection queue depth; a full queue sheds with `!busy`.
+    pub queue_depth: usize,
+    /// Per-request deadline: a request older than this when its batch is
+    /// scored answers `!timeout <seq>` instead of a late prediction.
+    pub deadline: Duration,
+    /// Close a connection after this much read silence.
+    pub idle_timeout: Duration,
+    /// Grace window for in-flight requests after a stop is requested.
+    pub drain: Duration,
+    /// Request line length cap; longer lines answer `!err` and close.
+    pub max_line_bytes: usize,
+    /// Honor the `!shutdown` admin line (stdio mode sets this).
+    pub admin: bool,
+    /// Fault-injection hooks (tests / `serve-fault` builds only).
+    #[cfg(any(test, feature = "serve-fault"))]
+    pub fault: Option<std::sync::Arc<fault::FaultState>>,
 }
 
 impl Default for ServeConfig {
@@ -48,6 +94,15 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             n_threads: 1,
             proba: false,
+            workers: 4,
+            queue_depth: 64,
+            deadline: Duration::from_secs(1),
+            idle_timeout: Duration::from_secs(30),
+            drain: Duration::from_secs(2),
+            max_line_bytes: 1 << 20,
+            admin: false,
+            #[cfg(any(test, feature = "serve-fault"))]
+            fault: None,
         }
     }
 }
@@ -59,12 +114,22 @@ const LATENCY_SAMPLE_CAP: usize = 65_536;
 /// Counters and latencies from one serving session.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
-    /// Lines received (scored rows + malformed requests).
+    /// Request lines answered (scored rows + `!err` + `!timeout`).
     pub requests: usize,
     /// Batches scored.
     pub batches: usize,
-    /// Malformed requests answered with an error line.
+    /// Requests answered `!err` (malformed or oversized).
     pub errors: usize,
+    /// Requests answered `!timeout` (missed their deadline).
+    pub timeouts: usize,
+    /// Oversized lines (also counted in `errors`).
+    pub oversized: usize,
+    /// Connections shed with `!busy` (queue full or shutdown backlog).
+    pub shed: usize,
+    /// Connections served (shed connections not included).
+    pub conns: usize,
+    /// Connections dropped by a panicking handler.
+    pub panics: usize,
     /// Per-request latency (enqueue → response written), microseconds.
     /// Bounded sample: the most recent [`LATENCY_SAMPLE_CAP`] requests.
     pub latencies_us: Vec<f64>,
@@ -85,6 +150,11 @@ impl ServeStats {
         self.requests += other.requests;
         self.batches += other.batches;
         self.errors += other.errors;
+        self.timeouts += other.timeouts;
+        self.oversized += other.oversized;
+        self.shed += other.shed;
+        self.conns += other.conns;
+        self.panics += other.panics;
         self.latencies_us.extend(other.latencies_us);
         // Keep the most recent samples (the tail), matching the ring's
         // "latest requests" contract.
@@ -99,12 +169,17 @@ impl ServeStats {
         let mut lat = self.latencies_us.clone();
         lat.sort_by(f64::total_cmp);
         format!(
-            "{} requests in {} batches ({:.1} rows/batch), {} errors; \
+            "{} requests in {} batches ({:.1} rows/batch) over {} conns; \
+             {} errors, {} timeouts, {} shed, {} panics; \
              latency us: p50 {:.0} p95 {:.0} p99 {:.0} max {:.0}",
             self.requests,
             self.batches,
             self.requests as f64 / self.batches.max(1) as f64,
+            self.conns,
             self.errors,
+            self.timeouts,
+            self.shed,
+            self.panics,
             percentile(&lat, 50.0),
             percentile(&lat, 95.0),
             percentile(&lat, 99.0),
@@ -122,13 +197,10 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
-/// One pending request: the raw line and its arrival time.
-type Pending = (String, Instant);
-
 /// Serve line-delimited requests from `input`, writing one response line
-/// per request to `output`, until `input` reaches EOF. This is the whole
-/// per-connection (and stdin) loop: a reader thread feeds a bounded
-/// channel; the batcher drains it under the `max_batch`/`max_wait` policy.
+/// per request to `output`, until `input` reaches EOF. This is the
+/// per-connection loop with a private unbounded-budget [`Shutdown`] —
+/// the entry point library users and the unit tests drive directly.
 pub fn serve_lines<R, W>(
     forest: &PackedForest,
     cfg: &ServeConfig,
@@ -139,226 +211,190 @@ where
     R: BufRead + Send,
     W: Write,
 {
+    let shutdown = Shutdown::new();
     let mut stats = ServeStats::default();
-    let mut out = BufWriter::new(output);
-    let (tx, rx) = mpsc::sync_channel::<Pending>(cfg.max_batch.max(1) * 4);
-    std::thread::scope(|scope| -> Result<()> {
-        // Own the receiver inside the scope so any early return drops it,
-        // which unblocks a reader stuck in `send` on a full channel.
-        let rx = rx;
-        scope.spawn(move || {
-            for line in input.lines() {
-                let Ok(line) = line else { break };
-                if tx.send((line, Instant::now())).is_err() {
-                    break; // batcher gone
-                }
-            }
-            // tx drops here: EOF signal for the batcher.
-        });
-        let mut pending: Vec<Pending> = Vec::new();
-        loop {
-            // Block for the first request of the next batch...
-            let Ok(first) = rx.recv() else { break };
-            // ...then coalesce until the batch fills or the OLDEST request
-            // has waited max_wait — measured from its enqueue time, so time
-            // spent scoring the previous batch counts against the bound.
-            let deadline = first.1 + cfg.max_wait;
-            pending.push(first);
-            while pending.len() < cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(item) => pending.push(item),
-                    Err(_) => break, // timeout or EOF
-                }
-            }
-            flush_batch(forest, cfg, &mut pending, &mut out, &mut stats)?;
-        }
-        Ok(())
-    })?;
+    conn::serve_conn(forest, cfg, input, output, &shutdown, &mut stats)?;
     Ok(stats)
 }
 
-/// Score one pending batch and write responses in request order.
-fn flush_batch(
+/// Serve stdin → stdout until EOF or a `!shutdown` admin line (the caller
+/// decides whether to honor it via `cfg.admin`).
+pub fn serve_stdio(
     forest: &PackedForest,
     cfg: &ServeConfig,
-    pending: &mut Vec<Pending>,
-    out: &mut impl Write,
-    stats: &mut ServeStats,
-) -> Result<()> {
-    let d = forest.n_features;
-    let c = forest.n_classes;
-    // Parse every line; valid rows go into one row-major buffer.
-    let mut rows: Vec<f32> = Vec::with_capacity(pending.len() * d);
-    let mut parsed: Vec<std::result::Result<(), String>> = Vec::with_capacity(pending.len());
-    for (line, _) in pending.iter() {
-        match parse_row(line, d, &mut rows) {
-            Ok(()) => parsed.push(Ok(())),
-            Err(e) => parsed.push(Err(e)),
-        }
-    }
-    let n = rows.len() / d;
-    let proba = if n > 0 {
-        if cfg.n_threads > 1 {
-            // Shard the batch across scoring threads (big-batch regime).
-            let mut p = vec![0f32; n * c];
-            let shard = n.div_ceil(cfg.n_threads).max(1);
-            std::thread::scope(|scope| {
-                for (rs, ps) in rows.chunks(shard * d).zip(p.chunks_mut(shard * c)) {
-                    scope.spawn(move || forest.predict_proba_batch_into(rs, ps));
-                }
-            });
-            p
-        } else {
-            forest.predict_proba_batch(&rows, n)
-        }
-    } else {
-        Vec::new()
-    };
-    // Responses, in request order.
-    let mut vi = 0usize;
-    for ((line, t0), ok) in pending.iter().zip(&parsed) {
-        match ok {
-            Ok(()) => {
-                let p = &proba[vi * c..(vi + 1) * c];
-                vi += 1;
-                let pred = argmax(p);
-                if cfg.proba {
-                    write!(out, "{pred}")?;
-                    for x in p {
-                        write!(out, ",{x:.6}")?;
-                    }
-                    writeln!(out)?;
-                } else {
-                    writeln!(out, "{pred}")?;
-                }
-            }
-            Err(e) => {
-                stats.errors += 1;
-                writeln!(out, "error: {e} (line {line:?})")?;
-            }
-        }
-        stats.record_latency(t0.elapsed().as_secs_f64() * 1e6);
-        stats.requests += 1;
-    }
-    out.flush()?;
-    stats.batches += 1;
-    pending.clear();
-    Ok(())
-}
-
-/// Parse one request line (`d` comma-separated floats) onto `rows`.
-/// On error `rows` is left unchanged.
-fn parse_row(line: &str, d: usize, rows: &mut Vec<f32>) -> std::result::Result<(), String> {
-    let start = rows.len();
-    for field in line.split(',') {
-        match field.trim().parse::<f32>() {
-            Ok(v) => rows.push(v),
-            Err(_) => {
-                rows.truncate(start);
-                return Err(format!("bad value {:?}", field.trim()));
-            }
-        }
-    }
-    let got = rows.len() - start;
-    if got != d {
-        rows.truncate(start);
-        return Err(format!("expected {d} features, got {got}"));
-    }
-    Ok(())
-}
-
-/// Serve stdin → stdout until EOF.
-pub fn serve_stdio(forest: &PackedForest, cfg: &ServeConfig) -> Result<ServeStats> {
+    shutdown: &Shutdown,
+) -> Result<ServeStats> {
     // `StdinLock` is not `Send` (the reader runs on its own thread), so
     // wrap the handle itself.
     let input = std::io::BufReader::new(std::io::stdin());
     let stdout = std::io::stdout();
-    serve_lines(forest, cfg, input, stdout.lock())
+    let mut stats = ServeStats::default();
+    conn::serve_conn(forest, cfg, input, stdout.lock(), shutdown, &mut stats)?;
+    Ok(stats)
 }
 
 /// Serve TCP connections on `addr` (e.g. `127.0.0.1:7878`; port 0 binds an
-/// ephemeral port). Each connection runs the line protocol concurrently on
-/// its own scoped thread. `port_file`, when given, receives the bound
-/// address once listening — the readiness signal orchestration (and the
-/// e2e tests) wait on. `max_requests`, when given, stops accepting once
-/// that many requests have been answered and returns the aggregate stats —
-/// in that bounded mode idle connections are dropped after 1 s of read
-/// silence so shutdown cannot be wedged by a client that never hangs up.
-/// Without it the loop runs until the process is killed.
+/// ephemeral port) until `shutdown` fires — from a signal, a
+/// [`Shutdown::request_stop`], or an exhausted request budget
+/// (`--max-requests`, exact by construction: the budget is an atomic
+/// ticket counter and the last ticket *is* the stop request).
+///
+/// A poll(2)-ticked accept loop admits connections into a bounded queue
+/// served by `cfg.workers` pool workers; a full queue (or the queued
+/// backlog at shutdown) sheds with an explicit `!busy` line and a clean
+/// close. Every accepted stream gets a read timeout (the shutdown tick)
+/// and a write timeout (`cfg.idle_timeout`), so neither a silent nor a
+/// non-reading client can wedge a worker. Workers `catch_unwind` each
+/// connection: a panicking handler costs that connection only, and the
+/// stats it accumulated up to the panic still reach the aggregate
+/// (per-worker stats, merged at drain — no shared mutex to poison).
+///
+/// `port_file`, when given, receives the bound address once listening —
+/// the readiness signal orchestration (and the e2e tests) wait on.
 pub fn serve_tcp(
     forest: &PackedForest,
     cfg: &ServeConfig,
     addr: &str,
     port_file: Option<&Path>,
-    max_requests: Option<usize>,
+    shutdown: &Shutdown,
 ) -> Result<ServeStats> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
-    // Non-blocking accept so the loop can observe the max_requests bound
-    // (and, in a future PR, a shutdown signal) between connections.
+    // Non-blocking accept; readiness comes from the poll(2) tick.
     listener.set_nonblocking(true)?;
     if let Some(pf) = port_file {
         std::fs::write(pf, local.to_string()).with_context(|| format!("write {pf:?}"))?;
     }
     eprintln!(
-        "[serve] listening on {local} (batch <= {}, wait <= {:?})",
-        cfg.max_batch, cfg.max_wait
+        "[serve] listening on {local} ({} workers, queue {}, batch <= {}, wait <= {:?}, \
+         deadline {:?})",
+        cfg.workers, cfg.queue_depth, cfg.max_batch, cfg.max_wait, cfg.deadline
     );
-    let answered = AtomicUsize::new(0);
-    let total: Mutex<ServeStats> = Mutex::new(ServeStats::default());
-    std::thread::scope(|scope| -> Result<()> {
-        loop {
-            if let Some(maxr) = max_requests {
-                if answered.load(Ordering::Relaxed) >= maxr {
-                    break;
-                }
+    let queue = queue::BoundedQueue::<TcpStream>::new(cfg.queue_depth);
+    let shed = AtomicUsize::new(0);
+    let (worker_stats, accept_result) = std::thread::scope(|scope| {
+        let acceptor = scope.spawn(|| accept_loop(&listener, &queue, cfg, shutdown, &shed));
+        let stats = coordinator::run_workers(cfg.workers.max(1), |_w| {
+            let mut st = ServeStats::default();
+            while let Some(stream) = queue.pop() {
+                handle_conn(forest, cfg, stream, shutdown, &mut st);
             }
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    // Accepted sockets inherit the listener's non-blocking
-                    // mode on some platforms (Windows); serving needs
-                    // blocking reads.
-                    stream.set_nonblocking(false).ok();
-                    // In bounded mode the scope must be able to drain: an
-                    // idle connection would otherwise block its handler in
-                    // a read forever and wedge the shutdown. A read timeout
-                    // turns idleness into EOF for the line reader.
-                    if max_requests.is_some() {
-                        stream
-                            .set_read_timeout(Some(Duration::from_secs(1)))
-                            .ok();
-                    }
-                    let (answered, total, cfg) = (&answered, &total, cfg.clone());
-                    scope.spawn(move || {
-                        let reader = match stream.try_clone() {
-                            Ok(s) => std::io::BufReader::new(s),
-                            Err(e) => {
-                                eprintln!("[serve] {peer}: clone failed: {e}");
-                                return;
-                            }
-                        };
-                        match serve_lines(forest, &cfg, reader, stream) {
-                            Ok(stats) => {
-                                answered.fetch_add(stats.requests, Ordering::Relaxed);
-                                total.lock().unwrap().merge(stats);
-                            }
-                            Err(e) => eprintln!("[serve] {peer}: {e}"),
-                        }
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(e).context("accept"),
-            }
+            st
+        });
+        let accept_result = acceptor
+            .join()
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("accept thread panicked")));
+        (stats, accept_result)
+    });
+    accept_result?;
+    let mut total = ServeStats::default();
+    for st in worker_stats {
+        total.merge(st);
+    }
+    total.shed += shed.load(Ordering::Relaxed);
+    Ok(total)
+}
+
+/// Accept until shutdown: poll-tick, accept, set the stream's timeouts,
+/// admit into the bounded queue or shed. Always closes the queue on exit
+/// (so the workers drain and return) and sheds the undelivered backlog.
+fn accept_loop(
+    listener: &TcpListener,
+    queue: &queue::BoundedQueue<TcpStream>,
+    cfg: &ServeConfig,
+    shutdown: &Shutdown,
+    shed: &AtomicUsize,
+) -> Result<()> {
+    let result = loop {
+        if shutdown.stop_requested() {
+            break Ok(());
         }
-        Ok(())
-    })?;
-    Ok(total.into_inner().unwrap())
+        if !queue::wait_readable(listener, READ_TICK_MS) {
+            continue;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Accepted sockets inherit the listener's non-blocking mode
+                // on some platforms; serving needs blocking reads...
+                stream.set_nonblocking(false).ok();
+                // ...that tick: the read timeout is how a blocked reader
+                // observes shutdown, and the write timeout bounds how long
+                // a non-reading client can stall a worker.
+                stream.set_read_timeout(Some(READ_TICK)).ok();
+                stream.set_write_timeout(Some(cfg.idle_timeout)).ok();
+                if let Err(stream) = queue.try_push(stream) {
+                    shed_conn(stream, shed);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => break Err(e).context("accept"),
+        }
+    };
+    for stream in queue.close() {
+        shed_conn(stream, shed);
+    }
+    result
+}
+
+/// Refuse a connection the explicit way: one `!busy` line, then close.
+fn shed_conn(mut stream: TcpStream, shed: &AtomicUsize) {
+    let _ = stream.write_all(b"!busy\n");
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    shed.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Serve one pooled connection, isolating panics: a handler panic drops
+/// this connection, bumps `panics`, and keeps whatever stats the
+/// connection had already accumulated (serve_conn mutates caller-owned
+/// stats in place).
+fn handle_conn(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    stream: TcpStream,
+    shutdown: &Shutdown,
+    stats: &mut ServeStats,
+) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    let reader = match stream.try_clone() {
+        Ok(s) => std::io::BufReader::new(s),
+        Err(e) => {
+            eprintln!("[serve] {peer}: clone failed: {e}");
+            return;
+        }
+    };
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        serve_one(forest, cfg, reader, &stream, shutdown, stats)
+    }));
+    match result {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => eprintln!("[serve] {peer}: {e}"),
+        Err(_) => {
+            stats.panics += 1;
+            eprintln!("[serve] {peer}: handler panicked (connection dropped)");
+        }
+    }
+}
+
+/// Run the line protocol on one stream, wrapping the reader in the fault
+/// injector when a fault plan is installed (tests / `serve-fault` builds).
+fn serve_one(
+    forest: &PackedForest,
+    cfg: &ServeConfig,
+    reader: std::io::BufReader<TcpStream>,
+    stream: &TcpStream,
+    shutdown: &Shutdown,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    #[cfg(any(test, feature = "serve-fault"))]
+    if let Some(f) = &cfg.fault {
+        let faulted = fault::FaultReader::new(reader, f.on_conn());
+        return conn::serve_conn(forest, cfg, faulted, stream, shutdown, stats);
+    }
+    conn::serve_conn(forest, cfg, reader, stream, shutdown, stats)
 }
 
 // ------------------------------------------------------- offline scoring
@@ -549,7 +585,8 @@ mod tests {
     use crate::coordinator::train_forest;
     use crate::data::synth::trunk::TrunkConfig;
     use crate::rng::Pcg64;
-    use std::io::Cursor;
+    use std::io::{BufRead as _, BufReader, Cursor, Read, Write};
+    use std::sync::Arc;
 
     fn packed_and_data() -> (PackedForest, crate::data::Dataset) {
         let data = TrunkConfig {
@@ -579,6 +616,22 @@ mod tests {
         s
     }
 
+    /// Wait for the server's port file and connect.
+    fn connect_via_port_file(pf: &Path) -> TcpStream {
+        let mut tries = 0;
+        let addr = loop {
+            if let Ok(s) = std::fs::read_to_string(pf) {
+                if !s.is_empty() {
+                    break s;
+                }
+            }
+            tries += 1;
+            assert!(tries < 2000, "server never wrote the port file");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        TcpStream::connect(addr.trim()).unwrap()
+    }
+
     #[test]
     fn serve_lines_answers_every_request_in_order() {
         let (packed, data) = packed_and_data();
@@ -592,6 +645,8 @@ mod tests {
         let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
         assert_eq!(stats.requests, 50);
         assert_eq!(stats.errors, 0);
+        assert_eq!(stats.timeouts, 0);
+        assert_eq!(stats.conns, 1);
         assert!(stats.batches >= 50 / 8, "batches {}", stats.batches);
         assert_eq!(stats.latencies_us.len(), 50);
         // Responses match the engine's own batch predictions, in order.
@@ -624,10 +679,62 @@ mod tests {
         let text = String::from_utf8(output).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 4);
-        assert!(lines[0].starts_with("error:"), "{}", lines[0]);
-        assert!(!lines[1].starts_with("error:"));
-        assert!(lines[2].starts_with("error:"), "{}", lines[2]);
-        assert!(!lines[3].starts_with("error:"));
+        assert!(lines[0].starts_with("!err"), "{}", lines[0]);
+        assert!(!lines[1].starts_with("!err"));
+        assert!(lines[2].starts_with("!err"), "{}", lines[2]);
+        assert!(!lines[3].starts_with("!err"));
+    }
+
+    #[test]
+    fn serve_lines_handles_malformed_requests_interleaved() {
+        // The malformed-coverage matrix: wrong arity (short and long),
+        // non-numeric, NaN, infinity, empty line — interleaved with good
+        // rows. 1:1 correspondence must hold and good rows must still be
+        // scored correctly (same predictions as a direct batch call).
+        let (packed, data) = packed_and_data();
+        let mut row = Vec::new();
+        let mut good_rows: Vec<f32> = Vec::new();
+        let mut fields = |i: usize| {
+            data.row(i, &mut row);
+            good_rows.extend_from_slice(&row);
+            row.iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let g0 = fields(0);
+        let g1 = fields(1);
+        let g2 = fields(2);
+        let input = format!(
+            "{g0}\n1,2,3\n{g1}\n1,2,3,4,5,6,7,8,9\nnot,numeric,at,all,x,y,z,w\n\
+             NaN,2,3,4,5,6,7,8\n1,inf,3,4,5,6,7,8\n\n{g2}\n"
+        );
+        let n_requests = 9;
+        let mut output = Vec::new();
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
+        assert_eq!(stats.requests, n_requests);
+        assert_eq!(stats.errors, 6);
+        assert_eq!(stats.timeouts, 0);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), n_requests, "1:1 correspondence broken: {text}");
+        let want = packed.predict_batch(&good_rows, 3);
+        for (i, line) in lines.iter().enumerate() {
+            match i {
+                0 => assert_eq!(line.parse::<u16>().unwrap(), want[0]),
+                2 => assert_eq!(line.parse::<u16>().unwrap(), want[1]),
+                8 => assert_eq!(line.parse::<u16>().unwrap(), want[2]),
+                _ => assert!(line.starts_with("!err"), "line {i}: {line}"),
+            }
+        }
+        // NaN / inf produce the dedicated non-finite error.
+        assert!(lines[5].contains("non-finite"), "{}", lines[5]);
+        assert!(lines[6].contains("non-finite"), "{}", lines[6]);
     }
 
     #[test]
@@ -650,8 +757,86 @@ mod tests {
     }
 
     #[test]
+    fn serve_lines_caps_line_length() {
+        let (packed, data) = packed_and_data();
+        let good = request_lines(&data, 1);
+        let long_line = "9,".repeat(400);
+        let input = format!("{good}{long_line}\n{good}");
+        let mut output = Vec::new();
+        let cfg = ServeConfig {
+            max_line_bytes: 256,
+            ..Default::default()
+        };
+        let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // The good line is answered, the oversized one gets `!err`, and
+        // the connection closes — the trailing good line is never read.
+        assert_eq!(lines.len(), 2, "{text}");
+        assert!(lines[0].parse::<u16>().is_ok(), "{}", lines[0]);
+        assert!(lines[1].starts_with("!err line exceeds 256 bytes"), "{}", lines[1]);
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.oversized, 1);
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn serve_lines_zero_deadline_times_out_every_request() {
+        let (packed, data) = packed_and_data();
+        let input = request_lines(&data, 4);
+        let mut output = Vec::new();
+        let cfg = ServeConfig {
+            deadline: Duration::ZERO,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.timeouts, 4);
+        assert_eq!(stats.errors, 0);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // `!timeout <seq>` carries the 1-based request index so the client
+        // can tell *which* request the line answers.
+        for (i, line) in lines.iter().enumerate() {
+            assert_eq!(*line, format!("!timeout {}", i + 1), "{text}");
+        }
+    }
+
+    #[test]
+    fn admin_shutdown_line_acks_and_stops() {
+        let (packed, data) = packed_and_data();
+        let good = request_lines(&data, 1);
+        let input = format!("{good}!shutdown\n{good}");
+        let cfg = ServeConfig {
+            admin: true,
+            ..Default::default()
+        };
+        let shutdown = Shutdown::new();
+        let mut stats = ServeStats::default();
+        let mut output = Vec::new();
+        super::conn::serve_conn(
+            &packed,
+            &cfg,
+            Cursor::new(input),
+            &mut output,
+            &shutdown,
+            &mut stats,
+        )
+        .unwrap();
+        assert!(shutdown.stop_requested(), "!shutdown must request the stop");
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        assert!(lines[0].parse::<u16>().is_ok());
+        assert_eq!(lines[1], "!ok shutdown");
+        // The request after `!shutdown` is never read, let alone answered.
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
     fn serve_tcp_round_trip_on_ephemeral_port() {
-        use std::io::{BufRead, BufReader, Write};
         let (packed, data) = packed_and_data();
         let pf = std::env::temp_dir().join("soforest_serve_unit_port");
         std::fs::remove_file(&pf).ok();
@@ -663,24 +848,11 @@ mod tests {
                     &ServeConfig::default(),
                     "127.0.0.1:0",
                     Some(pf.as_path()),
-                    Some(5),
+                    &Shutdown::with_budget(Some(5)),
                 )
                 .unwrap()
             });
-            // Wait for readiness (bounded so a broken server fails the
-            // test instead of hanging it).
-            let mut tries = 0;
-            let addr = loop {
-                if let Ok(s) = std::fs::read_to_string(&pf) {
-                    if !s.is_empty() {
-                        break s;
-                    }
-                }
-                tries += 1;
-                assert!(tries < 2000, "server never wrote the port file");
-                std::thread::sleep(Duration::from_millis(5));
-            };
-            let mut conn = std::net::TcpStream::connect(addr.trim()).unwrap();
+            let mut conn = connect_via_port_file(&pf);
             conn.write_all(requests.as_bytes()).unwrap();
             conn.shutdown(std::net::Shutdown::Write).unwrap();
             let reader = BufReader::new(conn);
@@ -692,6 +864,182 @@ mod tests {
             }
             let stats = server.join().unwrap();
             assert_eq!(stats.requests, 5);
+            assert_eq!(stats.conns, 1);
+        });
+        std::fs::remove_file(&pf).ok();
+    }
+
+    #[test]
+    fn request_budget_is_exact_over_tcp() {
+        // 10 requests against a budget of 3: exactly 3 answers, then the
+        // server closes the connection and returns — the pre-rewrite
+        // accept race (answers past the bound) is structurally gone.
+        let (packed, data) = packed_and_data();
+        let pf = std::env::temp_dir().join("soforest_serve_budget_port");
+        std::fs::remove_file(&pf).ok();
+        let requests = request_lines(&data, 10);
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_tcp(
+                    &packed,
+                    &ServeConfig::default(),
+                    "127.0.0.1:0",
+                    Some(pf.as_path()),
+                    &Shutdown::with_budget(Some(3)),
+                )
+                .unwrap()
+            });
+            let mut conn = connect_via_port_file(&pf);
+            conn.write_all(requests.as_bytes()).unwrap();
+            let mut text = String::new();
+            let mut reader = BufReader::new(conn);
+            reader.read_to_string(&mut text).ok();
+            let answers: Vec<&str> = text.lines().collect();
+            assert_eq!(answers.len(), 3, "budget must be exact: {text:?}");
+            let stats = server.join().unwrap();
+            assert_eq!(stats.requests, 3);
+        });
+        std::fs::remove_file(&pf).ok();
+    }
+
+    #[test]
+    fn full_queue_sheds_with_busy_line() {
+        let (packed, data) = packed_and_data();
+        let pf = std::env::temp_dir().join("soforest_serve_shed_port");
+        std::fs::remove_file(&pf).ok();
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig {
+            workers: 1,
+            queue_depth: 1,
+            drain: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let one_row = request_lines(&data, 1);
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
+            });
+            // Conn A occupies the single worker (held open, no close).
+            let mut a = connect_via_port_file(&pf);
+            a.write_all(one_row.as_bytes()).unwrap();
+            let mut a_reader = BufReader::new(a.try_clone().unwrap());
+            let mut line = String::new();
+            a_reader.read_line(&mut line).unwrap();
+            assert!(line.trim().parse::<u16>().is_ok(), "{line}");
+            // Conn B fills the queue (the worker is still busy with A).
+            let addr = a.peer_addr().unwrap();
+            let _b = TcpStream::connect(addr).unwrap();
+            // Give the accept loop a moment to enqueue B, then conn C must
+            // be shed with an explicit `!busy`.
+            std::thread::sleep(Duration::from_millis(300));
+            let c = TcpStream::connect(addr).unwrap();
+            let mut c_text = String::new();
+            BufReader::new(c).read_to_string(&mut c_text).unwrap();
+            assert_eq!(c_text.trim(), "!busy");
+            // Wind down: close A so the worker can drain B, then stop.
+            drop(a_reader);
+            a.shutdown(std::net::Shutdown::Both).ok();
+            shutdown.request_stop();
+            let stats = server.join().unwrap();
+            assert!(stats.shed >= 1, "shed {}", stats.shed);
+            assert_eq!(stats.requests, 1);
+        });
+        std::fs::remove_file(&pf).ok();
+    }
+
+    #[test]
+    fn graceful_stop_drains_and_returns() {
+        let (packed, data) = packed_and_data();
+        let pf = std::env::temp_dir().join("soforest_serve_drain_port");
+        std::fs::remove_file(&pf).ok();
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig {
+            drain: Duration::from_millis(200),
+            ..Default::default()
+        };
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
+            });
+            let mut conn = connect_via_port_file(&pf);
+            conn.write_all(request_lines(&data, 3).as_bytes()).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for _ in 0..3 {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.trim().parse::<u16>().is_ok(), "{line}");
+            }
+            // Client stays connected and silent; the stop must still drain
+            // the connection (within the drain window) and return.
+            let t0 = Instant::now();
+            shutdown.request_stop();
+            let stats = server.join().unwrap();
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "drain took {:?}",
+                t0.elapsed()
+            );
+            assert_eq!(stats.requests, 3);
+            // The server closed the connection: the client sees EOF.
+            let mut rest = String::new();
+            reader.read_to_string(&mut rest).ok();
+            assert!(rest.is_empty(), "unexpected trailing data {rest:?}");
+        });
+        std::fs::remove_file(&pf).ok();
+    }
+
+    #[test]
+    fn panicking_handler_does_not_lose_stats() {
+        // Regression for the poisoned-mutex stats loss: a handler panic
+        // (injected via the fault hook) must cost only its own connection —
+        // the aggregate stats still come back, including the counters the
+        // doomed connection accumulated before the panic.
+        let (packed, data) = packed_and_data();
+        let pf = std::env::temp_dir().join("soforest_serve_panic_port");
+        std::fs::remove_file(&pf).ok();
+        let shutdown = Shutdown::new();
+        let fault = Arc::new(fault::FaultState::new(fault::FaultPlan {
+            panic_every_batch: Some(2),
+            ..Default::default()
+        }));
+        let cfg = ServeConfig {
+            max_wait: Duration::from_millis(1),
+            fault: Some(fault),
+            ..Default::default()
+        };
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
+            });
+            let mut conn = connect_via_port_file(&pf);
+            let one_row = request_lines(&data, 1);
+            // First batch (batch #1) answers normally...
+            conn.write_all(one_row.as_bytes()).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.trim().parse::<u16>().is_ok(), "{line}");
+            // ...the second batch trips the injected panic: the connection
+            // dies without an answer.
+            conn.write_all(one_row.as_bytes()).unwrap();
+            let mut rest = String::new();
+            reader.read_to_string(&mut rest).ok();
+            assert!(rest.is_empty(), "no answer after the panic, got {rest:?}");
+            // The server survives: a fresh connection is served again
+            // (batch #3 — the panic counter is global, so it's clean).
+            let mut conn2 = connect_via_port_file(&pf);
+            conn2.write_all(one_row.as_bytes()).unwrap();
+            conn2.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut text = String::new();
+            BufReader::new(conn2).read_to_string(&mut text).unwrap();
+            assert!(text.trim().parse::<u16>().is_ok(), "{text}");
+            shutdown.request_stop();
+            let stats = server.join().unwrap();
+            assert_eq!(stats.panics, 1, "exactly one injected panic");
+            assert_eq!(stats.conns, 2);
+            // Request #1 (answered before the panic) and #3 both survive in
+            // the aggregate — nothing was lost to a poisoned mutex.
+            assert_eq!(stats.requests, 2);
         });
         std::fs::remove_file(&pf).ok();
     }

@@ -1,0 +1,199 @@
+//! Admission control: a bounded connection queue and the poll(2) readiness
+//! helper the accept loop ticks on.
+//!
+//! The queue is deliberately tiny — `Mutex<VecDeque>` + `Condvar`, no
+//! lock-free cleverness — because it holds *connections*, not requests:
+//! pushes happen at accept rate and pops at connection-completion rate,
+//! both far below the per-request path. What matters is the policy it
+//! encodes: [`BoundedQueue::try_push`] never blocks the accept loop (a
+//! full queue hands the connection back so the caller can shed it with an
+//! explicit `!busy`), and [`BoundedQueue::close`] returns the undelivered
+//! backlog so shutdown sheds it the same way instead of silently dropping
+//! sockets mid-handshake.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+/// Multi-producer multi-consumer bounded queue with explicit shedding.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Tolerate poisoning: a panicking worker must not take admission
+    /// control down with it (the state itself is a plain deque, always
+    /// consistent between lock acquisitions).
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Non-blocking push. Returns the item back when the queue is full or
+    /// closed — the caller owes it an explicit shed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut s = self.lock();
+        if s.closed || s.items.len() >= s.cap {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: the next item, or `None` once the queue is closed.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self
+                .not_empty
+                .wait(s)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Close the queue: wake every blocked popper and return the
+    /// undelivered backlog for explicit shedding.
+    pub fn close(&self) -> Vec<T> {
+        let mut s = self.lock();
+        s.closed = true;
+        let leftover: Vec<T> = s.items.drain(..).collect();
+        drop(s);
+        self.not_empty.notify_all();
+        leftover
+    }
+}
+
+/// Block until `listener` has a pending connection or `timeout_ms`
+/// elapses; `true` means "try accept now". Declared directly against
+/// libc's `poll(2)` (same pattern as [`crate::data::mmap`]) so the accept
+/// loop ticks instead of spinning a sleep.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub fn wait_readable(listener: &std::net::TcpListener, timeout_ms: i32) -> bool {
+    use std::os::unix::io::AsRawFd;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+    const POLLIN: i16 = 1;
+    // `nfds_t` is `unsigned long` on Linux (the CI target). Darwin declares
+    // it `u32`, but passing 1 as a u64 in the second integer argument
+    // register is benign on every 64-bit unix calling convention we build
+    // for.
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    let mut pfd = PollFd {
+        fd: listener.as_raw_fd(),
+        events: POLLIN,
+        revents: 0,
+    };
+    let r = unsafe { poll(&mut pfd as *mut PollFd, 1, timeout_ms) };
+    r > 0 && (pfd.revents & POLLIN) != 0
+}
+
+/// Portable fallback: sleep one tick and report "maybe readable" — the
+/// caller's non-blocking accept turns a false positive into `WouldBlock`.
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn wait_readable(_listener: &std::net::TcpListener, timeout_ms: i32) -> bool {
+    std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(1) as u64));
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_returns_item() {
+        let q = BoundedQueue::new(2);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        assert_eq!(q.try_push("c"), Err("c"));
+        assert_eq!(q.pop(), Some("a"));
+        q.try_push("c").unwrap();
+    }
+
+    #[test]
+    fn close_wakes_poppers_and_returns_backlog() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        std::thread::scope(|scope| {
+            let popper = scope.spawn(|| {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            });
+            // Give the popper a chance to drain and block, then close with
+            // a fresh backlog item; either the popper or close() gets it,
+            // never both, never neither.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            q.try_push(8).unwrap_or_else(|_| panic!("queue closed early"));
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let leftover = q.close();
+            let got = popper.join().unwrap();
+            let mut all: Vec<i32> = got.into_iter().chain(leftover).collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![7, 8]);
+        });
+        assert_eq!(q.try_push(9), Err(9), "closed queue refuses pushes");
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn wait_readable_sees_pending_connection() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        assert!(
+            !wait_readable(&listener, 0) || cfg!(not(all(unix, target_pointer_width = "64"))),
+            "no pending connection yet"
+        );
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let mut ready = false;
+        for _ in 0..100 {
+            if wait_readable(&listener, 100) {
+                ready = true;
+                break;
+            }
+        }
+        assert!(ready, "poll never saw the pending connection");
+    }
+}

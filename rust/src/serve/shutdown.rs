@@ -1,0 +1,182 @@
+//! Cooperative shutdown signalling for the serve tier.
+//!
+//! A [`Shutdown`] handle is shared by the accept loop, every worker, and
+//! the CLI: any of them can request a stop, and all of them poll
+//! [`Shutdown::stop_requested`] at their natural tick points (the poll(2)
+//! accept tick, the per-connection read-timeout tick, the batch flush).
+//! The handle also carries the **request budget** — the exact-`max-requests`
+//! bound is implemented as an atomic ticket counter whose exhaustion *is* a
+//! stop request, so a connection accepted a microsecond before the bound
+//! trips can no longer sneak extra answers past it (the pre-rewrite accept
+//! race).
+//!
+//! OS signals (SIGINT/SIGTERM) flip a process-wide flag that every handle
+//! observes; the handler is installed with `signal(2)` declared directly
+//! against libc, the same zero-dependency pattern as
+//! [`crate::data::mmap`].
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide stop flag flipped by the SIGINT/SIGTERM handler. An atomic
+/// store is async-signal-safe in practice (it compiles to a plain store);
+/// this is the standard lock-free signal pattern.
+static OS_STOP: AtomicBool = AtomicBool::new(false);
+
+struct Inner {
+    stop: AtomicBool,
+    /// Remaining request tickets. `i64::MAX` means unbounded; the counter
+    /// only ever decrements, and the headroom makes underflow unreachable
+    /// in any real process lifetime.
+    budget: AtomicI64,
+}
+
+/// Clonable stop-and-budget handle shared across the serving threads.
+#[derive(Clone)]
+pub struct Shutdown {
+    inner: Arc<Inner>,
+}
+
+impl Shutdown {
+    /// Unbounded handle: stops only on [`Shutdown::request_stop`] or an OS
+    /// signal.
+    pub fn new() -> Self {
+        Self::with_budget(None)
+    }
+
+    /// Handle with an optional exact request budget (`--max-requests`).
+    pub fn with_budget(max_requests: Option<usize>) -> Self {
+        let budget = match max_requests {
+            Some(n) => i64::try_from(n).unwrap_or(i64::MAX),
+            None => i64::MAX,
+        };
+        Shutdown {
+            inner: Arc::new(Inner {
+                stop: AtomicBool::new(false),
+                budget: AtomicI64::new(budget),
+            }),
+        }
+    }
+
+    /// Ask every thread sharing this handle to wind down.
+    pub fn request_stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a stop was requested — locally or by an OS signal.
+    pub fn stop_requested(&self) -> bool {
+        self.inner.stop.load(Ordering::SeqCst) || OS_STOP.load(Ordering::SeqCst)
+    }
+
+    /// Claim one unit of the request budget. Returns `false` once the
+    /// budget is spent — and the *last* successful claim already requests
+    /// the stop, so the bound is exact: whichever thread takes ticket N
+    /// flips the flag before any thread can ask for ticket N+1's answer.
+    pub fn take_ticket(&self) -> bool {
+        let prev = self.inner.budget.fetch_sub(1, Ordering::SeqCst);
+        if prev <= 0 {
+            self.request_stop();
+            return false;
+        }
+        if prev == 1 {
+            self.request_stop();
+        }
+        true
+    }
+}
+
+impl Default for Shutdown {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+    extern "C" {
+        /// `signal(2)`: good enough here — the handler only stores a flag,
+        /// and glibc's `signal` installs it with `SA_RESTART`, so blocking
+        /// socket reads keep ticking on their `SO_RCVTIMEO` timeout and
+        /// observe the flag within one tick.
+        pub fn signal(signum: i32, handler: usize) -> usize;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    OS_STOP.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip the process-wide stop flag
+/// every [`Shutdown`] handle observes. No-op on non-unix targets (ctrl-C
+/// then falls back to the default hard kill).
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    unsafe {
+        sys::signal(sys::SIGINT, on_signal as extern "C" fn(i32) as usize);
+        sys::signal(sys::SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_flag_round_trip() {
+        let s = Shutdown::new();
+        assert!(!s.stop_requested());
+        let clone = s.clone();
+        clone.request_stop();
+        assert!(s.stop_requested(), "stop must propagate through clones");
+    }
+
+    #[test]
+    fn unbounded_budget_never_exhausts() {
+        let s = Shutdown::new();
+        for _ in 0..10_000 {
+            assert!(s.take_ticket());
+        }
+        assert!(!s.stop_requested());
+    }
+
+    #[test]
+    fn budget_is_exact_and_last_ticket_stops() {
+        let s = Shutdown::with_budget(Some(3));
+        assert!(s.take_ticket());
+        assert!(s.take_ticket());
+        assert!(!s.stop_requested(), "stop must not fire before the bound");
+        assert!(s.take_ticket(), "ticket N itself is still granted");
+        assert!(s.stop_requested(), "last ticket requests the stop");
+        assert!(!s.take_ticket(), "ticket N+1 is refused");
+        assert!(!s.take_ticket());
+    }
+
+    #[test]
+    fn budget_exact_under_contention() {
+        let s = Shutdown::with_budget(Some(1000));
+        let granted = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..500 {
+                        if s.take_ticket() {
+                            granted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(granted.load(Ordering::Relaxed), 1000);
+        assert!(s.stop_requested());
+    }
+
+    #[test]
+    fn zero_budget_stops_immediately() {
+        let s = Shutdown::with_budget(Some(0));
+        assert!(!s.take_ticket());
+        assert!(s.stop_requested());
+    }
+}

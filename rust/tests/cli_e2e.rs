@@ -372,7 +372,7 @@ fn serve_answers_tcp_requests_end_to_end() {
     assert_eq!(answers.len(), 4, "{answers:?}");
     for (i, a) in answers.iter().enumerate() {
         if i == 2 {
-            assert!(a.starts_with("error:"), "{a}");
+            assert!(a.starts_with("!err"), "{a}");
         } else {
             let class: usize = a.parse().unwrap();
             assert!(class < 2, "{a}");

@@ -1,0 +1,294 @@
+//! Fault-injection integration suite for the serve tier (requires the
+//! `serve-fault` feature: `cargo test --features serve-fault --test serve_fault`).
+//!
+//! Each test stands up a real TCP server with an injected fault plan
+//! ([`soforest::serve::fault`]) and asserts the robustness contract from
+//! the other side of the socket:
+//!
+//! * faults are **shed explicitly** (`!err`, `!timeout`, a dropped
+//!   connection) — never a wedged worker or a silent wrong answer,
+//! * the server **recovers**: connections after a fault are served
+//!   normally,
+//! * the drained aggregate [`ServeStats`] equals what the clients
+//!   observed — a panicking handler loses its own connection only,
+//! * shutdown always completes promptly (the join-time bound in
+//!   `with_server` is the no-deadlock assertion for every test).
+//!
+//! Faults are counter-based ("every k-th batch / connection") and all
+//! clients here run serially, so which connection is hit is deterministic
+//! regardless of worker scheduling.
+
+use soforest::config::ForestConfig;
+use soforest::coordinator::train_forest;
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::forest::PackedForest;
+use soforest::rng::Pcg64;
+use soforest::serve::fault::{FaultPlan, FaultState};
+use soforest::serve::{serve_tcp, ServeConfig, ServeStats, Shutdown};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Small forest plus one valid request line for it.
+fn fixture() -> (PackedForest, String) {
+    let data = TrunkConfig {
+        n_samples: 400,
+        n_features: 8,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(21));
+    let cfg = ForestConfig {
+        n_trees: 10,
+        n_threads: 1,
+        ..Default::default()
+    };
+    let forest = train_forest(&data, &cfg, 4);
+    let packed = PackedForest::from_forest(&forest).unwrap();
+    let mut row = Vec::new();
+    data.row(0, &mut row);
+    let line = row
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    (packed, line)
+}
+
+/// Run `serve_tcp` for the duration of `client`, then stop, join, and
+/// return the drained stats. The bounded join time doubles as the
+/// no-deadlock/no-wedge assertion of every test that goes through here.
+fn with_server(
+    packed: &PackedForest,
+    cfg: &ServeConfig,
+    shutdown: &Shutdown,
+    pf_name: &str,
+    client: impl FnOnce(&Path),
+) -> ServeStats {
+    let pf = std::env::temp_dir().join(pf_name);
+    std::fs::remove_file(&pf).ok();
+    let stats = std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_tcp(packed, cfg, "127.0.0.1:0", Some(pf.as_path()), shutdown).unwrap()
+        });
+        client(&pf);
+        shutdown.request_stop();
+        let t0 = Instant::now();
+        let stats = server.join().expect("server thread");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown wedged: drain took {:?}",
+            t0.elapsed()
+        );
+        stats
+    });
+    std::fs::remove_file(&pf).ok();
+    stats
+}
+
+/// Wait for the port file, then connect.
+fn connect(pf: &Path) -> TcpStream {
+    for _ in 0..2000 {
+        if let Ok(s) = std::fs::read_to_string(pf) {
+            if !s.is_empty() {
+                return TcpStream::connect(s.trim()).unwrap();
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("server never wrote the port file");
+}
+
+/// One request, one connection: send `line`, return the first response
+/// line — `None` when the server dropped the connection unanswered
+/// (injected disconnects may surface client-side as a reset, not EOF).
+fn one_shot(pf: &Path, line: &str) -> Option<String> {
+    let mut conn = connect(pf);
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut resp = String::new();
+    match reader.read_line(&mut resp) {
+        Ok(0) | Err(_) => None,
+        Ok(_) => Some(resp.trim_end().to_string()),
+    }
+}
+
+#[test]
+fn injected_panics_cost_only_their_connection() {
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            panic_every_batch: Some(2),
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_panic_port", |pf| {
+        // Serial one-line connections: connection k is batch k, so the
+        // even ones panic (dropped unanswered) and the odd ones answer.
+        let answers: Vec<Option<String>> = (0..4).map(|_| one_shot(pf, &line)).collect();
+        for (k, a) in answers.iter().enumerate() {
+            if (k + 1) % 2 == 0 {
+                assert!(a.is_none(), "conn {} survived its injected panic: {a:?}", k + 1);
+            } else {
+                let a = a.as_deref().unwrap_or_else(|| panic!("conn {} unanswered", k + 1));
+                assert!(a.parse::<u16>().is_ok(), "conn {}: {a}", k + 1);
+            }
+        }
+    });
+    // The aggregate survived both panics: the two answered requests are
+    // counted, the two doomed connections cost exactly themselves.
+    assert_eq!(stats.panics, 2);
+    assert_eq!(stats.conns, 4);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn injected_stalls_turn_into_explicit_timeouts() {
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        // Every batch stalls 30-90 ms before scoring; the 10 ms deadline
+        // has always passed by then, so every request must be answered
+        // with an explicit `!timeout <seq>` — never a late prediction.
+        deadline: Duration::from_millis(10),
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            seed: 7,
+            stall_every_batch: Some(1),
+            stall: Duration::from_millis(60),
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_stall_port", |pf| {
+        let mut conn = connect(pf);
+        conn.write_all(format!("{line}\n{line}\n").as_bytes()).unwrap();
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let lines: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        // 1:1 correspondence holds under timeouts, and the seq numbers
+        // tell the client which request each line answers.
+        assert_eq!(lines, vec!["!timeout 1", "!timeout 2"], "{lines:?}");
+    });
+    assert_eq!(stats.timeouts, 2);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn mid_line_disconnects_are_contained() {
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            kill_conn_every: Some(2),
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_kill_port", |pf| {
+        // The wire "cuts" one byte into every 2nd connection: those get
+        // no answer; the server recovers and serves the next one.
+        for k in 1..=4u64 {
+            let a = one_shot(pf, &line);
+            if k % 2 == 0 {
+                assert!(a.is_none(), "killed conn {k} got an answer: {a:?}");
+            } else {
+                let a = a.unwrap_or_else(|| panic!("conn {k} unanswered"));
+                assert!(a.parse::<u16>().is_ok(), "conn {k}: {a}");
+            }
+        }
+    });
+    assert_eq!(stats.conns, 4);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.panics, 0, "a disconnect is not a panic");
+}
+
+#[test]
+fn injected_oversize_lines_answer_err_and_close() {
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        max_line_bytes: 256,
+        // Every 2nd connection reads a synthetic 1 KiB unterminated line
+        // before any real bytes — four times the cap.
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            oversize_conn_every: Some(2),
+            oversize_len: 1024,
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_oversize_port", |pf| {
+        // Conn 1 is clean and answered.
+        let a = one_shot(pf, &line).expect("clean conn unanswered");
+        assert!(a.parse::<u16>().is_ok(), "{a}");
+        // Conn 2 sends nothing itself; the injected oversize prefix must
+        // be refused with a bounded buffer, one `!err`, and a close.
+        let conn = connect(pf);
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "!err line exceeds 256 bytes");
+        let mut rest = String::new();
+        reader.read_to_string(&mut rest).ok();
+        assert!(rest.is_empty(), "connection must close after the cap: {rest:?}");
+    });
+    assert_eq!(stats.conns, 2);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.oversized, 1);
+}
+
+#[test]
+fn fault_storm_preserves_aggregate_stats() {
+    // Everything at once — disconnects, a panic, a stall — over 12 serial
+    // connections. The drained aggregate must match exactly what the
+    // clients observed, connection by connection.
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            seed: 3,
+            kill_conn_every: Some(3),
+            panic_every_batch: Some(5),
+            stall_every_batch: Some(7),
+            stall: Duration::from_millis(5),
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let mut answered = 0usize;
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_storm_port", |pf| {
+        // Conns 3, 6, 9, 12 are killed (no batch). The survivors produce
+        // batches 1..=8 in connection order, so conn 7 = batch 5 panics
+        // and conn 10 = batch 7 stalls (harmless under the 1 s deadline).
+        for k in 1..=12u64 {
+            if let Some(a) = one_shot(pf, &line) {
+                assert!(a.parse::<u16>().is_ok(), "conn {k}: {a}");
+                answered += 1;
+            } else {
+                assert!(
+                    k % 3 == 0 || k == 7,
+                    "conn {k} dropped without an injected fault"
+                );
+            }
+        }
+        assert_eq!(answered, 7);
+    });
+    assert_eq!(stats.conns, 12);
+    assert_eq!(stats.requests, answered, "aggregate != client observations");
+    assert_eq!(stats.panics, 1);
+    assert_eq!(stats.timeouts, 0);
+    assert_eq!(stats.errors, 0);
+}
