@@ -1,6 +1,8 @@
 //! Training throughput: depth vs frontier growth at 1 and N threads,
 //! frontier with sibling-histogram subtraction on vs off, and the
-//! in-memory vs memory-mapped storage backend.
+//! storage backend sweep — in-memory float, memory-mapped float, and
+//! quantized (`storage=binned`, 255-bin u8 columns with the direct
+//! bin-id histogram fast path).
 //!
 //! The frontier scheduler's reason to exist is intra-tree parallelism: a
 //! **single large tree** should scale with cores, where the depth-first
@@ -77,6 +79,13 @@ fn main() {
             None
         }
     };
+    // Quantized twin (u8 bin ids, 255 bins): the storage=binned rows time
+    // the whole quantized data path — 4x less column traffic plus the
+    // direct bin-id accumulate for axis-aligned candidates. NOT
+    // comparable accuracy-wise to the float rows (different forest); the
+    // gate tracks its throughput trajectory, the eval e2e reports the
+    // accuracy delta.
+    let binned = data.quantized(255);
 
     println!("# single-tree training throughput, trunk:{rows}:{d}, to purity\n");
     // Speedup is relative to each (growth, subtraction, storage) group's
@@ -105,6 +114,7 @@ fn main() {
         if let Some(m) = &mapped {
             c.push((GrowthMode::Frontier, true, "mmap", m));
         }
+        c.push((GrowthMode::Frontier, true, "binned", &binned));
         c
     };
     for (growth, subtraction, storage, bench_data) in configs {

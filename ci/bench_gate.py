@@ -31,10 +31,11 @@ TOLERANCE = 0.15  # fail on >15% regression of the gated metric
 # bench file -> (key fields, gated metric, higher_is_better)
 SPECS = {
     "BENCH_train.json": {
-        # "storage" distinguishes the in-memory backend from the
-        # memory-mapped column-file backend (rows keyed `ram` | `mmap`);
-        # older baselines without the field simply stop matching and are
-        # reported as dropped rows until re-recorded.
+        # "storage" distinguishes the backends the trainer can read from
+        # (rows keyed `ram` | `mmap` | `binned` — the last is the
+        # quantized u8 bin-id store with the direct-accumulate fast
+        # path); older baselines without a row simply stop matching and
+        # are reported as dropped/new rows until re-recorded.
         "keys": ("growth", "threads", "hist_subtraction", "storage"),
         "metric": "rows_per_s",
         "higher_is_better": True,

@@ -80,6 +80,7 @@ impl Args {
                 k.as_str(),
                 "data" | "config" | "out" | "test-frac" | "seed" | "replicates" | "list"
                     | "artifacts" | "model" | "oob" | "repeats" | "top" | "thresholds"
+                    | "quantize"
             ) {
                 continue;
             }
@@ -105,11 +106,15 @@ USAGE: soforest <command> [--flag value ...]
 
 COMMANDS:
   train      train a forest; --out saves the model (v2); --oob adds OOB accuracy
-  eval       train on a split, report holdout accuracy (+ RF baseline)
+  eval       train on a split, report holdout accuracy (+ RF baseline);
+             --quantize N adds a quantized-training leg (<=N bins) and
+             reports the accuracy delta vs float training explicitly
   predict    load a model (--model) and classify --data (--out preds.csv)
-  score      batched multi-threaded scoring of a CSV through a saved model:
-             --model m.bin --data file.csv [--block 4096] [--threads N]
-             [--out preds.csv]; reports rows/s + block latency percentiles
+  score      batched multi-threaded scoring of a CSV or packed .sofc column
+             file (v1 float or v2 binned — mapped, blocked row gather)
+             through a saved model: --model m.bin --data file.csv|t.sofc
+             [--block 4096] [--threads N] [--out preds.csv]; reports
+             rows/s + block latency percentiles
   serve      online serving loop with request batching; stdin -> stdout, or
              --tcp host:port (port 0 = ephemeral); --max-batch 64,
              --max-wait-us 2000, --proba, --port-file ready.addr,
@@ -129,12 +134,19 @@ COMMANDS:
   calibrate  run the §4.1 microbenchmark, print thresholds;
              --out thresholds.json persists them for train --thresholds
   might      run the MIGHT honest-forest protocol, report AUC / S@98
-  gen-data   materialize a synthetic dataset to CSV
-  pack       convert --data (CSV path or generator spec) into a binary
-             column file for out-of-core training: --out table.sofc
-             [--label-first] [--no-header]; CSV input streams in
-             fixed-size chunks, so tables larger than RAM pack without
-             materializing
+  gen-data   materialize a synthetic dataset to CSV; --shards N instead
+             writes N contiguous .sofc shards (--out is the name stem,
+             shard files are <stem>.shard<i>.sofc), built shard-by-shard;
+             --bins B makes the shards v2 quantized
+  pack       convert --data (CSV path, generator spec, or v1 .sofc) into
+             a binary column file for out-of-core training: --out
+             table.sofc [--label-first] [--no-header]; CSV input streams
+             in fixed-size chunks, so tables larger than RAM pack without
+             materializing. --bins N (2..=256) writes the v2 quantized
+             format: per-feature u8 bin ids + stored bin layouts
+             (quantile-adaptive edges + representative values); training
+             on a v2 file is deterministic and uses the direct bin-id
+             histogram fast path
   info       show artifact / accelerator status
   help       this text
 
@@ -385,14 +397,15 @@ fn cmd_score(args: &Args) -> Result<()> {
     let keep = args.get("out").is_some();
     let report = if Path::new(spec).exists() {
         if colfile::sniff(Path::new(spec)) {
-            bail!(
-                "{spec} is a packed column file; `score` streams CSV text — use \
-                 `soforest predict --model ... --data {spec}` (blocked row gather \
-                 off the mapped backend) instead"
-            );
+            // Packed column file (v1 float or v2 binned): blocked row
+            // gather off the mapped backend through the same superblock
+            // scorer the CSV path uses — every verb accepts both formats.
+            let data = colfile::load_mapped(Path::new(spec))?;
+            serve::score_dataset_blocked(&packed, &data, block, threads, keep)?
+        } else {
+            let f = std::fs::File::open(spec).with_context(|| format!("open {spec}"))?;
+            serve::score_csv_stream(&packed, &mut std::io::BufReader::new(f), block, threads, keep)?
         }
-        let f = std::fs::File::open(spec).with_context(|| format!("open {spec}"))?;
-        serve::score_csv_stream(&packed, &mut std::io::BufReader::new(f), block, threads, keep)?
     } else {
         // Generator spec: materialize to in-memory CSV rows so both input
         // kinds flow through the same streaming block scorer.
@@ -567,12 +580,47 @@ fn cmd_eval(args: &Args) -> Result<()> {
         seed,
         forest::tree::ProjectionSource::SparseOblique,
     );
+    let float_acc = out.forest.accuracy(&test);
     println!(
         "SO-{}: train {:.2}s, test accuracy {:.4}",
         cfg.strategy.name(),
         out.wall_s,
-        out.forest.accuracy(&test)
+        float_acc
     );
+    // `--quantize N`: opt-in quantized-training leg. Trains a second
+    // forest on the <=N-bin quantized twin of the train split and reports
+    // the accuracy delta explicitly — quantization loss is a measured
+    // quantity here, never silently absorbed into the headline number.
+    // The test split stays float either way: thresholds learned on
+    // representative values apply to raw feature values at predict time,
+    // which is the deployment this measures.
+    let quantize: usize = args.get_parse("quantize", 0usize)?;
+    if quantize > 0 {
+        if data.is_binned() {
+            bail!(
+                "--quantize needs float input to compare against; --data is \
+                 already a binned column file"
+            );
+        }
+        let qtrain = train.quantized(quantize);
+        let qout = coordinator::train_forest_with_source(
+            &qtrain,
+            &cfg,
+            seed,
+            forest::tree::ProjectionSource::SparseOblique,
+        );
+        let qacc = qout.forest.accuracy(&test);
+        println!(
+            "SO-{} (quantized <={quantize} bins): train {:.2}s, test accuracy {:.4}",
+            cfg.strategy.name(),
+            qout.wall_s,
+            qacc
+        );
+        println!(
+            "quantization accuracy delta: {:+.4} (quantized - float)",
+            qacc - float_acc
+        );
+    }
     let t0 = std::time::Instant::now();
     let rf = forest::axis_aligned::train_rf(&train, &cfg, seed);
     println!(
@@ -674,6 +722,45 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--out <file.csv> is required"))?;
     let mut rng = Pcg64::new(seed);
     let data = load_data(args, &mut rng)?;
+    let shards: usize = args.get_parse("shards", 0usize)?;
+    if shards > 0 {
+        // Sharded `.sofc` output: contiguous row ranges, one file per
+        // shard, each written in its own streaming pass (the shard subset
+        // is the only extra allocation and is dropped before the next
+        // shard starts). `--bins N` writes v2 quantized shards — layouts
+        // are fit per shard, exactly as packing each shard separately
+        // would.
+        let bins: usize = args.get_parse("bins", 0usize)?;
+        let n = data.n_samples();
+        if shards > n {
+            bail!("--shards {shards} exceeds the {n} generated samples");
+        }
+        let stem = out.strip_suffix(".sofc").unwrap_or(out);
+        for i in 0..shards {
+            let lo = i * n / shards;
+            let hi = (i + 1) * n / shards;
+            let idx: Vec<u32> = (lo as u32..hi as u32).collect();
+            let shard = data.subset(&idx);
+            let shard_path = format!("{stem}.shard{i}.sofc");
+            if bins > 0 {
+                colfile::write_dataset_v2(&shard, Path::new(&shard_path), bins)?;
+            } else {
+                colfile::write_dataset(&shard, Path::new(&shard_path))?;
+            }
+            println!("  shard {i}: rows {lo}..{hi} -> {shard_path}");
+        }
+        println!(
+            "wrote {} samples x {} features as {shards} .sofc shards ({})",
+            data.n_samples(),
+            data.n_features(),
+            if bins > 0 {
+                format!("v2 quantized, <={bins} bins/feature")
+            } else {
+                "v1 float".to_string()
+            }
+        );
+        return Ok(());
+    }
     csv::save_csv(&data, Path::new(out))?;
     println!(
         "wrote {} samples x {} features to {out}",
@@ -690,35 +777,70 @@ fn cmd_pack(args: &Args) -> Result<()> {
     let out = args
         .get("out")
         .ok_or_else(|| anyhow!("--out <file.sofc> is required"))?;
+    // `--bins N` opts into the v2 quantized format: per-feature u8 bin
+    // ids plus a stored bin layout (edges + representative values).
+    // 0 = float v1.
+    let bins: usize = args.get_parse("bins", 0usize)?;
     let out_path = Path::new(out);
     let path = Path::new(spec);
     let (n, d, classes, file_len) = if path.exists() {
         if colfile::sniff(path) {
-            bail!("{spec} is already a packed column file");
-        }
-        // Streaming CSV pack: two passes, fixed-size chunk buffers, no
-        // in-RAM table — the path that handles tables larger than memory.
-        let label = if args.get("label-first").is_some() {
-            csv::LabelColumn::First
+            if bins == 0 {
+                bail!(
+                    "{spec} is already a packed column file (re-pack with \
+                     --bins N to quantize a float v1 file into v2)"
+                );
+            }
+            // Float v1 -> binned v2 re-pack: streams through the mapped
+            // backend, so the table never materializes in RAM.
+            // `write_dataset_v2` rejects already-binned inputs.
+            let data = colfile::load_mapped(path)?;
+            colfile::write_dataset_v2(&data, out_path, bins)?;
+            let file_len = std::fs::metadata(out_path)?.len();
+            (
+                data.n_samples(),
+                data.n_features(),
+                data.n_classes(),
+                file_len,
+            )
         } else {
-            csv::LabelColumn::Last
-        };
-        let has_header = args.get("no-header").is_none();
-        let s = colfile::pack_csv(path, out_path, label, has_header)?;
-        (s.n_samples, s.n_features, s.n_classes, s.file_len)
+            // Streaming CSV pack: two passes, fixed-size chunk buffers, no
+            // in-RAM table — the path that handles tables larger than memory.
+            let label = if args.get("label-first").is_some() {
+                csv::LabelColumn::First
+            } else {
+                csv::LabelColumn::Last
+            };
+            let has_header = args.get("no-header").is_none();
+            let s = if bins > 0 {
+                colfile::pack_csv_binned(path, out_path, label, has_header, bins)?
+            } else {
+                colfile::pack_csv(path, out_path, label, has_header)?
+            };
+            (s.n_samples, s.n_features, s.n_classes, s.file_len)
+        }
     } else {
         // Generator specs materialize in RAM first (they are synthetic —
         // bounded by what the generator can build anyway).
         let seed: u64 = args.get_parse("seed", 42)?;
         let mut rng = Pcg64::new(seed);
         let data = synth::generate(spec, &mut rng)?;
-        colfile::write_dataset(&data, out_path)?;
+        if bins > 0 {
+            colfile::write_dataset_v2(&data, out_path, bins)?;
+        } else {
+            colfile::write_dataset(&data, out_path)?;
+        }
         let file_len = std::fs::metadata(out_path)?.len();
         (data.n_samples(), data.n_features(), data.n_classes(), file_len)
     };
+    let fmt = if bins > 0 {
+        format!("v2 quantized, <={bins} bins/feature")
+    } else {
+        "v1 float".to_string()
+    };
     println!(
         "packed {spec} -> {out}: {n} samples x {d} features, {classes} classes, \
-         {:.1} MB on disk (page-aligned columns; train with --data {out})",
+         {:.1} MB on disk ({fmt}, page-aligned columns; train with --data {out})",
         file_len as f64 / 1e6
     );
     Ok(())

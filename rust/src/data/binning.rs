@@ -1,0 +1,412 @@
+//! Adaptive per-feature bin layouts for quantized (u8-binned) column
+//! storage.
+//!
+//! A [`BinLayout`] maps a float feature onto at most 256 bins through a
+//! sorted edge vector, and maps bins back to floats through per-bin
+//! *representative values* (the weighted median of the values the bin
+//! absorbed). Layouts are fitted with the weighted compression-table
+//! walk pcodec uses for its bin tables: walk the distinct sorted values
+//! with their multiplicities and cut a group whenever taking the next
+//! run would overshoot the cumulative weight target for the current
+//! bin. Heavy point masses (zeros in sparse data) therefore get bins of
+//! their own while long tails share quantile-sized bins.
+//!
+//! Everything here is deterministic: fitting is a pure function of the
+//! sampled values, and [`ColumnSampler`] picks sample rows by position
+//! (adaptive power-of-two stride), never by value or RNG, so the same
+//! column yields the same layout whether it is streamed from CSV or
+//! read back from a materialized column store.
+
+use anyhow::{bail, Result};
+
+/// Hard cap on bins per feature: bin ids are stored as `u8`.
+pub const MAX_BINS: usize = 256;
+
+/// Cap on the number of values sampled per feature when fitting a
+/// layout. Power of two so the adaptive stride doubling lands exactly.
+pub const LAYOUT_SAMPLE_CAP: usize = 1 << 16;
+
+/// A fitted bin layout for one feature: `edges` split the real line
+/// into `reps.len()` half-open cells, `reps[b]` is the value bin `b`
+/// dequantizes to.
+///
+/// Invariants (enforced by [`BinLayout::from_parts`], upheld by
+/// [`BinLayout::fit`]): `1 <= reps.len() <= 256`,
+/// `edges.len() == reps.len() - 1`, both strictly increasing and
+/// finite, and each representative quantizes back into its own bin
+/// (`bin_of(reps[b]) == b`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BinLayout {
+    edges: Vec<f32>,
+    reps: Vec<f32>,
+}
+
+impl BinLayout {
+    /// Number of bins (≥ 1; a constant column has exactly one).
+    #[inline]
+    pub fn n_bins(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// Representative (dequantized) value per bin, strictly increasing.
+    #[inline]
+    pub fn reps(&self) -> &[f32] {
+        &self.reps
+    }
+
+    /// Bin edges: value `v` lands in bin `b` iff
+    /// `edges[b-1] <= v < edges[b]` (with the open ends at both sides).
+    #[inline]
+    pub fn edges(&self) -> &[f32] {
+        &self.edges
+    }
+
+    /// Quantize one value. NaN routes to bin 0 (`partition_point` sees
+    /// every comparison with NaN as false), matching the histogram
+    /// router's treatment of NaN in float mode.
+    #[inline]
+    pub fn bin_of(&self, v: f32) -> u8 {
+        self.edges.partition_point(|&e| e <= v) as u8
+    }
+
+    /// Dequantize one bin id. Panics on out-of-range ids — stored bin
+    /// sections are validated at load time.
+    #[inline]
+    pub fn rep(&self, bin: u8) -> f32 {
+        self.reps[bin as usize]
+    }
+
+    /// Rebuild a layout from serialized parts, validating every
+    /// invariant. All errors mention "malformed bin layout" so the
+    /// colfile loader surfaces a greppable cause.
+    pub fn from_parts(reps: Vec<f32>, edges: Vec<f32>) -> Result<Self> {
+        if reps.is_empty() || reps.len() > MAX_BINS {
+            bail!("malformed bin layout: {} representative values", reps.len());
+        }
+        if edges.len() + 1 != reps.len() {
+            bail!(
+                "malformed bin layout: {} edges for {} bins",
+                edges.len(),
+                reps.len()
+            );
+        }
+        if reps.iter().chain(edges.iter()).any(|v| !v.is_finite()) {
+            bail!("malformed bin layout: non-finite value");
+        }
+        if reps.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("malformed bin layout: representatives not strictly increasing");
+        }
+        if edges.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("malformed bin layout: edges not strictly increasing");
+        }
+        let layout = BinLayout { edges, reps };
+        // Each representative must round-trip into its own bin; this
+        // pins the edge/rep interleaving in one check.
+        for b in 0..layout.n_bins() {
+            if layout.bin_of(layout.reps[b]) as usize != b {
+                bail!("malformed bin layout: representative {b} escapes its bin");
+            }
+        }
+        Ok(layout)
+    }
+
+    /// Fit a layout over a sample of one column's values with at most
+    /// `max_bins` bins. Non-finite samples are dropped (NaN still
+    /// quantizes — to bin 0). An empty (or all-NaN) sample fits a
+    /// single zero bin so constant/degenerate columns stay encodable.
+    pub fn fit(sample: &[f32], max_bins: usize) -> Self {
+        assert!(
+            (2..=MAX_BINS).contains(&max_bins),
+            "max_bins must be in 2..=256, got {max_bins}"
+        );
+        let mut vals: Vec<f32> = sample.iter().copied().filter(|v| v.is_finite()).collect();
+        if vals.is_empty() {
+            vals.push(0.0);
+        }
+        vals.sort_unstable_by(f32::total_cmp);
+
+        // Collapse into distinct (value, multiplicity) runs. -0.0 and
+        // 0.0 are numerically equal and merge into one run.
+        let mut runs: Vec<(f32, u64)> = Vec::new();
+        for &v in &vals {
+            match runs.last_mut() {
+                Some((rv, c)) if *rv == v => *c += 1,
+                _ => runs.push((v, 1)),
+            }
+        }
+
+        if runs.len() <= max_bins {
+            // One bin per distinct value: quantization is lossless.
+            let reps: Vec<f32> = runs.iter().map(|r| r.0).collect();
+            let edges: Vec<f32> = runs[1..].iter().map(|r| r.0).collect();
+            return BinLayout { edges, reps };
+        }
+
+        // pcodec-style greedy weighted walk: for bin b the cumulative
+        // weight target is total*(b+1)/max_bins; take the next run only
+        // while its midpoint stays below the target, so a heavy run
+        // lands wholly in whichever bin it overlaps most.
+        let total: u64 = runs.iter().map(|r| r.1).sum();
+        let nb = max_bins as u64;
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        let mut last = 0usize;
+        let mut idx = 0usize;
+        let mut cum = 0u64;
+        for b in 0..max_bins {
+            let target = total * (b as u64 + 1) / nb;
+            while cum < target && idx < runs.len() {
+                let incr = runs[idx].1;
+                if cum + incr < 2 * target {
+                    cum += incr;
+                    idx += 1;
+                } else {
+                    break;
+                }
+            }
+            if idx > last {
+                groups.push((last, idx));
+                last = idx;
+            }
+        }
+        if idx < runs.len() {
+            // Defensive: the final target equals `total`, so the walk
+            // consumes every run; absorb any remainder regardless.
+            match groups.last_mut() {
+                Some(g) => g.1 = runs.len(),
+                None => groups.push((0, runs.len())),
+            }
+        }
+
+        // Representative = weighted median of the group's runs; edges
+        // are the first value of each following group. Groups cover
+        // disjoint ascending value ranges, so both come out strictly
+        // increasing and every rep round-trips into its own bin.
+        let reps: Vec<f32> = groups
+            .iter()
+            .map(|&(s, e)| {
+                let gw: u64 = runs[s..e].iter().map(|r| r.1).sum();
+                let mut acc = 0u64;
+                for r in &runs[s..e] {
+                    acc += r.1;
+                    if acc * 2 >= gw {
+                        return r.0;
+                    }
+                }
+                runs[e - 1].0
+            })
+            .collect();
+        let edges: Vec<f32> = groups[1..].iter().map(|&(s, _)| runs[s].0).collect();
+        BinLayout { edges, reps }
+    }
+}
+
+/// Deterministic positional reservoir for layout fitting: keeps every
+/// `stride`-th offered value, and when the buffer hits
+/// [`LAYOUT_SAMPLE_CAP`] it thins to even positions and doubles the
+/// stride. The kept set is a pure function of the offered sequence
+/// (values at positions `k * stride`), independent of chunking, so
+/// CSV-streamed and column-store packs fit identical layouts.
+pub struct ColumnSampler {
+    vals: Vec<f32>,
+    stride: usize,
+    seen: usize,
+}
+
+impl Default for ColumnSampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ColumnSampler {
+    pub fn new() -> Self {
+        ColumnSampler {
+            vals: Vec::new(),
+            stride: 1,
+            seen: 0,
+        }
+    }
+
+    /// Offer the next value of the column, in row order.
+    #[inline]
+    pub fn offer(&mut self, v: f32) {
+        if self.seen % self.stride == 0 {
+            if self.vals.len() == LAYOUT_SAMPLE_CAP {
+                let mut i = 0usize;
+                self.vals.retain(|_| {
+                    let keep = i % 2 == 0;
+                    i += 1;
+                    keep
+                });
+                self.stride *= 2;
+                if self.seen % self.stride == 0 {
+                    self.vals.push(v);
+                }
+            } else {
+                self.vals.push(v);
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Offer a contiguous block of rows.
+    pub fn offer_block(&mut self, block: &[f32]) {
+        for &v in block {
+            self.offer(v);
+        }
+    }
+
+    /// Number of rows offered so far.
+    pub fn rows_seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Consume the sampler, returning the retained sample in row order.
+    pub fn into_values(self) -> Vec<f32> {
+        self.vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn few_distinct_values_get_exact_bins() {
+        let sample = [3.0f32, 1.0, 2.0, 1.0, 3.0, 2.0, 1.0];
+        let l = BinLayout::fit(&sample, 16);
+        assert_eq!(l.n_bins(), 3);
+        assert_eq!(l.reps(), &[1.0, 2.0, 3.0]);
+        assert_eq!(l.edges(), &[2.0, 3.0]);
+        for &v in &sample {
+            assert_eq!(l.rep(l.bin_of(v)), v, "lossless when runs <= max_bins");
+        }
+    }
+
+    #[test]
+    fn constant_and_empty_columns_fit_one_bin() {
+        let l = BinLayout::fit(&[7.5; 100], 8);
+        assert_eq!(l.n_bins(), 1);
+        assert_eq!(l.bin_of(7.5), 0);
+        assert_eq!(l.bin_of(-1e30), 0);
+        assert_eq!(l.rep(0), 7.5);
+
+        let l = BinLayout::fit(&[], 8);
+        assert_eq!(l.n_bins(), 1);
+        assert_eq!(l.rep(0), 0.0);
+
+        let l = BinLayout::fit(&[f32::NAN, f32::INFINITY], 8);
+        assert_eq!(l.n_bins(), 1);
+    }
+
+    #[test]
+    fn reps_round_trip_and_edges_sorted() {
+        let mut rng = crate::rng::Pcg64::new(11);
+        let sample: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        for max_bins in [2usize, 7, 32, 255, 256] {
+            let l = BinLayout::fit(&sample, max_bins);
+            assert!(l.n_bins() >= 2 && l.n_bins() <= max_bins);
+            assert!(l.edges().windows(2).all(|w| w[0] < w[1]));
+            assert!(l.reps().windows(2).all(|w| w[0] < w[1]));
+            for b in 0..l.n_bins() {
+                assert_eq!(l.bin_of(l.rep(b as u8)) as usize, b);
+            }
+            // Every sample value must land in a bin whose rep is a
+            // value from the same side of the neighbouring edges.
+            for &v in sample.iter().take(500) {
+                let b = l.bin_of(v) as usize;
+                assert!(b < l.n_bins());
+                if b > 0 {
+                    assert!(v >= l.edges()[b - 1]);
+                }
+                if b < l.n_bins() - 1 {
+                    assert!(v < l.edges()[b]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_point_mass_keeps_its_own_bin() {
+        // 90% zeros plus a uniform tail: the zero run must not be
+        // smeared across bins, and with 4 bins it dominates one bin
+        // whose representative is exactly 0.
+        let mut rng = crate::rng::Pcg64::new(5);
+        let mut sample = vec![0.0f32; 9000];
+        sample.extend((0..1000).map(|_| 1.0 + rng.unif01_f32()));
+        let l = BinLayout::fit(&sample, 4);
+        let zero_bin = l.bin_of(0.0);
+        assert_eq!(l.rep(zero_bin), 0.0);
+        assert!(l.bin_of(1.5) != zero_bin);
+    }
+
+    #[test]
+    fn nan_quantizes_to_bin_zero() {
+        let l = BinLayout::fit(&[1.0, 2.0, 3.0], 8);
+        assert_eq!(l.bin_of(f32::NAN), 0);
+        assert_eq!(l.bin_of(f32::NEG_INFINITY), 0);
+        assert_eq!(l.bin_of(f32::INFINITY) as usize, l.n_bins() - 1);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(BinLayout::from_parts(vec![1.0, 2.0], vec![2.0]).is_ok());
+        let err = |r: Vec<f32>, e: Vec<f32>| {
+            BinLayout::from_parts(r, e)
+                .expect_err("should reject")
+                .to_string()
+        };
+        assert!(err(vec![], vec![]).contains("malformed bin layout"));
+        assert!(err(vec![1.0, 2.0], vec![]).contains("malformed bin layout"));
+        assert!(err(vec![2.0, 1.0], vec![1.5]).contains("not strictly increasing"));
+        assert!(err(vec![1.0, f32::NAN], vec![1.5]).contains("non-finite"));
+        assert!(err(vec![1.0, 2.0], vec![5.0]).contains("escapes its bin"));
+        // Edge equal to a rep pushes the rep out of its bin.
+        assert!(err(vec![1.0, 2.0], vec![1.0]).contains("escapes its bin"));
+        let too_many: Vec<f32> = (0..257).map(|i| i as f32).collect();
+        let e: Vec<f32> = (0..256).map(|i| i as f32 + 0.5).collect();
+        assert!(err(too_many, e).contains("malformed bin layout"));
+    }
+
+    #[test]
+    fn round_trip_through_parts() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        let sample: Vec<f32> = (0..4000).map(|_| (rng.normal() * 10.0) as f32).collect();
+        let l = BinLayout::fit(&sample, 64);
+        let back = BinLayout::from_parts(l.reps().to_vec(), l.edges().to_vec()).unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn sampler_is_chunking_invariant() {
+        let n = 5 * LAYOUT_SAMPLE_CAP + 137;
+        let vals: Vec<f32> = (0..n).map(|i| (i % 977) as f32).collect();
+        let mut whole = ColumnSampler::new();
+        whole.offer_block(&vals);
+        let mut chunked = ColumnSampler::new();
+        for chunk in vals.chunks(1024) {
+            chunked.offer_block(chunk);
+        }
+        let mut onesie = ColumnSampler::new();
+        for &v in &vals {
+            onesie.offer(v);
+        }
+        let a = whole.into_values();
+        assert_eq!(a, chunked.into_values());
+        assert_eq!(a, onesie.into_values());
+        assert!(a.len() <= LAYOUT_SAMPLE_CAP);
+        // Stride has doubled to 8: retained rows are exactly the
+        // multiples of the final stride.
+        let expected: Vec<f32> = (0..n).step_by(8).map(|i| vals[i]).collect();
+        assert_eq!(a, expected);
+    }
+
+    #[test]
+    fn sampler_keeps_everything_under_cap() {
+        let vals: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut s = ColumnSampler::new();
+        s.offer_block(&vals);
+        assert_eq!(s.rows_seen(), 1000);
+        assert_eq!(s.into_values(), vals);
+    }
+}

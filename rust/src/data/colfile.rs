@@ -32,9 +32,10 @@
 //! RAM, which is the whole point (tables larger than memory train through
 //! the OS page cache; see EXPERIMENTS.md §Out-of-core).
 
+use super::binning::{BinLayout, ColumnSampler};
 use super::csv::{CsvRows, LabelColumn};
 use super::mmap::Mmap;
-use super::store::{ColumnStore, MappedColumns};
+use super::store::{ColumnStore, MappedBinnedColumns, MappedColumns};
 use super::{Dataset, Label, CHUNK_ROWS};
 use anyhow::{anyhow, bail, Context, Result};
 use std::fs::File;
@@ -43,6 +44,13 @@ use std::path::Path;
 use std::sync::Arc;
 
 pub const MAGIC: [u8; 8] = *b"SOFC0001";
+/// Version-2 magic: quantized (binned) columns. The header grows a
+/// `max_bins` field, a per-feature bin-layout table sits between the
+/// names block and the data sections, and each feature section stores
+/// one `u8` bin id per sample instead of an `f32` — a 4x reduction in
+/// table IO, which is the point (ROADMAP "Quantized + compressed column
+/// storage"). v1 files keep loading unchanged.
+pub const MAGIC_V2: [u8; 8] = *b"SOFC0002";
 pub const ENDIAN_MARK: u32 = 0x0102_0304;
 /// Section alignment. 4096 matches every platform this crate targets;
 /// larger system pages (16k Apple Silicon) still map 4096-aligned offsets
@@ -50,8 +58,13 @@ pub const ENDIAN_MARK: u32 = 0x0102_0304;
 pub const PAGE: u64 = 4096;
 /// Fixed header bytes before the names block.
 const HEADER_FIXED: u64 = 48;
+/// v2 fixed header: v1's 48 bytes plus `max_bins` u16 and six reserved
+/// (zero) bytes, keeping the names block 8-aligned.
+const HEADER_FIXED_V2: u64 = 56;
 /// Byte offset of the `n_classes` field (patched after a streaming pack).
 const N_CLASSES_OFFSET: u64 = 32;
+/// Byte offset of the v2 `max_bins` u16.
+const MAX_BINS_OFFSET: u64 = 48;
 
 /// Derived section offsets of a file with the given shape.
 struct Layout {
@@ -92,6 +105,60 @@ fn layout(n_samples: u64, n_features: u64, names_len: u64, page: u64) -> Result<
     })
 }
 
+/// Derived section offsets of a v2 (binned) file. Between the names
+/// block and the (u8) data sections sits the bin-layout table: one
+/// fixed-stride record per feature,
+/// `[n_bins u16][pad u16][n_bins x f32 reps][(n_bins-1) x f32 edges]`
+/// zero-padded to `layout_stride = 4 + (2*max_bins - 1) * 4` bytes.
+struct LayoutV2 {
+    layouts_offset: u64,
+    layout_stride: u64,
+    data_offset: u64,
+    col_stride: u64,
+    labels_offset: u64,
+    file_len: u64,
+}
+
+fn layout_v2(
+    n_samples: u64,
+    n_features: u64,
+    names_len: u64,
+    max_bins: u64,
+    page: u64,
+) -> Result<LayoutV2> {
+    debug_assert!((2..=256).contains(&max_bins));
+    let err = || anyhow!("column-file shape overflows the addressable range");
+    let layouts_offset =
+        round_up(HEADER_FIXED_V2.checked_add(names_len).ok_or_else(err)?, page).ok_or_else(err)?;
+    let layout_stride = 4 + (2 * max_bins - 1) * 4;
+    let data_offset = round_up(
+        layouts_offset
+            .checked_add(n_features.checked_mul(layout_stride).ok_or_else(err)?)
+            .ok_or_else(err)?,
+        page,
+    )
+    .ok_or_else(err)?;
+    let col_stride = round_up(n_samples, page).ok_or_else(err)?;
+    let labels_offset = data_offset
+        .checked_add(n_features.checked_mul(col_stride).ok_or_else(err)?)
+        .ok_or_else(err)?;
+    let file_len = labels_offset
+        .checked_add(
+            n_samples
+                .checked_mul(std::mem::size_of::<Label>() as u64)
+                .ok_or_else(err)?,
+        )
+        .ok_or_else(err)?;
+    Ok(LayoutV2 {
+        layouts_offset,
+        layout_stride,
+        data_offset,
+        col_stride,
+        labels_offset,
+        file_len,
+    })
+}
+
 fn encode_names(names: &[String]) -> Result<Vec<u8>> {
     let mut out = Vec::new();
     for name in names {
@@ -120,6 +187,43 @@ fn write_header(
     w.write_all(&n_classes.to_ne_bytes())?;
     w.write_all(&(names_block.len() as u64).to_ne_bytes())?;
     w.write_all(names_block)
+}
+
+fn write_header_v2(
+    w: &mut impl Write,
+    n_samples: u64,
+    n_features: u64,
+    n_classes: u64,
+    max_bins: u16,
+    names_block: &[u8],
+) -> std::io::Result<()> {
+    w.write_all(&MAGIC_V2)?;
+    w.write_all(&ENDIAN_MARK.to_ne_bytes())?;
+    w.write_all(&(PAGE as u32).to_ne_bytes())?;
+    w.write_all(&n_samples.to_ne_bytes())?;
+    w.write_all(&n_features.to_ne_bytes())?;
+    w.write_all(&n_classes.to_ne_bytes())?;
+    w.write_all(&(names_block.len() as u64).to_ne_bytes())?;
+    w.write_all(&max_bins.to_ne_bytes())?;
+    w.write_all(&[0u8; 6])?; // reserved, must be zero
+    w.write_all(names_block)
+}
+
+/// Serialize one bin-layout record, zero-padded to the file's fixed
+/// layout stride.
+fn layout_record_bytes(layout: &BinLayout, stride: usize) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(stride);
+    rec.extend_from_slice(&(layout.n_bins() as u16).to_ne_bytes());
+    rec.extend_from_slice(&[0u8; 2]);
+    for &r in layout.reps() {
+        rec.extend_from_slice(&r.to_ne_bytes());
+    }
+    for &e in layout.edges() {
+        rec.extend_from_slice(&e.to_ne_bytes());
+    }
+    debug_assert!(rec.len() <= stride);
+    rec.resize(stride, 0);
+    rec
 }
 
 #[inline]
@@ -166,6 +270,61 @@ pub fn write_dataset(data: &Dataset, path: &Path) -> Result<()> {
     for f in 0..data.n_features() {
         for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
             w.write_all(f32_bytes(chunk))?;
+        }
+        write_zeros(&mut w, col_pad)?;
+    }
+    for (_, chunk) in data.labels_blocks(CHUNK_ROWS) {
+        w.write_all(label_bytes(chunk))?;
+    }
+    w.flush().with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Quantize a float dataset and write it as a v2 (binned) `.sofc` file.
+/// Two sequential streaming passes per column through the chunk-view
+/// API: one to sample values for the layout fit, one to quantize and
+/// write — peak extra memory is one column chunk plus the layout
+/// sample.
+pub fn write_dataset_v2(data: &Dataset, path: &Path, max_bins: usize) -> Result<()> {
+    if data.is_binned() {
+        bail!("dataset is already binned — nothing to quantize");
+    }
+    if !(2..=256).contains(&max_bins) {
+        bail!("--bins must be in 2..=256, got {max_bins}");
+    }
+    let n = data.n_samples() as u64;
+    let d = data.n_features() as u64;
+    if n == 0 || d == 0 {
+        bail!("refusing to pack an empty dataset");
+    }
+    if n > u32::MAX as u64 {
+        bail!("column files cap at 2^32-1 samples (active sets index with u32)");
+    }
+    let layouts = data.fit_bin_layouts(max_bins);
+    let names_block = encode_names(data.feature_names())?;
+    let lay = layout_v2(n, d, names_block.len() as u64, max_bins as u64, PAGE)?;
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    write_header_v2(&mut w, n, d, data.n_classes() as u64, max_bins as u16, &names_block)?;
+    write_zeros(
+        &mut w,
+        lay.layouts_offset - HEADER_FIXED_V2 - names_block.len() as u64,
+    )?;
+    for layout in &layouts {
+        w.write_all(&layout_record_bytes(layout, lay.layout_stride as usize))?;
+    }
+    write_zeros(
+        &mut w,
+        lay.data_offset - lay.layouts_offset - d * lay.layout_stride,
+    )?;
+    let col_pad = lay.col_stride - n;
+    let mut bin_buf: Vec<u8> = Vec::with_capacity(CHUNK_ROWS);
+    for f in 0..data.n_features() {
+        let layout = &layouts[f];
+        for (_, chunk) in data.column_blocks(f, CHUNK_ROWS) {
+            bin_buf.clear();
+            bin_buf.extend(chunk.iter().map(|&v| layout.bin_of(v)));
+            w.write_all(&bin_buf)?;
         }
         write_zeros(&mut w, col_pad)?;
     }
@@ -281,14 +440,130 @@ pub fn pack_csv(
     })
 }
 
-/// True when the file starts with the column-file magic (used by the CLI
-/// to dispatch `--data` paths between CSV and `.sofc`).
+/// Convert a CSV to a **binned** v2 `.sofc` without materializing the
+/// table: pass 1 counts samples and feeds every column's positional
+/// sampler (so the bin layouts are known before any data is written),
+/// pass 2 re-reads the CSV, quantizes each chunk through its feature's
+/// layout and scatters `u8` bin ids to the feature sections. Peak memory
+/// is `n_features x (CHUNK_ROWS + sample cap)` bytes-ish, independent of
+/// table size. The layouts match [`write_dataset_v2`]'s exactly (same
+/// sampler, same fit), so both pack paths produce identical files.
+pub fn pack_csv_binned(
+    csv_path: &Path,
+    out: &Path,
+    label: LabelColumn,
+    has_header: bool,
+    max_bins: usize,
+) -> Result<PackSummary> {
+    if !(2..=256).contains(&max_bins) {
+        bail!("--bins must be in 2..=256, got {max_bins}");
+    }
+    // Pass 1: shape + layout sample.
+    let mut rows = CsvRows::open(csv_path, label, has_header)?;
+    let mut feats: Vec<f32> = Vec::new();
+    let mut samplers: Vec<ColumnSampler> = Vec::new();
+    let mut n = 0u64;
+    while rows.next_row(&mut feats)?.is_some() {
+        if samplers.is_empty() {
+            samplers = (0..feats.len()).map(|_| ColumnSampler::new()).collect();
+        }
+        for (s, &v) in samplers.iter_mut().zip(feats.iter()) {
+            s.offer(v);
+        }
+        n += 1;
+    }
+    if n == 0 {
+        bail!("{csv_path:?} contains no samples");
+    }
+    if n > u32::MAX as u64 {
+        bail!("column files cap at 2^32-1 samples (active sets index with u32)");
+    }
+    let d = rows.n_features().expect("rows seen implies known width");
+    let names = rows.names(d);
+    let names_block = encode_names(&names)?;
+    let layouts: Vec<BinLayout> = samplers
+        .into_iter()
+        .map(|s| BinLayout::fit(&s.into_values(), max_bins))
+        .collect();
+    let lay = layout_v2(n, d as u64, names_block.len() as u64, max_bins as u64, PAGE)?;
+
+    let mut file = File::create(out).with_context(|| format!("create {out:?}"))?;
+    // n_classes placeholder 0 — patched after the data pass.
+    write_header_v2(&mut file, n, d as u64, 0, max_bins as u16, &names_block)?;
+    file.seek(SeekFrom::Start(lay.layouts_offset))?;
+    for layout in &layouts {
+        file.write_all(&layout_record_bytes(layout, lay.layout_stride as usize))?;
+    }
+    // Pre-size so chunk scatter can seek anywhere; unwritten gaps (section
+    // padding) read back as zeros on every mainstream filesystem.
+    file.set_len(lay.file_len)
+        .with_context(|| format!("resize {out:?}"))?;
+
+    // Pass 2: chunked quantizing transpose straight into the file sections.
+    let mut rows = CsvRows::open(csv_path, label, has_header)?;
+    let mut cols: Vec<Vec<u8>> = (0..d).map(|_| Vec::with_capacity(CHUNK_ROWS)).collect();
+    let mut labs: Vec<Label> = Vec::with_capacity(CHUNK_ROWS);
+    let mut base = 0u64;
+    let mut max_label: Label = 0;
+    loop {
+        labs.clear();
+        while labs.len() < CHUNK_ROWS {
+            match rows.next_row(&mut feats)? {
+                None => break,
+                Some(lab) => {
+                    if feats.len() != d {
+                        bail!("{csv_path:?} changed between pack passes (row width)");
+                    }
+                    for ((col, layout), &v) in cols.iter_mut().zip(layouts.iter()).zip(feats.iter())
+                    {
+                        col.push(layout.bin_of(v));
+                    }
+                    max_label = max_label.max(lab);
+                    labs.push(lab);
+                }
+            }
+        }
+        if labs.is_empty() {
+            break;
+        }
+        let rows_in_chunk = labs.len() as u64;
+        if base + rows_in_chunk > n {
+            bail!("{csv_path:?} grew between pack passes");
+        }
+        for (f, col) in cols.iter_mut().enumerate() {
+            let off = lay.data_offset + f as u64 * lay.col_stride + base;
+            file.seek(SeekFrom::Start(off))?;
+            file.write_all(col)?;
+            col.clear();
+        }
+        let off = lay.labels_offset + base * std::mem::size_of::<Label>() as u64;
+        file.seek(SeekFrom::Start(off))?;
+        file.write_all(label_bytes(&labs))?;
+        base += rows_in_chunk;
+    }
+    if base != n {
+        bail!("{csv_path:?} shrank between pack passes ({base} of {n} rows)");
+    }
+    let n_classes = max_label as u64 + 1;
+    file.seek(SeekFrom::Start(N_CLASSES_OFFSET))?;
+    file.write_all(&n_classes.to_ne_bytes())?;
+    file.flush()?;
+    Ok(PackSummary {
+        n_samples: n as usize,
+        n_features: d,
+        n_classes: n_classes as usize,
+        file_len: lay.file_len,
+    })
+}
+
+/// True when the file starts with either column-file magic (used by the
+/// CLI to dispatch `--data` paths between CSV and `.sofc`).
 pub fn sniff(path: &Path) -> bool {
     let mut head = [0u8; 8];
     match File::open(path) {
         Ok(mut f) => {
             use std::io::Read;
-            f.read_exact(&mut head).is_ok() && head == MAGIC
+            f.read_exact(&mut head).is_ok() && (head == MAGIC || head == MAGIC_V2)
         }
         Err(_) => false,
     }
@@ -302,12 +577,50 @@ fn read_u64(b: &[u8], off: usize) -> u64 {
     u64::from_ne_bytes(b[off..off + 8].try_into().unwrap())
 }
 
-/// Map a `.sofc` column file read-only and wrap it as a [`Dataset`] on the
-/// mapped backend. Every section bound, the magic, the endianness mark and
-/// the label range are validated before the first zero-copy view is
-/// handed out; the file contents are **not** read eagerly (beyond the
-/// header and one streaming label-validation pass, which the trainer's
-/// first `class_counts` would fault in anyway).
+/// Parse the length-prefixed names block at byte offset `base`.
+fn parse_names(
+    b: &[u8],
+    base: u64,
+    names_len: u64,
+    n_features: u64,
+    path: &Path,
+) -> Result<Vec<String>> {
+    let mut names: Vec<String> = Vec::new();
+    if names_len == 0 {
+        return Ok(names);
+    }
+    let block = &b[base as usize..(base + names_len) as usize];
+    let mut at = 0usize;
+    for f in 0..n_features {
+        if at + 2 > block.len() {
+            bail!("{path:?}: corrupt names block (feature {f})");
+        }
+        let len = u16::from_ne_bytes(block[at..at + 2].try_into().unwrap()) as usize;
+        at += 2;
+        if at + len > block.len() {
+            bail!("{path:?}: corrupt names block (feature {f})");
+        }
+        let name = std::str::from_utf8(&block[at..at + len])
+            .map_err(|_| anyhow!("{path:?}: feature {f} name is not UTF-8"))?;
+        names.push(name.to_string());
+        at += len;
+    }
+    if at != block.len() {
+        bail!("{path:?}: corrupt names block (trailing bytes)");
+    }
+    Ok(names)
+}
+
+/// Map a `.sofc` column file read-only (v1 float or v2 binned, by magic)
+/// and wrap it as a [`Dataset`] on the matching mapped backend. Every
+/// section bound, the magic, the endianness mark and the label range are
+/// validated before the first zero-copy view is handed out. v1 file
+/// contents are **not** read eagerly (beyond the header and one
+/// streaming label-validation pass, which the trainer's first
+/// `class_counts` would fault in anyway); v2 files additionally get
+/// their bin layouts parsed/validated and every stored bin id
+/// range-checked — a sequential scan that doubles as readahead for the
+/// data the trainer is about to gather.
 pub fn load_mapped(path: &Path) -> Result<Dataset> {
     let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
     let file_len = file
@@ -322,8 +635,16 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
         .map_err(|_| anyhow!("{path:?}: file too large for this address space"))?;
     let map = Mmap::map(&mut file, map_len).with_context(|| format!("mmap {path:?}"))?;
     let b = map.as_slice();
-    if b[..8] != MAGIC {
+    let binned = if b[..8] == MAGIC {
+        false
+    } else if b[..8] == MAGIC_V2 {
+        true
+    } else {
         bail!("{path:?}: bad magic — not a soforest column file");
+    };
+    let header_fixed = if binned { HEADER_FIXED_V2 } else { HEADER_FIXED };
+    if file_len < header_fixed {
+        bail!("{path:?}: truncated column file (no header)");
     }
     let mark = read_u32(b, 8);
     if mark == ENDIAN_MARK.swap_bytes() {
@@ -352,65 +673,114 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
     if n_classes == 0 || n_classes > u16::MAX as u64 + 1 {
         bail!("{path:?}: corrupt header (n_classes {n_classes})");
     }
-    if names_len > file_len - HEADER_FIXED {
+    if names_len > file_len - header_fixed {
         bail!("{path:?}: truncated column file (names block)");
     }
-    let lay = layout(n_samples, n_features, names_len, page)
-        .with_context(|| format!("{path:?}: header shape"))?;
-    if lay.file_len > file_len {
-        bail!(
-            "{path:?}: truncated column file ({file_len} bytes, layout needs {})",
-            lay.file_len
-        );
-    }
+    let names = parse_names(b, header_fixed, names_len, n_features, path)?;
 
-    // Names block.
-    let mut names: Vec<String> = Vec::new();
-    if names_len > 0 {
-        let block = &b[HEADER_FIXED as usize..(HEADER_FIXED + names_len) as usize];
-        let mut at = 0usize;
+    let store = if binned {
+        let max_bins = u16::from_ne_bytes(
+            b[MAX_BINS_OFFSET as usize..MAX_BINS_OFFSET as usize + 2]
+                .try_into()
+                .unwrap(),
+        ) as u64;
+        if !(2..=256).contains(&max_bins) {
+            bail!("{path:?}: corrupt header (max_bins {max_bins})");
+        }
+        if b[MAX_BINS_OFFSET as usize + 2..HEADER_FIXED_V2 as usize] != [0u8; 6] {
+            bail!("{path:?}: corrupt header (reserved bytes)");
+        }
+        let lay = layout_v2(n_samples, n_features, names_len, max_bins, page)
+            .with_context(|| format!("{path:?}: header shape"))?;
+        if lay.file_len > file_len {
+            bail!(
+                "{path:?}: truncated column file ({file_len} bytes, layout needs {})",
+                lay.file_len
+            );
+        }
+
+        // Bin-layout table: parse and validate every record up front —
+        // the split engines trust layouts blindly on the hot path.
+        let mut layouts: Vec<BinLayout> = Vec::with_capacity(n_features as usize);
         for f in 0..n_features {
-            if at + 2 > block.len() {
-                bail!("{path:?}: corrupt names block (feature {f})");
+            let rec = (lay.layouts_offset + f * lay.layout_stride) as usize;
+            let n_bins = u16::from_ne_bytes(b[rec..rec + 2].try_into().unwrap()) as usize;
+            if n_bins == 0 || n_bins as u64 > max_bins {
+                bail!(
+                    "{path:?}: feature {f}: malformed bin layout ({n_bins} bins, file max {max_bins})"
+                );
             }
-            let len = u16::from_ne_bytes(block[at..at + 2].try_into().unwrap()) as usize;
-            at += 2;
-            if at + len > block.len() {
-                bail!("{path:?}: corrupt names block (feature {f})");
-            }
-            let name = std::str::from_utf8(&block[at..at + len])
-                .map_err(|_| anyhow!("{path:?}: feature {f} name is not UTF-8"))?;
-            names.push(name.to_string());
-            at += len;
+            let read_f32s = |at: usize, count: usize| -> Vec<f32> {
+                (0..count)
+                    .map(|i| {
+                        f32::from_ne_bytes(b[at + 4 * i..at + 4 * i + 4].try_into().unwrap())
+                    })
+                    .collect()
+            };
+            let reps = read_f32s(rec + 4, n_bins);
+            let edges = read_f32s(rec + 4 + 4 * n_bins, n_bins - 1);
+            let layout = BinLayout::from_parts(reps, edges)
+                .with_context(|| format!("{path:?}: feature {f}"))?;
+            layouts.push(layout);
         }
-        if at != block.len() {
-            bail!("{path:?}: corrupt names block (trailing bytes)");
-        }
-    }
 
-    let map = Arc::new(map);
-    let store = MappedColumns::new(
-        Arc::clone(&map),
-        n_samples as usize,
-        n_features as usize,
-        lay.data_offset as usize,
-        lay.col_stride as usize,
-        lay.labels_offset as usize,
-    );
+        // Range-check every stored bin id: an id >= its feature's bin
+        // count would silently mis-accumulate histogram counts (count
+        // tables are sized by the trainer's n_bins, not the layout's).
+        // Sequential u8 scan — doubles as readahead for training.
+        for (f, layout) in layouts.iter().enumerate() {
+            let off = (lay.data_offset + f as u64 * lay.col_stride) as usize;
+            let bins: &[u8] = map.typed_slice(off, n_samples as usize);
+            let limit = layout.n_bins() as u8;
+            if let Some(&bad) = bins.iter().find(|&&id| id >= limit) {
+                bail!(
+                    "{path:?}: feature {f} bin id {bad} out of range for {} bins",
+                    layout.n_bins()
+                );
+            }
+        }
+
+        let map = Arc::new(map);
+        let store = MappedBinnedColumns::new(
+            Arc::clone(&map),
+            n_samples as usize,
+            n_features as usize,
+            lay.data_offset as usize,
+            lay.col_stride as usize,
+            lay.labels_offset as usize,
+            Arc::new(layouts),
+        );
+        ColumnStore::MappedBinned(store)
+    } else {
+        let lay = layout(n_samples, n_features, names_len, page)
+            .with_context(|| format!("{path:?}: header shape"))?;
+        if lay.file_len > file_len {
+            bail!(
+                "{path:?}: truncated column file ({file_len} bytes, layout needs {})",
+                lay.file_len
+            );
+        }
+        let map = Arc::new(map);
+        let store = MappedColumns::new(
+            Arc::clone(&map),
+            n_samples as usize,
+            n_features as usize,
+            lay.data_offset as usize,
+            lay.col_stride as usize,
+            lay.labels_offset as usize,
+        );
+        ColumnStore::Mapped(store)
+    };
 
     // One streaming pass over the labels: an out-of-range label would
     // otherwise corrupt histogram fills deep inside training (the fill
     // entry points would panic, but with a far less actionable message).
-    let labels: &[Label] = map.typed_slice(lay.labels_offset as usize, n_samples as usize);
+    let labels: &[Label] = store.labels_chunk(0..n_samples as usize);
     if let Some(&bad) = labels.iter().find(|&&l| l as u64 >= n_classes) {
         bail!("{path:?}: label {bad} out of range for {n_classes} classes");
     }
 
-    Ok(Dataset::from_store(
-        ColumnStore::Mapped(store),
-        n_classes as usize,
-        names,
-    ))
+    Ok(Dataset::from_store(store, n_classes as usize, names))
 }
 
 #[cfg(test)]
@@ -538,6 +908,190 @@ mod tests {
         let err = load_mapped(&path).unwrap_err().to_string();
         assert!(err.contains("out of range"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The layout the v2 writer must have fitted for a column (same
+    /// sampler, same fit — both are deterministic).
+    fn expected_layout(data: &Dataset, f: usize, max_bins: usize) -> BinLayout {
+        let mut s = ColumnSampler::new();
+        s.offer_block(data.column(f));
+        BinLayout::fit(&s.into_values(), max_bins)
+    }
+
+    fn v2_layout_of(data: &Dataset, max_bins: u64) -> LayoutV2 {
+        let names_block = encode_names(data.feature_names()).unwrap();
+        layout_v2(
+            data.n_samples() as u64,
+            data.n_features() as u64,
+            names_block.len() as u64,
+            max_bins,
+            PAGE,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn v2_write_load_roundtrip_quantizes_through_layouts() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_v2_roundtrip.sofc");
+        write_dataset_v2(&data, &path, 16).unwrap();
+        assert!(sniff(&path));
+        let mapped = load_mapped(&path).unwrap();
+        assert_eq!(mapped.backend_name(), "mmap-binned");
+        assert!(mapped.is_binned());
+        assert_eq!(mapped.n_samples(), data.n_samples());
+        assert_eq!(mapped.n_features(), data.n_features());
+        assert_eq!(mapped.n_classes(), data.n_classes());
+        assert_eq!(mapped.feature_names(), data.feature_names());
+        assert_eq!(mapped.labels(), data.labels());
+        let layouts = mapped.bin_layouts().unwrap();
+        for f in 0..data.n_features() {
+            let expect = expected_layout(&data, f, 16);
+            assert_eq!(layouts[f], expect, "feature {f} layout");
+            let col = data.column(f);
+            let bins = mapped.bin_column(f);
+            for (s, (&v, &b)) in col.iter().zip(bins).enumerate() {
+                assert_eq!(b, expect.bin_of(v), "feature {f} sample {s}");
+                assert_eq!(
+                    mapped.value(s, f).to_bits(),
+                    expect.rep(b).to_bits(),
+                    "dequantized lookup, feature {f} sample {s}"
+                );
+            }
+        }
+        // Binned tables are ~4x smaller than their float twins.
+        assert!(mapped.nbytes() < data.nbytes() / 2);
+
+        // subset() of a binned dataset gathers bin ids into a RAM twin
+        // sharing the layouts; dequantized() materializes floats.
+        let ids: Vec<u32> = (0..mapped.n_samples() as u32).collect();
+        let twin = mapped.subset(&ids);
+        assert_eq!(twin.backend_name(), "ram-binned");
+        assert_eq!(twin.bin_column(3), mapped.bin_column(3));
+        assert_eq!(twin.labels(), mapped.labels());
+        let float_twin = mapped.dequantized();
+        assert_eq!(float_twin.backend_name(), "ram");
+        for s in [0usize, 250, 499] {
+            assert_eq!(float_twin.value(s, 2).to_bits(), mapped.value(s, 2).to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_truncated_files() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_v2_trunc.sofc");
+        write_dataset_v2(&data, &path, 16).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        let lay = v2_layout_of(&data, 16);
+        let full = pristine.len();
+        assert_eq!(full as u64, lay.file_len);
+        for keep in [
+            10usize,
+            HEADER_FIXED_V2 as usize - 2,
+            lay.layouts_offset as usize + 3, // mid layout table
+            lay.data_offset as usize + 100,  // mid bin section
+            full - 1,
+        ] {
+            std::fs::write(&path, &pristine[..keep]).unwrap();
+            let err = load_mapped(&path).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "keep={keep}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_out_of_range_bin_ids() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_v2_badbin.sofc");
+        write_dataset_v2(&data, &path, 16).unwrap();
+        let lay = v2_layout_of(&data, 16);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Feature 0, row 3: no 16-bin layout has a bin 200.
+        bytes[lay.data_offset as usize + 3] = 200;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("bin id 200 out of range"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_malformed_layouts() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_v2_badlayout.sofc");
+        write_dataset_v2(&data, &path, 16).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        let lay = v2_layout_of(&data, 16);
+        let rec = lay.layouts_offset as usize;
+
+        // Zero bins.
+        let mut bad = pristine.clone();
+        bad[rec..rec + 2].copy_from_slice(&0u16.to_ne_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("malformed bin layout"), "{err}");
+
+        // More bins than the file's max_bins.
+        let mut bad = pristine.clone();
+        bad[rec..rec + 2].copy_from_slice(&300u16.to_ne_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("malformed bin layout"), "{err}");
+
+        // A NaN representative value.
+        let mut bad = pristine.clone();
+        bad[rec + 4..rec + 8].copy_from_slice(&f32::NAN.to_ne_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+
+        // Representatives out of order.
+        let mut bad = pristine;
+        let (r0, r1) = (rec + 4, rec + 8);
+        let tmp0: [u8; 4] = bad[r0..r0 + 4].try_into().unwrap();
+        let tmp1: [u8; 4] = bad[r1..r1 + 4].try_into().unwrap();
+        bad[r0..r0 + 4].copy_from_slice(&tmp1);
+        bad[r1..r1 + 4].copy_from_slice(&tmp0);
+        std::fs::write(&path, &bad).unwrap();
+        let err = load_mapped(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("not strictly increasing") || err.contains("escapes its bin"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_and_v2_of_the_same_table_load_side_by_side() {
+        let data = sample_data();
+        let p1 = tmp("soforest_colfile_mixed_v1.sofc");
+        let p2 = tmp("soforest_colfile_mixed_v2.sofc");
+        write_dataset(&data, &p1).unwrap();
+        write_dataset_v2(&data, &p2, 32).unwrap();
+        let v1 = load_mapped(&p1).unwrap();
+        let v2 = load_mapped(&p2).unwrap();
+        assert!(!v1.is_binned());
+        assert!(v2.is_binned());
+        assert_eq!(v1.backend_name(), "mmap");
+        assert_eq!(v2.backend_name(), "mmap-binned");
+        assert_eq!(v1.labels(), v2.labels());
+        assert_eq!(v1.feature_names(), v2.feature_names());
+        let layouts = v2.bin_layouts().unwrap();
+        for f in 0..v1.n_features() {
+            for s in [0usize, 137, 499] {
+                let q = layouts[f].rep(layouts[f].bin_of(v1.value(s, f)));
+                assert_eq!(v2.value(s, f).to_bits(), q.to_bits(), "s={s} f={f}");
+            }
+        }
+        // Re-binning an already binned table is refused.
+        let p3 = tmp("soforest_colfile_mixed_v3.sofc");
+        assert!(write_dataset_v2(&v2, &p3, 32).is_err());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        std::fs::remove_file(&p3).ok();
     }
 
     #[test]

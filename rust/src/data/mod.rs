@@ -17,6 +17,7 @@
 //! trained forest is byte-identical to the in-memory backend's
 //! (`tests/storage_equivalence.rs`).
 
+pub mod binning;
 pub mod colfile;
 pub mod csv;
 pub mod mmap;
@@ -27,6 +28,7 @@ pub mod transform;
 
 use std::ops::Range;
 
+pub use binning::BinLayout;
 pub use store::ColumnStore;
 
 /// Class label type. Two-class problems dominate the paper's evaluation but
@@ -141,10 +143,11 @@ impl Dataset {
         self.n_classes
     }
 
-    /// The whole column as one chunk. Zero-copy on both backends — on the
-    /// mapped backend this borrows the file mapping, and only the pages a
-    /// consumer actually touches (e.g. a gather over a deep node's narrow
-    /// active-id span) need residency.
+    /// The whole column as one chunk. Zero-copy on both float backends —
+    /// on the mapped backend this borrows the file mapping, and only the
+    /// pages a consumer actually touches (e.g. a gather over a deep
+    /// node's narrow active-id span) need residency. Panics on binned
+    /// backends (see [`ColumnStore::column_chunk`]).
     #[inline]
     pub fn column(&self, f: usize) -> &[f32] {
         self.store.column_chunk(f, 0..self.n_samples())
@@ -205,10 +208,152 @@ impl Dataset {
         self.store.value(s, f)
     }
 
-    /// Backend tag (`ram` | `mmap`) for logs and bench rows.
+    /// Backend tag (`ram` | `mmap` | `ram-binned` | `mmap-binned`) for
+    /// logs and bench rows.
     #[inline]
     pub fn backend_name(&self) -> &'static str {
         self.store.backend_name()
+    }
+
+    /// True when the table is quantized (u8 bin ids + per-feature
+    /// layouts) rather than float columns.
+    #[inline]
+    pub fn is_binned(&self) -> bool {
+        self.store.bin_layouts().is_some()
+    }
+
+    /// True when columns live in a memory-mapped `.sofc` file (float or
+    /// binned) — the backends where [`Self::prefetch_rows`] has pages to
+    /// advise.
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(
+            self.store,
+            ColumnStore::Mapped(_) | ColumnStore::MappedBinned(_)
+        )
+    }
+
+    /// Per-feature bin layouts; `Some` exactly when [`Self::is_binned`].
+    #[inline]
+    pub fn bin_layouts(&self) -> Option<&[BinLayout]> {
+        self.store.bin_layouts().map(|l| l.as_slice())
+    }
+
+    /// Borrow `range` of feature `f`'s bin ids (binned backends only —
+    /// panics on float stores, as [`Self::column_chunk`] panics on
+    /// binned ones).
+    #[inline]
+    pub fn bin_chunk(&self, f: usize, range: Range<usize>) -> &[u8] {
+        self.store.bin_chunk(f, range)
+    }
+
+    /// The whole bin-id column as one chunk (binned backends only).
+    #[inline]
+    pub fn bin_column(&self, f: usize) -> &[u8] {
+        self.store.bin_chunk(f, 0..self.n_samples())
+    }
+
+    /// Fit per-feature bin layouts over this (float) dataset with the
+    /// deterministic positional sampler — the same layouts the v2 column
+    /// file writer stores, whatever path the values arrive by.
+    pub(crate) fn fit_bin_layouts(&self, max_bins: usize) -> Vec<BinLayout> {
+        assert!(!self.is_binned(), "dataset is already binned");
+        (0..self.n_features())
+            .map(|f| {
+                let mut sampler = binning::ColumnSampler::new();
+                for (_, chunk) in self.column_blocks(f, CHUNK_ROWS) {
+                    sampler.offer_block(chunk);
+                }
+                BinLayout::fit(&sampler.into_values(), max_bins)
+            })
+            .collect()
+    }
+
+    /// Quantize a float dataset into an in-memory binned twin (u8 bin
+    /// ids + layouts) without going through a `.sofc` file. The layouts
+    /// match what [`colfile::write_dataset_v2`] would store, so training
+    /// on this twin is byte-identical to training on a mapped v2 file of
+    /// the same table.
+    pub fn quantized(&self, max_bins: usize) -> Dataset {
+        let layouts = self.fit_bin_layouts(max_bins);
+        let n = self.n_samples();
+        let bins: Vec<Vec<u8>> = (0..self.n_features())
+            .map(|f| {
+                let layout = &layouts[f];
+                let mut col = Vec::with_capacity(n);
+                for (_, chunk) in self.column_blocks(f, CHUNK_ROWS) {
+                    col.extend(chunk.iter().map(|&v| layout.bin_of(v)));
+                }
+                col
+            })
+            .collect();
+        Dataset {
+            store: ColumnStore::RamBinned(store::RamBinnedColumns {
+                bins,
+                labels: self.labels().to_vec(),
+                layouts: std::sync::Arc::new(layouts),
+            }),
+            n_classes: self.n_classes,
+            feature_names: self.feature_names.clone(),
+        }
+    }
+
+    /// Materialize a float twin of this dataset by dequantizing every
+    /// bin id through its layout's representative value. On float
+    /// backends this is a plain clone. The split engines see the same
+    /// representative values on either store, so accuracy differences vs
+    /// the original floats are attributable to value quantization alone —
+    /// but the trained forests are *not* bit-identical: a binned store
+    /// routes axis-aligned candidates over the layout-derived boundary
+    /// grid (zero RNG draws), while a float store samples its grid.
+    pub fn dequantized(&self) -> Dataset {
+        let Some(layouts) = self.store.bin_layouts() else {
+            return self.clone();
+        };
+        let n = self.n_samples();
+        let columns: Vec<Vec<f32>> = (0..self.n_features())
+            .map(|f| {
+                let layout = &layouts[f];
+                let mut col = Vec::with_capacity(n);
+                for start in (0..n).step_by(CHUNK_ROWS) {
+                    let end = (start + CHUNK_ROWS).min(n);
+                    col.extend(self.store.bin_chunk(f, start..end).iter().map(|&b| layout.rep(b)));
+                }
+                col
+            })
+            .collect();
+        let labels = self.labels().to_vec();
+        Dataset {
+            store: ColumnStore::Ram(store::RamColumns { columns, labels }),
+            n_classes: self.n_classes,
+            feature_names: self.feature_names.clone(),
+        }
+    }
+
+    /// Best-effort `madvise(WILLNEED)` over the given row range of every
+    /// feature section (mapped backends; no-op on RAM stores). The
+    /// frontier scheduler calls this once per level with the span of
+    /// sample ids the level's nodes are about to gather, so the kernel
+    /// starts reading ahead before the per-node fills fault the pages
+    /// in one gather at a time.
+    pub fn prefetch_rows(&self, rows: Range<usize>) {
+        let rows = rows.start..rows.end.min(self.n_samples());
+        if rows.is_empty() {
+            return;
+        }
+        match &self.store {
+            ColumnStore::Ram(_) | ColumnStore::RamBinned(_) => {}
+            ColumnStore::Mapped(m) => {
+                for f in 0..self.n_features() {
+                    m.advise_rows(f, rows.clone());
+                }
+            }
+            ColumnStore::MappedBinned(m) => {
+                for f in 0..self.n_features() {
+                    m.advise_rows(f, rows.clone());
+                }
+            }
+        }
     }
 
     pub fn feature_names(&self) -> &[String] {
@@ -236,28 +381,57 @@ impl Dataset {
     /// dataset. Used by the MIGHT protocol to carve out
     /// calibration/validation sets, never on the per-node hot path.
     pub fn subset(&self, indices: &[u32]) -> Dataset {
-        let columns: Vec<Vec<f32>> = (0..self.n_features())
-            .map(|f| {
-                let col = self.column(f);
-                indices.iter().map(|&i| col[i as usize]).collect()
-            })
-            .collect();
         let full = self.labels();
-        let labels = indices.iter().map(|&i| full[i as usize]).collect();
+        let labels: Vec<Label> = indices.iter().map(|&i| full[i as usize]).collect();
+        let store = if let Some(layouts) = self.store.bin_layouts() {
+            // Quantized tables subset to a RAM-binned twin: gathering
+            // bin ids preserves the layouts, so training on the subset
+            // stays on the binned fast path with identical quantization.
+            let bins: Vec<Vec<u8>> = (0..self.n_features())
+                .map(|f| {
+                    let col = self.bin_column(f);
+                    indices.iter().map(|&i| col[i as usize]).collect()
+                })
+                .collect();
+            ColumnStore::RamBinned(store::RamBinnedColumns {
+                bins,
+                labels,
+                layouts: std::sync::Arc::clone(layouts),
+            })
+        } else {
+            let columns: Vec<Vec<f32>> = (0..self.n_features())
+                .map(|f| {
+                    let col = self.column(f);
+                    indices.iter().map(|&i| col[i as usize]).collect()
+                })
+                .collect();
+            ColumnStore::Ram(store::RamColumns { columns, labels })
+        };
         Dataset {
-            store: ColumnStore::Ram(store::RamColumns { columns, labels }),
+            store,
             n_classes: self.n_classes,
             feature_names: self.feature_names.clone(),
         }
     }
 
     /// Approximate in-memory size in bytes (reported by the CLI, mirrors the
-    /// "Model" column of the paper's Table 1). For the mapped backend this
+    /// "Model" column of the paper's Table 1). For the mapped backends this
     /// is the *logical* table size — resident memory is whatever the page
-    /// cache currently holds.
+    /// cache currently holds. Binned tables count one byte per value plus
+    /// their layouts, which is the IO/4 the quantized format exists for.
     pub fn nbytes(&self) -> usize {
-        self.n_features() * self.n_samples() * std::mem::size_of::<f32>()
-            + self.n_samples() * std::mem::size_of::<Label>()
+        let labels = self.n_samples() * std::mem::size_of::<Label>();
+        match self.bin_layouts() {
+            None => self.n_features() * self.n_samples() * std::mem::size_of::<f32>() + labels,
+            Some(layouts) => {
+                let table = self.n_features() * self.n_samples();
+                let layout_bytes: usize = layouts
+                    .iter()
+                    .map(|l| (2 * l.n_bins() - 1) * std::mem::size_of::<f32>())
+                    .sum();
+                table + layout_bytes + labels
+            }
+        }
     }
 }
 

@@ -20,16 +20,27 @@
 //! predicted inside any per-node loop since a dataset never changes
 //! backend mid-life.
 
+use super::binning::BinLayout;
 use super::mmap::Mmap;
 use super::Label;
 use std::ops::Range;
 use std::sync::Arc;
 
 /// The storage backend of a dataset. See the module docs.
+///
+/// The two `*Binned` variants hold quantized columns: one `u8` bin id
+/// per value plus a per-feature [`BinLayout`] that maps ids back to
+/// representative float values. Float chunk requests are a logic error
+/// on these backends (the split engines either accumulate bin ids
+/// directly or dequantize through the layout); point lookups
+/// ([`ColumnStore::value`]) dequantize transparently so the predict
+/// path works unchanged.
 #[derive(Clone, Debug)]
 pub enum ColumnStore {
     Ram(RamColumns),
     Mapped(MappedColumns),
+    RamBinned(RamBinnedColumns),
+    MappedBinned(MappedBinnedColumns),
 }
 
 /// Owned feature-major columns (the pre-backend representation).
@@ -56,7 +67,96 @@ pub struct MappedColumns {
     labels_offset: usize,
 }
 
+/// Owned quantized columns: one `u8` bin id per value. Produced by
+/// [`super::Dataset::subset`] on a binned dataset and by tests that need
+/// a RAM twin of a mapped binned file.
+#[derive(Clone, Debug)]
+pub struct RamBinnedColumns {
+    pub(crate) bins: Vec<Vec<u8>>,
+    pub(crate) labels: Vec<Label>,
+    pub(crate) layouts: Arc<Vec<BinLayout>>,
+}
+
+/// Zero-copy view into a mapped v2 (binned) `.sofc` column file:
+/// page-aligned per-feature `u8` bin-id sections plus labels; the bin
+/// layouts are parsed and validated eagerly by the loader.
+#[derive(Clone, Debug)]
+pub struct MappedBinnedColumns {
+    map: Arc<Mmap>,
+    n_samples: usize,
+    n_features: usize,
+    /// Byte offset of feature 0's bin-id section (page-aligned).
+    data_offset: usize,
+    /// Byte stride between consecutive feature sections (page-padded).
+    col_stride: usize,
+    /// Byte offset of the label section.
+    labels_offset: usize,
+    layouts: Arc<Vec<BinLayout>>,
+}
+
+impl MappedBinnedColumns {
+    /// Wrap a validated mapping; same contract as [`MappedColumns::new`]
+    /// (the v2 loader has checked every bound and every stored bin id).
+    pub(crate) fn new(
+        map: Arc<Mmap>,
+        n_samples: usize,
+        n_features: usize,
+        data_offset: usize,
+        col_stride: usize,
+        labels_offset: usize,
+        layouts: Arc<Vec<BinLayout>>,
+    ) -> Self {
+        assert_eq!(layouts.len(), n_features);
+        assert!(col_stride >= n_samples);
+        assert!(labels_offset % std::mem::size_of::<Label>() == 0);
+        assert!(labels_offset + n_samples * std::mem::size_of::<Label>() <= map.len());
+        assert!(data_offset + n_features * col_stride <= labels_offset);
+        Self {
+            map,
+            n_samples,
+            n_features,
+            data_offset,
+            col_stride,
+            labels_offset,
+            layouts,
+        }
+    }
+
+    #[inline]
+    fn bin_chunk(&self, f: usize, range: Range<usize>) -> &[u8] {
+        assert!(f < self.n_features, "feature {f} out of range");
+        assert!(range.end <= self.n_samples, "chunk escapes the column");
+        let off = self.data_offset + f * self.col_stride + range.start;
+        self.map.typed_slice(off, range.len())
+    }
+
+    #[inline]
+    fn labels_chunk(&self, range: Range<usize>) -> &[Label] {
+        assert!(range.end <= self.n_samples, "chunk escapes the labels");
+        let off = self.labels_offset + range.start * std::mem::size_of::<Label>();
+        self.map.typed_slice(off, range.len())
+    }
+
+    /// Advise the kernel that `rows` of feature `f`'s section are about
+    /// to be gathered (frontier prefetch pass). Best-effort.
+    pub(crate) fn advise_rows(&self, f: usize, rows: Range<usize>) {
+        debug_assert!(f < self.n_features && rows.end <= self.n_samples);
+        let off = self.data_offset + f * self.col_stride + rows.start;
+        self.map.advise_willneed(off, rows.len());
+    }
+}
+
 impl MappedColumns {
+    /// Advise the kernel that `rows` of feature `f`'s section are about
+    /// to be gathered (frontier prefetch pass). Best-effort.
+    pub(crate) fn advise_rows(&self, f: usize, rows: Range<usize>) {
+        debug_assert!(f < self.n_features && rows.end <= self.n_samples);
+        self.map.advise_willneed(
+            self.data_offset + f * self.col_stride + rows.start * std::mem::size_of::<f32>(),
+            rows.len() * std::mem::size_of::<f32>(),
+        );
+    }
+
     /// Wrap a validated mapping. The caller (the column-file loader) must
     /// have checked that every section lies inside the mapping and that
     /// `data_offset`/`col_stride`/`labels_offset` are 4-byte multiples;
@@ -109,6 +209,8 @@ impl ColumnStore {
         match self {
             ColumnStore::Ram(r) => r.labels.len(),
             ColumnStore::Mapped(m) => m.n_samples,
+            ColumnStore::RamBinned(r) => r.labels.len(),
+            ColumnStore::MappedBinned(m) => m.n_samples,
         }
     }
 
@@ -117,16 +219,48 @@ impl ColumnStore {
         match self {
             ColumnStore::Ram(r) => r.columns.len(),
             ColumnStore::Mapped(m) => m.n_features,
+            ColumnStore::RamBinned(r) => r.bins.len(),
+            ColumnStore::MappedBinned(m) => m.n_features,
         }
     }
 
-    /// Borrow `range` of feature `f`'s column. Zero-copy on both backends;
-    /// on the mapped backend only the touched pages need residency.
+    /// Borrow `range` of feature `f`'s column. Zero-copy on both float
+    /// backends; on the mapped backend only the touched pages need
+    /// residency. **Panics on binned backends** — quantized stores have
+    /// no float columns to borrow; consumers must go through
+    /// [`ColumnStore::bin_chunk`] + [`ColumnStore::bin_layouts`] (or the
+    /// dequantizing point lookup [`ColumnStore::value`]).
     #[inline]
     pub fn column_chunk(&self, f: usize, range: Range<usize>) -> &[f32] {
         match self {
             ColumnStore::Ram(r) => &r.columns[f][range],
             ColumnStore::Mapped(m) => m.column_chunk(f, range),
+            ColumnStore::RamBinned(_) | ColumnStore::MappedBinned(_) => {
+                panic!("column_chunk on a binned store — read bin_chunk + bin_layouts instead")
+            }
+        }
+    }
+
+    /// Borrow `range` of feature `f`'s bin ids. **Panics on float
+    /// backends** (the mirror image of [`ColumnStore::column_chunk`]).
+    #[inline]
+    pub fn bin_chunk(&self, f: usize, range: Range<usize>) -> &[u8] {
+        match self {
+            ColumnStore::RamBinned(r) => &r.bins[f][range],
+            ColumnStore::MappedBinned(m) => m.bin_chunk(f, range),
+            ColumnStore::Ram(_) | ColumnStore::Mapped(_) => {
+                panic!("bin_chunk on a float store — read column_chunk instead")
+            }
+        }
+    }
+
+    /// Per-feature bin layouts; `Some` exactly on binned backends.
+    #[inline]
+    pub fn bin_layouts(&self) -> Option<&Arc<Vec<BinLayout>>> {
+        match self {
+            ColumnStore::RamBinned(r) => Some(&r.layouts),
+            ColumnStore::MappedBinned(m) => Some(&m.layouts),
+            ColumnStore::Ram(_) | ColumnStore::Mapped(_) => None,
         }
     }
 
@@ -136,6 +270,8 @@ impl ColumnStore {
         match self {
             ColumnStore::Ram(r) => &r.labels[range],
             ColumnStore::Mapped(m) => m.labels_chunk(range),
+            ColumnStore::RamBinned(r) => &r.labels[range],
+            ColumnStore::MappedBinned(m) => m.labels_chunk(range),
         }
     }
 
@@ -144,14 +280,19 @@ impl ColumnStore {
         match self {
             ColumnStore::Ram(r) => r.columns[f][s],
             ColumnStore::Mapped(m) => m.column_chunk(f, s..s + 1)[0],
+            ColumnStore::RamBinned(r) => r.layouts[f].rep(r.bins[f][s]),
+            ColumnStore::MappedBinned(m) => m.layouts[f].rep(m.bin_chunk(f, s..s + 1)[0]),
         }
     }
 
-    /// Backend tag for logs/benches (`ram` | `mmap`).
+    /// Backend tag for logs/benches
+    /// (`ram` | `mmap` | `ram-binned` | `mmap-binned`).
     pub fn backend_name(&self) -> &'static str {
         match self {
             ColumnStore::Ram(_) => "ram",
             ColumnStore::Mapped(_) => "mmap",
+            ColumnStore::RamBinned(_) => "ram-binned",
+            ColumnStore::MappedBinned(_) => "mmap-binned",
         }
     }
 }

@@ -46,7 +46,7 @@ use crate::config::{ForestConfig, GrowthMode};
 use crate::coordinator::run_pool;
 use crate::data::{ActiveSet, Dataset};
 use crate::metrics::{Component, LevelStats, TrainStats};
-use crate::projection::apply::{apply_projection, gather_labels};
+use crate::projection::apply::{active_span, apply_projection, gather_labels};
 use crate::projection::{self, Projection, ProjectionMatrix};
 use crate::rng::Pcg64;
 use crate::split::histogram::{best_edge_over_tables, subtract_tables, Routing};
@@ -406,7 +406,8 @@ impl<'a> TreeTrainer<'a> {
             data,
             config,
             source,
-            splitter: DynamicSplitter::new(config.strategy, config.thresholds),
+            splitter: DynamicSplitter::new(config.strategy, config.thresholds)
+                .with_binned(data.is_binned()),
             rng,
             stats: TrainStats::new(config.instrument),
             accel: None,
@@ -630,6 +631,22 @@ impl<'a> TreeTrainer<'a> {
     ) -> (Vec<NodeOutcome>, LevelStats) {
         let cfg = env.config;
         let mut lstats = LevelStats::default();
+        // Mapped backends: tell the kernel which pages this level is about
+        // to gather before any node faults them in one random read at a
+        // time. One WILLNEED hint over the union span of the level's
+        // active sets — purely advisory, so this cannot perturb training
+        // output (the byte-identity contracts stay trivially true).
+        if self.data.is_mapped() {
+            let (mut lo, mut hi) = (usize::MAX, 0usize);
+            for item in frontier {
+                let span = active_span(&item.active.indices);
+                lo = lo.min(span.start);
+                hi = hi.max(span.end);
+            }
+            if lo < hi {
+                self.data.prefetch_rows(lo..hi);
+            }
+        }
         let mut units: Vec<CpuUnit> = Vec::new();
         let mut accel_tier: Vec<usize> = Vec::new();
         for (i, item) in frontier.iter().enumerate() {
@@ -1094,7 +1111,7 @@ fn retention_worthwhile(cfg: &ForestConfig, splitter: &DynamicSplitter, n: usize
     if n < 2 * cfg.n_bins {
         return false;
     }
-    let probe = splitter.thresholds.sort_below.clamp(n / 2, n - cfg.n_bins);
+    let probe = splitter.effective_sort_below().clamp(n / 2, n - cfg.n_bins);
     matches!(
         splitter.choose(probe),
         SplitMethod::Histogram | SplitMethod::VectorizedHistogram
@@ -1509,9 +1526,63 @@ fn search_cpu(
         )
     });
     let mut best: Option<(usize, Split)> = None;
+    // Whether the current best came from the direct binned-axis search —
+    // those winners never materialize a values buffer, so the partition
+    // re-applies the projection (like fused/accelerator winners).
+    let mut best_direct = false;
+    let hist_method = matches!(
+        method,
+        SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+    );
     for pi in 0..ns.matrix.projections.len() {
         if ns.matrix.projections[pi].is_empty() {
             continue;
+        }
+        // Eligible binned axis on the histogram tier: search straight off
+        // the stored u8 bin ids — no float gather, no boundary build,
+        // ZERO RNG draws. The fused engine gates on the same pure
+        // predicate, so both engines consume the RNG identically and the
+        // fused on/off byte-identity contract survives quantization. The
+        // sort tier is excluded: exact splits want true value order, and
+        // the plan's boundary table only equals it on the histogram grid.
+        if hist_method {
+            if let Some((f, negate, bl)) = crate::split::boundaries::binned_axis_plan(
+                env.data,
+                &ns.matrix.projections[pi],
+                cfg.n_bins,
+            ) {
+                let split = {
+                    let data = env.data;
+                    let indices = &active.indices;
+                    let labels = &ns.labels;
+                    let scratch = &mut ns.scratch;
+                    stats.time(depth, Component::BuildHistogram, || {
+                        crate::split::histogram::best_split_binned_axis(
+                            data,
+                            f,
+                            negate,
+                            bl,
+                            indices,
+                            labels,
+                            parent_counts,
+                            cfg.criterion,
+                            cfg.n_bins,
+                            cfg.min_leaf,
+                            scratch,
+                        )
+                    })
+                };
+                if let Some(rt) = retained.as_mut() {
+                    rt.capture_classic(pi, &ns.scratch);
+                }
+                if let Some(s) = split {
+                    if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                        best = Some((pi, s));
+                        best_direct = true;
+                    }
+                }
+                continue;
+            }
         }
         {
             // Borrow dance: apply_projection needs the data and the
@@ -1557,6 +1628,7 @@ fn search_cpu(
         if let Some(s) = split {
             if best.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
                 best = Some((pi, s));
+                best_direct = false;
                 std::mem::swap(&mut ns.values, &mut ns.best_values);
             }
         }
@@ -1564,8 +1636,12 @@ fn search_cpu(
 
     let (pi, split) = best?;
     let proj = ns.matrix.projections[pi].clone();
-    // best_values currently holds the winning projection's values.
-    let (l, r) = {
+    let (l, r) = if best_direct {
+        // Direct binned-axis winner: no values buffer exists — re-apply
+        // the (single-feature) projection once for the partition.
+        partition_reapply(env, stats, ns, active, &proj, split.threshold, depth)
+    } else {
+        // best_values currently holds the winning projection's values.
         let best_values = &ns.best_values;
         let threshold = split.threshold;
         let indices = &active.indices;

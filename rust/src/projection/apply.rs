@@ -75,6 +75,9 @@ pub fn apply_projection_into_span(
 ) {
     debug_assert_eq!(active.len(), out.len());
     debug_assert!(active.iter().all(|&i| span.contains(&(i as usize))));
+    if data.is_binned() {
+        return apply_projection_binned_span(data, proj, active, span, out);
+    }
     let lo = span.start as u32;
     match proj.terms.as_slice() {
         [] => out.fill(0.0),
@@ -103,9 +106,58 @@ pub fn apply_projection_into_span(
     }
 }
 
+/// The binned twin of the gather kernel: member columns are gathered as
+/// `u8` bin ids and dequantized through their layout's representative
+/// values. The per-element arithmetic (`w * rep`) matches what
+/// [`project_row`] computes via the store's dequantizing point lookup,
+/// so the fused/classic bit-equivalence contract carries over to binned
+/// data unchanged.
+fn apply_projection_binned_span(
+    data: &Dataset,
+    proj: &Projection,
+    active: &[u32],
+    span: Range<usize>,
+    out: &mut [f32],
+) {
+    let layouts = data.bin_layouts().expect("binned store");
+    let lo = span.start as u32;
+    match proj.terms.as_slice() {
+        [] => out.fill(0.0),
+        [(f, w)] => {
+            let reps = layouts[*f as usize].reps();
+            let bins = data.bin_chunk(*f as usize, span);
+            for (o, &i) in out.iter_mut().zip(active) {
+                *o = w * reps[bins[(i - lo) as usize] as usize];
+            }
+        }
+        [(f0, w0), (f1, w1)] => {
+            let r0 = layouts[*f0 as usize].reps();
+            let r1 = layouts[*f1 as usize].reps();
+            let b0 = data.bin_chunk(*f0 as usize, span.clone());
+            let b1 = data.bin_chunk(*f1 as usize, span);
+            for (o, &i) in out.iter_mut().zip(active) {
+                let k = (i - lo) as usize;
+                *o = w0 * r0[b0[k] as usize] + w1 * r1[b1[k] as usize];
+            }
+        }
+        terms => {
+            out.fill(0.0);
+            for &(f, w) in terms {
+                let reps = layouts[f as usize].reps();
+                let bins = data.bin_chunk(f as usize, span.clone());
+                for (o, &i) in out.iter_mut().zip(active) {
+                    *o += w * reps[bins[(i - lo) as usize] as usize];
+                }
+            }
+        }
+    }
+}
+
 /// Projection value of a single sample — used by the fused engine to gather
 /// boundary samples without materializing the projection vector. Must stay
-/// arithmetically identical to [`apply_projection_into_span`] (see above).
+/// arithmetically identical to [`apply_projection_into_span`] (see above;
+/// on binned data both read `w * rep(bin)` — the store's point lookup
+/// dequantizes).
 #[inline]
 pub fn project_row(data: &Dataset, proj: &Projection, row: u32) -> f32 {
     let s = row as usize;
@@ -226,6 +278,44 @@ mod tests {
             assert_eq!(full, spanned, "{p:?}");
             for (k, &i) in active.iter().enumerate() {
                 assert_eq!(project_row(&d, p, i).to_bits(), full[k].to_bits(), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn binned_gather_matches_float_when_lossless() {
+        // Few distinct values per column -> one bin per value -> the
+        // quantized twin dequantizes to the exact original floats, so
+        // every kernel shape must produce bit-identical outputs.
+        let d = data();
+        let q = d.quantized(8);
+        assert!(q.is_binned());
+        let projections = [
+            Projection::default(),
+            Projection::axis(1),
+            Projection {
+                terms: vec![(0, 1.0), (1, -1.0)],
+            },
+            Projection {
+                terms: vec![(0, 1.0), (1, 0.5), (2, -2.0)],
+            },
+        ];
+        let active = [3u32, 1, 2];
+        for p in &projections {
+            let mut float_out = Vec::new();
+            apply_projection(&d, p, &active, &mut float_out);
+            let mut binned_out = Vec::new();
+            apply_projection(&q, p, &active, &mut binned_out);
+            assert_eq!(float_out.len(), binned_out.len());
+            for (a, b) in float_out.iter().zip(&binned_out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{p:?}");
+            }
+            for (k, &i) in active.iter().enumerate() {
+                assert_eq!(
+                    project_row(&q, p, i).to_bits(),
+                    binned_out[k].to_bits(),
+                    "project_row vs span kernel on binned data, {p:?}"
+                );
             }
         }
     }

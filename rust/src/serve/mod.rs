@@ -531,6 +531,85 @@ pub fn score_csv_stream(
     Ok(report)
 }
 
+/// Score a loaded dataset through the packed forest in `block_rows`-row
+/// blocks on the pool — the `.sofc` twin of [`score_csv_stream`], so every
+/// scoring verb accepts both input formats with the same report shape.
+/// Rows are materialized one superblock at a time through `Dataset::row`
+/// (binned stores dequantize through their layouts' representative
+/// values), so on the mapped backend only the superblock's pages need
+/// residency and a model can score a column file larger than RAM.
+pub fn score_dataset_blocked(
+    forest: &PackedForest,
+    data: &crate::data::Dataset,
+    block_rows: usize,
+    n_threads: usize,
+    keep_predictions: bool,
+) -> Result<ScoreReport> {
+    if data.n_features() != forest.n_features {
+        bail!(
+            "model expects {} features, data has {}",
+            forest.n_features,
+            data.n_features()
+        );
+    }
+    let d = data.n_features();
+    let n = data.n_samples();
+    let block_rows = block_rows.max(1);
+    let n_threads = n_threads.max(1);
+    let t0 = Instant::now();
+    let mut report = ScoreReport::default();
+    let mut start = 0usize;
+    let mut row = Vec::new();
+    while start < n {
+        // ---- materialize one superblock (n_threads blocks) ----
+        let mut blocks: Vec<Block> = Vec::with_capacity(n_threads);
+        while blocks.len() < n_threads && start < n {
+            let end = (start + block_rows).min(n);
+            let mut rows = Vec::with_capacity((end - start) * d);
+            for s in start..end {
+                data.row(s, &mut row);
+                rows.extend_from_slice(&row);
+            }
+            blocks.push(Block {
+                n: end - start,
+                rows,
+                labels: Some(data.labels_chunk(start..end).to_vec()),
+            });
+            start = end;
+        }
+        // ---- score it on the pool, same as the CSV path ----
+        let results: Mutex<Vec<(usize, Vec<u16>, f64)>> = Mutex::new(Vec::new());
+        coordinator::run_pool(n_threads, blocks.len(), |queue| {
+            while let Some(i) = queue.claim() {
+                let b = &blocks[i];
+                let t = Instant::now();
+                let preds = forest.predict_batch(&b.rows, b.n);
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                results.lock().unwrap().push((i, preds, ms));
+            }
+        });
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|(i, _, _)| *i);
+        for ((_, preds, ms), block) in results.into_iter().zip(&blocks) {
+            if let Some(labels) = &block.labels {
+                let (mut c, mut t) = report.correct.unwrap_or((0, 0));
+                c += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+                t += labels.len();
+                report.correct = Some((c, t));
+            }
+            report.rows += preds.len();
+            report.blocks += 1;
+            report.block_ms.push(ms);
+            if keep_predictions {
+                report.predictions.extend(preds);
+            }
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report.block_ms.sort_by(f64::total_cmp);
+    Ok(report)
+}
+
 /// Parse one CSV line with `d` features and an optional trailing label.
 fn parse_csv_row(line: &str, d: usize, block: &mut Block) -> std::result::Result<(), String> {
     let start = block.rows.len();

@@ -15,6 +15,8 @@
 //! shared, so the two engines *cannot* drift apart.
 
 use super::vectorized::TwoLevelLayout;
+use crate::data::{BinLayout, Dataset};
+use crate::projection::Projection;
 use crate::rng::Pcg64;
 
 /// Fill `b` (length `n_bins − 1`) with sampled, sorted boundaries.
@@ -78,6 +80,77 @@ pub fn coarse_into(boundaries: &[f32], layout: TwoLevelLayout, coarse: &mut [f32
     debug_assert_eq!(coarse.len(), layout.groups);
     for (g, c) in coarse.iter_mut().enumerate() {
         *c = boundaries[g * layout.group_size + layout.group_size - 1];
+    }
+}
+
+/// Binned-axis fast-path eligibility: a candidate projection can skip the
+/// float gather AND the boundary sampling when the store is quantized, the
+/// projection is a single feature with weight ±1, and that feature's bin
+/// layout has `2..=n_bins` bins. Returns `(feature, negate, layout)`.
+///
+/// A pure function of (store, projection, n_bins) — never of the node's
+/// values — so the classic and fused engines make the same call per
+/// projection and their RNG streams stay aligned: an eligible projection
+/// draws ZERO boundary positions in both engines
+/// ([`layout_boundaries_into`] replaces [`sample_into`]).
+///
+/// The ±1 weight restriction is load-bearing, not cosmetic: `±1 · rep` is
+/// exact in f32, so binary-search routing of the dequantized value over
+/// the layout-derived boundaries lands in exactly the stored bin (possibly
+/// mirrored) — the identity that keeps mixed fill styles (direct u8
+/// accumulate, inherited float-routing fills, subtraction A/B) bit-equal.
+/// An arbitrary weight could collapse two adjacent `w · rep` products onto
+/// one f32 and break that identity.
+pub fn binned_axis_plan<'d>(
+    data: &'d Dataset,
+    proj: &Projection,
+    n_bins: usize,
+) -> Option<(usize, bool, &'d BinLayout)> {
+    let layouts = data.bin_layouts()?;
+    let [(f, w)] = proj.terms.as_slice() else {
+        return None;
+    };
+    if *w != 1.0 && *w != -1.0 {
+        return None;
+    }
+    let layout = &layouts[*f as usize];
+    let l = layout.n_bins();
+    if l < 2 || l > n_bins {
+        // One-bin layouts are constant columns (the float path would bail
+        // the same way, just after burning RNG draws — so those columns
+        // must take the float path to keep the engines' draws aligned…
+        // which they do, because this predicate is shared). Layouts wider
+        // than the histogram can't map bin ids 1:1 onto histogram bins.
+        return None;
+    }
+    Some((*f as usize, *w < 0.0, layout))
+}
+
+/// Layout-derived boundaries for an eligible binned axis projection —
+/// zero RNG draws. Fills all slots of `b` (the engines pass their full
+/// `n_bins`-slot segment).
+///
+/// With `w = +1` the boundary between histogram bins `k` and `k+1` is
+/// `reps[k+1]`: reps are strictly increasing, so binary-search routing of
+/// `reps[b]` (`#{k : boundary[k] <= v}`) yields exactly `b`. With
+/// `w = −1` the projected values are `−reps[b]`, so the boundaries are
+/// the negated reps reversed (`−reps[L−2−k]`, still increasing) and
+/// stored bin `b` routes to `L−1−b`. Slots past the last real boundary
+/// are +∞-padded; their edges see `n_right = 0` and are rejected by the
+/// scan exactly like the classic single +∞ pad slot.
+pub fn layout_boundaries_into(b: &mut [f32], layout: &BinLayout, negate: bool) {
+    let reps = layout.reps();
+    let l = reps.len();
+    debug_assert!((2..=b.len()).contains(&l));
+    if negate {
+        for (k, slot) in b[..l - 1].iter_mut().enumerate() {
+            *slot = -reps[l - 2 - k];
+        }
+    } else {
+        b[..l - 1].copy_from_slice(&reps[1..]);
+    }
+    for slot in &mut b[l - 1..] {
+        *slot = f32::INFINITY;
     }
 }
 
@@ -207,6 +280,97 @@ mod tests {
             let seg = &scratch.fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
             for (k, (&x, &y)) in ref_scratch.boundaries.iter().zip(seg).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "projection {pi} boundary {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn binned_axis_plan_gates_on_shape_weight_and_layout() {
+        let columns = vec![
+            (0..40).map(|i| (i % 7) as f32).collect::<Vec<f32>>(), // 7 bins
+            vec![3.5f32; 40],                                      // constant: 1 bin
+            (0..40).map(|i| i as f32).collect(),                   // 40 bins
+        ];
+        let labels: Vec<u16> = (0..40).map(|i| (i % 2) as u16).collect();
+        let float = Dataset::from_columns(columns, labels);
+        let q = float.quantized(64);
+
+        // Float stores never plan.
+        assert!(binned_axis_plan(&float, &Projection::axis(0), 256).is_none());
+        // Single feature, w = +1.
+        let (f, neg, layout) = binned_axis_plan(&q, &Projection::axis(0), 256).unwrap();
+        assert_eq!((f, neg, layout.n_bins()), (0, false, 7));
+        // w = −1 flips.
+        let p = Projection {
+            terms: vec![(0, -1.0)],
+        };
+        let (_, neg, _) = binned_axis_plan(&q, &p, 256).unwrap();
+        assert!(neg);
+        // Non-unit weight, multi-term and empty projections fall back.
+        let half = Projection {
+            terms: vec![(0, 0.5)],
+        };
+        assert!(binned_axis_plan(&q, &half, 256).is_none());
+        let two = Projection {
+            terms: vec![(0, 1.0), (2, -1.0)],
+        };
+        assert!(binned_axis_plan(&q, &two, 256).is_none());
+        assert!(binned_axis_plan(&q, &Projection::default(), 256).is_none());
+        // Constant column (one-bin layout) falls back to the float path.
+        assert!(binned_axis_plan(&q, &Projection::axis(1), 256).is_none());
+        // A layout wider than the histogram can't map ids 1:1.
+        assert!(binned_axis_plan(&q, &Projection::axis(2), 16).is_none());
+        assert!(binned_axis_plan(&q, &Projection::axis(2), 256).is_some());
+    }
+
+    #[test]
+    fn layout_boundaries_route_every_rep_to_its_stored_bin() {
+        use crate::split::histogram::route_binary_search;
+        let mut rng = Pcg64::new(0xB1A5);
+        let values: Vec<f32> = (0..500)
+            .map(|_| {
+                if rng.bernoulli(0.4) {
+                    rng.index(5) as f32
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        for max_bins in [4usize, 16, 64] {
+            let layout = BinLayout::fit(&values, max_bins);
+            let l = layout.n_bins();
+            assert!(l >= 2);
+            for n_bins in [l, 64, 256] {
+                if l > n_bins {
+                    continue;
+                }
+                for negate in [false, true] {
+                    let mut b = vec![0f32; n_bins];
+                    layout_boundaries_into(&mut b, &layout, negate);
+                    // Real boundaries strictly increasing, tail +∞-padded.
+                    for k in 1..l - 1 {
+                        assert!(b[k - 1] < b[k], "max_bins {max_bins} negate {negate}");
+                    }
+                    for &pad in &b[l - 1..] {
+                        assert_eq!(pad, f32::INFINITY);
+                    }
+                    // The routing identity the direct accumulate relies on:
+                    // the dequantized value of stored bin `s` routes to `s`
+                    // (or its mirror under negation).
+                    for s in 0..l {
+                        let v = if negate {
+                            -layout.rep(s as u8)
+                        } else {
+                            layout.rep(s as u8)
+                        };
+                        let routed = route_binary_search(v, &b, n_bins - 1);
+                        let expect = if negate { l - 1 - s } else { s };
+                        assert_eq!(
+                            routed, expect,
+                            "max_bins {max_bins} n_bins {n_bins} negate {negate} bin {s}"
+                        );
+                    }
+                }
             }
         }
     }

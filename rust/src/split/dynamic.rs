@@ -37,6 +37,13 @@ impl Default for SplitThresholds {
 pub struct DynamicSplitter {
     pub strategy: SplitStrategy,
     pub thresholds: SplitThresholds,
+    /// The training store carries pre-quantized bin ids. Axis-aligned
+    /// candidates then skip the boundary build *and* the float gather
+    /// (direct u8 accumulate), so the histogram tier's per-node setup cost
+    /// — the very cost the calibrated `sort_below` crossover prices in —
+    /// largely disappears and the crossover shifts down (see
+    /// [`Self::effective_sort_below`]).
+    binned: bool,
 }
 
 impl DynamicSplitter {
@@ -44,6 +51,28 @@ impl DynamicSplitter {
         Self {
             strategy,
             thresholds,
+            binned: false,
+        }
+    }
+
+    /// Mark the selector as driving a binned (quantized) store.
+    pub fn with_binned(mut self, binned: bool) -> Self {
+        self.binned = binned;
+        self
+    }
+
+    /// The sort/histogram crossover actually in force. On binned stores the
+    /// calibrated threshold is scaled down 4×: the calibration bench
+    /// measures a histogram fill that pays boundary sampling plus a float
+    /// gather per projection, while the binned fast path pays neither, so
+    /// the measured crossover systematically overprices the histogram
+    /// tier there. The floor of 2 keeps degenerate thresholds meaningful.
+    #[inline]
+    pub fn effective_sort_below(&self) -> usize {
+        if self.binned {
+            (self.thresholds.sort_below / 4).max(2)
+        } else {
+            self.thresholds.sort_below
         }
     }
 
@@ -55,14 +84,14 @@ impl DynamicSplitter {
             SplitStrategy::Histogram => SplitMethod::Histogram,
             SplitStrategy::VectorizedHistogram => SplitMethod::VectorizedHistogram,
             SplitStrategy::Dynamic => {
-                if n < self.thresholds.sort_below {
+                if n < self.effective_sort_below() {
                     SplitMethod::Exact
                 } else {
                     SplitMethod::Histogram
                 }
             }
             SplitStrategy::DynamicVectorized => {
-                if n < self.thresholds.sort_below {
+                if n < self.effective_sort_below() {
                     SplitMethod::Exact
                 } else {
                     SplitMethod::VectorizedHistogram
@@ -71,7 +100,7 @@ impl DynamicSplitter {
             SplitStrategy::Hybrid => {
                 if n >= self.thresholds.accel_above {
                     SplitMethod::Accelerator
-                } else if n < self.thresholds.sort_below {
+                } else if n < self.effective_sort_below() {
                     SplitMethod::Exact
                 } else {
                     SplitMethod::VectorizedHistogram
@@ -179,6 +208,40 @@ mod tests {
         assert_eq!(d.choose_paired_small(500), SplitMethod::Exact);
         let d = DynamicSplitter::new(SplitStrategy::Histogram, t);
         assert_eq!(d.choose_paired_small(500), SplitMethod::Histogram);
+    }
+
+    #[test]
+    fn binned_store_shifts_the_sort_crossover_down() {
+        let t = SplitThresholds {
+            sort_below: 1024,
+            accel_above: 29_000,
+        };
+        let float = DynamicSplitter::new(SplitStrategy::DynamicVectorized, t);
+        let binned = float.with_binned(true);
+        assert_eq!(float.effective_sort_below(), 1024);
+        assert_eq!(binned.effective_sort_below(), 256);
+        // In the shifted band the binned selector histograms where the
+        // float selector still sorts.
+        assert_eq!(float.choose(500), SplitMethod::Exact);
+        assert_eq!(binned.choose(500), SplitMethod::VectorizedHistogram);
+        assert_eq!(binned.choose(255), SplitMethod::Exact);
+        assert_eq!(binned.choose(256), SplitMethod::VectorizedHistogram);
+        // Hybrid honors the shifted crossover without touching the accel
+        // tier; static strategies ignore cardinality either way.
+        let h = DynamicSplitter::new(SplitStrategy::Hybrid, t).with_binned(true);
+        assert_eq!(h.choose(500), SplitMethod::VectorizedHistogram);
+        assert_eq!(h.choose(29_000), SplitMethod::Accelerator);
+        let e = DynamicSplitter::new(SplitStrategy::Exact, t).with_binned(true);
+        assert_eq!(e.choose(500), SplitMethod::Exact);
+        // Degenerate calibrations keep a meaningful floor.
+        let tiny = SplitThresholds {
+            sort_below: 4,
+            accel_above: usize::MAX,
+        };
+        let d = DynamicSplitter::new(SplitStrategy::Dynamic, tiny).with_binned(true);
+        assert_eq!(d.effective_sort_below(), 2);
+        assert_eq!(d.choose(1), SplitMethod::Exact);
+        assert_eq!(d.choose(2), SplitMethod::Histogram);
     }
 
     #[test]

@@ -106,6 +106,19 @@ pub fn best_split_fused(
             continue; // classic path skips before touching the RNG
         }
         let b = &mut fused_boundaries[pi * n_bins..(pi + 1) * n_bins];
+        // Eligible binned axis: the boundary table is a pure function of
+        // the stored bin layout — no sampling, ZERO RNG draws. The classic
+        // loop gates on the same pure predicate and takes the same branch,
+        // so the streams stay aligned around the fast path.
+        if let Some((_, negate, bl)) = super::boundaries::binned_axis_plan(data, proj, n_bins) {
+            super::boundaries::layout_boundaries_into(b, bl, negate);
+            if let Some(layout) = layout {
+                let coarse = &mut fused_coarse[pi * groups..(pi + 1) * groups];
+                super::boundaries::coarse_into(b, layout, coarse);
+            }
+            fused_ok[pi] = true;
+            continue;
+        }
         // The shared builder (`super::boundaries`, also behind the
         // materializing path's `build_boundaries`) samples boundary values
         // by projecting single rows on demand; the degenerate fallback's
@@ -208,9 +221,31 @@ pub fn fill_tables_blocked(
             if !ok[pi] {
                 continue;
             }
-            apply_projection_into_span(data, proj, ablock, span.clone(), vals);
             let bounds = &boundaries[pi * n_bins..(pi + 1) * n_bins];
             let cnt = &mut counts[pi * stride..(pi + 1) * stride];
+            // Eligible binned axis: accumulate straight off the stored u8
+            // bin ids — no float gather, no routing compare. `bounds` can
+            // be ignored because an eligible projection's boundary table is
+            // ALWAYS the layout-derived one (a pure function of the store
+            // and the projection), whether it was built by phase 1 above,
+            // the classic loop, or inherited through sibling subtraction;
+            // the routed bin of a dequantized value over those boundaries
+            // is exactly the stored bin id (mirrored when negated).
+            if let Some((f, negate, bl)) = super::boundaries::binned_axis_plan(data, proj, n_bins) {
+                debug_assert!(plan_boundaries_match(bounds, bl, negate));
+                super::histogram::accumulate_bin_ids(
+                    data,
+                    f,
+                    negate,
+                    bl.n_bins(),
+                    ablock,
+                    lblock,
+                    n_classes,
+                    cnt,
+                );
+                continue;
+            }
+            apply_projection_into_span(data, proj, ablock, span.clone(), vals);
             match (routing, layout) {
                 (Routing::TwoLevel, Some(layout)) => {
                     let c = &coarse[pi * groups..(pi + 1) * groups];
@@ -228,6 +263,21 @@ pub fn fill_tables_blocked(
             }
         }
     }
+}
+
+/// Debug check behind the direct bin-id accumulate: `bounds` must equal the
+/// layout-derived boundary table for this plan bit-for-bit. Eligible
+/// projections always carry plan boundaries — sampled and inherited fills
+/// alike — which is what licenses ignoring `bounds` in the fast path.
+/// (Compiled in release too — `debug_assert!` type-checks its expression —
+/// but branch-eliminated.)
+fn plan_boundaries_match(bounds: &[f32], layout: &crate::data::BinLayout, negate: bool) -> bool {
+    let mut expect = vec![0.0f32; bounds.len()];
+    super::boundaries::layout_boundaries_into(&mut expect, layout, negate);
+    bounds
+        .iter()
+        .zip(&expect)
+        .all(|(a, b)| a.to_bits() == b.to_bits())
 }
 
 /// Blocked min/max of a projection over the active set (degenerate-boundary
@@ -387,6 +437,125 @@ mod tests {
             }
             // Both paths must have consumed the RNG identically.
             assert_eq!(rng_c.next_u64(), rng_f.next_u64(), "seed {seed}: rng diverged");
+        }
+    }
+
+    #[test]
+    fn binned_axis_fast_path_matches_classic_loop_and_rng() {
+        // On a binned store, single-feature ±1 projections take the direct
+        // bin-id path in BOTH engines (zero RNG draws each); every other
+        // shape falls back to the sampled-boundary pipeline. Mixing the
+        // shapes in one candidate set checks winner bit-equality AND that
+        // the engines keep consuming the RNG in lockstep around the fast
+        // path — the lockstep is what lets `fused` stay a pure perf knob
+        // on quantized data.
+        let mut rng = Pcg64::new(0xB1A5ED);
+        let n = 900;
+        let d = 6;
+        let n_classes = 3;
+        let columns: Vec<Vec<f32>> = (0..d)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let raw_labels: Vec<u16> = (0..n).map(|_| rng.index(n_classes) as u16).collect();
+        let data = Dataset::from_columns(columns, raw_labels).quantized(64);
+        let projections = vec![
+            Projection::axis(0), // fast path, w = +1
+            Projection {
+                terms: vec![(1, -1.0)], // fast path, w = -1
+            },
+            Projection {
+                terms: vec![(2, 0.5)], // scaled: sampled-boundary path
+            },
+            Projection {
+                terms: vec![(3, 1.0), (4, -1.0)], // oblique: sampled path
+            },
+            Projection::default(), // empty: skipped by both engines
+        ];
+        let active: Vec<u32> = (0..n as u32).filter(|i| i % 4 != 1).collect();
+        let mut labels = Vec::new();
+        gather_labels(&data, &active, &mut labels);
+        let mut parent = vec![0usize; n_classes];
+        for &l in &labels {
+            parent[l as usize] += 1;
+        }
+        for n_bins in [64usize, 256] {
+            let mut rng_c = Pcg64::new(0xC0FFEE);
+            let mut rng_f = Pcg64::new(0xC0FFEE);
+
+            // Classic side mirrors the real trainer loop: eligible
+            // projections dispatch to `best_split_binned_axis`, the rest
+            // materialize and route.
+            let mut scratch_c = SplitScratch::default();
+            let mut values = Vec::new();
+            let mut classic: Option<(usize, Split)> = None;
+            for (pi, proj) in projections.iter().enumerate() {
+                if proj.is_empty() {
+                    continue;
+                }
+                let s = if let Some((f, negate, bl)) =
+                    crate::split::boundaries::binned_axis_plan(&data, proj, n_bins)
+                {
+                    crate::split::histogram::best_split_binned_axis(
+                        &data,
+                        f,
+                        negate,
+                        bl,
+                        &active,
+                        &labels,
+                        &parent,
+                        SplitCriterion::Entropy,
+                        n_bins,
+                        1,
+                        &mut scratch_c,
+                    )
+                } else {
+                    apply_projection(&data, proj, &active, &mut values);
+                    best_split(
+                        SplitMethod::VectorizedHistogram,
+                        &values,
+                        &labels,
+                        &parent,
+                        SplitCriterion::Entropy,
+                        n_bins,
+                        1,
+                        &mut rng_c,
+                        &mut scratch_c,
+                    )
+                };
+                if let Some(s) = s {
+                    if classic.as_ref().map_or(true, |(_, b)| s.gain > b.gain) {
+                        classic = Some((pi, s));
+                    }
+                }
+            }
+
+            let mut scratch = SplitScratch::default();
+            let fused = best_split_fused(
+                &data,
+                &projections,
+                &active,
+                &labels,
+                &parent,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                Routing::TwoLevel,
+                &mut rng_f,
+                &mut scratch,
+            );
+            assert!(scratch.fused_ok[0] && scratch.fused_ok[1], "n_bins {n_bins}");
+            let (cpi, cs) = classic.expect("gaussian columns always split");
+            let (fpi, fs) = fused.expect("gaussian columns always split");
+            assert_eq!(cpi, fpi, "n_bins {n_bins}: winner differs");
+            assert_eq!(cs.threshold.to_bits(), fs.threshold.to_bits(), "n_bins {n_bins}");
+            assert_eq!(cs.gain.to_bits(), fs.gain.to_bits(), "n_bins {n_bins}");
+            assert_eq!(cs.n_left, fs.n_left, "n_bins {n_bins}");
+            assert_eq!(cs.n_right, fs.n_right, "n_bins {n_bins}");
+            assert_eq!(
+                rng_c.next_u64(),
+                rng_f.next_u64(),
+                "n_bins {n_bins}: rng diverged around the fast path"
+            );
         }
     }
 

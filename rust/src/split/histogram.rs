@@ -13,6 +13,8 @@
 use super::criterion::{BoundaryScan, SplitCriterion};
 use super::vectorized::{self, TwoLevelLayout};
 use super::{Split, SplitScratch};
+use crate::data::{BinLayout, Dataset};
+use crate::projection::apply::active_span;
 use crate::rng::Pcg64;
 
 /// Bin-routing implementation.
@@ -269,6 +271,85 @@ pub fn best_split_histogram(
         scratch,
     );
     best_edge(parent_counts, criterion, n_bins, min_leaf, scratch)
+}
+
+/// Binned-axis fast path (the quantized tier's "no float gather, no
+/// boundary build" search): for a projection that passed
+/// [`super::boundaries::binned_axis_plan`], derive the boundaries from the
+/// feature's bin layout, accumulate the stored `u8` bin ids straight into
+/// the count table, and scan. Consumes NO RNG — the fused engine mirrors
+/// this exactly, so the classic/fused stream-parity contract holds.
+///
+/// `scratch.boundaries` / `scratch.counts` are left exactly as
+/// [`build_boundaries`] + [`fill_histogram`] would leave them for the
+/// dequantized values: the retention capture copies this state, and the
+/// sibling machinery later re-fills it by float routing — bit-equality
+/// between the two fill styles is what keeps subtraction exact.
+#[allow(clippy::too_many_arguments)]
+pub fn best_split_binned_axis(
+    data: &Dataset,
+    feature: usize,
+    negate: bool,
+    layout: &BinLayout,
+    active: &[u32],
+    labels: &[u16],
+    parent_counts: &[usize],
+    criterion: SplitCriterion,
+    n_bins: usize,
+    min_leaf: usize,
+    scratch: &mut SplitScratch,
+) -> Option<Split> {
+    debug_assert_eq!(active.len(), labels.len());
+    if active.len() < 2 {
+        return None;
+    }
+    let n_classes = parent_counts.len();
+    super::check_labels(labels, n_classes);
+    let b = &mut scratch.boundaries;
+    b.clear();
+    b.resize(n_bins, 0.0);
+    super::boundaries::layout_boundaries_into(b, layout, negate);
+    if let Some(tl) = TwoLevelLayout::for_bins(n_bins) {
+        vectorized::build_coarse(b, tl, &mut scratch.coarse);
+    }
+    let counts = &mut scratch.counts;
+    counts.clear();
+    counts.resize(n_bins * n_classes, 0);
+    accumulate_bin_ids(data, feature, negate, layout.n_bins(), active, labels, n_classes, counts);
+    best_edge(parent_counts, criterion, n_bins, min_leaf, scratch)
+}
+
+/// Accumulate stored bin ids straight into a count table — the shared
+/// inner loop of the binned fast path (the classic entry above and the
+/// fused engine's phase 2). `l` is the layout's bin count: stored ids are
+/// `< l` (validated at load/quantize time), and negation maps id `b` to
+/// `l − 1 − b` — the same bin binary search assigns the dequantized
+/// `−reps[b]`. The caller has already range-checked `labels`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn accumulate_bin_ids(
+    data: &Dataset,
+    feature: usize,
+    negate: bool,
+    l: usize,
+    active: &[u32],
+    labels: &[u16],
+    n_classes: usize,
+    counts: &mut [u32],
+) {
+    let span = active_span(active);
+    let lo = span.start as u32;
+    let bins = data.bin_chunk(feature, span);
+    if negate {
+        for (&i, &lab) in active.iter().zip(labels) {
+            let bin = l - 1 - bins[(i - lo) as usize] as usize;
+            counts[bin * n_classes + lab as usize] += 1;
+        }
+    } else {
+        for (&i, &lab) in active.iter().zip(labels) {
+            let bin = bins[(i - lo) as usize] as usize;
+            counts[bin * n_classes + lab as usize] += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -610,5 +691,90 @@ mod tests {
         let s = best_edge(&parent, SplitCriterion::Entropy, 4, 1, &scratch).unwrap();
         assert_eq!(s.threshold, 1.0);
         assert_eq!(s.n_left, 4);
+    }
+
+    #[test]
+    fn binned_axis_direct_accumulate_is_pinned_to_float_routing() {
+        // The fast path's count table must be bit-identical to routing the
+        // dequantized floats through the same layout-derived boundaries —
+        // that identity is what lets inherited (float-routed) fills and
+        // direct u8 fills feed the same subtraction without drift.
+        use crate::data::Dataset;
+        use crate::projection::Projection;
+        use crate::split::boundaries::{binned_axis_plan, layout_boundaries_into};
+        let mut rng = Pcg64::new(0xD12EC7);
+        let n = 800;
+        let values: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.bernoulli(0.3) {
+                    rng.index(4) as f32
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        let labels: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+        let float = Dataset::from_columns(vec![values], labels.clone());
+        let q = float.quantized(64);
+        let active: Vec<u32> = (0..n as u32).filter(|i| i % 5 != 0).collect();
+        let mut node_labels = Vec::new();
+        crate::projection::apply::gather_labels(&q, &active, &mut node_labels);
+        let parent = counts_of(&node_labels, 3);
+        let n_bins = 256;
+        for w in [1.0f32, -1.0] {
+            let proj = Projection {
+                terms: vec![(0, w)],
+            };
+            let (f, negate, layout) =
+                binned_axis_plan(&q, &proj, n_bins).expect("axis ±1 on a binned store");
+            let mut scratch = SplitScratch::default();
+            let direct = best_split_binned_axis(
+                &q,
+                f,
+                negate,
+                layout,
+                &active,
+                &node_labels,
+                &parent,
+                SplitCriterion::Entropy,
+                n_bins,
+                1,
+                &mut scratch,
+            );
+            // Reference: dequantize the projection, route by binary search
+            // over the identical plan boundaries, same scan.
+            let mut ref_scratch = SplitScratch::default();
+            ref_scratch.boundaries = vec![0.0; n_bins];
+            layout_boundaries_into(&mut ref_scratch.boundaries, layout, negate);
+            if let Some(tl) = TwoLevelLayout::for_bins(n_bins) {
+                vectorized::build_coarse(&ref_scratch.boundaries, tl, &mut ref_scratch.coarse);
+            }
+            let mut vals = Vec::new();
+            crate::projection::apply::apply_projection(&q, &proj, &active, &mut vals);
+            fill_histogram(
+                &vals,
+                &node_labels,
+                n_bins,
+                3,
+                Routing::BinarySearch,
+                &mut ref_scratch,
+            );
+            assert_eq!(scratch.counts, ref_scratch.counts, "w = {w}");
+            let reference = best_edge(&parent, SplitCriterion::Entropy, n_bins, 1, &ref_scratch);
+            match (direct, reference) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.threshold.to_bits(), b.threshold.to_bits(), "w = {w}");
+                    assert_eq!(a.gain.to_bits(), b.gain.to_bits(), "w = {w}");
+                    assert_eq!((a.n_left, a.n_right), (b.n_left, b.n_right), "w = {w}");
+                }
+                (a, b) => panic!("w = {w}: direct {a:?} vs float-routed {b:?}"),
+            }
+            // And the reported counts partition the dequantized values.
+            if let Some(s) = direct {
+                let n_left = vals.iter().filter(|&&v| v < s.threshold).count();
+                assert_eq!(n_left, s.n_left, "w = {w}");
+            }
+        }
     }
 }

@@ -123,6 +123,56 @@ fn mapped_backend_matches_across_growth_and_subtraction() {
 }
 
 #[test]
+fn binned_backend_forests_are_byte_identical_across_every_axis() {
+    // The quantized-path determinism bar: for a fixed quantized input the
+    // forest bytes are identical across thread counts, ram vs mmap
+    // storage, fused vs classic split engines, and sibling-subtraction
+    // on vs off. `quantized()` fits the same layouts `write_dataset_v2`
+    // stores (same positional sampler, same fit), so the in-memory twin
+    // and the mapped v2 file carry identical bin ids — everything the
+    // trainer reads.
+    let float = trunk(2500, 10, 0x50B1);
+    let max_bins = 64;
+    let ram_binned = float.quantized(max_bins);
+    assert_eq!(ram_binned.backend_name(), "ram-binned");
+    let path = tmp("soforest_storage_eq_binned.sofc");
+    colfile::write_dataset_v2(&float, &path, max_bins).expect("pack v2");
+    let mapped = colfile::load_mapped(&path).expect("map v2");
+    assert_eq!(mapped.backend_name(), "mmap-binned");
+    let train_with = |data: &Dataset, threads: usize, fused: bool, sub: bool| {
+        let mut cfg = ForestConfig {
+            n_trees: 2,
+            n_threads: threads,
+            strategy: SplitStrategy::DynamicVectorized,
+            growth: GrowthMode::Frontier,
+            fused,
+            hist_subtraction: sub,
+            ..Default::default()
+        };
+        // Low enough that sibling pairs form and the histogram tier does
+        // real work on this table (the binned selector lowers it 4x more).
+        cfg.thresholds.sort_below = 512;
+        v2_bytes(&train_forest(data, &cfg, 0xB1))
+    };
+    let reference = train_with(&ram_binned, 1, true, true);
+    for threads in [1usize, 2, 8] {
+        for fused in [true, false] {
+            for sub in [true, false] {
+                for (name, data) in [("ram-binned", &ram_binned), ("mmap-binned", &mapped)] {
+                    assert_eq!(
+                        reference,
+                        train_with(data, threads, fused, sub),
+                        "binned forest bytes differ \
+                         ({name}, threads={threads}, fused={fused}, subtraction={sub})"
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn csv_pack_stream_equals_in_memory_csv_load() {
     // gen -> CSV -> (a) slurp to RAM, (b) streaming pack -> mmap: the two
     // datasets must be bit-identical feature-for-feature (the pack path
