@@ -8,11 +8,16 @@
 //! ns/sample on nodes of ≥ 4096 samples.
 //!
 //! `SOFOREST_BENCH_SIZES=1024,4096` overrides the cardinality sweep.
+//!
+//! Each cardinality is measured twice — `simd: "on"` (the runtime
+//! dispatcher's best table for this CPU) and `simd: "off"` (forced scalar
+//! reference kernels) — so the JSON records what vectorization buys on the
+//! CI hardware and the gate can track both paths independently.
 
 use soforest::bench::{BenchOpts, Table};
 use soforest::calibrate::{classic_node_cost_ns, fused_node_cost_ns, synthetic_workload};
 use soforest::split::histogram::Routing;
-use soforest::split::SplitMethod;
+use soforest::split::{simd, SplitMethod};
 use std::fmt::Write as _;
 
 fn main() {
@@ -30,39 +35,52 @@ fn main() {
     let n_bins = 256;
     let opts = BenchOpts::default();
 
-    println!("# node-split engines: classic (materialize-then-route) vs fused, d={d} p={p} bins={n_bins}\n");
+    println!(
+        "# node-split engines: classic (materialize-then-route) vs fused, \
+         d={d} p={p} bins={n_bins} (dispatch: {})\n",
+        simd::active_isa().name()
+    );
     let mut table = Table::new(&[
         "n",
+        "simd",
         "classic_ns/smp",
         "fused_ns/smp",
         "speedup",
     ]);
     let mut json_rows = String::new();
+    let mut first = true;
     for (k, &n) in sizes.iter().enumerate() {
         let w = synthetic_workload(n, p, d, 0xBE7C4 + k as u64);
-        let classic =
-            classic_node_cost_ns(&w, SplitMethod::VectorizedHistogram, n_bins, &opts);
-        let fused = fused_node_cost_ns(&w, n_bins, Routing::TwoLevel, &opts);
-        let classic_per_sample = classic / n as f64;
-        let fused_per_sample = fused / n as f64;
-        let speedup = classic / fused;
-        table.row(&[
-            n.to_string(),
-            format!("{classic_per_sample:.3}"),
-            format!("{fused_per_sample:.3}"),
-            format!("{speedup:.2}x"),
-        ]);
-        if k > 0 {
-            json_rows.push_str(",\n");
+        for simd_on in [true, false] {
+            simd::set_enabled(simd_on);
+            let simd_name = if simd_on { "on" } else { "off" };
+            let classic =
+                classic_node_cost_ns(&w, SplitMethod::VectorizedHistogram, n_bins, &opts);
+            let fused = fused_node_cost_ns(&w, n_bins, Routing::TwoLevel, &opts);
+            let classic_per_sample = classic / n as f64;
+            let fused_per_sample = fused / n as f64;
+            let speedup = classic / fused;
+            table.row(&[
+                n.to_string(),
+                simd_name.to_string(),
+                format!("{classic_per_sample:.3}"),
+                format!("{fused_per_sample:.3}"),
+                format!("{speedup:.2}x"),
+            ]);
+            if !first {
+                json_rows.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                json_rows,
+                "    {{\"n\": {n}, \"simd\": \"{simd_name}\", \"p\": {p}, \"n_bins\": {n_bins}, \
+                 \"classic_ns_per_sample\": {classic_per_sample:.4}, \
+                 \"fused_ns_per_sample\": {fused_per_sample:.4}, \
+                 \"speedup\": {speedup:.4}}}"
+            );
         }
-        let _ = write!(
-            json_rows,
-            "    {{\"n\": {n}, \"p\": {p}, \"n_bins\": {n_bins}, \
-             \"classic_ns_per_sample\": {classic_per_sample:.4}, \
-             \"fused_ns_per_sample\": {fused_per_sample:.4}, \
-             \"speedup\": {speedup:.4}}}"
-        );
     }
+    simd::set_enabled(true);
     table.print();
 
     let json = format!(

@@ -10,12 +10,15 @@ than TOLERANCE on its bench's throughput metric.
 
 Baseline lifecycle:
   * a baseline file that is missing, has no rows, or carries
-    `"provisional": true` is RECORD-ONLY — current numbers are printed
-    and the job passes (you cannot gate against numbers that were never
-    measured on CI hardware);
+    `"provisional": true` is UNARMED — current numbers are recorded and
+    the job FAILS with instructions, because an unarmed gate silently
+    catches nothing (you cannot gate against numbers that were never
+    measured on CI hardware, but you also must not merge thinking you
+    are gated when you are not);
   * to arm (or refresh) the gate, download the `bench-baseline-candidate`
     artifact from a trusted run of this job and commit its files over
-    BENCH_baseline/*.json with `"provisional": true` removed.
+    BENCH_baseline/*.json with `"provisional": true` removed — the
+    failure message names the artifact and the exact steps.
 
 Rows are matched between baseline and current by per-bench key fields;
 rows present on only one side are reported but never gated (bench
@@ -41,7 +44,10 @@ SPECS = {
         "higher_is_better": True,
     },
     "BENCH_node_split.json": {
-        "keys": ("n",),
+        # "simd" ("on" | "off") tracks the runtime-dispatched kernels and
+        # the forced-scalar reference path as separate sweep points, so a
+        # regression in either shows up on its own row.
+        "keys": ("n", "simd"),
         "metric": "fused_ns_per_sample",
         "higher_is_better": False,
     },
@@ -87,6 +93,7 @@ def fmt_key(key, keys):
 def main():
     lines = ["# Bench-regression gate", ""]
     regressions = []
+    unarmed = []
     for fname, spec in SPECS.items():
         current = load(fname)
         baseline = load(os.path.join(BASELINE_DIR, fname))
@@ -110,10 +117,12 @@ def main():
         metric, higher = spec["metric"], spec["higher_is_better"]
         arrow = "higher is better" if higher else "lower is better"
         if provisional:
+            unarmed.append(fname)
             lines.append(
-                "_baseline provisional or empty — **recording only**, not gating._ "
-                "Commit this run's `bench-baseline-candidate` artifact into "
-                f"`{BASELINE_DIR}/` (dropping `\"provisional\": true`) to arm the gate."
+                "_baseline provisional or empty — gate **UNARMED**, current numbers "
+                "recorded below._ Commit this run's `bench-baseline-candidate` "
+                f"artifact into `{BASELINE_DIR}/` (dropping `\"provisional\": true`) "
+                "to arm the gate."
             )
         lines.append("")
         lines.append(f"| {', '.join(spec['keys'])} | baseline {metric} | current {metric} | delta ({arrow}) | status |")
@@ -146,6 +155,17 @@ def main():
     if regressions:
         lines.append(f"**FAILED** — {len(regressions)} regression(s) beyond {TOLERANCE:.0%}:")
         lines.extend(f"- {r}" for r in regressions)
+    elif unarmed:
+        lines.append(
+            f"**FAILED** — {len(unarmed)} baseline(s) provisional or empty; "
+            "the gate is not actually protecting anything. To arm it:"
+        )
+        lines.append("1. open this run's `bench-baseline-candidate` artifact;")
+        lines.append(
+            f"2. copy its JSONs over `{BASELINE_DIR}/` "
+            '(delete the `"provisional": true` field);'
+        )
+        lines.append("3. commit — the next run gates against those numbers.")
     else:
         lines.append(f"**PASSED** — no gated metric regressed beyond {TOLERANCE:.0%}.")
 
@@ -158,6 +178,15 @@ def main():
     if regressions:
         for r in regressions:
             print(f"::error::bench regression: {r}")
+        sys.exit(1)
+    if unarmed:
+        for fname in unarmed:
+            print(
+                f"::error::bench gate unarmed: {BASELINE_DIR}/{fname} is provisional or "
+                "empty. Download the bench-baseline-candidate artifact from this run, "
+                f"commit its {fname} into {BASELINE_DIR}/ with the "
+                '"provisional": true field removed, and re-run.'
+            )
         sys.exit(1)
 
 

@@ -15,6 +15,17 @@ fn main() {
         min_iters: 30,
         budget: Duration::from_millis(1500),
     };
+    // Which kernel table the runtime dispatcher picked on this machine
+    // (SOFOREST_SIMD=off forces scalar) — every number below runs on it.
+    let isas: Vec<&str> = soforest::split::simd::available()
+        .iter()
+        .map(|k| k.isa.name())
+        .collect();
+    println!(
+        "simd dispatch: {} (available: {})",
+        soforest::split::simd::active_isa().name(),
+        isas.join(", ")
+    );
     let mut rng = Pcg64::new(1);
     let n = 100_000usize;
     let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();

@@ -163,6 +163,12 @@ COMMON FLAGS:
                     dynamic-vectorized | hybrid
   --fused on|off    fused cache-blocked node-split pipeline (default on;
                     off restores the materialize-then-route path for A/B)
+  --simd on|off     runtime-dispatched SIMD kernels for histogram routing,
+                    count-table subtraction and projection gathers (default
+                    on: best of AVX2/AVX-512/NEON the CPU supports; off
+                    forces the scalar reference kernels — forests are
+                    byte-identical either way; env SOFOREST_SIMD=off
+                    overrides both)
   --hist_subtraction on|off
                     sibling-histogram subtraction in the frontier trainer
                     (default on): build only the smaller child's count
@@ -850,6 +856,15 @@ fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     println!("soforest {}", env!("CARGO_PKG_VERSION"));
     println!("threads available: {}", ForestConfig::default().threads());
+    let isas: Vec<&str> = crate::split::simd::available()
+        .iter()
+        .map(|k| k.isa.name())
+        .collect();
+    println!(
+        "simd: {} (available: {})",
+        crate::split::simd::active_isa().name(),
+        isas.join(", ")
+    );
     match accel::NodeSplitAccel::try_load(Path::new(&dir)) {
         Ok(a) => {
             println!("accelerator: PJRT {} — buckets:", a.platform());

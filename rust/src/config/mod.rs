@@ -92,6 +92,14 @@ pub struct ForestConfig {
     /// direct-fills both children instead (the A/B control) — forests are
     /// byte-identical either way, at any thread count.
     pub hist_subtraction: bool,
+    /// Runtime-dispatched SIMD kernels (`--simd on|off`, default on): route
+    /// histogram fills, count-table subtraction and 1/2-term projection
+    /// gathers through the best `std::arch` kernel the CPU supports (AVX2 /
+    /// AVX-512 / NEON). Every kernel is pinned bit-identical to its scalar
+    /// twin, so — like the thread count — the flag never changes the trained
+    /// forest; `off` forces the scalar reference path for A/B and debugging.
+    /// The `SOFOREST_SIMD=off` environment variable overrides both settings.
+    pub simd: bool,
 }
 
 impl Default for ForestConfig {
@@ -115,6 +123,7 @@ impl Default for ForestConfig {
             fused: true,
             growth: GrowthMode::Frontier,
             hist_subtraction: true,
+            simd: true,
         }
     }
 }
@@ -184,6 +193,7 @@ impl ForestConfig {
             }
             "fused" => self.fused = parse_bool(v)?,
             "hist_subtraction" | "subtraction" => self.hist_subtraction = parse_bool(v)?,
+            "simd" => self.simd = parse_bool(v)?,
             "growth" => {
                 self.growth = GrowthMode::parse(v)
                     .with_context(|| format!("unknown growth mode {v:?}"))?
@@ -236,6 +246,7 @@ mod tests {
         assert!(c.fused, "fused engine is the default training path");
         assert_eq!(c.growth, GrowthMode::Frontier, "frontier is the default scheduler");
         assert!(c.hist_subtraction, "sibling-histogram subtraction is on by default");
+        assert!(c.simd, "runtime SIMD dispatch is on by default");
         assert_eq!(c.strategy, SplitStrategy::DynamicVectorized);
         assert_eq!(c.sampler, SamplerKind::Floyd);
         assert!((c.projection.row_factor - 1.5).abs() < 1e-12);
@@ -264,6 +275,7 @@ mod tests {
             ("instrument", "on"),
             ("fused", "off"),
             ("hist_subtraction", "off"),
+            ("simd", "off"),
             ("growth", "depth"),
         ] {
             c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
@@ -280,6 +292,9 @@ mod tests {
         assert!(c.instrument);
         assert!(!c.fused);
         assert!(!c.hist_subtraction);
+        assert!(!c.simd);
+        c.set("simd", "on").unwrap();
+        assert!(c.simd);
         c.set("subtraction", "on").unwrap();
         assert!(c.hist_subtraction);
         c.set("accel_above", "off").unwrap();

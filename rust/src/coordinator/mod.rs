@@ -20,7 +20,7 @@ use crate::metrics::TrainStats;
 use crate::rng::Pcg64;
 use crate::split::SplitStrategy;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Work-stealing task queue: workers claim indices `0..n_tasks` until
@@ -45,6 +45,19 @@ impl TaskQueue {
     pub fn claim(&self) -> Option<usize> {
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         (i < self.n_tasks).then_some(i)
+    }
+
+    /// Claim the next `block` task indices at once (clamped to the queue
+    /// end), or `None` when drained. One atomic per block instead of one
+    /// per task — the frontier trainer uses this near the tree tail, where
+    /// a level holds many tiny nodes and per-node claims would be mostly
+    /// scheduling overhead. Claim granularity never affects results:
+    /// outcomes are keyed by task index, not by who computed them.
+    #[inline]
+    pub fn claim_block(&self, block: usize) -> Option<std::ops::Range<usize>> {
+        let b = block.max(1);
+        let i = self.next.fetch_add(b, Ordering::Relaxed);
+        (i < self.n_tasks).then(|| i..(i + b).min(self.n_tasks))
     }
 }
 
@@ -78,6 +91,174 @@ pub fn run_pool(n_workers: usize, n_tasks: usize, worker: impl Fn(&TaskQueue) + 
     run_workers(n_workers.max(1).min(n_tasks.max(1)), |_| worker(&queue));
 }
 
+/// A persistent worker pool for intra-tree (per-level) parallelism.
+///
+/// The frontier trainer used to call [`run_pool`] once or twice *per tree
+/// level*, paying a full thread spawn + join round each time — the
+/// `--instrument` frontier table showed that overhead dominating the deep,
+/// narrow tail levels. A `LevelPool` is created once per outer tree worker
+/// and fed one job per level: workers park on a condvar between levels
+/// instead of being respawned, and the submitting thread claims tasks
+/// alongside them, so a pool built with `n_workers` applies exactly the
+/// same concurrency budget as `run_pool(n_workers, ..)` did (it spawns
+/// `n_workers − 1` threads).
+///
+/// Scheduling only — the job closure still drains the same [`TaskQueue`]
+/// work-stealing queue, and level results are keyed by task index, so
+/// forests stay byte-identical to the spawn-per-level scheduler for any
+/// worker count (enforced by the frontier equivalence suite).
+pub struct LevelPool {
+    shared: Arc<LevelPoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct LevelPoolShared {
+    state: Mutex<LevelPoolState>,
+    /// Workers park here between levels.
+    work_cv: Condvar,
+    /// The submitter parks here until every worker finished the level.
+    done_cv: Condvar,
+}
+
+struct LevelPoolState {
+    /// Incremented per job; workers run a job exactly once per epoch.
+    epoch: u64,
+    job: Option<LevelJob>,
+    n_done: usize,
+    worker_panicked: bool,
+    shutdown: bool,
+}
+
+/// Type-erased borrow of the per-level job. The raw pointers alias stack
+/// data in [`LevelPool::run`]'s caller; `run` never returns (or unwinds)
+/// before every worker reported done with the epoch, so the pointees
+/// strictly outlive every dereference.
+#[derive(Clone, Copy)]
+struct LevelJob {
+    f: *const (dyn Fn(&TaskQueue) + Sync),
+    queue: *const TaskQueue,
+}
+
+// SAFETY: the pointers are only dereferenced by pool workers between job
+// publication and completion, a window in which `run` keeps the pointees
+// alive and `&(dyn Fn + Sync)` makes the shared calls sound.
+unsafe impl Send for LevelJob {}
+
+impl LevelPool {
+    /// A pool applying the concurrency budget of `n_workers`: the submitter
+    /// participates in every job, so `n_workers − 1` threads are spawned.
+    pub fn new(n_workers: usize) -> Self {
+        let shared = Arc::new(LevelPoolShared {
+            state: Mutex::new(LevelPoolState {
+                epoch: 0,
+                job: None,
+                n_done: 0,
+                worker_panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..n_workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || level_pool_worker(&shared))
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// How many workers (including the submitting thread) drain each job.
+    pub fn width(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run one level: every pool worker plus the calling thread drains
+    /// `worker(&queue)` over a fresh queue of `n_tasks` tasks. Returns when
+    /// all of them have finished; panics (after the barrier) if any worker
+    /// panicked, mirroring `run_pool`'s join behavior.
+    pub fn run(&self, n_tasks: usize, worker: &(dyn Fn(&TaskQueue) + Sync)) {
+        let queue = TaskQueue::new(n_tasks);
+        if self.handles.is_empty() || n_tasks <= 1 {
+            // Nothing to fan out: run inline without waking anyone (the
+            // parked workers never observe an epoch bump).
+            worker(&queue);
+            return;
+        }
+        let n = self.handles.len();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(LevelJob {
+                f: worker as *const _,
+                queue: &queue,
+            });
+            st.n_done = 0;
+            st.worker_panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter works the same queue — and must not unwind past the
+        // completion barrier while workers still hold the job pointers.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| worker(&queue)));
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.n_done < n {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.worker_panicked
+        };
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        assert!(!worker_panicked, "level pool worker panicked");
+    }
+}
+
+impl Drop for LevelPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            // Worker panics were already surfaced by `run`; don't
+            // double-panic out of drop.
+            let _ = h.join();
+        }
+    }
+}
+
+fn level_pool_worker(shared: &LevelPoolShared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: `run` keeps the job's pointees alive until this worker
+        // (and all others) bump `n_done` for the epoch, below.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*job.f)(&*job.queue)
+            }));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.worker_panicked = true;
+        }
+        st.n_done += 1;
+        drop(st);
+        shared.done_cv.notify_all();
+    }
+}
+
 /// Result of a coordinated training run.
 pub struct TrainOutcome {
     pub forest: Forest,
@@ -105,6 +286,10 @@ pub fn train_forest_with_source(
     assert!(config.n_trees > 0, "n_trees must be positive");
     assert!(data.n_samples() >= 2, "need at least 2 samples");
     assert!(data.n_classes() >= 2, "need at least 2 classes");
+    // Select the split kernel table for this run (`--simd on|off`). A
+    // global, not per-run, switch — safe even with concurrent training
+    // runs because every table is bit-identical by construction.
+    crate::split::simd::set_enabled(config.simd);
     let t0 = Instant::now();
 
     let threads = config.threads();
@@ -138,6 +323,10 @@ pub fn train_forest_with_source(
         // One scratch pool per outer worker: node buffers are leased per
         // inner worker and survive across all trees this worker trains.
         let scratch_pool = Arc::new(ScratchPool::default());
+        // One persistent level pool per outer worker: its threads park
+        // between levels (and between trees) instead of being respawned
+        // once or twice per level.
+        let level_pool = (intra_threads > 1).then(|| LevelPool::new(intra_threads));
         let mut local: Vec<(usize, Tree, TrainStats)> = Vec::new();
         while let Some(tree_idx) = queue.claim() {
             let (tree, stats) = train_one_tree(
@@ -149,6 +338,7 @@ pub fn train_forest_with_source(
                 accel.as_mut().map(|a| a as &mut NodeSplitAccel),
                 intra_threads,
                 Arc::clone(&scratch_pool),
+                level_pool.as_ref(),
             );
             local.push((tree_idx, tree, stats));
         }
@@ -203,20 +393,24 @@ pub fn tree_bag(
 
 /// Train tree `tree_idx` with its deterministic RNG stream.
 #[allow(clippy::too_many_arguments)]
-fn train_one_tree(
-    data: &Dataset,
-    config: &ForestConfig,
+fn train_one_tree<'a>(
+    data: &'a Dataset,
+    config: &'a ForestConfig,
     seed: u64,
     tree_idx: usize,
     source: ProjectionSource,
-    accel: Option<&mut NodeSplitAccel>,
+    accel: Option<&'a mut NodeSplitAccel>,
     intra_threads: usize,
     scratch_pool: Arc<ScratchPool>,
+    level_pool: Option<&'a LevelPool>,
 ) -> (Tree, TrainStats) {
     let (active, rng) = tree_bag(data.n_samples(), config, seed, tree_idx);
     let mut trainer = TreeTrainer::new(data, config, source, rng)
         .with_intra_threads(intra_threads)
         .with_scratch_pool(scratch_pool);
+    if let Some(p) = level_pool {
+        trainer = trainer.with_level_pool(p);
+    }
     if let Some(a) = accel {
         trainer = trainer.with_accel(a);
     }

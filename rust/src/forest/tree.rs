@@ -10,7 +10,9 @@
 //! * **Frontier** (`--growth frontier`, the default) — level-wise growth:
 //!   the frontier of open nodes is partitioned each level into a sort tier,
 //!   a histogram tier and an accelerator tier by [`DynamicSplitter`]; the
-//!   CPU tiers fan out over [`crate::coordinator::run_pool`] (so a single
+//!   CPU tiers fan out over a persistent [`crate::coordinator::LevelPool`]
+//!   when the coordinator attaches one (spawn-per-level
+//!   [`crate::coordinator::run_pool`] otherwise, so a single
 //!   large tree saturates every core instead of one) and the accelerator
 //!   tier is submitted as **one** batched [`NodeAccel::split_nodes_batch`]
 //!   call per level. Determinism is a hard requirement: every node draws
@@ -43,7 +45,7 @@
 
 use crate::accel::NodeSplitRequest;
 use crate::config::{ForestConfig, GrowthMode};
-use crate::coordinator::run_pool;
+use crate::coordinator::{run_pool, LevelPool, TaskQueue};
 use crate::data::{ActiveSet, Dataset};
 use crate::metrics::{Component, LevelStats, TrainStats};
 use crate::projection::apply::{active_span, apply_projection, gather_labels};
@@ -54,6 +56,7 @@ use crate::split::vectorized::TwoLevelLayout;
 use crate::split::{
     best_split, best_split_fused, DynamicSplitter, Split, SplitMethod, SplitScratch,
 };
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -261,6 +264,10 @@ pub struct TreeTrainer<'a> {
     /// throughput knob: the trained tree is identical for any value.
     intra_threads: usize,
     pool: Arc<ScratchPool>,
+    /// Persistent per-level worker pool, shared by every tree this outer
+    /// worker trains. `None` falls back to spawn-per-level [`run_pool`].
+    /// Scheduling only: the trained tree is identical either way.
+    level_pool: Option<&'a LevelPool>,
 }
 
 /// Depth-mode work item: (active set, depth, link to patch in `nodes`).
@@ -413,6 +420,7 @@ impl<'a> TreeTrainer<'a> {
             accel: None,
             intra_threads: 1,
             pool: Arc::new(ScratchPool::default()),
+            level_pool: None,
         }
     }
 
@@ -431,6 +439,15 @@ impl<'a> TreeTrainer<'a> {
     /// buffers survive across the trees that worker trains).
     pub fn with_scratch_pool(mut self, pool: Arc<ScratchPool>) -> Self {
         self.pool = pool;
+        self
+    }
+
+    /// Drain each level through a persistent [`LevelPool`] instead of
+    /// spawning threads per level (the coordinator passes one per outer
+    /// worker). Purely a scheduling change — results are keyed by unit
+    /// index and applied in frontier order, so the tree is byte-identical.
+    pub fn with_level_pool(mut self, pool: &'a LevelPool) -> Self {
+        self.level_pool = Some(pool);
         self
     }
 
@@ -715,25 +732,56 @@ impl<'a> TreeTrainer<'a> {
                 Mutex::new(Vec::with_capacity(frontier.len()));
             let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
             let units_ref = &units;
-            run_pool(workers, units.len(), |queue| {
+            let unit_samples: usize = units
+                .iter()
+                .map(|u| match *u {
+                    CpuUnit::One(i) => frontier[i].active.len(),
+                    CpuUnit::Pair(i) => frontier[i].active.len() + frontier[i + 1].active.len(),
+                })
+                .sum();
+            let block = claim_block_size(unit_samples, units.len(), workers);
+            // Scheduling-vs-compute attribution for the `--instrument`
+            // frontier table: `busy_max` is the longest any worker spent
+            // inside the job; the rest of the parallel wall time is
+            // spawn/wake/park/join overhead.
+            let busy_max = AtomicU64::new(0);
+            let busy_ref = &busy_max;
+            let body = |queue: &TaskQueue| {
+                let w0 = instrument.then(Instant::now);
                 let mut ns = pool.lease();
                 let mut local_stats = TrainStats::new(instrument);
                 let mut local: Vec<(usize, NodeOutcome, FillTag)> = Vec::new();
-                while let Some(k) = queue.claim() {
-                    process_cpu_unit(
-                        env,
-                        node_seed,
-                        frontier,
-                        units_ref[k],
-                        &mut local_stats,
-                        &mut ns,
-                        &mut local,
-                    );
+                while let Some(range) = queue.claim_block(block) {
+                    for k in range {
+                        process_cpu_unit(
+                            env,
+                            node_seed,
+                            frontier,
+                            units_ref[k],
+                            &mut local_stats,
+                            &mut ns,
+                            &mut local,
+                        );
+                    }
                 }
                 pool.release(ns);
                 results.lock().unwrap().extend(local);
                 worker_stats.lock().unwrap().push(local_stats);
-            });
+                if let Some(t) = w0 {
+                    busy_ref.fetch_max(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            };
+            let pt0 = Instant::now();
+            match self.level_pool {
+                Some(lp) => lp.run(units.len(), &body),
+                None => run_pool(workers, units.len(), body),
+            }
+            if instrument {
+                let wall = pt0.elapsed().as_nanos() as u64;
+                let busy = busy_max.load(Ordering::Relaxed).min(wall);
+                lstats.compute_ns += busy;
+                lstats.sched_ns += wall - busy;
+            }
             for s in worker_stats.into_inner().unwrap() {
                 self.stats.merge(&s);
             }
@@ -798,7 +846,10 @@ impl<'a> TreeTrainer<'a> {
             let results: Mutex<Vec<(usize, AccelPrep)>> =
                 Mutex::new(Vec::with_capacity(tier.len()));
             let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
-            run_pool(workers, tier.len(), |queue| {
+            // Accel-tier nodes are the level's largest (that is why the
+            // splitter offloaded them), so per-task claims are already
+            // coarse enough — no block claiming here.
+            let body = |queue: &TaskQueue| {
                 let mut ns = pool.lease();
                 let mut local_stats = TrainStats::new(instrument);
                 let mut local: Vec<(usize, AccelPrep)> = Vec::new();
@@ -812,7 +863,11 @@ impl<'a> TreeTrainer<'a> {
                 pool.release(ns);
                 results.lock().unwrap().extend(local);
                 worker_stats.lock().unwrap().push(local_stats);
-            });
+            };
+            match self.level_pool {
+                Some(lp) => lp.run(tier.len(), &body),
+                None => run_pool(workers, tier.len(), body),
+            }
             for s in worker_stats.into_inner().unwrap() {
                 self.stats.merge(&s);
             }
@@ -894,6 +949,25 @@ impl<'a> TreeTrainer<'a> {
         self.pool.release(ns);
         batches
     }
+}
+
+/// Tail block-claim policy: how many CPU work units a pool worker grabs
+/// per queue round-trip. Deep, narrow frontier tails hold many tiny
+/// nodes, and claiming them one at a time made per-node scheduling (a
+/// `fetch_add` plus cache-line traffic on the shared counter) rival the
+/// split search itself. Blocks are sized so one claim covers roughly 4K
+/// samples of work, but never so large that a level cannot be balanced
+/// across the pool (each worker should get at least ~4 claims).
+/// Scheduling only: results are keyed by unit index and applied in
+/// frontier order, so any block size yields the same tree.
+fn claim_block_size(total_samples: usize, n_units: usize, workers: usize) -> usize {
+    if n_units == 0 {
+        return 1;
+    }
+    let avg = (total_samples / n_units).max(1);
+    let by_work = (4096 / avg).max(1);
+    let by_balance = (n_units / (workers.max(1) * 4)).max(1);
+    by_work.min(by_balance).max(1)
 }
 
 /// A prepared accelerator-tier node awaiting its batched response: the

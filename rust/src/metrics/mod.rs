@@ -137,6 +137,15 @@ pub struct LevelStats {
     pub accel_batches: u64,
     /// Wall-clock nanoseconds spent on the level.
     pub wall_ns: u64,
+    /// Nanoseconds the slowest worker spent *inside* the parallel CPU-tier
+    /// job (parallel levels only; serial levels record 0 — their cost is
+    /// all in `wall_ns` already).
+    pub compute_ns: u64,
+    /// Scheduling overhead of the parallel CPU-tier fan-out: parallel wall
+    /// time minus `compute_ns`, i.e. thread spawn/wake, park and join. The
+    /// persistent `LevelPool` exists to shrink this column on the deep,
+    /// narrow tail levels.
+    pub sched_ns: u64,
 }
 
 impl LevelStats {
@@ -150,6 +159,8 @@ impl LevelStats {
         self.inherit_fill_nodes += other.inherit_fill_nodes;
         self.accel_batches += other.accel_batches;
         self.wall_ns += other.wall_ns;
+        self.compute_ns += other.compute_ns;
+        self.sched_ns += other.sched_ns;
     }
 }
 
@@ -278,11 +289,11 @@ impl TrainStats {
             return String::new();
         }
         let mut out = String::from(
-            "level  width     sort/hist/accel/leaf          sub/ifill    batches   wall_ms\n",
+            "level  width     sort/hist/accel/leaf          sub/ifill    batches   wall_ms    cpu_ms  sched_ms\n",
         );
         for (level, l) in self.by_level.iter().enumerate() {
             out.push_str(&format!(
-                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>6}/{:<6} {:>7}  {:>9.3}\n",
+                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>6}/{:<6} {:>7}  {:>9.3} {:>9.3} {:>9.3}\n",
                 l.width,
                 l.sort_nodes,
                 l.hist_nodes,
@@ -292,6 +303,8 @@ impl TrainStats {
                 l.inherit_fill_nodes,
                 l.accel_batches,
                 l.wall_ns as f64 / 1e6,
+                l.compute_ns as f64 / 1e6,
+                l.sched_ns as f64 / 1e6,
             ));
         }
         out
@@ -375,6 +388,8 @@ mod tests {
                 width: 2,
                 sort_nodes: 2,
                 wall_ns: 5,
+                compute_ns: 3,
+                sched_ns: 2,
                 ..Default::default()
             },
         );
@@ -397,7 +412,11 @@ mod tests {
         assert_eq!(a.by_level[0].sub_nodes, 3);
         assert_eq!(a.by_level[0].inherit_fill_nodes, 4);
         assert_eq!(a.by_level[1].sort_nodes, 2);
-        assert!(!a.frontier_table().is_empty());
+        assert_eq!(a.by_level[1].compute_ns, 3);
+        assert_eq!(a.by_level[1].sched_ns, 2);
+        let table = a.frontier_table();
+        assert!(!table.is_empty());
+        assert!(table.contains("sched_ms"), "table gained the scheduling column");
         // Disabled stats skip level recording entirely.
         let mut c = TrainStats::new(false);
         c.record_level(0, LevelStats::default());

@@ -79,20 +79,20 @@ pub fn apply_projection_into_span(
         return apply_projection_binned_span(data, proj, active, span, out);
     }
     let lo = span.start as u32;
+    // The 1- and 2-term arms route through the runtime-dispatched gather
+    // kernels (crate::split::simd): hardware `vgatherdps` where available,
+    // with per-lane mul/add in the exact scalar order — the kernel suite
+    // pins the outputs bitwise against the plain loops these arms had.
     match proj.terms.as_slice() {
         [] => out.fill(0.0),
         [(f, w)] => {
             let col = data.column_chunk(*f as usize, span);
-            for (o, &i) in out.iter_mut().zip(active) {
-                *o = w * col[(i - lo) as usize];
-            }
+            crate::split::simd::gather_axis(active, lo, col, *w, out);
         }
         [(f0, w0), (f1, w1)] => {
             let c0 = data.column_chunk(*f0 as usize, span.clone());
             let c1 = data.column_chunk(*f1 as usize, span);
-            for (o, &i) in out.iter_mut().zip(active) {
-                *o = w0 * c0[(i - lo) as usize] + w1 * c1[(i - lo) as usize];
-            }
+            crate::split::simd::gather_pair(active, lo, c0, c1, *w0, *w1, out);
         }
         terms => {
             out.fill(0.0);

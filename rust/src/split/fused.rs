@@ -30,7 +30,7 @@
 //! trained with `fused = off`.
 
 use super::criterion::SplitCriterion;
-use super::histogram::{best_edge_over_tables, route_binary_search, Routing};
+use super::histogram::{best_edge_over_tables, Routing};
 use super::scan::{self, SCAN_MAX_BINS};
 use super::vectorized::{self, TwoLevelLayout};
 use super::{Split, SplitScratch};
@@ -255,10 +255,13 @@ pub fn fill_tables_blocked(
                     scan::fill_scan(vals, lblock, bounds, n_bins, n_classes, cnt);
                 }
                 _ => {
-                    for (&v, &l) in vals.iter().zip(lblock) {
-                        let bin = route_binary_search(v, bounds, n_real);
-                        cnt[bin * n_classes + l as usize] += 1;
-                    }
+                    // `bounds` ends in n_bins − n_real = 1 +∞ pad; when
+                    // n_bins is a power of two that already satisfies the
+                    // vector kernel's pow2 padding contract, otherwise the
+                    // helper takes the bit-identical scalar route.
+                    super::histogram::fill_lower_bound(
+                        vals, lblock, bounds, n_real, n_classes, cnt,
+                    );
                 }
             }
         }

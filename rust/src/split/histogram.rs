@@ -11,6 +11,7 @@
 //! and cost nothing in the scan.
 
 use super::criterion::{BoundaryScan, SplitCriterion};
+use super::simd;
 use super::vectorized::{self, TwoLevelLayout};
 use super::{Split, SplitScratch};
 use crate::data::{BinLayout, Dataset};
@@ -135,11 +136,48 @@ pub fn fill_histogram(
             super::scan::fill_scan(values, labels, &scratch.boundaries, n_bins, n_classes, counts);
         }
         _ => {
-            let boundaries = &scratch.boundaries;
-            for (&v, &l) in values.iter().zip(labels) {
-                let bin = route_binary_search(v, boundaries, n_real);
-                counts[bin * n_classes + l as usize] += 1;
+            // The vector lower-bound kernel wants the table padded with +∞
+            // to the next power of two (its fixed-trip search probes those
+            // slots). `boundaries` is ours here, so pad in place and
+            // restore the documented `n_bins` length afterwards — the
+            // retention capture checks it.
+            let boundaries = &mut scratch.boundaries;
+            let p2 = n_real.next_power_of_two();
+            let orig_len = boundaries.len();
+            if orig_len < p2 {
+                boundaries.resize(p2, f32::INFINITY);
             }
+            fill_lower_bound(values, labels, boundaries, n_real, n_classes, counts);
+            boundaries.truncate(orig_len);
+        }
+    }
+}
+
+/// Fill a count table by lower-bound routing: route [`simd::ROUTE_CHUNK`]
+/// values at a time through the runtime-dispatched kernel into a stack
+/// buffer, then scatter the counts (the scatter is a read-modify-write
+/// with intra-chunk conflicts, so it stays scalar). Shared by the classic
+/// binary-search fill arm above and the fused engine's fallback arm.
+///
+/// `boundaries` needs `n_real.next_power_of_two()` +∞-padded slots for the
+/// vector path; shorter tables take the (bit-identical) scalar route.
+pub(super) fn fill_lower_bound(
+    values: &[f32],
+    labels: &[u16],
+    boundaries: &[f32],
+    n_real: usize,
+    n_classes: usize,
+    counts: &mut [u32],
+) {
+    let mut bins = [0u32; simd::ROUTE_CHUNK];
+    for (vchunk, lchunk) in values
+        .chunks(simd::ROUTE_CHUNK)
+        .zip(labels.chunks(simd::ROUTE_CHUNK))
+    {
+        let routed = &mut bins[..vchunk.len()];
+        simd::route_lower_bound_block(vchunk, boundaries, n_real, routed);
+        for (&bin, &l) in routed.iter().zip(lchunk) {
+            counts[bin as usize * n_classes + l as usize] += 1;
         }
     }
 }
@@ -239,7 +277,8 @@ pub fn best_edge_over_tables(
 pub fn subtract_tables(parent: &[u32], child: &[u32], out: &mut Vec<u32>) {
     debug_assert_eq!(parent.len(), child.len());
     out.clear();
-    out.extend(parent.iter().zip(child).map(|(&p, &c)| p.saturating_sub(c)));
+    out.resize(parent.len(), 0);
+    simd::subtract_saturating(parent, child, out);
 }
 
 /// Full histogram split search (boundaries → fill → scan).
@@ -339,16 +378,20 @@ pub(super) fn accumulate_bin_ids(
     let span = active_span(active);
     let lo = span.start as u32;
     let bins = data.bin_chunk(feature, span);
-    if negate {
-        for (&i, &lab) in active.iter().zip(labels) {
-            let bin = l - 1 - bins[(i - lo) as usize] as usize;
-            counts[bin * n_classes + lab as usize] += 1;
-        }
+    // One loop for both orientations: bin = off + sign·id, with
+    // (off, sign) = (l−1, −1) when negated and (0, +1) otherwise. This is
+    // the single scalar reference the SIMD routing kernels pin against;
+    // the count scatter itself stays scalar — it is a read-modify-write
+    // with conflicting bins, and EXPERIMENTS.md §Perf records that
+    // splitting it into sub-histograms hurts.
+    let (off, sign) = if negate {
+        (l as isize - 1, -1isize)
     } else {
-        for (&i, &lab) in active.iter().zip(labels) {
-            let bin = bins[(i - lo) as usize] as usize;
-            counts[bin * n_classes + lab as usize] += 1;
-        }
+        (0, 1)
+    };
+    for (&i, &lab) in active.iter().zip(labels) {
+        let bin = (off + sign * bins[(i - lo) as usize] as isize) as usize;
+        counts[bin * n_classes + lab as usize] += 1;
     }
 }
 

@@ -23,6 +23,7 @@ pub mod exact;
 pub mod fused;
 pub mod histogram;
 pub mod scan;
+pub mod simd;
 pub mod vectorized;
 
 pub use criterion::SplitCriterion;

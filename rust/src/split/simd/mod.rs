@@ -1,0 +1,499 @@
+//! Runtime-dispatched SIMD kernels for the histogram hot loops (paper §4.2).
+//!
+//! `split/vectorized.rs` only emits vector code when the whole crate is
+//! compiled with `-C target-cpu=native`; a stock `cargo build --release`
+//! targets baseline x86-64 and the routing compares stay scalar. This module
+//! fixes that with explicit `std::arch` kernels selected *at runtime* — the
+//! same dispatch-once-cache-a-fn-pointer pattern memchr uses: the first call
+//! probes the CPU (`is_x86_feature_detected!`), picks the widest usable
+//! [`Kernels`] table and caches a pointer to it in an atomic; every later
+//! call is one relaxed load plus an indirect call amortized over a block of
+//! samples (never per sample).
+//!
+//! Dispatch matrix (widest available wins):
+//!
+//! | ISA     | route16/route8          | lower_bound      | subtract | gather |
+//! |---------|-------------------------|------------------|----------|--------|
+//! | AVX-512 | 512/256-bit mask compare| AVX2 gather      | AVX2     | AVX2   |
+//! | AVX2    | 256-bit cmp+movemask    | AVX2 gather      | AVX2     | AVX2   |
+//! | NEON    | 128-bit cmp+addv        | scalar           | vqsub    | scalar |
+//! | scalar  | portable branch-free    | partition_point  | scalar   | scalar |
+//!
+//! Only the compare-route kernels profit from 512-bit lanes; the lower-bound
+//! walk and projection gathers are gather-port-bound and the table subtract
+//! is load/store-bound, so the AVX-512 table reuses the 256-bit kernels for
+//! those entries. NEON has no hardware gather, so those rows stay scalar.
+//!
+//! **Determinism bar:** every kernel is bit-identical to its scalar twin on
+//! every input. Count tables are u32 integer adds, so lane width cannot
+//! change a sum; routing is pure comparison counting (`b <= v`, false on
+//! NaN, exactly `_CMP_LE_OQ`); float projection gathers do per-lane
+//! `w*col[i]` / `w0*c0[i] + w1*c1[i]` — the same two IEEE ops as the scalar
+//! loop, never contracted into FMA. The unit tests below pin each table
+//! against the scalar reference on adversarial inputs, and the forest-level
+//! equivalence suites assert byte-identical model files with SIMD forced
+//! off. Because on/off is byte-identical by construction, flipping the
+//! global table while other threads train is benign.
+//!
+//! `SOFOREST_SIMD=off|0|false|scalar` forces the scalar table regardless of
+//! CPU or config (the CI forced-scalar leg); `--simd off` does the same per
+//! training run via [`set_enabled`].
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicPtr, AtomicU8, Ordering};
+
+/// Which instruction set a [`Kernels`] table was compiled for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// A table of block kernels, all safe `fn` pointers. Each entry processes a
+/// whole slice so the indirect call is paid once per block, not per sample.
+pub struct Kernels {
+    pub isa: Isa,
+    /// 16×16 two-level route: `out[i] = bin(values[i])` with 16 coarse
+    /// groups of 16 fine boundaries (`fine.len() >= 256`).
+    pub route16: fn(&[f32], &[f32], &[f32], &mut [u32]),
+    /// 8×8 variant (`coarse.len() >= 8`, `fine.len() >= 64`).
+    pub route8: fn(&[f32], &[f32], &[f32], &mut [u32]),
+    /// Branchless lower-bound route over a +∞-padded table:
+    /// `out[i] = #{ b in table[..n_real] : b <= values[i] }`. The table must
+    /// hold at least `n_real.next_power_of_two()` slots with every slot past
+    /// `n_real` equal to +∞ (callers go through
+    /// [`route_lower_bound_block`], which enforces this or falls back).
+    pub lower_bound: fn(&[f32], &[f32], usize, &mut [u32]),
+    /// Saturating element-wise `out[i] = parent[i] - child[i]` over u32.
+    pub subtract_u32: fn(&[u32], &[u32], &mut [u32]),
+    /// Projection gather, 1 term: `out[k] = w * col[(ids[k] - lo)]`.
+    pub gather1: fn(&[u32], u32, &[f32], f32, &mut [f32]),
+    /// Projection gather, 2 terms:
+    /// `out[k] = w0 * c0[ids[k]-lo] + w1 * c1[ids[k]-lo]` (mul+add, no FMA).
+    pub gather2: fn(&[u32], u32, &[f32], &[f32], f32, f32, &mut [f32]),
+}
+
+/// The always-available scalar table — the reference every accelerated
+/// table is pinned against.
+pub static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    route16: scalar::route16,
+    route8: scalar::route8,
+    lower_bound: scalar::lower_bound,
+    subtract_u32: scalar::subtract_u32,
+    gather1: scalar::gather1,
+    gather2: scalar::gather2,
+};
+
+/// Block size callers use when staging routed bin ids on the stack: big
+/// enough to amortize the indirect call, small enough to stay L1-resident
+/// (1 KiB of u32).
+pub const ROUTE_CHUNK: usize = 256;
+
+// Cached pointer to the active table. Null until the first `kernels()` call
+// or `set_enabled`; always points into one of the `static` tables above, so
+// dereferencing is safe for 'static.
+static ACTIVE: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
+
+// Cached SOFOREST_SIMD parse: 0 = unknown, 1 = force scalar, 2 = auto.
+static ENV_MODE: AtomicU8 = AtomicU8::new(0);
+
+fn env_forces_scalar() -> bool {
+    match ENV_MODE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let force = matches!(
+                std::env::var("SOFOREST_SIMD").as_deref(),
+                Ok("off") | Ok("0") | Ok("false") | Ok("scalar")
+            );
+            ENV_MODE.store(if force { 1 } else { 2 }, Ordering::Relaxed);
+            force
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_for_cpu() -> &'static Kernels {
+    // route8 in the AVX-512 table needs the 256-bit mask compares from
+    // avx512vl, and the non-route entries reuse the AVX2 kernels, so both
+    // feature sets gate the 512-bit table.
+    if is_x86_feature_detected!("avx512f")
+        && is_x86_feature_detected!("avx512vl")
+        && is_x86_feature_detected!("avx2")
+    {
+        &x86::AVX512
+    } else if is_x86_feature_detected!("avx2") {
+        &x86::AVX2
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best_for_cpu() -> &'static Kernels {
+    // NEON is baseline on aarch64 — no detection needed.
+    &neon::NEON
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best_for_cpu() -> &'static Kernels {
+    &SCALAR
+}
+
+fn detect_best() -> &'static Kernels {
+    if env_forces_scalar() {
+        &SCALAR
+    } else {
+        best_for_cpu()
+    }
+}
+
+/// The active kernel table (detected and cached on first call).
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if p.is_null() {
+        let k = detect_best();
+        ACTIVE.store(k as *const Kernels as *mut Kernels, Ordering::Release);
+        k
+    } else {
+        // SAFETY: ACTIVE only ever holds pointers to 'static tables.
+        unsafe { &*p }
+    }
+}
+
+/// Select the table for `--simd on|off`: `false` forces the scalar table,
+/// `true` re-runs detection (the `SOFOREST_SIMD` env override still wins).
+/// Safe to call while other threads are mid-fill: every table produces
+/// bit-identical results, so a mid-flight switch cannot change any output.
+pub fn set_enabled(enabled: bool) {
+    let k = if enabled { detect_best() } else { &SCALAR };
+    ACTIVE.store(k as *const Kernels as *mut Kernels, Ordering::Release);
+}
+
+/// Which ISA the active table targets (for `perf_probe` / logs).
+pub fn active_isa() -> Isa {
+    kernels().isa
+}
+
+/// Every table runnable on this CPU, scalar first. The unit tests pin each
+/// accelerated table against `available()[0]`; `perf_probe` prints the list.
+pub fn available() -> Vec<&'static Kernels> {
+    #[allow(unused_mut)]
+    let mut v: Vec<&'static Kernels> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(&x86::AVX2);
+            if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vl") {
+                v.push(&x86::AVX512);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(&neon::NEON);
+    v
+}
+
+/// Route a block through the 16×16 two-level structure with the active table.
+#[inline]
+pub fn route16_block(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    debug_assert_eq!(values.len(), out.len());
+    (kernels().route16)(values, coarse, fine, out)
+}
+
+/// Route a block through the 8×8 two-level structure with the active table.
+#[inline]
+pub fn route8_block(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    debug_assert_eq!(values.len(), out.len());
+    (kernels().route8)(values, coarse, fine, out)
+}
+
+/// Lower-bound route a block: `out[i] = #{ b in table[..n_real] : b <= v }`.
+///
+/// The vector kernels run a fixed-trip branchless search over
+/// `n_real.next_power_of_two()` slots, so they need the table padded to that
+/// length with +∞ (the +∞ pads count only for `v = +∞`, and the final clamp
+/// to `n_real` makes that case agree with the scalar `partition_point`).
+/// When the caller's table is not padded far enough this falls back to the
+/// scalar route, which is bit-identical.
+#[inline]
+pub fn route_lower_bound_block(values: &[f32], table: &[f32], n_real: usize, out: &mut [u32]) {
+    debug_assert_eq!(values.len(), out.len());
+    if n_real == 0 {
+        out.fill(0);
+        return;
+    }
+    let p2 = n_real.next_power_of_two();
+    if table.len() < p2 {
+        scalar::lower_bound(values, table, n_real, out);
+        return;
+    }
+    debug_assert!(
+        table[n_real..p2].iter().all(|&b| b == f32::INFINITY),
+        "lower-bound table pads must be +inf"
+    );
+    (kernels().lower_bound)(values, table, n_real, out)
+}
+
+/// Saturating u32 table subtraction with the active kernel.
+#[inline]
+pub fn subtract_saturating(parent: &[u32], child: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(parent.len(), child.len());
+    debug_assert_eq!(parent.len(), out.len());
+    (kernels().subtract_u32)(parent, child, out)
+}
+
+/// 1-term projection gather with the active kernel.
+#[inline]
+pub fn gather_axis(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
+    debug_assert_eq!(ids.len(), out.len());
+    // The x86 gathers index with i32 lanes; spans never get close to 2^31
+    // rows in practice, but fall back rather than assume.
+    if col.len() > i32::MAX as usize {
+        scalar::gather1(ids, lo, col, w, out);
+        return;
+    }
+    (kernels().gather1)(ids, lo, col, w, out)
+}
+
+/// 2-term projection gather with the active kernel.
+#[inline]
+pub fn gather_pair(ids: &[u32], lo: u32, c0: &[f32], c1: &[f32], w0: f32, w1: f32, out: &mut [f32]) {
+    debug_assert_eq!(ids.len(), out.len());
+    debug_assert_eq!(c0.len(), c1.len());
+    if c0.len() > i32::MAX as usize {
+        scalar::gather2(ids, lo, c0, c1, w0, w1, out);
+        return;
+    }
+    (kernels().gather2)(ids, lo, c0, c1, w0, w1, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::split::vectorized::{build_coarse, TwoLevelLayout};
+
+    /// Sorted random boundaries padded to `n_bins` slots with +inf.
+    fn padded_boundaries(rng: &mut Pcg64, n_bins: usize) -> Vec<f32> {
+        let mut b: Vec<f32> = (0..n_bins - 1).map(|_| rng.normal() as f32).collect();
+        b.sort_unstable_by(f32::total_cmp);
+        b.push(f32::INFINITY);
+        b
+    }
+
+    /// Adversarial value set: random, NaN, ±∞, extremes, exact boundaries.
+    fn adversarial_values(rng: &mut Pcg64, boundaries: &[f32], n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        v.extend([f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::MAX, f32::MIN]);
+        for &b in boundaries.iter().step_by(boundaries.len() / 7 + 1) {
+            v.push(b);
+        }
+        v
+    }
+
+    #[test]
+    fn every_table_matches_scalar_route16_and_route8() {
+        let mut rng = Pcg64::new(0x51D0);
+        let tables = available();
+        for trial in 0..8 {
+            let b256 = padded_boundaries(&mut rng, 256);
+            let b64 = padded_boundaries(&mut rng, 64);
+            let l256 = TwoLevelLayout::for_bins(256).unwrap();
+            let l64 = TwoLevelLayout::for_bins(64).unwrap();
+            let (mut c256, mut c64) = (Vec::new(), Vec::new());
+            build_coarse(&b256, l256, &mut c256);
+            build_coarse(&b64, l64, &mut c64);
+            let values = adversarial_values(&mut rng, &b256, 500);
+            // Lane-remainder lengths 0..=33 plus the full block.
+            for len in (0..=33).chain([values.len()]) {
+                let vals = &values[..len];
+                let mut want = vec![0u32; len];
+                (SCALAR.route16)(vals, &c256, &b256, &mut want);
+                for t in &tables {
+                    let mut got = vec![u32::MAX; len];
+                    (t.route16)(vals, &c256, &b256, &mut got);
+                    assert_eq!(got, want, "route16 {} trial={trial} len={len}", t.isa.name());
+                }
+                (SCALAR.route8)(vals, &c64, &b64, &mut want);
+                for t in &tables {
+                    let mut got = vec![u32::MAX; len];
+                    (t.route8)(vals, &c64, &b64, &mut got);
+                    assert_eq!(got, want, "route8 {} trial={trial} len={len}", t.isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_table_matches_scalar_lower_bound() {
+        let mut rng = Pcg64::new(0x51D1);
+        let tables = available();
+        for n_real in [1usize, 2, 3, 5, 31, 32, 63, 100, 255] {
+            let p2 = n_real.next_power_of_two();
+            let mut table: Vec<f32> = (0..n_real).map(|_| rng.normal() as f32).collect();
+            table.sort_unstable_by(f32::total_cmp);
+            table.resize(p2, f32::INFINITY);
+            let values = adversarial_values(&mut rng, &table[..n_real], 200);
+            for len in (0..=33).chain([values.len()]) {
+                let vals = &values[..len];
+                let mut want = vec![0u32; len];
+                (SCALAR.lower_bound)(vals, &table, n_real, &mut want);
+                // Independent oracle: partition_point over the real slots.
+                for (i, &v) in vals.iter().enumerate() {
+                    assert_eq!(
+                        want[i] as usize,
+                        table[..n_real].partition_point(|&b| b <= v)
+                    );
+                }
+                for t in &tables {
+                    let mut got = vec![u32::MAX; len];
+                    (t.lower_bound)(vals, &table, n_real, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "lower_bound {} n_real={n_real} len={len}",
+                        t.isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_wrapper_falls_back_without_padding() {
+        // n_real = 100 needs 128 padded slots; a 101-slot table (the layout
+        // `build_boundaries` produces for odd bin counts) takes the scalar
+        // path and still matches partition_point.
+        let mut rng = Pcg64::new(0x51D2);
+        let mut table: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        table.sort_unstable_by(f32::total_cmp);
+        table.push(f32::INFINITY);
+        let values = adversarial_values(&mut rng, &table[..100], 64);
+        let mut got = vec![0u32; values.len()];
+        route_lower_bound_block(&values, &table, 100, &mut got);
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(got[i] as usize, table[..100].partition_point(|&b| b <= v));
+        }
+    }
+
+    #[test]
+    fn every_table_matches_scalar_subtract() {
+        let mut rng = Pcg64::new(0x51D3);
+        let tables = available();
+        for len in (0..=33).chain([1024]) {
+            let parent: Vec<u32> = (0..len).map(|_| rng.index(1000) as u32).collect();
+            // Mix of under- and over-subtraction to exercise saturation.
+            let child: Vec<u32> = parent
+                .iter()
+                .map(|&p| {
+                    if rng.index(4) == 0 {
+                        p + rng.index(10) as u32 // would underflow: must clamp to 0
+                    } else {
+                        rng.index(p as usize + 1) as u32
+                    }
+                })
+                .collect();
+            let mut want = vec![0u32; len];
+            (SCALAR.subtract_u32)(&parent, &child, &mut want);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(*w, parent[i].saturating_sub(child[i]));
+            }
+            for t in &tables {
+                let mut got = vec![u32::MAX; len];
+                (t.subtract_u32)(&parent, &child, &mut got);
+                assert_eq!(got, want, "subtract {} len={len}", t.isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_table_matches_scalar_gathers_bitwise() {
+        let mut rng = Pcg64::new(0x51D4);
+        let tables = available();
+        let span = 400usize;
+        let lo = 12345u32;
+        let c0: Vec<f32> = (0..span).map(|_| rng.normal() as f32).collect();
+        let c1: Vec<f32> = (0..span).map(|_| (rng.normal() * 3.0) as f32).collect();
+        for len in (0..=33).chain([333]) {
+            // Unsorted, repeating ids inside [lo, lo+span).
+            let ids: Vec<u32> = (0..len).map(|_| lo + rng.index(span) as u32).collect();
+            let (w0, w1) = (0.73421f32, -1.91113f32);
+            let mut want = vec![0f32; len];
+            (SCALAR.gather1)(&ids, lo, &c0, w0, &mut want);
+            for (k, &i) in ids.iter().enumerate() {
+                assert_eq!(want[k].to_bits(), (w0 * c0[(i - lo) as usize]).to_bits());
+            }
+            for t in &tables {
+                let mut got = vec![f32::NAN; len];
+                (t.gather1)(&ids, lo, &c0, w0, &mut got);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "gather1 {} len={len}", t.isa.name());
+            }
+            (SCALAR.gather2)(&ids, lo, &c0, &c1, w0, w1, &mut want);
+            for (k, &i) in ids.iter().enumerate() {
+                let j = (i - lo) as usize;
+                assert_eq!(want[k].to_bits(), (w0 * c0[j] + w1 * c1[j]).to_bits());
+            }
+            for t in &tables {
+                let mut got = vec![f32::NAN; len];
+                (t.gather2)(&ids, lo, &c0, &c1, w0, w1, &mut got);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "gather2 {} len={len}", t.isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_selects_scalar_or_best_detected() {
+        // `ACTIVE` is process-global and concurrent lib tests train
+        // forests (training re-applies `config.simd`), so this test pins
+        // the *selection functions* — which are pure — rather than the
+        // global state, which a racing trainer could flip between a store
+        // and a load. (The race is harmless for outputs: every table is
+        // bit-identical.)
+        assert_eq!(SCALAR.isa, Isa::Scalar);
+        let avail = available();
+        assert_eq!(avail[0].isa, Isa::Scalar, "scalar is always runnable");
+        // `set_enabled(true)` stores `detect_best()`; with no env override
+        // that must be the most capable runnable table.
+        if !env_forces_scalar() {
+            assert_eq!(detect_best().isa, avail.last().unwrap().isa);
+        } else {
+            assert_eq!(detect_best().isa, Isa::Scalar);
+        }
+        // Smoke the toggle both ways: whatever lands in ACTIVE must be one
+        // of the runnable tables.
+        set_enabled(false);
+        assert!(avail.iter().any(|k| k.isa == active_isa()));
+        set_enabled(true);
+        assert!(avail.iter().any(|k| k.isa == active_isa()));
+    }
+}

@@ -1,0 +1,85 @@
+//! aarch64 NEON kernel table. NEON is baseline on aarch64, so the table is
+//! installed unconditionally there. `vcleq_f32` is an ordered `<=` (false
+//! on NaN), matching the scalar predicate; lane counts come from shifting
+//! the all-ones compare lanes down to 1 and horizontally adding, which is
+//! the same counting the portable bitmask loops do. NEON has no hardware
+//! gather, so the lower-bound and projection-gather entries reuse the
+//! scalar kernels (bit-identical by definition).
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::{scalar, Isa, Kernels};
+
+pub(super) static NEON: Kernels = Kernels {
+    isa: Isa::Neon,
+    route16: route16_neon,
+    route8: route8_neon,
+    lower_bound: scalar::lower_bound,
+    subtract_u32: subtract_neon,
+    gather1: scalar::gather1,
+    gather2: scalar::gather2,
+};
+
+/// Count boundaries `<= v` across `quads` 4-lane groups starting at `p`.
+///
+/// # Safety
+/// `p` must be valid for reading `quads * 4` f32 values.
+#[inline(always)]
+unsafe fn count_le(p: *const f32, quads: usize, vv: float32x4_t) -> u32 {
+    let mut total = 0u32;
+    for q in 0..quads {
+        let m = vcleq_f32(vld1q_f32(p.add(q * 4)), vv);
+        total += vaddvq_u32(vshrq_n_u32::<31>(m));
+    }
+    total
+}
+
+fn route16_neon(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 16 && fine.len() >= 256);
+    // SAFETY: lengths asserted; `base <= 240` so the fine group is in
+    // bounds; NEON is baseline on aarch64.
+    unsafe {
+        for (o, &v) in out.iter_mut().zip(values) {
+            let vv = vdupq_n_f32(v);
+            let g = (count_le(coarse.as_ptr(), 4, vv) as usize).min(15);
+            let base = g * 16;
+            let k = count_le(fine.as_ptr().add(base), 4, vv) as usize;
+            *o = ((base + k).min(255)) as u32;
+        }
+    }
+}
+
+fn route8_neon(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 8 && fine.len() >= 64);
+    // SAFETY: as above with 8-slot groups (`base <= 56`).
+    unsafe {
+        for (o, &v) in out.iter_mut().zip(values) {
+            let vv = vdupq_n_f32(v);
+            let g = (count_le(coarse.as_ptr(), 2, vv) as usize).min(7);
+            let base = g * 8;
+            let k = count_le(fine.as_ptr().add(base), 2, vv) as usize;
+            *o = ((base + k).min(63)) as u32;
+        }
+    }
+}
+
+/// `vqsubq_u32` is exactly per-lane `saturating_sub`.
+fn subtract_neon(parent: &[u32], child: &[u32], out: &mut [u32]) {
+    let n = out.len();
+    debug_assert!(parent.len() == n && child.len() == n);
+    let mut i = 0usize;
+    // SAFETY: all loads/stores stay within the first `n - n % 4` elements.
+    unsafe {
+        while i + 4 <= n {
+            let p = vld1q_u32(parent.as_ptr().add(i));
+            let c = vld1q_u32(child.as_ptr().add(i));
+            vst1q_u32(out.as_mut_ptr().add(i), vqsubq_u32(p, c));
+            i += 4;
+        }
+    }
+    for k in i..n {
+        out[k] = parent[k].saturating_sub(child[k]);
+    }
+}

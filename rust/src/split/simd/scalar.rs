@@ -1,0 +1,55 @@
+//! Scalar reference kernels — the always-compiled fallback table and the
+//! twin every accelerated kernel is pinned against. These must stay
+//! loop-for-loop identical to the semantics the callers had before runtime
+//! dispatch existed: portable branch-free two-level routing, binary-search
+//! lower bound, `saturating_sub`, and the exact scalar-order projection
+//! arithmetic (`w*c` / `w0*c0 + w1*c1`).
+
+use crate::split::vectorized::{route_16x16_portable, route_8x8_portable};
+
+pub(super) fn route16(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    for (o, &v) in out.iter_mut().zip(values) {
+        *o = route_16x16_portable(v, coarse, fine) as u32;
+    }
+}
+
+pub(super) fn route8(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    for (o, &v) in out.iter_mut().zip(values) {
+        *o = route_8x8_portable(v, coarse, fine) as u32;
+    }
+}
+
+pub(super) fn lower_bound(values: &[f32], table: &[f32], n_real: usize, out: &mut [u32]) {
+    let t = &table[..n_real];
+    for (o, &v) in out.iter_mut().zip(values) {
+        *o = t.partition_point(|&b| b <= v) as u32;
+    }
+}
+
+pub(super) fn subtract_u32(parent: &[u32], child: &[u32], out: &mut [u32]) {
+    for ((o, &p), &c) in out.iter_mut().zip(parent).zip(child) {
+        *o = p.saturating_sub(c);
+    }
+}
+
+pub(super) fn gather1(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
+    for (o, &i) in out.iter_mut().zip(ids) {
+        *o = w * col[(i - lo) as usize];
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gather2(
+    ids: &[u32],
+    lo: u32,
+    c0: &[f32],
+    c1: &[f32],
+    w0: f32,
+    w1: f32,
+    out: &mut [f32],
+) {
+    for (o, &i) in out.iter_mut().zip(ids) {
+        let k = (i - lo) as usize;
+        *o = w0 * c0[k] + w1 * c1[k];
+    }
+}

@@ -1,0 +1,276 @@
+//! x86-64 kernel tables: AVX2 and AVX-512.
+//!
+//! Every comparison is `_CMP_LE_OQ` — ordered, non-signalling `b <= v`,
+//! false on NaN — the exact predicate of the scalar `(b <= v) as u32` and
+//! `partition_point(|&b| b <= v)` twins, so mask popcounts equal scalar
+//! compare counts bit-for-bit. Integer kernels (subtract, bin counting) are
+//! exact at any lane width; the gather kernels do per-lane mul/add in the
+//! same order as the scalar loop and are never contracted to FMA.
+//!
+//! The AVX-512 table only upgrades the two compare-route kernels (512/256-bit
+//! mask compares, mirroring the long-proven compile-time paths that used to
+//! live in `split/vectorized.rs`); lower-bound and the gathers are
+//! gather-port-bound and the subtract is load/store-bound, so 512-bit lanes
+//! buy nothing there and the table reuses the AVX2 entries.
+//!
+//! Safety: the `pub(super)` wrappers are only ever reached through the
+//! kernel tables, which `detect_best`/`available` install strictly after
+//! `is_x86_feature_detected!` confirms the matching features.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::{Isa, Kernels};
+
+pub(super) static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    route16: route16_avx2_entry,
+    route8: route8_avx2_entry,
+    lower_bound: lower_bound_avx2_entry,
+    subtract_u32: subtract_avx2_entry,
+    gather1: gather1_avx2_entry,
+    gather2: gather2_avx2_entry,
+};
+
+pub(super) static AVX512: Kernels = Kernels {
+    isa: Isa::Avx512,
+    route16: route16_avx512_entry,
+    route8: route8_avx512_entry,
+    lower_bound: lower_bound_avx2_entry,
+    subtract_u32: subtract_avx2_entry,
+    gather1: gather1_avx2_entry,
+    gather2: gather2_avx2_entry,
+};
+
+fn route16_avx2_entry(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    // SAFETY: table installed only after avx2 was detected.
+    unsafe { route16_avx2(values, coarse, fine, out) }
+}
+
+fn route8_avx2_entry(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    // SAFETY: as above.
+    unsafe { route8_avx2(values, coarse, fine, out) }
+}
+
+fn lower_bound_avx2_entry(values: &[f32], table: &[f32], n_real: usize, out: &mut [u32]) {
+    // SAFETY: as above; padding contract enforced by route_lower_bound_block.
+    unsafe { lower_bound_avx2(values, table, n_real, out) }
+}
+
+fn subtract_avx2_entry(parent: &[u32], child: &[u32], out: &mut [u32]) {
+    // SAFETY: as above.
+    unsafe { subtract_avx2(parent, child, out) }
+}
+
+fn gather1_avx2_entry(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
+    // SAFETY: as above; every `ids[k] - lo` indexes inside `col` (caller
+    // contract shared with the scalar twin, which would panic otherwise).
+    unsafe { gather1_avx2(ids, lo, col, w, out) }
+}
+
+fn gather2_avx2_entry(
+    ids: &[u32],
+    lo: u32,
+    c0: &[f32],
+    c1: &[f32],
+    w0: f32,
+    w1: f32,
+    out: &mut [f32],
+) {
+    // SAFETY: as above.
+    unsafe { gather2_avx2(ids, lo, c0, c1, w0, w1, out) }
+}
+
+fn route16_avx512_entry(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    // SAFETY: table installed only after avx512f+avx512vl were detected.
+    unsafe { route16_avx512(values, coarse, fine, out) }
+}
+
+fn route8_avx512_entry(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    // SAFETY: as above.
+    unsafe { route8_avx512(values, coarse, fine, out) }
+}
+
+/// 16×16 two-level route: the coarse rank is two 8-lane compares whose
+/// movemasks are popcounted together, the fine rank the same inside the
+/// selected group — identical counting to the portable bitmask loops.
+#[target_feature(enable = "avx2")]
+unsafe fn route16_avx2(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 16 && fine.len() >= 256);
+    let c0 = _mm256_loadu_ps(coarse.as_ptr());
+    let c1 = _mm256_loadu_ps(coarse.as_ptr().add(8));
+    for (o, &v) in out.iter_mut().zip(values) {
+        let vv = _mm256_set1_ps(v);
+        let m = (_mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(c0, vv)) as u32)
+            | ((_mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(c1, vv)) as u32) << 8);
+        let base = (m.count_ones() as usize).min(15) * 16;
+        let g0 = _mm256_loadu_ps(fine.as_ptr().add(base));
+        let g1 = _mm256_loadu_ps(fine.as_ptr().add(base + 8));
+        let k = (_mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(g0, vv)).count_ones()
+            + _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(g1, vv)).count_ones())
+            as usize;
+        *o = ((base + k).min(255)) as u32;
+    }
+}
+
+/// 8×8 two-level route: one 8-lane compare per rank.
+#[target_feature(enable = "avx2")]
+unsafe fn route8_avx2(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 8 && fine.len() >= 64);
+    let cb = _mm256_loadu_ps(coarse.as_ptr());
+    for (o, &v) in out.iter_mut().zip(values) {
+        let vv = _mm256_set1_ps(v);
+        let g = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(cb, vv)).count_ones() as usize;
+        let base = g.min(7) * 8;
+        let grp = _mm256_loadu_ps(fine.as_ptr().add(base));
+        let k = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(grp, vv)).count_ones() as usize;
+        *o = ((base + k).min(63)) as u32;
+    }
+}
+
+/// The paper's §4.2 sequence, runtime-dispatched: broadcast, two 16-lane
+/// mask compares with popcount, address math.
+#[target_feature(enable = "avx512f")]
+unsafe fn route16_avx512(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 16 && fine.len() >= 256);
+    let cb = _mm512_loadu_ps(coarse.as_ptr());
+    for (o, &v) in out.iter_mut().zip(values) {
+        let vv = _mm512_set1_ps(v);
+        let g = (_mm512_cmp_ps_mask::<_CMP_LE_OQ>(cb, vv).count_ones() as usize).min(15);
+        let base = g * 16;
+        let grp = _mm512_loadu_ps(fine.as_ptr().add(base));
+        let k = _mm512_cmp_ps_mask::<_CMP_LE_OQ>(grp, vv).count_ones() as usize;
+        *o = ((base + k).min(255)) as u32;
+    }
+}
+
+/// 8×8 route via the 256-bit mask compares (avx512vl).
+#[target_feature(enable = "avx512f", enable = "avx512vl")]
+unsafe fn route8_avx512(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
+    assert!(coarse.len() >= 8 && fine.len() >= 64);
+    let cb = _mm256_loadu_ps(coarse.as_ptr());
+    for (o, &v) in out.iter_mut().zip(values) {
+        let vv = _mm256_set1_ps(v);
+        let g = (_mm256_cmp_ps_mask::<_CMP_LE_OQ>(cb, vv).count_ones() as usize).min(7);
+        let base = g * 8;
+        let grp = _mm256_loadu_ps(fine.as_ptr().add(base));
+        let k = _mm256_cmp_ps_mask::<_CMP_LE_OQ>(grp, vv).count_ones() as usize;
+        *o = ((base + k).min(63)) as u32;
+    }
+}
+
+/// Branchless lower bound, 8 values per iteration: a fixed-trip binary
+/// search over the pow2 +∞-padded table. Each step gathers the probe
+/// boundary for all 8 lanes and conditionally advances `base` by `half`
+/// (the compare mask is all-ones per lane, so `mask & half` adds exactly
+/// `half` where the probe was `<= v`). Loop invariant: every lane's `base`
+/// stays `< p2`, so every gather index is in bounds. The +∞ pads compare
+/// true only for `v = +∞`; the final unsigned clamp to `n_real` makes that
+/// case equal the scalar `partition_point` over the real slots.
+#[target_feature(enable = "avx2")]
+unsafe fn lower_bound_avx2(values: &[f32], table: &[f32], n_real: usize, out: &mut [u32]) {
+    let p2 = n_real.next_power_of_two();
+    debug_assert!(table.len() >= p2);
+    let clamp = _mm256_set1_epi32(n_real as i32);
+    let n = values.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(values.as_ptr().add(i));
+        let mut base = _mm256_setzero_si256();
+        let mut span = p2;
+        while span > 1 {
+            let half = span / 2;
+            let idx = _mm256_add_epi32(base, _mm256_set1_epi32(half as i32 - 1));
+            let probe = _mm256_i32gather_ps::<4>(table.as_ptr(), idx);
+            let le = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LE_OQ>(probe, v));
+            base = _mm256_add_epi32(base, _mm256_and_si256(le, _mm256_set1_epi32(half as i32)));
+            span = half;
+        }
+        // One last compare at the landing slot (lanes are -1 where true, so
+        // subtracting the mask adds 1), then clamp past-the-pad counts.
+        let probe = _mm256_i32gather_ps::<4>(table.as_ptr(), base);
+        let le = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LE_OQ>(probe, v));
+        base = _mm256_sub_epi32(base, le);
+        base = _mm256_min_epu32(base, clamp);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, base);
+        i += 8;
+    }
+    let real = &table[..n_real];
+    for k in i..n {
+        out[k] = real.partition_point(|&b| b <= values[k]) as u32;
+    }
+}
+
+/// Saturating u32 subtract: `max_epu32(p, c) - c` clamps negatives to 0,
+/// exactly `p.saturating_sub(c)` per lane.
+#[target_feature(enable = "avx2")]
+unsafe fn subtract_avx2(parent: &[u32], child: &[u32], out: &mut [u32]) {
+    let n = out.len();
+    debug_assert!(parent.len() == n && child.len() == n);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let p = _mm256_loadu_si256(parent.as_ptr().add(i) as *const __m256i);
+        let c = _mm256_loadu_si256(child.as_ptr().add(i) as *const __m256i);
+        let d = _mm256_sub_epi32(_mm256_max_epu32(p, c), c);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, d);
+        i += 8;
+    }
+    for k in i..n {
+        out[k] = parent[k].saturating_sub(child[k]);
+    }
+}
+
+/// 1-term projection gather. `ids - lo` is wrapping i32 arithmetic, but the
+/// true offset is always in `[0, col.len())` with `col.len() < 2^31`
+/// (wrapper-checked), so the lane value is the exact non-negative index.
+#[target_feature(enable = "avx2")]
+unsafe fn gather1_avx2(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
+    let n = ids.len();
+    let wv = _mm256_set1_ps(w);
+    let lov = _mm256_set1_epi32(lo as i32);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let idv = _mm256_loadu_si256(ids.as_ptr().add(i) as *const __m256i);
+        let idx = _mm256_sub_epi32(idv, lov);
+        let c = _mm256_i32gather_ps::<4>(col.as_ptr(), idx);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(wv, c));
+        i += 8;
+    }
+    for k in i..n {
+        out[k] = w * col[(ids[k] - lo) as usize];
+    }
+}
+
+/// 2-term projection gather: per-lane `w0*c0 + w1*c1` as separate mul/add
+/// (no FMA), matching the scalar expression bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn gather2_avx2(
+    ids: &[u32],
+    lo: u32,
+    c0: &[f32],
+    c1: &[f32],
+    w0: f32,
+    w1: f32,
+    out: &mut [f32],
+) {
+    let n = ids.len();
+    let w0v = _mm256_set1_ps(w0);
+    let w1v = _mm256_set1_ps(w1);
+    let lov = _mm256_set1_epi32(lo as i32);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let idv = _mm256_loadu_si256(ids.as_ptr().add(i) as *const __m256i);
+        let idx = _mm256_sub_epi32(idv, lov);
+        let a = _mm256_i32gather_ps::<4>(c0.as_ptr(), idx);
+        let b = _mm256_i32gather_ps::<4>(c1.as_ptr(), idx);
+        let r = _mm256_add_ps(_mm256_mul_ps(w0v, a), _mm256_mul_ps(w1v, b));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    for k in i..n {
+        let j = (ids[k] - lo) as usize;
+        out[k] = w0 * c0[j] + w1 * c1[j];
+    }
+}

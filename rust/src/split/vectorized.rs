@@ -6,14 +6,18 @@
 //! with two 16-wide vector compares over a *two-level deterministic skip
 //! list*: a coarse vector holding every 16th boundary selects a group of
 //! 16, a second compare within the group selects the bin. 7 instructions on
-//! AVX-512; here the same algorithm is written over fixed 16-lane arrays
-//! with branch-free lane counts, which LLVM auto-vectorizes to `vcmpps` +
-//! mask-popcount under `-C target-cpu=native` (and remains branch-free on
-//! any target). A 64-bin 8×8 variant mirrors the paper's AVX-2 version.
+//! AVX-512. The block fill below routes through the runtime-dispatched
+//! kernels in [`super::simd`] (explicit AVX-512/AVX2/NEON `std::arch` code
+//! picked per-CPU, no `-C target-cpu=native` required); the portable
+//! single-value routes in this file are branch-free scalar code that doubles
+//! as the dispatch oracle. A 64-bin 8×8 variant mirrors the paper's AVX-2
+//! version.
 //!
 //! Routing semantics match the binary-search baseline exactly:
 //! `bin(v) = #{ boundaries b : b <= v }` — verified bit-for-bit by the
 //! equivalence tests below and exercised again by the Fig 6 bench.
+
+use super::simd;
 
 /// Geometry of a two-level layout: `groups × group` bins.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,41 +59,13 @@ pub fn build_coarse(boundaries: &[f32], layout: TwoLevelLayout, coarse: &mut Vec
 /// Route one value through the 16×16 structure. `coarse` and `fine` must be
 /// the arrays prepared by [`build_coarse`] (fine = full padded boundaries).
 ///
-/// On AVX-512 targets this compiles to the paper's 7-instruction sequence
-/// (broadcast, 2 × {16-lane compare → mask → popcount}, address math); the
-/// portable fallback is branch-free scalar code and doubles as the oracle
-/// for the SIMD path in tests.
+/// Single-value convenience over the portable route — the block fill paths
+/// go through the runtime-dispatched kernels in [`super::simd`] instead
+/// (AVX-512 gets the paper's 7-instruction sequence there without needing
+/// `-C target-cpu=native`).
 #[inline(always)]
 pub fn route_16x16(v: f32, coarse: &[f32], fine: &[f32]) -> usize {
-    #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
-    {
-        route_16x16_avx512(v, coarse, fine)
-    }
-    #[cfg(not(all(target_arch = "x86_64", target_feature = "avx512f")))]
-    {
-        route_16x16_portable(v, coarse, fine)
-    }
-}
-
-/// The AVX-512 implementation of §4.2: two `vcmpps` + `popcnt` pairs.
-#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
-#[inline(always)]
-pub fn route_16x16_avx512(v: f32, coarse: &[f32], fine: &[f32]) -> usize {
-    use core::arch::x86_64::*;
-    assert!(coarse.len() >= 16 && fine.len() >= 256);
-    // SAFETY: lengths asserted above; loads are unaligned-tolerant
-    // (_mm512_loadu_ps); `base <= 240` so `fine[base..base+16]` is in
-    // bounds; the compare-mask semantics (b <= v, false on NaN) match the
-    // portable path, verified by `avx512_matches_portable`.
-    unsafe {
-        let vv = _mm512_set1_ps(v);
-        let cb = _mm512_loadu_ps(coarse.as_ptr());
-        let g = (_mm512_cmp_ps_mask::<_CMP_LE_OQ>(cb, vv).count_ones() as usize).min(15);
-        let base = g * 16;
-        let grp = _mm512_loadu_ps(fine.as_ptr().add(base));
-        let k = _mm512_cmp_ps_mask::<_CMP_LE_OQ>(grp, vv).count_ones() as usize;
-        (base + k).min(255)
-    }
+    route_16x16_portable(v, coarse, fine)
 }
 
 /// Portable branch-free routing (also the test oracle for the SIMD path).
@@ -122,28 +98,11 @@ pub fn route_16x16_portable(v: f32, coarse: &[f32], fine: &[f32]) -> usize {
     (base + m2.count_ones() as usize).min(255)
 }
 
-/// 64-bin 8×8 variant (paper's AVX-2 implementation).
+/// 64-bin 8×8 variant (paper's AVX-2 implementation — the vector version
+/// lives in [`super::simd`]; this is the single-value portable route).
 #[inline(always)]
 pub fn route_8x8(v: f32, coarse: &[f32], fine: &[f32]) -> usize {
-    #[cfg(all(target_arch = "x86_64", target_feature = "avx512f", target_feature = "avx512vl"))]
-    {
-        use core::arch::x86_64::*;
-        assert!(coarse.len() >= 8 && fine.len() >= 64);
-        // SAFETY: as in route_16x16_avx512; 256-bit lanes for 8-wide groups.
-        unsafe {
-            let vv = _mm256_set1_ps(v);
-            let cb = _mm256_loadu_ps(coarse.as_ptr());
-            let g = (_mm256_cmp_ps_mask::<_CMP_LE_OQ>(cb, vv).count_ones() as usize).min(7);
-            let base = g * 8;
-            let grp = _mm256_loadu_ps(fine.as_ptr().add(base));
-            let k = _mm256_cmp_ps_mask::<_CMP_LE_OQ>(grp, vv).count_ones() as usize;
-            return (base + k).min(63);
-        }
-    }
-    #[cfg(not(all(target_arch = "x86_64", target_feature = "avx512f", target_feature = "avx512vl")))]
-    {
-        route_8x8_portable(v, coarse, fine)
-    }
+    route_8x8_portable(v, coarse, fine)
 }
 
 /// Portable branch-free 8×8 routing (oracle for the SIMD path).
@@ -185,33 +144,41 @@ pub fn fill_two_level(
         labels.iter().all(|&l| (l as usize) < n_classes),
         "label out of range for {n_classes} classes"
     );
-    match (layout.groups, n_classes) {
-        (16, 2) => {
-            // §Perf note: a 4-way unroll with split sub-histograms was
-            // tried and *hurt* (-40%: four inlined 16-lane routes blow the
-            // register budget); the simple fused loop below is the fastest
-            // variant measured — see EXPERIMENTS.md §Perf.
-            for (&v, &l) in values.iter().zip(labels) {
-                let bin = route_16x16(v, coarse, boundaries);
-                counts[bin * 2 + l as usize] += 1;
-            }
-        }
-        (16, _) => {
-            for (&v, &l) in values.iter().zip(labels) {
-                let bin = route_16x16(v, coarse, boundaries);
-                counts[bin * n_classes + l as usize] += 1;
-            }
-        }
-        (8, 2) => {
-            for (&v, &l) in values.iter().zip(labels) {
-                let bin = route_8x8(v, coarse, boundaries);
-                counts[bin * 2 + l as usize] += 1;
-            }
-        }
+    // Route a whole chunk through the runtime-dispatched kernel into a
+    // stack buffer, then scatter the counts. The chunk amortizes the
+    // indirect kernel call; the scatter itself stays scalar by necessity —
+    // `counts[bin·nc + l] += 1` is a read-modify-write with intra-chunk
+    // conflicts (and the §Perf note below rules out splitting it).
+    let route: fn(&[f32], &[f32], &[f32], &mut [u32]) = match (layout.groups, layout.group_size) {
+        (16, 16) => simd::route16_block,
+        (8, 8) => simd::route8_block,
         _ => {
             for (&v, &l) in values.iter().zip(labels) {
                 let bin = route_generic(v, boundaries, coarse, layout);
                 counts[bin * n_classes + l as usize] += 1;
+            }
+            return;
+        }
+    };
+    let mut bins = [0u32; simd::ROUTE_CHUNK];
+    for (vchunk, lchunk) in values
+        .chunks(simd::ROUTE_CHUNK)
+        .zip(labels.chunks(simd::ROUTE_CHUNK))
+    {
+        let routed = &mut bins[..vchunk.len()];
+        route(vchunk, coarse, boundaries, routed);
+        if n_classes == 2 {
+            // §Perf note: a 4-way unroll with split sub-histograms was
+            // tried and *hurt* (-40%: four inlined 16-lane routes blow the
+            // register budget); the simple chunked route + single scatter
+            // below is the fastest variant measured — see EXPERIMENTS.md
+            // §Perf.
+            for (&bin, &l) in routed.iter().zip(lchunk) {
+                counts[bin as usize * 2 + l as usize] += 1;
+            }
+        } else {
+            for (&bin, &l) in routed.iter().zip(lchunk) {
+                counts[bin as usize * n_classes + l as usize] += 1;
             }
         }
     }
@@ -349,40 +316,25 @@ mod tests {
         }
         assert_eq!(got, want);
     }
-}
 
-#[cfg(all(test, target_arch = "x86_64", target_feature = "avx512f"))]
-mod simd_tests {
-    use super::*;
-    use crate::rng::Pcg64;
-
-    /// The AVX-512 fast path must agree with the portable oracle on random,
-    /// boundary-equal, NaN and infinite inputs.
     #[test]
-    fn avx512_matches_portable() {
-        let mut rng = Pcg64::new(99);
-        for _ in 0..10 {
-            let mut b: Vec<f32> = (0..255).map(|_| rng.normal() as f32).collect();
-            b.sort_unstable_by(f32::total_cmp);
-            b.push(f32::INFINITY);
-            let layout = TwoLevelLayout::for_bins(256).unwrap();
-            let mut coarse = Vec::new();
-            build_coarse(&b, layout, &mut coarse);
-            for _ in 0..5000 {
-                let v = (rng.normal() * 2.0) as f32;
-                assert_eq!(
-                    route_16x16_avx512(v, &coarse, &b),
-                    route_16x16_portable(v, &coarse, &b),
-                    "v={v}"
-                );
-            }
-            for v in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, b[0], b[100], b[254]] {
-                assert_eq!(
-                    route_16x16_avx512(v, &coarse, &b),
-                    route_16x16_portable(v, &coarse, &b),
-                    "v={v}"
-                );
-            }
+    fn fill_handles_empty_bins_single_class_and_chunk_remainders() {
+        // Every sample in one bin (all other bins empty), one class only,
+        // at lengths straddling the route-chunk boundary: the chunked
+        // route + scatter must put exactly n counts in exactly one slot.
+        let layout = TwoLevelLayout::for_bins(256).unwrap();
+        let mut b: Vec<f32> = (0..255).map(|i| i as f32).collect();
+        b.push(f32::INFINITY);
+        let mut coarse = Vec::new();
+        build_coarse(&b, layout, &mut coarse);
+        for n in [0usize, 1, 7, 33, 255, 256, 257, 1000] {
+            let values = vec![42.25f32; n];
+            let labels = vec![0u16; n];
+            let mut got = vec![0u32; 256 * 2];
+            fill_two_level(&values, &labels, &b, &coarse, layout, 2, &mut got);
+            let mut want = vec![0u32; 256 * 2];
+            want[43 * 2] = n as u32; // boundaries 0..=42 are <= 42.25
+            assert_eq!(got, want, "n={n}");
         }
     }
 }

@@ -140,6 +140,46 @@ fn subtraction_on_off_forests_are_byte_identical_across_threads() {
 }
 
 #[test]
+fn simd_on_off_forests_are_byte_identical_across_threads_and_engines() {
+    // The runtime-dispatched SIMD kernels must be pure optimizations: the
+    // v2 bytes are identical with `--simd on` (the best ISA this CPU has)
+    // and `--simd off` (forced scalar reference kernels), at any thread
+    // count, on both the fused and the classic engine. The workload is
+    // sized so the histogram tiers, sibling-subtraction pairs and the
+    // fused block walk all engage — i.e. every dispatched kernel (route,
+    // lower-bound fill, subtraction, projection gathers) actually runs.
+    let data = trunk(3000, 12, 0xF5);
+    let train_with = |simd: bool, fused: bool, threads: usize| {
+        let mut cfg = ForestConfig {
+            n_trees: 2,
+            n_threads: threads,
+            strategy: SplitStrategy::DynamicVectorized,
+            growth: GrowthMode::Frontier,
+            simd,
+            fused,
+            ..Default::default()
+        };
+        cfg.thresholds.sort_below = 256;
+        v2_bytes(&train_forest(&data, &cfg, 0xD15))
+    };
+    let reference = train_with(true, true, 1);
+    for threads in [1, 2, 8] {
+        for simd in [true, false] {
+            for fused in [true, false] {
+                if simd && fused && threads == 1 {
+                    continue; // the reference itself
+                }
+                assert_eq!(
+                    reference,
+                    train_with(simd, fused, threads),
+                    "forest bytes differ for simd={simd} fused={fused} at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn subtraction_engages_on_this_workload() {
     // Guard against the equivalence test above passing vacuously: the
     // same workload must actually route sibling pairs through the

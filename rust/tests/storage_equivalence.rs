@@ -2,9 +2,9 @@
 //! chunked-columnar-storage refactor): a forest trained off the
 //! memory-mapped `.sofc` backend must serialize to **byte-identical** v2
 //! files as one trained off the in-memory backend — at any thread count,
-//! for every split strategy, both growth modes and both
-//! `--hist_subtraction` values. The storage layer may only change where
-//! slices come from, never a single bit that reaches the trainer.
+//! for every split strategy, both growth modes, both `--hist_subtraction`
+//! values and both `--simd` settings. The storage layer may only change
+//! where slices come from, never a single bit that reaches the trainer.
 
 use soforest::config::{ForestConfig, GrowthMode};
 use soforest::coordinator::train_forest;
@@ -139,7 +139,7 @@ fn binned_backend_forests_are_byte_identical_across_every_axis() {
     colfile::write_dataset_v2(&float, &path, max_bins).expect("pack v2");
     let mapped = colfile::load_mapped(&path).expect("map v2");
     assert_eq!(mapped.backend_name(), "mmap-binned");
-    let train_with = |data: &Dataset, threads: usize, fused: bool, sub: bool| {
+    let train_with = |data: &Dataset, threads: usize, fused: bool, sub: bool, simd: bool| {
         let mut cfg = ForestConfig {
             n_trees: 2,
             n_threads: threads,
@@ -147,6 +147,7 @@ fn binned_backend_forests_are_byte_identical_across_every_axis() {
             growth: GrowthMode::Frontier,
             fused,
             hist_subtraction: sub,
+            simd,
             ..Default::default()
         };
         // Low enough that sibling pairs form and the histogram tier does
@@ -154,14 +155,23 @@ fn binned_backend_forests_are_byte_identical_across_every_axis() {
         cfg.thresholds.sort_below = 512;
         v2_bytes(&train_forest(data, &cfg, 0xB1))
     };
-    let reference = train_with(&ram_binned, 1, true, true);
+    let reference = train_with(&ram_binned, 1, true, true, true);
     for threads in [1usize, 2, 8] {
         for fused in [true, false] {
             for sub in [true, false] {
-                for (name, data) in [("ram-binned", &ram_binned), ("mmap-binned", &mapped)] {
+                // The SIMD axis rides the backend loop: the dispatched
+                // kernels (direct bin-id accumulate, routed fills,
+                // subtraction, projection gathers) must leave the binned
+                // path byte-identical too.
+                for (name, data, simd) in [
+                    ("ram-binned", &ram_binned, true),
+                    ("ram-binned/scalar", &ram_binned, false),
+                    ("mmap-binned", &mapped, true),
+                    ("mmap-binned/scalar", &mapped, false),
+                ] {
                     assert_eq!(
                         reference,
-                        train_with(data, threads, fused, sub),
+                        train_with(data, threads, fused, sub, simd),
                         "binned forest bytes differ \
                          ({name}, threads={threads}, fused={fused}, subtraction={sub})"
                     );
