@@ -10,9 +10,18 @@
 //! latency and `!timeout` shed, exactly like coordinated-omission-safe
 //! load generators do.
 //!
-//! Sweeps connections × target QPS, each point against a fresh server on
-//! an ephemeral port. Emits `BENCH_serve.json` (p50/p99/p999 latency,
-//! shed rate, achieved QPS per point) for `ci/bench_gate.py`.
+//! Sweeps connections × target QPS × metrics on/off, each point against a
+//! fresh server on an ephemeral port. Emits `BENCH_serve.json`
+//! (client-side p50/p99/p999 latency, shed rate, achieved QPS, plus the
+//! server's own histogram percentiles per point) for `ci/bench_gate.py`.
+//! The metrics-off leg is the overhead baseline: with recording disabled
+//! the same sweep measures what the histogram path costs.
+//!
+//! When the server answered everything (no timeouts/errors/refusals), the
+//! server-reported p99 is cross-checked against the harness p99: in-server
+//! time must sit at or below the client round trip (within one histogram
+//! bucket of resolution plus scheduling slack). A violation warns by
+//! default and fails under `SOFOREST_BENCH_SERVE_CHECK=1` (CI sets it).
 //!
 //! Overrides: `SOFOREST_BENCH_SERVE_SECS=2` (seconds per point),
 //! `SOFOREST_BENCH_SERVE_QPS=500,2000`, `SOFOREST_BENCH_SERVE_CONNS=1,4`.
@@ -23,7 +32,7 @@ use soforest::coordinator::train_forest;
 use soforest::data::synth::trunk::TrunkConfig;
 use soforest::forest::PackedForest;
 use soforest::rng::Pcg64;
-use soforest::serve::{percentile, serve_tcp, ServeConfig, Shutdown};
+use soforest::serve::{percentile, serve_tcp, ServeConfig, ServeStats, Shutdown};
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -61,6 +70,8 @@ struct Point {
     refused_conns: usize,
     lat_us: Vec<f64>,
     wall_s: f64,
+    /// The server's own drained snapshot (lock-free histogram side).
+    server: ServeStats,
 }
 
 /// Writer thread + in-thread reader for one connection. Responses are
@@ -134,10 +145,20 @@ fn drive_conn(addr: &str, line: &str, sched: &[Duration], t0: Instant) -> ConnOu
     out
 }
 
-/// Run one (conns, qps) point against a fresh server.
-fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs: f64) -> Point {
+/// Run one (conns, qps, metrics on/off) point against a fresh server.
+fn drive_point(
+    packed: &PackedForest,
+    line: &str,
+    conns: usize,
+    qps: usize,
+    secs: f64,
+    metrics_on: bool,
+) -> Point {
     let conns = conns.max(1);
-    let pf = std::env::temp_dir().join(format!("soforest_bench_serve_{conns}_{qps}"));
+    let pf = std::env::temp_dir().join(format!(
+        "soforest_bench_serve_{conns}_{qps}_{}",
+        if metrics_on { "on" } else { "off" }
+    ));
     std::fs::remove_file(&pf).ok();
     let shutdown = Shutdown::new();
     let cfg = ServeConfig {
@@ -148,6 +169,8 @@ fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs
         max_wait: Duration::from_micros(500),
         deadline: Duration::from_millis(100),
         drain: Duration::from_millis(500),
+        port_file: Some(pf.clone()),
+        metrics: metrics_on,
         ..Default::default()
     };
     let scheduled = ((qps as f64) * secs).round().max(1.0) as usize;
@@ -157,11 +180,9 @@ fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs
     }
     let outcomes: Mutex<Vec<ConnOutcome>> = Mutex::new(Vec::new());
     let mut wall_s = 0.0;
+    let mut server_stats = ServeStats::default();
     std::thread::scope(|scope| {
-        let server = scope.spawn(|| {
-            serve_tcp(packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown)
-                .expect("serve_tcp")
-        });
+        let server = scope.spawn(|| serve_tcp(packed, &cfg, &shutdown).expect("serve_tcp"));
         let addr = loop {
             match std::fs::read_to_string(&pf) {
                 Ok(s) if !s.is_empty() => break s,
@@ -188,8 +209,8 @@ fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs
         }
         wall_s = t0.elapsed().as_secs_f64();
         shutdown.request_stop();
-        let stats = server.join().expect("server thread");
-        eprintln!("  [server] {}", stats.summary());
+        server_stats = server.join().expect("server thread");
+        eprintln!("  [server] {}", server_stats.summary());
     });
     std::fs::remove_file(&pf).ok();
     let mut point = Point {
@@ -201,6 +222,7 @@ fn drive_point(packed: &PackedForest, line: &str, conns: usize, qps: usize, secs
         refused_conns: 0,
         lat_us: Vec::new(),
         wall_s,
+        server: server_stats,
     };
     for o in outcomes.into_inner().expect("outcomes") {
         point.sent += o.sent;
@@ -259,52 +281,87 @@ fn main() {
     let mut table = Table::new(&[
         "conns",
         "target_qps",
+        "metrics",
         "scheduled",
         "answered",
         "p50_us",
         "p99_us",
         "p999_us",
+        "srv_p99_us",
         "shed_rate",
         "achieved_qps",
     ]);
+    let hard_check = std::env::var("SOFOREST_BENCH_SERVE_CHECK").is_ok_and(|v| v == "1");
+    let mut check_failures: Vec<String> = Vec::new();
     let mut json_rows = String::new();
     let mut first = true;
     for &conns in &conns_sweep {
         for &qps in &qps_sweep {
-            eprintln!("# point: conns={conns} target_qps={qps}");
-            let p = drive_point(&packed, &line, conns, qps, secs);
-            let p50 = finite(percentile(&p.lat_us, 50.0));
-            let p99 = finite(percentile(&p.lat_us, 99.0));
-            let p999 = finite(percentile(&p.lat_us, 99.9));
-            // Shed = every scheduled request that did not come back as a
-            // scored answer: timeouts, refused connections, request lines
-            // never sent or never answered.
-            let shed_rate = 1.0 - p.ok as f64 / p.scheduled.max(1) as f64;
-            let achieved = p.ok as f64 / p.wall_s.max(1e-9);
-            table.row(&[
-                conns.to_string(),
-                qps.to_string(),
-                p.scheduled.to_string(),
-                p.ok.to_string(),
-                format!("{p50:.0}"),
-                format!("{p99:.0}"),
-                format!("{p999:.0}"),
-                format!("{shed_rate:.4}"),
-                format!("{achieved:.0}"),
-            ]);
-            if !first {
-                json_rows.push_str(",\n");
+            for metrics_on in [true, false] {
+                let mode = if metrics_on { "on" } else { "off" };
+                eprintln!("# point: conns={conns} target_qps={qps} metrics={mode}");
+                let p = drive_point(&packed, &line, conns, qps, secs, metrics_on);
+                let p50 = finite(percentile(&p.lat_us, 50.0));
+                let p99 = finite(percentile(&p.lat_us, 99.0));
+                let p999 = finite(percentile(&p.lat_us, 99.9));
+                let srv = &p.server.latency;
+                let srv_p50 = finite(srv.quantile(50.0));
+                let srv_p99 = finite(srv.quantile(99.0));
+                let srv_p999 = finite(srv.quantile(99.9));
+                // Shed = every scheduled request that did not come back as
+                // a scored answer: timeouts, refused connections, request
+                // lines never sent or never answered.
+                let shed_rate = 1.0 - p.ok as f64 / p.scheduled.max(1) as f64;
+                let achieved = p.ok as f64 / p.wall_s.max(1e-9);
+                // Cross-check (clean points only): the server's in-server
+                // p99 must sit at or below the client round-trip p99,
+                // within one histogram bucket of relative resolution
+                // (3.125% half-width → 12.5% is generous) plus fixed
+                // scheduling slack.
+                if metrics_on
+                    && p.timeouts == 0
+                    && p.errors == 0
+                    && p.refused_conns == 0
+                    && srv.count > 0
+                    && srv_p99 > p99 * 1.125 + 500.0
+                {
+                    let msg = format!(
+                        "conns={conns} qps={qps}: server p99 {srv_p99:.0}us \
+                         exceeds harness p99 {p99:.0}us + resolution"
+                    );
+                    eprintln!("# CHECK FAILED: {msg}");
+                    check_failures.push(msg);
+                }
+                table.row(&[
+                    conns.to_string(),
+                    qps.to_string(),
+                    mode.to_string(),
+                    p.scheduled.to_string(),
+                    p.ok.to_string(),
+                    format!("{p50:.0}"),
+                    format!("{p99:.0}"),
+                    format!("{p999:.0}"),
+                    format!("{srv_p99:.0}"),
+                    format!("{shed_rate:.4}"),
+                    format!("{achieved:.0}"),
+                ]);
+                if !first {
+                    json_rows.push_str(",\n");
+                }
+                first = false;
+                let _ = write!(
+                    json_rows,
+                    "    {{\"conns\": {conns}, \"target_qps\": {qps}, \
+                     \"metrics\": \"{mode}\", \"secs\": {secs}, \
+                     \"scheduled\": {}, \"sent\": {}, \"answered\": {}, \
+                     \"timeouts\": {}, \"errors\": {}, \"refused_conns\": {}, \
+                     \"p50_us\": {p50:.1}, \"p99_us\": {p99:.1}, \"p999_us\": {p999:.1}, \
+                     \"server_p50_us\": {srv_p50:.1}, \"server_p99_us\": {srv_p99:.1}, \
+                     \"server_p999_us\": {srv_p999:.1}, \"server_samples\": {}, \
+                     \"shed_rate\": {shed_rate:.6}, \"achieved_qps\": {achieved:.1}}}",
+                    p.scheduled, p.sent, p.ok, p.timeouts, p.errors, p.refused_conns, srv.count,
+                );
             }
-            first = false;
-            let _ = write!(
-                json_rows,
-                "    {{\"conns\": {conns}, \"target_qps\": {qps}, \"secs\": {secs}, \
-                 \"scheduled\": {}, \"sent\": {}, \"answered\": {}, \
-                 \"timeouts\": {}, \"errors\": {}, \"refused_conns\": {}, \
-                 \"p50_us\": {p50:.1}, \"p99_us\": {p99:.1}, \"p999_us\": {p999:.1}, \
-                 \"shed_rate\": {shed_rate:.6}, \"achieved_qps\": {achieved:.1}}}",
-                p.scheduled, p.sent, p.ok, p.timeouts, p.errors, p.refused_conns,
-            );
         }
     }
     table.print();
@@ -317,5 +374,9 @@ fn main() {
     match std::fs::write(out, &json) {
         Ok(()) => println!("\n# wrote {out}"),
         Err(e) => eprintln!("\n# could not write {out}: {e}"),
+    }
+    if !check_failures.is_empty() && hard_check {
+        eprintln!("# {} server-vs-harness p99 check(s) failed", check_failures.len());
+        std::process::exit(1);
     }
 }

@@ -31,7 +31,7 @@ import sys
 
 TOLERANCE = 0.15  # fail on >15% regression of the gated metric
 
-# bench file -> (key fields, gated metric, higher_is_better)
+# bench file -> (key fields, gated metrics, higher_is_better)
 SPECS = {
     "BENCH_train.json": {
         # "storage" distinguishes the backends the trainer can read from
@@ -40,7 +40,7 @@ SPECS = {
         # path); older baselines without a row simply stop matching and
         # are reported as dropped/new rows until re-recorded.
         "keys": ("growth", "threads", "hist_subtraction", "storage"),
-        "metric": "rows_per_s",
+        "metrics": ("rows_per_s",),
         "higher_is_better": True,
     },
     "BENCH_node_split.json": {
@@ -48,20 +48,25 @@ SPECS = {
         # the forced-scalar reference path as separate sweep points, so a
         # regression in either shows up on its own row.
         "keys": ("n", "simd"),
-        "metric": "fused_ns_per_sample",
+        "metrics": ("fused_ns_per_sample",),
         "higher_is_better": False,
     },
     "BENCH_predict.json": {
         "keys": ("rows",),
-        "metric": "batched_mt_rows_per_s",
+        "metrics": ("batched_mt_rows_per_s",),
         "higher_is_better": True,
     },
     "BENCH_serve.json": {
         # Open-loop serve-load harness (benches/serve_load.rs): rows are
-        # (connections, target arrival rate) sweep points; the gated
-        # metric is tail latency measured from the *scheduled* send time.
-        "keys": ("conns", "target_qps"),
-        "metric": "p99_us",
+        # (connections, target arrival rate, metrics on|off) sweep points.
+        # Two tails are gated per row: the harness-observed p99 measured
+        # from the *scheduled* send time (coordinated-omission-safe) and
+        # the server's own histogram p99 (server_p99_us, 0.0 on
+        # metrics=off rows, which the zero-baseline guard passes through).
+        # Older baselines without the "metrics" key field stop matching
+        # and are reported as dropped/new rows until re-recorded.
+        "keys": ("conns", "target_qps", "metrics"),
+        "metrics": ("p99_us", "server_p99_us"),
         "higher_is_better": False,
     },
 }
@@ -114,7 +119,7 @@ def main():
             if baseline is None
             else {row_key(r, spec["keys"]): r for r in baseline.get("results", [])}
         )
-        metric, higher = spec["metric"], spec["higher_is_better"]
+        higher = spec["higher_is_better"]
         arrow = "higher is better" if higher else "lower is better"
         if provisional:
             unarmed.append(fname)
@@ -124,32 +129,35 @@ def main():
                 f"artifact into `{BASELINE_DIR}/` (dropping `\"provisional\": true`) "
                 "to arm the gate."
             )
-        lines.append("")
-        lines.append(f"| {', '.join(spec['keys'])} | baseline {metric} | current {metric} | delta ({arrow}) | status |")
-        lines.append("|---|---|---|---|---|")
-        for key, cur in cur_rows.items():
-            cur_v = cur.get(metric)
-            base = base_rows.get(key)
-            if cur_v is None:
-                lines.append(f"| {fmt_key(key, spec['keys'])} | — | missing `{metric}` | — | :warning: |")
-                continue
-            if base is None or base.get(metric) is None:
-                lines.append(f"| {fmt_key(key, spec['keys'])} | — | {cur_v:.1f} | new row | recorded |")
-                continue
-            base_v = base[metric]
-            delta = (cur_v - base_v) / base_v if base_v else 0.0
-            regressed = (delta < -TOLERANCE) if higher else (delta > TOLERANCE)
-            status = ":x: REGRESSION" if regressed else ":white_check_mark:"
-            lines.append(
-                f"| {fmt_key(key, spec['keys'])} | {base_v:.1f} | {cur_v:.1f} | {delta:+.1%} | {status} |"
-            )
-            if regressed and not provisional:
-                regressions.append(
-                    f"{fname} [{fmt_key(key, spec['keys'])}]: {metric} {base_v:.1f} -> {cur_v:.1f} ({delta:+.1%})"
+        for metric in spec["metrics"]:
+            lines.append("")
+            lines.append(f"| {', '.join(spec['keys'])} | baseline {metric} | current {metric} | delta ({arrow}) | status |")
+            lines.append("|---|---|---|---|---|")
+            for key, cur in cur_rows.items():
+                cur_v = cur.get(metric)
+                base = base_rows.get(key)
+                if cur_v is None:
+                    # A metric this sweep point does not emit (e.g. an older
+                    # bench binary) is reported, never gated.
+                    lines.append(f"| {fmt_key(key, spec['keys'])} | — | missing `{metric}` | — | :warning: |")
+                    continue
+                if base is None or base.get(metric) is None:
+                    lines.append(f"| {fmt_key(key, spec['keys'])} | — | {cur_v:.1f} | new row | recorded |")
+                    continue
+                base_v = base[metric]
+                delta = (cur_v - base_v) / base_v if base_v else 0.0
+                regressed = (delta < -TOLERANCE) if higher else (delta > TOLERANCE)
+                status = ":x: REGRESSION" if regressed else ":white_check_mark:"
+                lines.append(
+                    f"| {fmt_key(key, spec['keys'])} | {base_v:.1f} | {cur_v:.1f} | {delta:+.1%} | {status} |"
                 )
-        for key in base_rows:
-            if key not in cur_rows:
-                lines.append(f"| {fmt_key(key, spec['keys'])} | (baseline only) | dropped | — | :warning: |")
+                if regressed and not provisional:
+                    regressions.append(
+                        f"{fname} [{fmt_key(key, spec['keys'])}]: {metric} {base_v:.1f} -> {cur_v:.1f} ({delta:+.1%})"
+                    )
+            for key in base_rows:
+                if key not in cur_rows:
+                    lines.append(f"| {fmt_key(key, spec['keys'])} | (baseline only) | dropped | — | :warning: |")
         lines.append("")
 
     if regressions:

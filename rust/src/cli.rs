@@ -114,7 +114,8 @@ COMMANDS:
              file (v1 float or v2 binned — mapped, blocked row gather)
              through a saved model: --model m.bin --data file.csv|t.sofc
              [--block 4096] [--threads N] [--out preds.csv]; reports
-             rows/s + block latency percentiles
+             rows/s + block latency percentiles (same histogram the serve
+             tier uses)
   serve      online serving loop with request batching; stdin -> stdout, or
              --tcp host:port (port 0 = ephemeral); --max-batch 64,
              --max-wait-us 2000, --proba, --port-file ready.addr,
@@ -127,7 +128,19 @@ COMMANDS:
              connections), --drain-ms 2000 (grace window after SIGINT/
              SIGTERM or the `!shutdown` admin line in stdio mode);
              malformed rows answer `!err <reason>` — always one response
-             line per request line, in order
+             line per request line, in order. Observability: the `!stats`
+             admin line (always on) answers one line of snapshot JSON
+             without consuming a request ticket; --metrics on|off
+             (default on) gates latency histograms + occupancy gauges
+             (counters stay on); --metrics-file stats.json dumps the
+             snapshot every --metrics-interval-ms 1000 (atomic rename; a
+             final exact dump lands at drain); --log-spans prints
+             seq-stamped per-connection accept/shed/close lines to stderr
+  top        live terminal view of a running server: polls `!stats` over
+             one connection and renders counters, rates, shed %, p50/p99/
+             p999 latency and a sparkline; --connect host:port or
+             --port-file ready.addr (waits for the file), --interval-ms
+             500, --once prints a single frame and exits (CI smoke)
   migrate    rewrite a model file in the v2 packed serving format:
              --model old.bin --out new.bin
   importance permutation feature importance of a trained model
@@ -210,6 +223,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "predict" => cmd_predict(&args),
         "score" => cmd_score(&args),
         "serve" => cmd_serve(&args),
+        "top" => cmd_top(&args),
         "migrate" => cmd_migrate(&args),
         "importance" => cmd_importance(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -401,42 +415,52 @@ fn cmd_score(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--data is required"))?;
     // Predictions are only retained when they will be written out.
     let keep = args.get("out").is_some();
-    let report = if Path::new(spec).exists() {
-        if colfile::sniff(Path::new(spec)) {
-            // Packed column file (v1 float or v2 binned): blocked row
-            // gather off the mapped backend through the same superblock
-            // scorer the CSV path uses — every verb accepts both formats.
-            let data = colfile::load_mapped(Path::new(spec))?;
-            serve::score_dataset_blocked(&packed, &data, block, threads, keep)?
-        } else {
-            let f = std::fs::File::open(spec).with_context(|| format!("open {spec}"))?;
-            serve::score_csv_stream(&packed, &mut std::io::BufReader::new(f), block, threads, keep)?
-        }
-    } else {
-        // Generator spec: materialize to in-memory CSV rows so both input
-        // kinds flow through the same streaming block scorer.
-        let seed: u64 = args.get_parse("seed", 42)?;
-        let mut rng = Pcg64::new(seed);
-        let data = synth::generate(spec, &mut rng)?;
-        if data.n_features() != packed.n_features {
-            bail!(
-                "model expects {} features, data has {}",
-                packed.n_features,
-                data.n_features()
-            );
-        }
-        let mut text = String::new();
-        let mut row = Vec::new();
-        for s in 0..data.n_samples() {
-            data.row(s, &mut row);
-            for v in &row {
-                text.push_str(&format!("{v},"));
-            }
-            text.push_str(&format!("{}\n", data.label(s)));
-        }
-        let mut reader = text.as_bytes();
-        serve::score_csv_stream(&packed, &mut reader, block, threads, keep)?
+    let opts = serve::ScoreOptions {
+        block_rows: block,
+        n_threads: threads,
+        keep_predictions: keep,
     };
+    // Build the ScoreSource (the storage it borrows lives in `mapped` /
+    // `reader`), then score through the one unified entry point — both
+    // input kinds flow through the same superblock scorer.
+    let path = Path::new(spec);
+    let mapped;
+    let mut reader: Box<dyn std::io::BufRead>;
+    let source = if path.exists() && colfile::sniff(path) {
+        // Packed column file (v1 float or v2 binned): blocked row gather
+        // off the mapped backend — every verb accepts both formats.
+        mapped = colfile::load_mapped(path)?;
+        serve::ScoreSource::Dataset(&mapped)
+    } else {
+        reader = if path.exists() {
+            let f = std::fs::File::open(spec).with_context(|| format!("open {spec}"))?;
+            Box::new(std::io::BufReader::new(f))
+        } else {
+            // Generator spec: materialize to in-memory CSV rows.
+            let seed: u64 = args.get_parse("seed", 42)?;
+            let mut rng = Pcg64::new(seed);
+            let data = synth::generate(spec, &mut rng)?;
+            if data.n_features() != packed.n_features {
+                bail!(
+                    "model expects {} features, data has {}",
+                    packed.n_features,
+                    data.n_features()
+                );
+            }
+            let mut text = String::new();
+            let mut row = Vec::new();
+            for s in 0..data.n_samples() {
+                data.row(s, &mut row);
+                for v in &row {
+                    text.push_str(&format!("{v},"));
+                }
+                text.push_str(&format!("{}\n", data.label(s)));
+            }
+            Box::new(std::io::Cursor::new(text.into_bytes()))
+        };
+        serve::ScoreSource::Csv(&mut reader)
+    };
+    let report = serve::score(&packed, source, &opts)?;
     println!(
         "scored {} rows in {:.3}s — {:.0} rows/s (block {block} x {threads} threads, \
          {} blocks, packed model {:.1} kB)",
@@ -451,10 +475,10 @@ fn cmd_score(args: &Args) -> Result<()> {
     }
     println!(
         "block latency ms: p50 {:.3} p95 {:.3} p99 {:.3} max {:.3}",
-        serve::percentile(&report.block_ms, 50.0),
-        serve::percentile(&report.block_ms, 95.0),
-        serve::percentile(&report.block_ms, 99.0),
-        report.block_ms.last().copied().unwrap_or(f64::NAN)
+        report.latency.quantile(50.0) / 1000.0,
+        report.latency.quantile(95.0) / 1000.0,
+        report.latency.quantile(99.0) / 1000.0,
+        report.latency.max_us as f64 / 1000.0
     );
     if let Some(out) = args.get("out") {
         use std::io::Write;
@@ -484,6 +508,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         idle_timeout: Duration::from_millis(args.get_parse("idle-ms", 30_000u64)?.max(1)),
         drain: Duration::from_millis(args.get_parse("drain-ms", 2000u64)?),
         max_line_bytes: args.get_parse("max-line-bytes", 1usize << 20)?.max(16),
+        metrics: args.get_or("metrics", "on") != "off",
+        metrics_file: args.get("metrics-file").map(Into::into),
+        metrics_interval: Duration::from_millis(
+            args.get_parse("metrics-interval-ms", 1000u64)?.max(20),
+        ),
+        log_spans: args.get("log-spans").is_some(),
         ..Default::default()
     };
     let max_requests = match args.get("max-requests") {
@@ -505,13 +535,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         packed.nbytes() as f64 / 1e3
     );
     let stats = match args.get("tcp") {
-        Some(addr) => serve::serve_tcp(
-            &packed,
-            &cfg,
-            addr,
-            args.get("port-file").map(Path::new),
-            &shutdown,
-        )?,
+        Some(addr) => {
+            cfg.addr = addr.to_string();
+            cfg.port_file = args.get("port-file").map(Into::into);
+            serve::serve_tcp(&packed, &cfg, &shutdown)?
+        }
         None => {
             // stdin has no OS-level read tick, so stdio mode gets the
             // `!shutdown` admin line as its drain trigger.
@@ -521,6 +549,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     eprintln!("[serve] {}", stats.summary());
     Ok(())
+}
+
+/// `soforest top` — poll a running server's `!stats` admin line and
+/// render a live terminal view. The poll connection rides the normal
+/// request protocol without consuming request tickets, so watching a
+/// server never eats into its `--max-requests` budget.
+fn cmd_top(args: &Args) -> Result<()> {
+    use crate::obs::top::{render, StatsClient};
+    let interval = Duration::from_millis(args.get_parse("interval-ms", 500u64)?.max(50));
+    let once = args.get("once").is_some();
+    let addr = match (args.get("connect"), args.get("port-file")) {
+        (Some(a), _) => a.to_string(),
+        (None, Some(pf)) => {
+            // Wait for the server's readiness signal, like the harnesses do.
+            let pf = Path::new(pf);
+            let mut tries = 0;
+            loop {
+                if let Ok(s) = std::fs::read_to_string(pf) {
+                    let s = s.trim().to_string();
+                    if !s.is_empty() {
+                        break s;
+                    }
+                }
+                tries += 1;
+                if tries > 200 {
+                    bail!("port file {} never appeared", pf.display());
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+        (None, None) => bail!("--connect host:port or --port-file <file> is required"),
+    };
+    let mut client = StatsClient::connect(&addr).with_context(|| format!("connect {addr}"))?;
+    let mut prev: Option<(serve::ServeStats, std::time::Instant)> = None;
+    loop {
+        let cur = client.poll().context("poll !stats")?;
+        let frame = render(&cur, prev.as_ref().map(|(s, t)| (s, t.elapsed().as_secs_f64())));
+        if once {
+            print!("{frame}");
+            return Ok(());
+        }
+        // ANSI clear + home, then the frame — a plain terminal "top".
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write;
+        std::io::stdout().flush().ok();
+        prev = Some((cur, std::time::Instant::now()));
+        std::thread::sleep(interval);
+    }
 }
 
 fn cmd_migrate(args: &Args) -> Result<()> {

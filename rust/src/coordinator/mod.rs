@@ -65,9 +65,9 @@ impl TaskQueue {
 /// collect the per-worker results in index order. This is the crate's one
 /// fixed-pool primitive: [`run_pool`] layers the work-stealing queue on
 /// top for task-shaped work, and the serve tier runs its connection
-/// workers on it directly (each worker returns its local `ServeStats`, so
-/// aggregation needs no shared mutex that a panicking handler could
-/// poison).
+/// workers on it directly (each worker records into its own lock-free
+/// [`crate::obs::WorkerMetrics`] slot, so aggregation needs no shared
+/// mutex that a panicking handler could poison).
 pub fn run_workers<T: Send>(n_workers: usize, worker: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let n_workers = n_workers.max(1);
     let worker = &worker;

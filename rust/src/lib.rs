@@ -42,6 +42,7 @@ pub mod data;
 pub mod forest;
 pub mod metrics;
 pub mod might;
+pub mod obs;
 pub mod projection;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,308 @@
+//! Lock-free log-bucketed latency histograms — the serve tier's answer to
+//! the trainer's additive count tables.
+//!
+//! The bucket scheme is HDR-style log-linear: values below [`SUBS`] µs get
+//! exact unit buckets; above that, each power-of-two octave is divided
+//! into [`SUBS`] equal sub-buckets, so the relative half-width of any
+//! bucket is at most `1 / (2 * SUBS)` = 3.125%. With 32 octaves the range
+//! runs to 2^36 µs (~19 hours); anything larger saturates into the last
+//! bucket (the exact maximum is tracked separately). The whole table is
+//! [`N_BUCKETS`] = 528 u64 slots — ~4 KB per recorder.
+//!
+//! Recording is a relaxed-atomic `fetch_add` on the bucket plus the
+//! count/sum/max scalars: no locks, no CAS loops, no allocation — safe on
+//! the request hot path. Snapshots ([`HistSnapshot`]) are plain data and
+//! merge additively, exactly like the trainer's per-shard count tables
+//! (the property sibling subtraction exploits in reverse): merging N
+//! per-worker histograms is bucket-wise addition and is bit-equal to
+//! having recorded every sample into a single histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per octave (and the width of the exact linear region).
+const SUB_BITS: u32 = 4;
+/// Linear region: values `0..SUBS` µs get one bucket each, exactly.
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Octaves covered above the linear region: values up to `2^36 - 1` µs.
+const OCTAVES: usize = 32;
+/// Total bucket count (linear region + OCTAVES * SUBS sub-buckets).
+pub const N_BUCKETS: usize = SUBS + OCTAVES * SUBS;
+/// Largest value the bucket scheme resolves; larger values saturate into
+/// the final bucket (their exact maximum is still tracked).
+const MAX_TRACKED: u64 = (1u64 << (SUB_BITS as u64 + OCTAVES as u64)) - 1;
+
+/// Bucket index of a microsecond value: identity below [`SUBS`], then
+/// `(octave, sub)` from the top `SUB_BITS + 1` significant bits.
+pub fn bucket_index(us: u64) -> usize {
+    let v = us.min(MAX_TRACKED);
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // SUB_BITS ..= SUB_BITS + OCTAVES - 1
+    let shift = msb - SUB_BITS;
+    let sub = ((v >> shift) & (SUBS as u64 - 1)) as usize;
+    SUBS + shift as usize * SUBS + sub
+}
+
+/// Half-open `[lower, upper)` microsecond range of bucket `idx`.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUBS {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let oct = (idx - SUBS) / SUBS;
+    let sub = ((idx - SUBS) % SUBS) as u64;
+    let lo = (SUBS as u64 + sub) << oct;
+    (lo, lo + (1u64 << oct))
+}
+
+/// A lock-free latency histogram: record with relaxed atomics from any
+/// number of threads, snapshot on demand.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: three relaxed `fetch_add`s and a
+    /// relaxed `fetch_max` — cheap enough for the per-request path.
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Copy the current counters out. Concurrent recording keeps going;
+    /// the snapshot is exact whenever the recorder is quiescent (e.g. at
+    /// drain) and within a handful of in-flight samples otherwise.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data snapshot of a [`LatencyHistogram`]; merges additively.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts ([`N_BUCKETS`] long once anything was recorded;
+    /// an all-default snapshot has an empty vec).
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnapshot {
+    /// Additive merge — bucket-wise, so merging per-worker snapshots is
+    /// bit-equal to single-stream recording of the same samples.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Nearest-rank quantile in microseconds (same rank convention as
+    /// [`crate::serve::percentile`]), resolved to the bucket midpoint —
+    /// exact below [`SUBS`] µs, within ±3.125% above. NaN when empty; the
+    /// top sample reports the exact tracked maximum, not a midpoint.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > rank {
+                let (lo, hi) = bucket_bounds(idx);
+                let mid = (lo + hi - 1) as f64 / 2.0;
+                return mid.min(self.max_us as f64);
+            }
+        }
+        self.max_us as f64
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Index range `(first, last)` of the non-empty buckets.
+    pub fn span(&self) -> Option<(usize, usize)> {
+        let first = self.counts.iter().position(|&c| c > 0)?;
+        let last = self.counts.iter().rposition(|&c| c > 0)?;
+        Some((first, last))
+    }
+
+    /// Unicode sparkline over the occupied bucket range, at most `width`
+    /// columns (buckets grouped left to right), linear scale.
+    pub fn sparkline(&self, width: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let Some((a, b)) = self.span() else {
+            return String::new();
+        };
+        let span = b - a + 1;
+        let width = width.clamp(1, span);
+        let mut cols = vec![0u64; width];
+        for (i, &c) in self.counts[a..=b].iter().enumerate() {
+            cols[i * width / span] += c;
+        }
+        let m = cols.iter().copied().max().unwrap_or(1).max(1) as f64;
+        cols.iter()
+            .map(|&c| {
+                if c == 0 {
+                    ' '
+                } else {
+                    BARS[((c as f64 / m * 7.0).round() as usize).min(7)]
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_nan_quantiles() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert!(s.quantile(50.0).is_nan());
+        assert!(s.mean_us().is_nan());
+        assert!(s.span().is_none());
+        assert_eq!(s.sparkline(40), "");
+    }
+
+    #[test]
+    fn single_sample_is_exact_in_the_linear_region() {
+        let h = LatencyHistogram::new();
+        h.record(7);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.sum_us, 7);
+        assert_eq!(s.max_us, 7);
+        // Below SUBS µs buckets are unit-width: every quantile is exact.
+        assert_eq!(s.quantile(0.0), 7.0);
+        assert_eq!(s.quantile(50.0), 7.0);
+        assert_eq!(s.quantile(100.0), 7.0);
+    }
+
+    #[test]
+    fn bucket_boundaries_bracket_their_values() {
+        // Every interesting boundary: linear/log seam, octave seams, and
+        // a spread of odd values — each must land in a bucket whose
+        // bounds bracket it, with buckets contiguous and ordered.
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 33, 63, 64, 1000, 4095, 4096, 1 << 20, MAX_TRACKED]
+        {
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v < hi, "v={v} idx={idx} bounds=({lo},{hi})");
+        }
+        // The linear region is the identity.
+        for v in 0..SUBS as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+        }
+        // Contiguous coverage: bucket i ends where bucket i+1 begins.
+        for i in 0..N_BUCKETS - 1 {
+            assert_eq!(bucket_bounds(i).1, bucket_bounds(i + 1).0, "gap at {i}");
+        }
+        // Relative half-width bound above the linear region: 1/(2*SUBS).
+        for i in SUBS..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            let half = (hi - lo) as f64 / 2.0;
+            assert!(half / lo as f64 <= 1.0 / (2.0 * SUBS as f64) + 1e-12, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_values_saturate_into_the_last_bucket() {
+        let h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        h.record(MAX_TRACKED + 1);
+        let s = h.snapshot();
+        assert_eq!(s.counts[N_BUCKETS - 1], 2, "saturation bucket");
+        assert_eq!(s.count, 2);
+        // The exact maximum survives saturation...
+        assert_eq!(s.max_us, u64::MAX);
+        // ...and caps the reported quantile (no midpoint above the max).
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert!(s.quantile(100.0) <= u64::MAX as f64);
+    }
+
+    #[test]
+    fn cross_worker_merge_equals_single_stream() {
+        // The additive-merge property the per-worker design rests on:
+        // samples split across 4 recorders, merged, must be bit-equal to
+        // the same samples through one recorder.
+        let workers: Vec<LatencyHistogram> = (0..4).map(|_| LatencyHistogram::new()).collect();
+        let single = LatencyHistogram::new();
+        let mut rng = crate::rng::Pcg64::new(99);
+        for i in 0..10_000u64 {
+            // Log-uniform-ish spread across the full range.
+            let v = rng.next_u64() >> (rng.next_u64() % 60);
+            workers[(i % 4) as usize].record(v);
+            single.record(v);
+        }
+        let mut merged = HistSnapshot::default();
+        for w in &workers {
+            merged.merge(&w.snapshot());
+        }
+        assert_eq!(merged, single.snapshot());
+    }
+
+    #[test]
+    fn quantiles_walk_the_distribution() {
+        let h = LatencyHistogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let p50 = s.quantile(50.0);
+        let p99 = s.quantile(99.0);
+        // Bucket midpoints are within the scheme's relative error bound.
+        assert!((p50 - 500.0).abs() / 500.0 < 0.07, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.07, "p99 {p99}");
+        assert_eq!(s.quantile(100.0), 999.0, "top sample is the exact max");
+        assert!(s.quantile(0.0) <= p50);
+        let spark = s.sparkline(32);
+        assert!(!spark.is_empty() && spark.chars().count() <= 32);
+    }
+}

@@ -1,0 +1,245 @@
+//! Serve-tier observability: lock-free metrics recording on the request
+//! path, merged on demand into consistent snapshots.
+//!
+//! The pipeline has three stages, mirroring the proxy→ingest→storage→TUI
+//! stack the ROADMAP cites:
+//!
+//! 1. **Record** ([`ServeMetrics`] / [`WorkerMetrics`]): every serve
+//!    worker owns a cache-line-aligned slot of relaxed-atomic counters
+//!    plus a log-bucketed latency histogram ([`hist`]). Recording is a
+//!    handful of `fetch_add`s — zero locks, zero allocation — so the
+//!    request hot path ([`crate::serve::conn`]) pays nanoseconds, not a
+//!    mutex. Gauges (queue depth, in-flight, workers busy) live on the
+//!    shared registry because they are written at connection rate, not
+//!    request rate.
+//! 2. **Merge** ([`ServeMetrics::snapshot`]): per-worker slots sum
+//!    additively into one [`ServeStats`] — the same additive-table
+//!    property the trainer's histogram merge and sibling subtraction
+//!    rely on, so a snapshot at quiescence (drain) is exact.
+//! 3. **Expose** ([`snapshot`] / [`top`]): a single-line JSON encoding
+//!    served over the `!stats` admin line and `--metrics-file`, parsed
+//!    back by `soforest top`'s live terminal view.
+
+pub mod hist;
+pub mod snapshot;
+pub mod top;
+
+pub use hist::{bucket_bounds, bucket_index, HistSnapshot, LatencyHistogram, N_BUCKETS};
+pub use snapshot::ServeStats;
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Relaxed monotonically-increasing event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Relaxed up/down gauge (instantaneous occupancy, clamped at 0 on read
+/// so a transient dec-before-inc interleaving can never report negative).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed).max(0) as usize
+    }
+}
+
+/// One worker's private recording slot. Cache-line aligned so two workers
+/// bumping counters never share a line; every field is relaxed-atomic, so
+/// a slot is safely written from its worker and read by any snapshotter.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct WorkerMetrics {
+    /// Per-request latency (enqueue → response written), microseconds.
+    pub latency: LatencyHistogram,
+    /// Requests answered with a prediction.
+    pub served: Counter,
+    /// Requests answered `!err` (malformed or oversized).
+    pub errors: Counter,
+    /// Requests answered `!timeout <seq>`.
+    pub timeouts: Counter,
+    /// Oversized lines (also counted in `errors`).
+    pub oversized: Counter,
+    /// Connections that ended in a hard read error (client reset).
+    pub disconnects: Counter,
+    /// Connections dropped by a panicking handler.
+    pub panics: Counter,
+    /// Connections served (shed connections not included).
+    pub conns: Counter,
+    /// Batches scored.
+    pub batches: Counter,
+}
+
+/// The serve session's metrics registry: per-worker slots plus the shared
+/// connection-rate counters and gauges. Created once per server (or once
+/// per [`crate::serve::serve_lines`] call) and shared by reference.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    workers: Box<[WorkerMetrics]>,
+    /// Connections shed with `!busy` (queue full or shutdown backlog).
+    pub shed: Counter,
+    /// Connections waiting in the bounded admission queue.
+    pub queue_depth: Gauge,
+    /// Requests currently being scored (batch occupancy).
+    pub in_flight: Gauge,
+    /// Workers currently serving a connection.
+    pub workers_busy: Gauge,
+    queue_cap: usize,
+    conn_seq: AtomicU64,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    pub fn new(n_workers: usize, queue_cap: usize) -> Self {
+        ServeMetrics {
+            workers: (0..n_workers.max(1)).map(|_| WorkerMetrics::default()).collect(),
+            shed: Counter::default(),
+            queue_depth: Gauge::default(),
+            in_flight: Gauge::default(),
+            workers_busy: Gauge::default(),
+            queue_cap,
+            conn_seq: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Worker `i`'s private slot (wrapping, so a caller can never index
+    /// out of bounds).
+    pub fn worker(&self, i: usize) -> &WorkerMetrics {
+        &self.workers[i % self.workers.len()]
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Next connection sequence number (stamps the accept→drain spans).
+    pub fn next_conn_seq(&self) -> u64 {
+        self.conn_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Merge every worker slot plus the shared counters into one
+    /// consistent [`ServeStats`]. Exact at quiescence (drain); within the
+    /// in-flight requests of the moment otherwise.
+    pub fn snapshot(&self) -> ServeStats {
+        let mut latency = HistSnapshot::default();
+        let (mut served, mut errors, mut timeouts) = (0u64, 0u64, 0u64);
+        let (mut oversized, mut disconnects, mut panics) = (0u64, 0u64, 0u64);
+        let (mut conns, mut batches) = (0u64, 0u64);
+        for w in self.workers.iter() {
+            latency.merge(&w.latency.snapshot());
+            served += w.served.get();
+            errors += w.errors.get();
+            timeouts += w.timeouts.get();
+            oversized += w.oversized.get();
+            disconnects += w.disconnects.get();
+            panics += w.panics.get();
+            conns += w.conns.get();
+            batches += w.batches.get();
+        }
+        ServeStats {
+            requests: (served + errors + timeouts) as usize,
+            served: served as usize,
+            batches: batches as usize,
+            errors: errors as usize,
+            timeouts: timeouts as usize,
+            oversized: oversized as usize,
+            shed: self.shed.get() as usize,
+            conns: conns as usize,
+            disconnects: disconnects as usize,
+            panics: panics as usize,
+            queue_depth: self.queue_depth.get(),
+            queue_cap: self.queue_cap,
+            in_flight: self.in_flight.get(),
+            workers_busy: self.workers_busy.get(),
+            workers: self.workers.len(),
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.add(-10);
+        assert_eq!(g.get(), 0, "gauges clamp at zero on read");
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn snapshot_merges_worker_slots_additively() {
+        let m = ServeMetrics::new(3, 64);
+        for (i, n) in [(0usize, 5u64), (1, 7), (2, 11)] {
+            let w = m.worker(i);
+            for _ in 0..n {
+                w.served.inc();
+                w.latency.record(100 * (i as u64 + 1));
+            }
+            w.conns.inc();
+            w.batches.inc();
+        }
+        m.worker(1).errors.inc();
+        m.worker(2).timeouts.inc();
+        m.shed.add(2);
+        let s = m.snapshot();
+        assert_eq!(s.served, 23);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.requests, 25, "requests = served + errors + timeouts");
+        assert_eq!(s.conns, 3);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.latency.count, 23);
+        assert_eq!(s.latency.max_us, 300);
+    }
+
+    #[test]
+    fn worker_indexing_wraps() {
+        let m = ServeMetrics::new(2, 8);
+        m.worker(5).served.inc(); // slot 1
+        assert_eq!(m.worker(1).served.get(), 1);
+        assert_eq!(m.next_conn_seq(), 1);
+        assert_eq!(m.next_conn_seq(), 2);
+    }
+}

@@ -1,0 +1,428 @@
+//! Plain-data serve snapshot + its single-line JSON wire encoding.
+//!
+//! [`ServeStats`] is what [`super::ServeMetrics::snapshot`] produces and
+//! what every exposure path shares: the value returned by
+//! `serve_tcp`/`serve_stdio` at drain, the `!stats` admin reply, the
+//! `--metrics-file` dump, and the payload `soforest top` polls. The JSON
+//! codec is hand-rolled (the crate is std-only) and deliberately dumb:
+//! flat keys, one line, histogram buckets as sparse `[index, count]`
+//! pairs so an idle server's snapshot stays small.
+
+use super::hist::{HistSnapshot, N_BUCKETS};
+use std::fmt::Write as _;
+
+/// A consistent point-in-time view of a serve session.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Total requests answered = `served + errors + timeouts`.
+    pub requests: usize,
+    /// Requests answered with a prediction.
+    pub served: usize,
+    /// Batches scored.
+    pub batches: usize,
+    /// Requests answered `!err`.
+    pub errors: usize,
+    /// Requests answered `!timeout <seq>`.
+    pub timeouts: usize,
+    /// Oversized request lines (subset of `errors`).
+    pub oversized: usize,
+    /// Connections shed with `!busy`.
+    pub shed: usize,
+    /// Connections served.
+    pub conns: usize,
+    /// Connections that ended in a hard read error (client reset).
+    pub disconnects: usize,
+    /// Connections dropped by a panicking handler.
+    pub panics: usize,
+    /// Connections waiting in the admission queue right now.
+    pub queue_depth: usize,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// Requests being scored right now.
+    pub in_flight: usize,
+    /// Workers serving a connection right now.
+    pub workers_busy: usize,
+    /// Worker pool size.
+    pub workers: usize,
+    /// Seconds since the metrics registry was created.
+    pub uptime_s: f64,
+    /// Per-request latency histogram, microseconds.
+    pub latency: HistSnapshot,
+}
+
+impl ServeStats {
+    /// One-line human summary (the drain log line and `score` footer).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "conns={} requests={} served={} errors={} timeouts={} oversized={} \
+             shed={} disconnects={} panics={} batches={}",
+            self.conns,
+            self.requests,
+            self.served,
+            self.errors,
+            self.timeouts,
+            self.oversized,
+            self.shed,
+            self.disconnects,
+            self.panics,
+            self.batches,
+        );
+        if self.latency.count > 0 {
+            let _ = write!(
+                s,
+                " | latency us: p50={:.0} p99={:.0} p999={:.0} max={} mean={:.0}",
+                self.latency.quantile(50.0),
+                self.latency.quantile(99.0),
+                self.latency.quantile(99.9),
+                self.latency.max_us,
+                self.latency.mean_us(),
+            );
+        }
+        s
+    }
+
+    /// Encode as one line of JSON (no trailing newline). Buckets are
+    /// emitted sparsely as `[index, count]` pairs.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push('{');
+        let _ = write!(s, "\"v\":1,\"uptime_s\":{:.3}", self.uptime_s);
+        for (k, v) in [
+            ("workers", self.workers),
+            ("conns", self.conns),
+            ("requests", self.requests),
+            ("served", self.served),
+            ("batches", self.batches),
+            ("errors", self.errors),
+            ("timeouts", self.timeouts),
+            ("oversized", self.oversized),
+            ("shed", self.shed),
+            ("disconnects", self.disconnects),
+            ("panics", self.panics),
+            ("queue_depth", self.queue_depth),
+            ("queue_cap", self.queue_cap),
+            ("in_flight", self.in_flight),
+            ("workers_busy", self.workers_busy),
+        ] {
+            let _ = write!(s, ",\"{k}\":{v}");
+        }
+        let _ = write!(
+            s,
+            ",\"lat_count\":{},\"lat_sum_us\":{},\"lat_max_us\":{},\"buckets\":[",
+            self.latency.count, self.latency.sum_us, self.latency.max_us
+        );
+        let mut first = true;
+        for (idx, &c) in self.latency.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            let _ = write!(s, "[{idx},{c}]");
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Decode a [`Self::to_json_line`] payload (tolerates surrounding
+    /// whitespace and unknown keys, so the format can grow).
+    pub fn from_json_line(line: &str) -> Result<ServeStats, String> {
+        let json = parse_json(line)?;
+        let obj = match &json {
+            Json::Obj(kv) => kv,
+            _ => return Err("stats payload is not a JSON object".into()),
+        };
+        let num = |key: &str| -> Result<f64, String> {
+            match obj.iter().find(|(k, _)| k == key).map(|(_, v)| v) {
+                Some(Json::Num(n)) => Ok(*n),
+                Some(_) => Err(format!("key {key:?} is not a number")),
+                None => Err(format!("missing key {key:?}")),
+            }
+        };
+        let us = |key: &str| num(key).map(|n| n as usize);
+        let mut latency = HistSnapshot {
+            counts: Vec::new(),
+            count: num("lat_count")? as u64,
+            sum_us: num("lat_sum_us")? as u64,
+            max_us: num("lat_max_us")? as u64,
+        };
+        if let Some((_, Json::Arr(pairs))) = obj.iter().find(|(k, _)| k == "buckets") {
+            if !pairs.is_empty() {
+                latency.counts = vec![0u64; N_BUCKETS];
+            }
+            for p in pairs {
+                let Json::Arr(pair) = p else {
+                    return Err("bucket entry is not a pair".into());
+                };
+                match pair.as_slice() {
+                    [Json::Num(idx), Json::Num(c)] => {
+                        let idx = *idx as usize;
+                        if idx >= N_BUCKETS {
+                            return Err(format!("bucket index {idx} out of range"));
+                        }
+                        latency.counts[idx] = *c as u64;
+                    }
+                    _ => return Err("bucket entry is not [index, count]".into()),
+                }
+            }
+        } else {
+            return Err("missing key \"buckets\"".into());
+        }
+        Ok(ServeStats {
+            requests: us("requests")?,
+            served: us("served")?,
+            batches: us("batches")?,
+            errors: us("errors")?,
+            timeouts: us("timeouts")?,
+            oversized: us("oversized")?,
+            shed: us("shed")?,
+            conns: us("conns")?,
+            disconnects: us("disconnects")?,
+            panics: us("panics")?,
+            queue_depth: us("queue_depth")?,
+            queue_cap: us("queue_cap")?,
+            in_flight: us("in_flight")?,
+            workers_busy: us("workers_busy")?,
+            workers: us("workers")?,
+            uptime_s: num("uptime_s")?,
+            latency,
+        })
+    }
+}
+
+/// Minimal JSON value — just enough to read our own wire format back.
+#[derive(Debug)]
+enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing bytes at offset {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut kv = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(kv));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    _ => return Err("object key is not a string".into()),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {pos}"));
+                }
+                *pos += 1;
+                kv.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(kv));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {pos}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'r') => s.push('\r'),
+                            other => return Err(format!("unsupported escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        // Raw byte copy is UTF-8-safe: multibyte sequences
+                        // never contain '"' or '\\' bytes.
+                        s.push(c as char);
+                        if c < 0x80 {
+                            *pos += 1;
+                        } else {
+                            // Re-decode the multibyte char properly.
+                            s.pop();
+                            let rest = std::str::from_utf8(&b[*pos..])
+                                .map_err(|_| "invalid utf-8 in string".to_string())?;
+                            let ch = rest.chars().next().unwrap();
+                            s.push(ch);
+                            *pos += ch.len_utf8();
+                        }
+                    }
+                }
+            }
+        }
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            if *pos == start {
+                return Err(format!("unexpected byte at offset {pos}"));
+            }
+            let text = std::str::from_utf8(&b[start..*pos]).unwrap();
+            text.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number {text:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hist::LatencyHistogram;
+    use super::*;
+
+    fn sample_stats() -> ServeStats {
+        let h = LatencyHistogram::new();
+        for v in [3u64, 120, 4500, 4501, 90_000] {
+            h.record(v);
+        }
+        ServeStats {
+            requests: 7,
+            served: 5,
+            batches: 3,
+            errors: 1,
+            timeouts: 1,
+            oversized: 1,
+            shed: 2,
+            conns: 4,
+            disconnects: 1,
+            panics: 1,
+            queue_depth: 3,
+            queue_cap: 64,
+            in_flight: 2,
+            workers_busy: 2,
+            workers: 4,
+            uptime_s: 12.5,
+            latency: h.snapshot(),
+        }
+    }
+
+    #[test]
+    fn json_line_round_trips_exactly() {
+        let stats = sample_stats();
+        let line = stats.to_json_line();
+        assert!(!line.contains('\n'), "wire format is single-line");
+        let back = ServeStats::from_json_line(&line).unwrap();
+        assert_eq!(back, stats);
+    }
+
+    #[test]
+    fn empty_stats_round_trip() {
+        let stats = ServeStats::default();
+        let back = ServeStats::from_json_line(&stats.to_json_line()).unwrap();
+        assert_eq!(back, stats);
+        assert!(back.latency.counts.is_empty());
+    }
+
+    #[test]
+    fn parser_tolerates_unknown_keys_and_whitespace() {
+        let stats = sample_stats();
+        let line = stats.to_json_line();
+        let padded = format!("  {} \n", line.replacen('{', "{\"future_key\":\"x\",", 1));
+        let back = ServeStats::from_json_line(&padded).unwrap();
+        assert_eq!(back, stats);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(ServeStats::from_json_line("").is_err());
+        assert!(ServeStats::from_json_line("not json").is_err());
+        assert!(ServeStats::from_json_line("{\"served\":1}").is_err(), "missing keys");
+        assert!(ServeStats::from_json_line("[1,2,3]").is_err(), "not an object");
+        let stats = sample_stats();
+        let truncated = &stats.to_json_line()[..40];
+        assert!(ServeStats::from_json_line(truncated).is_err());
+    }
+
+    #[test]
+    fn summary_mentions_the_load_bearing_numbers() {
+        let s = sample_stats().summary();
+        assert!(s.contains("requests=7"), "{s}");
+        assert!(s.contains("shed=2"), "{s}");
+        assert!(s.contains("p99="), "{s}");
+        let empty = ServeStats::default().summary();
+        assert!(!empty.contains("p99="), "no latency section when empty: {empty}");
+    }
+}

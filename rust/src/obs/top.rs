@@ -1,0 +1,202 @@
+//! `soforest top` — poll a running server's `!stats` line and render a
+//! live terminal view (the TUI end of the proxy→ingest→storage→TUI
+//! pipeline; the CLI owns the screen-clearing loop, this module owns the
+//! protocol client and the frame renderer so both are unit-testable).
+
+use super::hist::bucket_bounds;
+use super::snapshot::ServeStats;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// A persistent `!stats` poller over one serve connection. The admin
+/// line rides the normal request protocol (one line in, one line out, no
+/// ticket consumed), so a single connection can poll forever without
+/// eating into `--max-requests` budgets.
+pub struct StatsClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl StatsClient {
+    pub fn connect(addr: &str) -> io::Result<StatsClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(StatsClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// One poll round-trip: send `!stats`, parse the JSON reply.
+    pub fn poll(&mut self) -> io::Result<ServeStats> {
+        self.writer.write_all(b"!stats\n")?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the stats connection",
+            ));
+        }
+        ServeStats::from_json_line(line.trim())
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// Microseconds, human-scaled.
+fn fmt_us(us: f64) -> String {
+    if !us.is_finite() {
+        "-".to_string()
+    } else if us < 1_000.0 {
+        format!("{us:.0}us")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1_000.0)
+    } else {
+        format!("{:.2}s", us / 1_000_000.0)
+    }
+}
+
+/// Per-second rate of a counter across the poll interval, if a previous
+/// frame exists (counter resets — a restarted server — render as 0).
+fn rate(cur: usize, prev: Option<(&ServeStats, f64)>, field: fn(&ServeStats) -> usize) -> String {
+    match prev {
+        Some((p, dt)) if dt > 0.0 => {
+            let d = cur.saturating_sub(field(p));
+            format!("{:8.1}/s", d as f64 / dt)
+        }
+        _ => format!("{:>10}", "-"),
+    }
+}
+
+/// Render one frame of the live view. `prev` is the previous snapshot
+/// plus the seconds elapsed since it, for rate columns.
+pub fn render(cur: &ServeStats, prev: Option<(&ServeStats, f64)>) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!(
+        "soforest top · uptime {:>7.1}s · workers {}/{} busy · queue {}/{} · in-flight {}\n",
+        cur.uptime_s, cur.workers_busy, cur.workers, cur.queue_depth, cur.queue_cap, cur.in_flight
+    ));
+    let shed_pct = if cur.conns + cur.shed > 0 {
+        100.0 * cur.shed as f64 / (cur.conns + cur.shed) as f64
+    } else {
+        0.0
+    };
+    out.push('\n');
+    let rows: [(&str, usize, fn(&ServeStats) -> usize); 7] = [
+        ("served", cur.served, |s| s.served),
+        ("errors", cur.errors, |s| s.errors),
+        ("timeouts", cur.timeouts, |s| s.timeouts),
+        ("shed", cur.shed, |s| s.shed),
+        ("conns", cur.conns, |s| s.conns),
+        ("disconnects", cur.disconnects, |s| s.disconnects),
+        ("panics", cur.panics, |s| s.panics),
+    ];
+    for (name, v, field) in rows {
+        out.push_str(&format!("  {name:<12}{v:>10}  {}\n", rate(v, prev, field)));
+    }
+    out.push_str(&format!("  {:<12}{shed_pct:>9.1}%\n", "shed rate"));
+    out.push('\n');
+    let lat = &cur.latency;
+    if lat.count == 0 {
+        out.push_str("  latency: no samples yet\n");
+        return out;
+    }
+    out.push_str(&format!(
+        "  latency ({} samples)  p50 {}  p99 {}  p999 {}  max {}  mean {}\n",
+        lat.count,
+        fmt_us(lat.quantile(50.0)),
+        fmt_us(lat.quantile(99.0)),
+        fmt_us(lat.quantile(99.9)),
+        fmt_us(lat.max_us as f64),
+        fmt_us(lat.mean_us()),
+    ));
+    if let Some((first, last)) = lat.span() {
+        let lo = bucket_bounds(first).0;
+        let hi = bucket_bounds(last).1;
+        out.push_str(&format!(
+            "  {:>8} |{}| {}\n",
+            fmt_us(lo as f64),
+            lat.sparkline(48),
+            fmt_us(hi as f64)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hist::LatencyHistogram;
+    use super::*;
+    use std::net::TcpListener;
+
+    fn frame_stats() -> ServeStats {
+        let h = LatencyHistogram::new();
+        for v in [200u64, 450, 800, 1500, 30_000] {
+            h.record(v);
+        }
+        ServeStats {
+            requests: 6,
+            served: 5,
+            batches: 2,
+            errors: 1,
+            timeouts: 0,
+            oversized: 0,
+            shed: 1,
+            conns: 3,
+            disconnects: 0,
+            panics: 0,
+            queue_depth: 2,
+            queue_cap: 64,
+            in_flight: 1,
+            workers_busy: 1,
+            workers: 4,
+            uptime_s: 9.0,
+            latency: h.snapshot(),
+        }
+    }
+
+    #[test]
+    fn render_shows_counters_quantiles_and_sparkline() {
+        let cur = frame_stats();
+        let frame = render(&cur, None);
+        assert!(frame.contains("workers 1/4 busy"), "{frame}");
+        assert!(frame.contains("queue 2/64"), "{frame}");
+        assert!(frame.contains("served"), "{frame}");
+        assert!(frame.contains("p99 "), "{frame}");
+        assert!(frame.contains("shed rate"), "{frame}");
+        assert!(frame.contains('|'), "sparkline row missing: {frame}");
+    }
+
+    #[test]
+    fn render_rates_use_the_previous_frame() {
+        let mut prev = frame_stats();
+        prev.served = 1;
+        let cur = frame_stats(); // served = 5 → 4 new over 2 s = 2.0/s
+        let frame = render(&cur, Some((&prev, 2.0)));
+        assert!(frame.contains("2.0/s"), "{frame}");
+    }
+
+    #[test]
+    fn render_handles_an_idle_server() {
+        let frame = render(&ServeStats::default(), None);
+        assert!(frame.contains("no samples yet"), "{frame}");
+    }
+
+    #[test]
+    fn stats_client_round_trips_a_canned_reply() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let payload = frame_stats();
+        let line = payload.to_json_line();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut req = String::new();
+            reader.read_line(&mut req).unwrap();
+            assert_eq!(req.trim(), "!stats");
+            let mut w = stream;
+            w.write_all(line.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+        });
+        let mut client = StatsClient::connect(&addr.to_string()).unwrap();
+        let got = client.poll().unwrap();
+        server.join().unwrap();
+        assert_eq!(got, payload);
+    }
+}

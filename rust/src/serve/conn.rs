@@ -13,6 +13,16 @@
 //!   (`seq` = 1-based request index on this connection)
 //! * line over `--max-line-bytes` → `!err line exceeds ...`, then close
 //! * admin `!shutdown` (stdio mode) → `!ok shutdown`, then stop
+//! * admin `!stats` (always on) → one line of snapshot JSON
+//!   ([`crate::obs::ServeStats::to_json_line`]); the reply preserves the
+//!   1:1 line correspondence but consumes **no** request ticket and no
+//!   `seq`, so a monitoring poller never eats into `--max-requests`
+//!   budgets or shifts `!timeout <seq>` numbering
+//!
+//! Every answered line records into the worker's private
+//! [`crate::obs::WorkerMetrics`] slot — relaxed-atomic counters plus the
+//! latency histogram, zero locks — which is also why a panicking handler
+//! loses nothing: the counters live outside the unwound stack.
 //!
 //! Exit paths are all deadlock-free by construction: the batcher dropping
 //! the channel receiver unblocks a reader stuck in `send`, the
@@ -21,9 +31,10 @@
 //! sit in a blocking read without observing any of it.
 
 use super::shutdown::Shutdown;
-use super::{ServeConfig, ServeStats};
+use super::ServeConfig;
 use crate::forest::predict::argmax;
 use crate::forest::PackedForest;
+use crate::obs::{ServeMetrics, WorkerMetrics};
 use anyhow::Result;
 use std::io::{BufRead, BufWriter, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -110,13 +121,15 @@ impl Drop for AliveGuard<'_> {
 }
 
 /// The reader half: bytes → [`Inbound`] events, until EOF, error, idle
-/// cutoff, a dead batcher, or the post-stop drain window closing.
+/// cutoff, a dead batcher, or the post-stop drain window closing. A hard
+/// read error (client reset mid-line) counts as a disconnect in `wm`.
 fn reader_loop(
     mut input: impl BufRead,
     tx: mpsc::SyncSender<Inbound>,
     cfg: &ServeConfig,
     shutdown: &Shutdown,
     batcher_alive: &AtomicBool,
+    wm: &WorkerMetrics,
 ) {
     let mut buf: Vec<u8> = Vec::new();
     let mut last_activity = Instant::now();
@@ -139,7 +152,11 @@ fn reader_loop(
                     break;
                 }
             }
-            ReadEvent::Eof | ReadEvent::Err => break,
+            ReadEvent::Eof => break,
+            ReadEvent::Err => {
+                wm.disconnects.inc();
+                break;
+            }
             ReadEvent::Oversized => {
                 buf.clear();
                 let _ = tx.send(Inbound::Oversized);
@@ -173,34 +190,38 @@ enum BatchOutcome {
     Close,
 }
 
-/// Serve one connection's line protocol. Stats accumulate into the
-/// caller-owned `stats`, so partial per-connection work survives even if a
-/// panic unwinds out of here (the TCP worker catches it one frame up).
+/// Serve one connection's line protocol, recording into worker `worker`'s
+/// metrics slot. Returns the number of request lines answered on this
+/// connection (the close-span `requests=` field). Counters live in shared
+/// atomics, so partial per-connection work survives even if a panic
+/// unwinds out of here (the TCP worker catches it one frame up).
 pub(crate) fn serve_conn<R, W>(
     forest: &PackedForest,
     cfg: &ServeConfig,
     input: R,
     output: W,
     shutdown: &Shutdown,
-    stats: &mut ServeStats,
-) -> Result<()>
+    metrics: &ServeMetrics,
+    worker: usize,
+) -> Result<u64>
 where
     R: BufRead + Send,
     W: Write,
 {
-    stats.conns += 1;
+    let wm = metrics.worker(worker);
+    wm.conns.inc();
     let mut out = BufWriter::new(output);
     let (tx, rx) = mpsc::sync_channel::<Inbound>(cfg.max_batch.max(1) * 4);
     let alive = AtomicBool::new(true);
     let alive_ref = &alive;
+    let mut seq: u64 = 0;
     std::thread::scope(|scope| -> Result<()> {
         // Own the receiver inside the scope so any exit (including an
         // unwind) drops it, which unblocks a reader stuck in `send`.
         let rx = rx;
         let _guard = AliveGuard(alive_ref);
-        scope.spawn(move || reader_loop(input, tx, cfg, shutdown, alive_ref));
+        scope.spawn(move || reader_loop(input, tx, cfg, shutdown, alive_ref, wm));
         let mut pending: Vec<Pending> = Vec::new();
-        let mut seq: u64 = 0;
         let mut terminal: Option<Inbound> = None;
         let mut budget_closed = false;
         'serve: loop {
@@ -228,7 +249,9 @@ where
                     Err(_) => break, // timeout or EOF
                 }
             }
-            match flush_batch(forest, cfg, &mut pending, &mut out, shutdown, stats, &mut seq)? {
+            let flushed =
+                flush_batch(forest, cfg, &mut pending, &mut out, shutdown, metrics, wm, &mut seq)?;
+            match flushed {
                 BatchOutcome::Continue => {}
                 BatchOutcome::Close => {
                     budget_closed = true;
@@ -245,9 +268,9 @@ where
             if !budget_closed {
                 match ev {
                     Inbound::Oversized => {
-                        stats.requests += 1;
-                        stats.errors += 1;
-                        stats.oversized += 1;
+                        wm.errors.inc();
+                        wm.oversized.inc();
+                        seq += 1;
                         writeln!(out, "!err line exceeds {} bytes", cfg.max_line_bytes)?;
                     }
                     Inbound::Shutdown => {
@@ -259,13 +282,15 @@ where
             }
         }
         Ok(())
-    })
+    })?;
+    Ok(seq)
 }
 
 /// Score one pending batch and write responses in request order. Every
 /// answered request line (scored, `!err`, `!timeout`) takes one ticket
 /// from the request budget first; a refused ticket closes the connection
-/// without answering further.
+/// without answering further. `!stats` lines are answered in place with a
+/// snapshot and take neither a ticket nor a `seq`.
 #[allow(clippy::too_many_arguments)]
 fn flush_batch(
     forest: &PackedForest,
@@ -273,7 +298,8 @@ fn flush_batch(
     pending: &mut Vec<Pending>,
     out: &mut impl Write,
     shutdown: &Shutdown,
-    stats: &mut ServeStats,
+    metrics: &ServeMetrics,
+    wm: &WorkerMetrics,
     seq: &mut u64,
 ) -> Result<BatchOutcome> {
     #[cfg(any(test, feature = "serve-fault"))]
@@ -284,17 +310,26 @@ fn flush_batch(
         Score,
         Timeout,
         Bad(String),
+        Stats,
     }
     let d = forest.n_features;
     let c = forest.n_classes;
     let now = Instant::now();
-    // Classify every line: deadline first (a request that waited past its
-    // deadline is answered `!timeout`, not scored — late answers would be
-    // useless to the client anyway), then parse. Valid, in-deadline rows
-    // go into one row-major buffer.
+    if cfg.metrics {
+        metrics.in_flight.add(pending.len() as i64);
+    }
+    // Classify every line: the `!stats` admin line first (it is read-only
+    // and must never time out), then deadline (a request that waited past
+    // its deadline is answered `!timeout`, not scored — late answers would
+    // be useless to the client anyway), then parse. Valid, in-deadline
+    // rows go into one row-major buffer.
     let mut rows: Vec<f32> = Vec::with_capacity(pending.len() * d);
     let mut dispo: Vec<Disposition> = Vec::with_capacity(pending.len());
     for (line, t0) in pending.iter() {
+        if line.trim() == "!stats" {
+            dispo.push(Disposition::Stats);
+            continue;
+        }
         if now.duration_since(*t0) > cfg.deadline {
             dispo.push(Disposition::Timeout);
             continue;
@@ -326,6 +361,13 @@ fn flush_batch(
     let mut vi = 0usize;
     let mut outcome = BatchOutcome::Continue;
     for ((line, t0), disp) in pending.iter().zip(&dispo) {
+        if let Disposition::Stats = disp {
+            // Answered in place so the per-line correspondence holds;
+            // deliberately outside the ticket/seq/counter accounting, so
+            // what the snapshot reports is exactly the *request* traffic.
+            writeln!(out, "{}", metrics.snapshot().to_json_line())?;
+            continue;
+        }
         if !shutdown.take_ticket() {
             outcome = BatchOutcome::Close;
             break;
@@ -345,21 +387,27 @@ fn flush_batch(
                 } else {
                     writeln!(out, "{pred}")?;
                 }
+                wm.served.inc();
             }
             Disposition::Timeout => {
-                stats.timeouts += 1;
+                wm.timeouts.inc();
                 writeln!(out, "!timeout {seq}")?;
             }
             Disposition::Bad(e) => {
-                stats.errors += 1;
+                wm.errors.inc();
                 writeln!(out, "!err {e} (line {line:?})")?;
             }
+            Disposition::Stats => unreachable!("handled above"),
         }
-        stats.record_latency(t0.elapsed().as_secs_f64() * 1e6);
-        stats.requests += 1;
+        if cfg.metrics {
+            wm.latency.record(t0.elapsed().as_micros() as u64);
+        }
     }
     out.flush()?;
-    stats.batches += 1;
+    wm.batches.inc();
+    if cfg.metrics {
+        metrics.in_flight.add(-(pending.len() as i64));
+    }
     pending.clear();
     Ok(outcome)
 }
@@ -478,10 +526,11 @@ mod tests {
             admin: true,
             ..Default::default()
         };
+        let metrics = ServeMetrics::new(1, 1);
         let alive = AtomicBool::new(true);
         let (tx, rx) = mpsc::sync_channel(16);
         let input = Cursor::new(b"1,2\n!shutdown\n3,4\n".to_vec());
-        reader_loop(input, tx, &cfg, &shutdown, &alive);
+        reader_loop(input, tx, &cfg, &shutdown, &alive, metrics.worker(0));
         assert!(shutdown.stop_requested());
         let events: Vec<Inbound> = rx.into_iter().collect();
         assert_eq!(events.len(), 2, "nothing after !shutdown is read");
@@ -493,6 +542,7 @@ mod tests {
     fn reader_loop_without_admin_passes_shutdown_line_through() {
         let shutdown = Shutdown::new();
         let cfg = ServeConfig::default();
+        let metrics = ServeMetrics::new(1, 1);
         let alive = AtomicBool::new(true);
         let (tx, rx) = mpsc::sync_channel(16);
         reader_loop(
@@ -501,10 +551,69 @@ mod tests {
             &cfg,
             &shutdown,
             &alive,
+            metrics.worker(0),
         );
         assert!(!shutdown.stop_requested());
         let events: Vec<Inbound> = rx.into_iter().collect();
         assert!(matches!(&events[0], Inbound::Line(l, _) if l == "!shutdown"));
+    }
+
+    #[test]
+    fn reader_loop_counts_hard_errors_as_disconnects() {
+        // A reader whose stream dies mid-line must count one disconnect;
+        // a clean EOF must not.
+        struct DieAfter(Option<Vec<u8>>);
+        impl std::io::Read for DieAfter {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                unreachable!("BufRead path only")
+            }
+        }
+        impl BufRead for DieAfter {
+            fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+                match &self.0 {
+                    Some(_) => Ok(self.0.as_deref().unwrap()),
+                    None => Err(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionReset,
+                        "peer reset",
+                    )),
+                }
+            }
+            fn consume(&mut self, amt: usize) {
+                if let Some(buf) = &mut self.0 {
+                    buf.drain(..amt);
+                    if buf.is_empty() {
+                        self.0 = None;
+                    }
+                }
+            }
+        }
+        let shutdown = Shutdown::new();
+        let cfg = ServeConfig::default();
+        let metrics = ServeMetrics::new(1, 1);
+        let alive = AtomicBool::new(true);
+        let (tx, rx) = mpsc::sync_channel(16);
+        reader_loop(
+            DieAfter(Some(b"1,2\n".to_vec())),
+            tx,
+            &cfg,
+            &shutdown,
+            &alive,
+            metrics.worker(0),
+        );
+        drop(rx);
+        assert_eq!(metrics.worker(0).disconnects.get(), 1);
+        // Clean EOF: no disconnect.
+        let (tx, rx) = mpsc::sync_channel(16);
+        reader_loop(
+            Cursor::new(b"1,2\n".to_vec()),
+            tx,
+            &cfg,
+            &shutdown,
+            &alive,
+            metrics.worker(0),
+        );
+        drop(rx);
+        assert_eq!(metrics.worker(0).disconnects.get(), 1, "EOF is not a disconnect");
     }
 
     #[test]
@@ -527,11 +636,13 @@ mod tests {
         }
         let shutdown = Shutdown::new();
         let cfg = ServeConfig::default();
+        let metrics = ServeMetrics::new(1, 1);
         let alive = AtomicBool::new(true);
         let (tx, _rx) = mpsc::sync_channel(16);
         let t0 = Instant::now();
         std::thread::scope(|scope| {
-            let h = scope.spawn(|| reader_loop(ForeverTick, tx, &cfg, &shutdown, &alive));
+            let h = scope
+                .spawn(|| reader_loop(ForeverTick, tx, &cfg, &shutdown, &alive, metrics.worker(0)));
             std::thread::sleep(Duration::from_millis(30));
             alive.store(false, Ordering::Release);
             h.join().unwrap();

@@ -1,5 +1,5 @@
-//! Production serving: a bounded, shedding, drainable front door over the
-//! packed-forest hot path ([`PackedForest`]).
+//! Production serving: a bounded, shedding, drainable, *observable* front
+//! door over the packed-forest hot path ([`PackedForest`]).
 //!
 //! Two workloads share the batched scorer:
 //!
@@ -18,14 +18,26 @@
 //!     `!shutdown` admin line in stdio mode, or an exhausted
 //!     `--max-requests` budget) stops accepting, sheds the queued backlog,
 //!     answers in-flight requests within `--drain-ms`, and returns the
-//!     aggregate [`ServeStats`] — merged from per-worker stats, so a
-//!     panicking handler loses at most its own connection, never the
-//!     aggregate (workers `catch_unwind` per connection),
+//!     final [`ServeStats`] snapshot,
+//!   - **observability** ([`crate::obs`]): every worker records into a
+//!     private lock-free slot (relaxed-atomic counters + a log-bucketed
+//!     latency histogram) merged on demand into one consistent snapshot —
+//!     exposed via the `!stats` admin line (single-line JSON), a periodic
+//!     `--metrics-file` dump, the `soforest top` live view, and
+//!     seq-stamped per-connection accept→close span lines (`--log-spans`).
+//!     A panicking handler loses at most its own connection, never the
+//!     aggregate: the counters live in shared atomics, outside any
+//!     unwound stack (workers `catch_unwind` per connection),
 //!   - a fault-injection layer ([`fault`], tests/`serve-fault` builds
-//!     only) makes all of the above *tested* properties.
-//! * **`soforest score`** — offline throughput scoring: stream a CSV in
-//!   fixed-size row blocks through the coordinator's work-stealing pool
-//!   ([`coordinator::run_pool`]), recording per-block latencies.
+//!     only) makes all of the above *tested* properties — including that
+//!     server-reported totals exactly match client observations.
+//! * **`soforest score`** — offline throughput scoring through one entry
+//!   point, [`score`], dispatching on [`ScoreSource`] (CSV stream or a
+//!   loaded/mapped [`crate::data::Dataset`]): fixed-size row blocks
+//!   through the coordinator's work-stealing pool
+//!   ([`coordinator::run_pool`]), per-block latency recorded on the same
+//!   histogram type the serve tier uses, so both report latency
+//!   identically.
 //!
 //! Everything is std-only (threads, mpsc, TcpListener, and two libc calls
 //! — `poll(2)`, `signal(2)` — declared directly, the same pattern as
@@ -37,16 +49,18 @@ pub mod fault;
 mod queue;
 pub mod shutdown;
 
+pub use crate::obs::ServeStats;
 pub use shutdown::{install_signal_handlers, Shutdown};
 
 use crate::coordinator;
 use crate::forest::PackedForest;
+use crate::obs::{HistSnapshot, LatencyHistogram, ServeMetrics};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -55,9 +69,17 @@ use std::time::{Duration, Instant};
 pub(crate) const READ_TICK: Duration = Duration::from_millis(100);
 const READ_TICK_MS: i32 = 100;
 
-/// Knobs of the online serving loop.
+/// Knobs of the online serving loop — including *where* to serve
+/// (`addr`/`port_file`), so `serve_tcp`/`serve_stdio` take just
+/// `(forest, &ServeConfig, &Shutdown)`. Construct with struct-update
+/// syntax or the `with_*` builders.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// TCP listen address (`serve_tcp` only); port 0 binds ephemerally.
+    pub addr: String,
+    /// File that receives the bound address once listening — the
+    /// readiness signal orchestration (and the e2e tests) wait on.
+    pub port_file: Option<PathBuf>,
     /// Score a batch as soon as this many requests are pending.
     pub max_batch: usize,
     /// ... or as soon as the oldest pending request has waited this long.
@@ -82,6 +104,17 @@ pub struct ServeConfig {
     pub max_line_bytes: usize,
     /// Honor the `!shutdown` admin line (stdio mode sets this).
     pub admin: bool,
+    /// Record per-request latency histograms and occupancy gauges
+    /// (counters are always on — they are the totals oracle). Off is the
+    /// overhead-methodology baseline for serve_load A/Bs.
+    pub metrics: bool,
+    /// Dump the snapshot JSON here every `metrics_interval` (atomic
+    /// tmp+rename), plus a final exact dump at drain.
+    pub metrics_file: Option<PathBuf>,
+    /// Cadence of the `metrics_file` dump.
+    pub metrics_interval: Duration,
+    /// Log seq-stamped per-connection accept/shed/close span lines.
+    pub log_spans: bool,
     /// Fault-injection hooks (tests / `serve-fault` builds only).
     #[cfg(any(test, feature = "serve-fault"))]
     pub fault: Option<std::sync::Arc<fault::FaultState>>,
@@ -90,6 +123,8 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
+            addr: "127.0.0.1:0".to_string(),
+            port_file: None,
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             n_threads: 1,
@@ -101,90 +136,104 @@ impl Default for ServeConfig {
             drain: Duration::from_secs(2),
             max_line_bytes: 1 << 20,
             admin: false,
+            metrics: true,
+            metrics_file: None,
+            metrics_interval: Duration::from_secs(1),
+            log_spans: false,
             #[cfg(any(test, feature = "serve-fault"))]
             fault: None,
         }
     }
 }
 
-/// Latency samples kept per session — a ring over the most recent
-/// requests, so a run-forever server's memory stays bounded.
-const LATENCY_SAMPLE_CAP: usize = 65_536;
-
-/// Counters and latencies from one serving session.
-#[derive(Clone, Debug, Default)]
-pub struct ServeStats {
-    /// Request lines answered (scored rows + `!err` + `!timeout`).
-    pub requests: usize,
-    /// Batches scored.
-    pub batches: usize,
-    /// Requests answered `!err` (malformed or oversized).
-    pub errors: usize,
-    /// Requests answered `!timeout` (missed their deadline).
-    pub timeouts: usize,
-    /// Oversized lines (also counted in `errors`).
-    pub oversized: usize,
-    /// Connections shed with `!busy` (queue full or shutdown backlog).
-    pub shed: usize,
-    /// Connections served (shed connections not included).
-    pub conns: usize,
-    /// Connections dropped by a panicking handler.
-    pub panics: usize,
-    /// Per-request latency (enqueue → response written), microseconds.
-    /// Bounded sample: the most recent [`LATENCY_SAMPLE_CAP`] requests.
-    pub latencies_us: Vec<f64>,
-}
-
-impl ServeStats {
-    /// Record one request latency, overwriting the oldest sample once the
-    /// ring is full.
-    fn record_latency(&mut self, us: f64) {
-        if self.latencies_us.len() < LATENCY_SAMPLE_CAP {
-            self.latencies_us.push(us);
-        } else {
-            self.latencies_us[self.requests % LATENCY_SAMPLE_CAP] = us;
-        }
+impl ServeConfig {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    fn merge(&mut self, other: ServeStats) {
-        self.requests += other.requests;
-        self.batches += other.batches;
-        self.errors += other.errors;
-        self.timeouts += other.timeouts;
-        self.oversized += other.oversized;
-        self.shed += other.shed;
-        self.conns += other.conns;
-        self.panics += other.panics;
-        self.latencies_us.extend(other.latencies_us);
-        // Keep the most recent samples (the tail), matching the ring's
-        // "latest requests" contract.
-        if self.latencies_us.len() > LATENCY_SAMPLE_CAP {
-            let excess = self.latencies_us.len() - LATENCY_SAMPLE_CAP;
-            self.latencies_us.drain(..excess);
-        }
+    pub fn with_addr(mut self, addr: impl Into<String>) -> Self {
+        self.addr = addr.into();
+        self
     }
 
-    /// One-line human summary with latency percentiles.
-    pub fn summary(&self) -> String {
-        let mut lat = self.latencies_us.clone();
-        lat.sort_by(f64::total_cmp);
-        format!(
-            "{} requests in {} batches ({:.1} rows/batch) over {} conns; \
-             {} errors, {} timeouts, {} shed, {} panics; \
-             latency us: p50 {:.0} p95 {:.0} p99 {:.0} max {:.0}",
-            self.requests,
-            self.batches,
-            self.requests as f64 / self.batches.max(1) as f64,
-            self.conns,
-            self.errors,
-            self.timeouts,
-            self.shed,
-            self.panics,
-            percentile(&lat, 50.0),
-            percentile(&lat, 95.0),
-            percentile(&lat, 99.0),
-            lat.last().copied().unwrap_or(f64::NAN),
-        )
+    pub fn with_port_file(mut self, pf: impl Into<PathBuf>) -> Self {
+        self.port_file = Some(pf.into());
+        self
+    }
+
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn with_max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.n_threads = n;
+        self
+    }
+
+    pub fn with_proba(mut self, on: bool) -> Self {
+        self.proba = on;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn with_queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = d;
+        self
+    }
+
+    pub fn with_idle_timeout(mut self, d: Duration) -> Self {
+        self.idle_timeout = d;
+        self
+    }
+
+    pub fn with_drain(mut self, d: Duration) -> Self {
+        self.drain = d;
+        self
+    }
+
+    pub fn with_max_line_bytes(mut self, n: usize) -> Self {
+        self.max_line_bytes = n;
+        self
+    }
+
+    pub fn with_admin(mut self, on: bool) -> Self {
+        self.admin = on;
+        self
+    }
+
+    pub fn with_metrics(mut self, on: bool) -> Self {
+        self.metrics = on;
+        self
+    }
+
+    pub fn with_metrics_file(mut self, path: impl Into<PathBuf>) -> Self {
+        self.metrics_file = Some(path.into());
+        self
+    }
+
+    pub fn with_metrics_interval(mut self, d: Duration) -> Self {
+        self.metrics_interval = d;
+        self
+    }
+
+    pub fn with_log_spans(mut self, on: bool) -> Self {
+        self.log_spans = on;
+        self
     }
 }
 
@@ -212,9 +261,9 @@ where
     W: Write,
 {
     let shutdown = Shutdown::new();
-    let mut stats = ServeStats::default();
-    conn::serve_conn(forest, cfg, input, output, &shutdown, &mut stats)?;
-    Ok(stats)
+    let metrics = ServeMetrics::new(1, cfg.queue_depth);
+    conn::serve_conn(forest, cfg, input, output, &shutdown, &metrics, 0)?;
+    Ok(metrics.snapshot())
 }
 
 /// Serve stdin → stdout until EOF or a `!shutdown` admin line (the caller
@@ -228,13 +277,23 @@ pub fn serve_stdio(
     // wrap the handle itself.
     let input = std::io::BufReader::new(std::io::stdin());
     let stdout = std::io::stdout();
-    let mut stats = ServeStats::default();
-    conn::serve_conn(forest, cfg, input, stdout.lock(), shutdown, &mut stats)?;
-    Ok(stats)
+    let metrics = ServeMetrics::new(1, cfg.queue_depth);
+    run_with_metrics_writer(cfg, &metrics, || {
+        conn::serve_conn(forest, cfg, input, stdout.lock(), shutdown, &metrics, 0)
+    })?;
+    Ok(metrics.snapshot())
 }
 
-/// Serve TCP connections on `addr` (e.g. `127.0.0.1:7878`; port 0 binds an
-/// ephemeral port) until `shutdown` fires — from a signal, a
+/// One admitted connection: the stream plus its accept timestamp and
+/// sequence number (what the `--log-spans` accept→close lines key on).
+struct Admitted {
+    stream: TcpStream,
+    at: Instant,
+    seq: u64,
+}
+
+/// Serve TCP connections on `cfg.addr` (e.g. `127.0.0.1:7878`; port 0
+/// binds an ephemeral port) until `shutdown` fires — from a signal, a
 /// [`Shutdown::request_stop`], or an exhausted request budget
 /// (`--max-requests`, exact by construction: the budget is an atomic
 /// ticket counter and the last ticket *is* the stop request).
@@ -245,54 +304,95 @@ pub fn serve_stdio(
 /// close. Every accepted stream gets a read timeout (the shutdown tick)
 /// and a write timeout (`cfg.idle_timeout`), so neither a silent nor a
 /// non-reading client can wedge a worker. Workers `catch_unwind` each
-/// connection: a panicking handler costs that connection only, and the
-/// stats it accumulated up to the panic still reach the aggregate
-/// (per-worker stats, merged at drain — no shared mutex to poison).
-///
-/// `port_file`, when given, receives the bound address once listening —
-/// the readiness signal orchestration (and the e2e tests) wait on.
+/// connection: a panicking handler costs that connection only — its
+/// counters were already in the shared [`ServeMetrics`] registry, so the
+/// final snapshot loses nothing.
 pub fn serve_tcp(
     forest: &PackedForest,
     cfg: &ServeConfig,
-    addr: &str,
-    port_file: Option<&Path>,
     shutdown: &Shutdown,
 ) -> Result<ServeStats> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
     let local = listener.local_addr()?;
     // Non-blocking accept; readiness comes from the poll(2) tick.
     listener.set_nonblocking(true)?;
-    if let Some(pf) = port_file {
+    if let Some(pf) = &cfg.port_file {
         std::fs::write(pf, local.to_string()).with_context(|| format!("write {pf:?}"))?;
     }
     eprintln!(
         "[serve] listening on {local} ({} workers, queue {}, batch <= {}, wait <= {:?}, \
-         deadline {:?})",
-        cfg.workers, cfg.queue_depth, cfg.max_batch, cfg.max_wait, cfg.deadline
+         deadline {:?}, metrics {})",
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.max_batch,
+        cfg.max_wait,
+        cfg.deadline,
+        if cfg.metrics { "on" } else { "off" },
     );
-    let queue = queue::BoundedQueue::<TcpStream>::new(cfg.queue_depth);
-    let shed = AtomicUsize::new(0);
-    let (worker_stats, accept_result) = std::thread::scope(|scope| {
-        let acceptor = scope.spawn(|| accept_loop(&listener, &queue, cfg, shutdown, &shed));
-        let stats = coordinator::run_workers(cfg.workers.max(1), |_w| {
-            let mut st = ServeStats::default();
-            while let Some(stream) = queue.pop() {
-                handle_conn(forest, cfg, stream, shutdown, &mut st);
-            }
-            st
-        });
-        let accept_result = acceptor
-            .join()
-            .unwrap_or_else(|_| Err(anyhow::anyhow!("accept thread panicked")));
-        (stats, accept_result)
+    let metrics = ServeMetrics::new(cfg.workers.max(1), cfg.queue_depth);
+    let queue = queue::BoundedQueue::<Admitted>::new(cfg.queue_depth);
+    let accept_result = run_with_metrics_writer(cfg, &metrics, || {
+        std::thread::scope(|scope| {
+            let acceptor = scope.spawn(|| accept_loop(&listener, &queue, cfg, shutdown, &metrics));
+            coordinator::run_workers(cfg.workers.max(1), |w| {
+                while let Some(adm) = queue.pop() {
+                    metrics.queue_depth.set(queue.len() as i64);
+                    metrics.workers_busy.add(1);
+                    handle_conn(forest, cfg, adm, shutdown, &metrics, w);
+                    metrics.workers_busy.add(-1);
+                }
+            });
+            acceptor
+                .join()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("accept thread panicked")))
+        })
     });
     accept_result?;
-    let mut total = ServeStats::default();
-    for st in worker_stats {
-        total.merge(st);
+    Ok(metrics.snapshot())
+}
+
+/// Run `f` with the periodic `--metrics-file` dumper alongside (when
+/// configured): snapshot JSON every `cfg.metrics_interval` via atomic
+/// tmp+rename, plus one final dump after `f` returns — at that point the
+/// workers have drained, so the last dump is the exact session totals.
+fn run_with_metrics_writer<T>(
+    cfg: &ServeConfig,
+    metrics: &ServeMetrics,
+    f: impl FnOnce() -> T,
+) -> T {
+    let Some(path) = &cfg.metrics_file else {
+        return f();
+    };
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| metrics_writer(path, metrics, cfg.metrics_interval, &done));
+        let r = f();
+        done.store(true, Ordering::Release);
+        r
+    })
+}
+
+fn metrics_writer(path: &Path, metrics: &ServeMetrics, interval: Duration, done: &AtomicBool) {
+    let tmp = path.with_extension("tmp");
+    let mut last: Option<Instant> = None;
+    while !done.load(Ordering::Acquire) {
+        if last.map_or(true, |t: Instant| t.elapsed() >= interval) {
+            last = Some(Instant::now());
+            dump_snapshot(&tmp, path, metrics);
+        }
+        std::thread::sleep(Duration::from_millis(20));
     }
-    total.shed += shed.load(Ordering::Relaxed);
-    Ok(total)
+    dump_snapshot(&tmp, path, metrics);
+}
+
+/// Write one snapshot line atomically: tmp file, then rename — a scraper
+/// never reads a torn dump.
+fn dump_snapshot(tmp: &Path, path: &Path, metrics: &ServeMetrics) {
+    let line = metrics.snapshot().to_json_line();
+    if std::fs::write(tmp, format!("{line}\n")).is_ok() {
+        let _ = std::fs::rename(tmp, path);
+    }
 }
 
 /// Accept until shutdown: poll-tick, accept, set the stream's timeouts,
@@ -300,10 +400,10 @@ pub fn serve_tcp(
 /// (so the workers drain and return) and sheds the undelivered backlog.
 fn accept_loop(
     listener: &TcpListener,
-    queue: &queue::BoundedQueue<TcpStream>,
+    queue: &queue::BoundedQueue<Admitted>,
     cfg: &ServeConfig,
     shutdown: &Shutdown,
-    shed: &AtomicUsize,
+    metrics: &ServeMetrics,
 ) -> Result<()> {
     let result = loop {
         if shutdown.stop_requested() {
@@ -322,8 +422,17 @@ fn accept_loop(
                 // a non-reading client can stall a worker.
                 stream.set_read_timeout(Some(READ_TICK)).ok();
                 stream.set_write_timeout(Some(cfg.idle_timeout)).ok();
-                if let Err(stream) = queue.try_push(stream) {
-                    shed_conn(stream, shed);
+                let adm = Admitted {
+                    stream,
+                    at: Instant::now(),
+                    seq: metrics.next_conn_seq(),
+                };
+                if cfg.log_spans {
+                    eprintln!("[span] conn={} accept depth={}", adm.seq, queue.len());
+                }
+                match queue.try_push(adm) {
+                    Ok(()) => metrics.queue_depth.set(queue.len() as i64),
+                    Err(adm) => shed_conn(adm, cfg, metrics),
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => continue,
@@ -331,30 +440,40 @@ fn accept_loop(
             Err(e) => break Err(e).context("accept"),
         }
     };
-    for stream in queue.close() {
-        shed_conn(stream, shed);
+    for adm in queue.close() {
+        shed_conn(adm, cfg, metrics);
     }
     result
 }
 
 /// Refuse a connection the explicit way: one `!busy` line, then close.
-fn shed_conn(mut stream: TcpStream, shed: &AtomicUsize) {
+fn shed_conn(adm: Admitted, cfg: &ServeConfig, metrics: &ServeMetrics) {
+    let mut stream = adm.stream;
     let _ = stream.write_all(b"!busy\n");
     let _ = stream.shutdown(std::net::Shutdown::Both);
-    shed.fetch_add(1, Ordering::Relaxed);
+    metrics.shed.inc();
+    if cfg.log_spans {
+        eprintln!(
+            "[span] conn={} shed queued_us={}",
+            adm.seq,
+            adm.at.elapsed().as_micros()
+        );
+    }
 }
 
 /// Serve one pooled connection, isolating panics: a handler panic drops
-/// this connection, bumps `panics`, and keeps whatever stats the
-/// connection had already accumulated (serve_conn mutates caller-owned
-/// stats in place).
+/// this connection and bumps `panics`; every counter the connection
+/// recorded up to the panic is already in the shared registry.
 fn handle_conn(
     forest: &PackedForest,
     cfg: &ServeConfig,
-    stream: TcpStream,
+    adm: Admitted,
     shutdown: &Shutdown,
-    stats: &mut ServeStats,
+    metrics: &ServeMetrics,
+    worker: usize,
 ) {
+    let queued_us = adm.at.elapsed().as_micros();
+    let stream = adm.stream;
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -366,16 +485,29 @@ fn handle_conn(
             return;
         }
     };
+    let t0 = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| {
-        serve_one(forest, cfg, reader, &stream, shutdown, stats)
+        serve_one(forest, cfg, reader, &stream, shutdown, metrics, worker)
     }));
-    match result {
-        Ok(Ok(())) => {}
-        Ok(Err(e)) => eprintln!("[serve] {peer}: {e}"),
-        Err(_) => {
-            stats.panics += 1;
-            eprintln!("[serve] {peer}: handler panicked (connection dropped)");
+    let (outcome, answered) = match result {
+        Ok(Ok(n)) => ("ok", n),
+        Ok(Err(e)) => {
+            eprintln!("[serve] {peer}: {e}");
+            ("err", 0)
         }
+        Err(_) => {
+            metrics.worker(worker).panics.inc();
+            eprintln!("[serve] {peer}: handler panicked (connection dropped)");
+            ("panic", 0)
+        }
+    };
+    if cfg.log_spans {
+        eprintln!(
+            "[span] conn={} close worker={worker} queued_us={queued_us} served_us={} \
+             requests={answered} outcome={outcome}",
+            adm.seq,
+            t0.elapsed().as_micros()
+        );
     }
 }
 
@@ -387,27 +519,61 @@ fn serve_one(
     reader: std::io::BufReader<TcpStream>,
     stream: &TcpStream,
     shutdown: &Shutdown,
-    stats: &mut ServeStats,
-) -> Result<()> {
+    metrics: &ServeMetrics,
+    worker: usize,
+) -> Result<u64> {
     #[cfg(any(test, feature = "serve-fault"))]
     if let Some(f) = &cfg.fault {
         let faulted = fault::FaultReader::new(reader, f.on_conn());
-        return conn::serve_conn(forest, cfg, faulted, stream, shutdown, stats);
+        return conn::serve_conn(forest, cfg, faulted, stream, shutdown, metrics, worker);
     }
-    conn::serve_conn(forest, cfg, reader, stream, shutdown, stats)
+    conn::serve_conn(forest, cfg, reader, stream, shutdown, metrics, worker)
 }
 
 // ------------------------------------------------------- offline scoring
 
-/// One block of samples streamed out of a CSV (row-major values plus
-/// optional labels from a trailing column).
+/// One block of samples streamed out of a source (row-major values plus
+/// optional labels).
 struct Block {
     n: usize,
     rows: Vec<f32>,
     labels: Option<Vec<u16>>,
 }
 
-/// Report from a `score` run.
+/// Where `score` reads its rows from.
+pub enum ScoreSource<'a> {
+    /// A CSV byte stream (optional header, optional trailing label
+    /// column) — memory stays bounded by one superblock.
+    Csv(&'a mut dyn BufRead),
+    /// A loaded or memory-mapped dataset (`.sofc` column files included):
+    /// rows are materialized one superblock at a time through
+    /// `Dataset::row`, so a model can score a column file larger than RAM.
+    Dataset(&'a crate::data::Dataset),
+}
+
+/// Knobs of a [`score`] run.
+#[derive(Clone, Debug)]
+pub struct ScoreOptions {
+    /// Rows per block (the latency/parallelism quantum).
+    pub block_rows: usize,
+    /// Pool workers scoring blocks concurrently.
+    pub n_threads: usize,
+    /// Keep per-row predictions in the report (throughput runs over huge
+    /// inputs should not).
+    pub keep_predictions: bool,
+}
+
+impl Default for ScoreOptions {
+    fn default() -> Self {
+        ScoreOptions {
+            block_rows: 4096,
+            n_threads: 1,
+            keep_predictions: false,
+        }
+    }
+}
+
+/// Report from a [`score`] run.
 #[derive(Clone, Debug, Default)]
 pub struct ScoreReport {
     pub rows: usize,
@@ -415,8 +581,9 @@ pub struct ScoreReport {
     /// (correct, labeled) — present when the input had a label column.
     pub correct: Option<(usize, usize)>,
     pub wall_s: f64,
-    /// Per-block scoring latency, milliseconds, ascending.
-    pub block_ms: Vec<f64>,
+    /// Per-block scoring latency histogram, microseconds — the same
+    /// log-bucketed type the serve tier reports ([`crate::obs::hist`]).
+    pub latency: HistSnapshot,
     /// Populated only when `keep_predictions` was requested.
     pub predictions: Vec<u16>,
 }
@@ -427,11 +594,192 @@ impl ScoreReport {
     }
 }
 
-/// Stream a CSV through the packed forest in `block_rows`-row blocks,
-/// scored by `n_threads` workers on the coordinator's work-stealing pool.
-/// Memory stays bounded by one *superblock* (`n_threads` blocks) of rows —
-/// plus the predictions, but only when `keep_predictions` asks for them
-/// (throughput runs over huge inputs should not).
+/// A source of row blocks — the seam that lets the CSV stream and the
+/// dataset walker share one scoring loop.
+trait BlockSource {
+    /// The next block (at most `block_rows` rows), or `None` at the end.
+    fn next_block(&mut self, d: usize, block_rows: usize) -> Result<Option<Block>>;
+}
+
+struct CsvBlocks<'a> {
+    lines: std::iter::Enumerate<std::io::Lines<&'a mut dyn BufRead>>,
+    header_checked: bool,
+    /// Whether the file carries a label column — fixed by the first block
+    /// so a column that vanishes at a block boundary cannot silently
+    /// shrink the accuracy denominator.
+    file_labeled: Option<bool>,
+}
+
+impl BlockSource for CsvBlocks<'_> {
+    fn next_block(&mut self, d: usize, block_rows: usize) -> Result<Option<Block>> {
+        let mut block = Block {
+            n: 0,
+            rows: Vec::with_capacity(block_rows * d),
+            labels: None,
+        };
+        while block.n < block_rows {
+            let (lineno, line) = match self.lines.next() {
+                Some((i, l)) => (i, l.context("read csv line")?),
+                None => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_csv_row(&line, d, &mut block) {
+                Ok(()) => block.n += 1,
+                Err(e) => {
+                    if !self.header_checked && lineno == 0 {
+                        // First line that fails numeric parsing is the
+                        // header — skip it.
+                        self.header_checked = true;
+                        continue;
+                    }
+                    bail!("line {}: {e}", lineno + 1);
+                }
+            }
+            self.header_checked = true;
+        }
+        if block.n == 0 {
+            return Ok(None);
+        }
+        let labeled = block.labels.is_some();
+        match self.file_labeled {
+            None => self.file_labeled = Some(labeled),
+            Some(prev) if prev != labeled => {
+                bail!("label column {} mid-file", if prev { "vanished" } else { "appeared" })
+            }
+            Some(_) => {}
+        }
+        Ok(Some(block))
+    }
+}
+
+struct DatasetBlocks<'a> {
+    data: &'a crate::data::Dataset,
+    start: usize,
+    row: Vec<f32>,
+}
+
+impl BlockSource for DatasetBlocks<'_> {
+    fn next_block(&mut self, d: usize, block_rows: usize) -> Result<Option<Block>> {
+        let n = self.data.n_samples();
+        if self.start >= n {
+            return Ok(None);
+        }
+        let end = (self.start + block_rows).min(n);
+        let mut rows = Vec::with_capacity((end - self.start) * d);
+        for s in self.start..end {
+            self.data.row(s, &mut self.row);
+            rows.extend_from_slice(&self.row);
+        }
+        let block = Block {
+            n: end - self.start,
+            rows,
+            labels: Some(self.data.labels_chunk(self.start..end).to_vec()),
+        };
+        self.start = end;
+        Ok(Some(block))
+    }
+}
+
+/// Score `source` through the packed forest in `opts.block_rows`-row
+/// blocks on the coordinator's work-stealing pool — the single entry
+/// point behind the CLI `score` verb. Memory stays bounded by one
+/// *superblock* (`n_threads` blocks) of rows, plus the predictions when
+/// `keep_predictions` asks for them.
+pub fn score(
+    forest: &PackedForest,
+    source: ScoreSource<'_>,
+    opts: &ScoreOptions,
+) -> Result<ScoreReport> {
+    match source {
+        ScoreSource::Csv(input) => {
+            let mut src = CsvBlocks {
+                lines: input.lines().enumerate(),
+                header_checked: false,
+                file_labeled: None,
+            };
+            score_blocks(forest, &mut src, opts)
+        }
+        ScoreSource::Dataset(data) => {
+            if data.n_features() != forest.n_features {
+                bail!(
+                    "model expects {} features, data has {}",
+                    forest.n_features,
+                    data.n_features()
+                );
+            }
+            let mut src = DatasetBlocks {
+                data,
+                start: 0,
+                row: Vec::new(),
+            };
+            score_blocks(forest, &mut src, opts)
+        }
+    }
+}
+
+/// The shared superblock loop: read `n_threads` blocks on this thread,
+/// score them on the pool (per-block latency recorded lock-free into a
+/// shared histogram from inside the workers), accumulate in input order.
+fn score_blocks(
+    forest: &PackedForest,
+    src: &mut dyn BlockSource,
+    opts: &ScoreOptions,
+) -> Result<ScoreReport> {
+    let d = forest.n_features;
+    let block_rows = opts.block_rows.max(1);
+    let n_threads = opts.n_threads.max(1);
+    let t0 = Instant::now();
+    let mut report = ScoreReport::default();
+    let hist = LatencyHistogram::new();
+    loop {
+        // ---- read one superblock (n_threads blocks) on this thread ----
+        let mut blocks: Vec<Block> = Vec::with_capacity(n_threads);
+        while blocks.len() < n_threads {
+            match src.next_block(d, block_rows)? {
+                Some(b) => blocks.push(b),
+                None => break,
+            }
+        }
+        if blocks.is_empty() {
+            break;
+        }
+        // ---- score the superblock on the pool ----
+        let results: Mutex<Vec<(usize, Vec<u16>)>> = Mutex::new(Vec::new());
+        coordinator::run_pool(n_threads, blocks.len(), |queue| {
+            while let Some(i) = queue.claim() {
+                let b = &blocks[i];
+                let t = Instant::now();
+                let preds = forest.predict_batch(&b.rows, b.n);
+                hist.record(t.elapsed().as_micros() as u64);
+                results.lock().unwrap().push((i, preds));
+            }
+        });
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|(i, _)| *i);
+        for ((_, preds), block) in results.into_iter().zip(&blocks) {
+            debug_assert_eq!(preds.len(), block.n);
+            if let Some(labels) = &block.labels {
+                let (mut c, mut t) = report.correct.unwrap_or((0, 0));
+                c += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+                t += labels.len();
+                report.correct = Some((c, t));
+            }
+            report.rows += preds.len();
+            report.blocks += 1;
+            if opts.keep_predictions {
+                report.predictions.extend(preds);
+            }
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report.latency = hist.snapshot();
+    Ok(report)
+}
+
+/// Stream a CSV through the packed forest — thin wrapper over [`score`]
+/// with [`ScoreSource::Csv`], kept for callers that know their source.
 pub fn score_csv_stream(
     forest: &PackedForest,
     input: &mut impl BufRead,
@@ -439,105 +787,19 @@ pub fn score_csv_stream(
     n_threads: usize,
     keep_predictions: bool,
 ) -> Result<ScoreReport> {
-    let d = forest.n_features;
-    let block_rows = block_rows.max(1);
-    let n_threads = n_threads.max(1);
-    let t0 = Instant::now();
-    let mut report = ScoreReport::default();
-    let mut lines = input.lines().enumerate();
-    let mut header_checked = false;
-    // Whether the file carries a label column — fixed by the first block so
-    // a column that vanishes at a block boundary cannot silently shrink the
-    // accuracy denominator.
-    let mut file_labeled: Option<bool> = None;
-    loop {
-        // ---- read one superblock (n_threads blocks) on this thread ----
-        let mut blocks: Vec<Block> = Vec::with_capacity(n_threads);
-        'fill: while blocks.len() < n_threads {
-            let mut block = Block {
-                n: 0,
-                rows: Vec::with_capacity(block_rows * d),
-                labels: None,
-            };
-            while block.n < block_rows {
-                let (lineno, line) = match lines.next() {
-                    Some((i, l)) => (i, l.context("read csv line")?),
-                    None => break,
-                };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_csv_row(&line, d, &mut block) {
-                    Ok(()) => block.n += 1,
-                    Err(e) => {
-                        if !header_checked && lineno == 0 {
-                            // First line that fails numeric parsing is the
-                            // header — skip it.
-                            header_checked = true;
-                            continue;
-                        }
-                        bail!("line {}: {e}", lineno + 1);
-                    }
-                }
-                header_checked = true;
-            }
-            if block.n == 0 {
-                break 'fill;
-            }
-            let labeled = block.labels.is_some();
-            match file_labeled {
-                None => file_labeled = Some(labeled),
-                Some(prev) if prev != labeled => {
-                    bail!("label column {} mid-file", if prev { "vanished" } else { "appeared" })
-                }
-                Some(_) => {}
-            }
-            blocks.push(block);
-        }
-        if blocks.is_empty() {
-            break;
-        }
-        // ---- score the superblock on the pool ----
-        let results: Mutex<Vec<(usize, Vec<u16>, f64)>> = Mutex::new(Vec::new());
-        coordinator::run_pool(n_threads, blocks.len(), |queue| {
-            while let Some(i) = queue.claim() {
-                let b = &blocks[i];
-                let t = Instant::now();
-                let preds = forest.predict_batch(&b.rows, b.n);
-                let ms = t.elapsed().as_secs_f64() * 1e3;
-                results.lock().unwrap().push((i, preds, ms));
-            }
-        });
-        let mut results = results.into_inner().unwrap();
-        results.sort_by_key(|(i, _, _)| *i);
-        for ((i, preds, ms), block) in results.into_iter().zip(&blocks) {
-            debug_assert_eq!(preds.len(), blocks[i].n);
-            if let Some(labels) = &block.labels {
-                let (mut c, mut t) = report.correct.unwrap_or((0, 0));
-                c += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
-                t += labels.len();
-                report.correct = Some((c, t));
-            }
-            report.rows += preds.len();
-            report.blocks += 1;
-            report.block_ms.push(ms);
-            if keep_predictions {
-                report.predictions.extend(preds);
-            }
-        }
-    }
-    report.wall_s = t0.elapsed().as_secs_f64();
-    report.block_ms.sort_by(f64::total_cmp);
-    Ok(report)
+    score(
+        forest,
+        ScoreSource::Csv(input),
+        &ScoreOptions {
+            block_rows,
+            n_threads,
+            keep_predictions,
+        },
+    )
 }
 
-/// Score a loaded dataset through the packed forest in `block_rows`-row
-/// blocks on the pool — the `.sofc` twin of [`score_csv_stream`], so every
-/// scoring verb accepts both input formats with the same report shape.
-/// Rows are materialized one superblock at a time through `Dataset::row`
-/// (binned stores dequantize through their layouts' representative
-/// values), so on the mapped backend only the superblock's pages need
-/// residency and a model can score a column file larger than RAM.
+/// Score a loaded dataset — thin wrapper over [`score`] with
+/// [`ScoreSource::Dataset`], kept for callers that know their source.
 pub fn score_dataset_blocked(
     forest: &PackedForest,
     data: &crate::data::Dataset,
@@ -545,69 +807,15 @@ pub fn score_dataset_blocked(
     n_threads: usize,
     keep_predictions: bool,
 ) -> Result<ScoreReport> {
-    if data.n_features() != forest.n_features {
-        bail!(
-            "model expects {} features, data has {}",
-            forest.n_features,
-            data.n_features()
-        );
-    }
-    let d = data.n_features();
-    let n = data.n_samples();
-    let block_rows = block_rows.max(1);
-    let n_threads = n_threads.max(1);
-    let t0 = Instant::now();
-    let mut report = ScoreReport::default();
-    let mut start = 0usize;
-    let mut row = Vec::new();
-    while start < n {
-        // ---- materialize one superblock (n_threads blocks) ----
-        let mut blocks: Vec<Block> = Vec::with_capacity(n_threads);
-        while blocks.len() < n_threads && start < n {
-            let end = (start + block_rows).min(n);
-            let mut rows = Vec::with_capacity((end - start) * d);
-            for s in start..end {
-                data.row(s, &mut row);
-                rows.extend_from_slice(&row);
-            }
-            blocks.push(Block {
-                n: end - start,
-                rows,
-                labels: Some(data.labels_chunk(start..end).to_vec()),
-            });
-            start = end;
-        }
-        // ---- score it on the pool, same as the CSV path ----
-        let results: Mutex<Vec<(usize, Vec<u16>, f64)>> = Mutex::new(Vec::new());
-        coordinator::run_pool(n_threads, blocks.len(), |queue| {
-            while let Some(i) = queue.claim() {
-                let b = &blocks[i];
-                let t = Instant::now();
-                let preds = forest.predict_batch(&b.rows, b.n);
-                let ms = t.elapsed().as_secs_f64() * 1e3;
-                results.lock().unwrap().push((i, preds, ms));
-            }
-        });
-        let mut results = results.into_inner().unwrap();
-        results.sort_by_key(|(i, _, _)| *i);
-        for ((_, preds, ms), block) in results.into_iter().zip(&blocks) {
-            if let Some(labels) = &block.labels {
-                let (mut c, mut t) = report.correct.unwrap_or((0, 0));
-                c += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
-                t += labels.len();
-                report.correct = Some((c, t));
-            }
-            report.rows += preds.len();
-            report.blocks += 1;
-            report.block_ms.push(ms);
-            if keep_predictions {
-                report.predictions.extend(preds);
-            }
-        }
-    }
-    report.wall_s = t0.elapsed().as_secs_f64();
-    report.block_ms.sort_by(f64::total_cmp);
-    Ok(report)
+    score(
+        forest,
+        ScoreSource::Dataset(data),
+        &ScoreOptions {
+            block_rows,
+            n_threads,
+            keep_predictions,
+        },
+    )
 }
 
 /// Parse one CSV line with `d` features and an optional trailing label.
@@ -723,11 +931,12 @@ mod tests {
         };
         let stats = serve_lines(&packed, &cfg, Cursor::new(input), &mut output).unwrap();
         assert_eq!(stats.requests, 50);
+        assert_eq!(stats.served, 50);
         assert_eq!(stats.errors, 0);
         assert_eq!(stats.timeouts, 0);
         assert_eq!(stats.conns, 1);
         assert!(stats.batches >= 50 / 8, "batches {}", stats.batches);
-        assert_eq!(stats.latencies_us.len(), 50);
+        assert_eq!(stats.latency.count, 50, "one latency sample per request");
         // Responses match the engine's own batch predictions, in order.
         let mut rows = vec![0f32; 50 * data.n_features()];
         let mut row = Vec::new();
@@ -884,6 +1093,70 @@ mod tests {
     }
 
     #[test]
+    fn stats_line_reports_request_traffic_in_order() {
+        // A `!stats` line embedded in the request stream answers with a
+        // snapshot that counts exactly the requests answered before it —
+        // order is the protocol's 1:1 correspondence, so this is
+        // deterministic regardless of batch boundaries.
+        let (packed, data) = packed_and_data();
+        let rows = request_lines(&data, 3);
+        let tail = request_lines(&data, 1);
+        let input = format!("{rows}!stats\n{tail}");
+        let mut output = Vec::new();
+        let stats =
+            serve_lines(&packed, &ServeConfig::default(), Cursor::new(input), &mut output)
+                .unwrap();
+        // The stats line consumes no request accounting of its own.
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.served, 4);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        let mid = ServeStats::from_json_line(lines[3]).unwrap();
+        assert_eq!(mid.served, 3, "snapshot counts the 3 requests before it");
+        assert_eq!(mid.requests, 3);
+        assert_eq!(mid.conns, 1);
+        assert_eq!(mid.workers, 1);
+        for i in [0usize, 1, 2, 4] {
+            assert!(lines[i].parse::<u16>().is_ok(), "{}", lines[i]);
+        }
+    }
+
+    #[test]
+    fn stats_line_consumes_no_request_ticket() {
+        // Budget of 2 with a `!stats` poll between requests: both real
+        // requests are answered — the poll must not eat a ticket.
+        let (packed, data) = packed_and_data();
+        let rows = request_lines(&data, 2);
+        let mut it = rows.lines();
+        let (r0, r1) = (it.next().unwrap(), it.next().unwrap());
+        let input = format!("{r0}\n!stats\n{r1}\n{r1}\n");
+        let shutdown = Shutdown::with_budget(Some(2));
+        let metrics = ServeMetrics::new(1, 1);
+        let mut output = Vec::new();
+        let cfg = ServeConfig::default();
+        let answered = conn::serve_conn(
+            &packed,
+            &cfg,
+            Cursor::new(input),
+            &mut output,
+            &shutdown,
+            &metrics,
+            0,
+        )
+        .unwrap();
+        assert_eq!(answered, 2, "budget bounds answered requests");
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // pred, stats json, pred — the 4th line never gets a ticket.
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[0].parse::<u16>().is_ok());
+        assert!(ServeStats::from_json_line(lines[1]).is_ok(), "{}", lines[1]);
+        assert!(lines[2].parse::<u16>().is_ok());
+        assert_eq!(metrics.snapshot().requests, 2);
+    }
+
+    #[test]
     fn admin_shutdown_line_acks_and_stops() {
         let (packed, data) = packed_and_data();
         let good = request_lines(&data, 1);
@@ -893,7 +1166,7 @@ mod tests {
             ..Default::default()
         };
         let shutdown = Shutdown::new();
-        let mut stats = ServeStats::default();
+        let metrics = ServeMetrics::new(1, 1);
         let mut output = Vec::new();
         super::conn::serve_conn(
             &packed,
@@ -901,7 +1174,8 @@ mod tests {
             Cursor::new(input),
             &mut output,
             &shutdown,
-            &mut stats,
+            &metrics,
+            0,
         )
         .unwrap();
         assert!(shutdown.stop_requested(), "!shutdown must request the stop");
@@ -911,7 +1185,7 @@ mod tests {
         assert!(lines[0].parse::<u16>().is_ok());
         assert_eq!(lines[1], "!ok shutdown");
         // The request after `!shutdown` is never read, let alone answered.
-        assert_eq!(stats.requests, 1);
+        assert_eq!(metrics.snapshot().requests, 1);
     }
 
     #[test]
@@ -919,18 +1193,11 @@ mod tests {
         let (packed, data) = packed_and_data();
         let pf = std::env::temp_dir().join("soforest_serve_unit_port");
         std::fs::remove_file(&pf).ok();
+        let cfg = ServeConfig::new().with_port_file(&pf);
         let requests = request_lines(&data, 5);
         std::thread::scope(|scope| {
-            let server = scope.spawn(|| {
-                serve_tcp(
-                    &packed,
-                    &ServeConfig::default(),
-                    "127.0.0.1:0",
-                    Some(pf.as_path()),
-                    &Shutdown::with_budget(Some(5)),
-                )
-                .unwrap()
-            });
+            let server = scope
+                .spawn(|| serve_tcp(&packed, &cfg, &Shutdown::with_budget(Some(5))).unwrap());
             let mut conn = connect_via_port_file(&pf);
             conn.write_all(requests.as_bytes()).unwrap();
             conn.shutdown(std::net::Shutdown::Write).unwrap();
@@ -944,6 +1211,7 @@ mod tests {
             let stats = server.join().unwrap();
             assert_eq!(stats.requests, 5);
             assert_eq!(stats.conns, 1);
+            assert_eq!(stats.latency.count, 5);
         });
         std::fs::remove_file(&pf).ok();
     }
@@ -956,18 +1224,11 @@ mod tests {
         let (packed, data) = packed_and_data();
         let pf = std::env::temp_dir().join("soforest_serve_budget_port");
         std::fs::remove_file(&pf).ok();
+        let cfg = ServeConfig::new().with_port_file(&pf);
         let requests = request_lines(&data, 10);
         std::thread::scope(|scope| {
-            let server = scope.spawn(|| {
-                serve_tcp(
-                    &packed,
-                    &ServeConfig::default(),
-                    "127.0.0.1:0",
-                    Some(pf.as_path()),
-                    &Shutdown::with_budget(Some(3)),
-                )
-                .unwrap()
-            });
+            let server = scope
+                .spawn(|| serve_tcp(&packed, &cfg, &Shutdown::with_budget(Some(3))).unwrap());
             let mut conn = connect_via_port_file(&pf);
             conn.write_all(requests.as_bytes()).unwrap();
             let mut text = String::new();
@@ -988,6 +1249,7 @@ mod tests {
         std::fs::remove_file(&pf).ok();
         let shutdown = Shutdown::new();
         let cfg = ServeConfig {
+            port_file: Some(pf.clone()),
             workers: 1,
             queue_depth: 1,
             drain: Duration::from_millis(200),
@@ -995,9 +1257,7 @@ mod tests {
         };
         let one_row = request_lines(&data, 1);
         std::thread::scope(|scope| {
-            let server = scope.spawn(|| {
-                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
-            });
+            let server = scope.spawn(|| serve_tcp(&packed, &cfg, &shutdown).unwrap());
             // Conn A occupies the single worker (held open, no close).
             let mut a = connect_via_port_file(&pf);
             a.write_all(one_row.as_bytes()).unwrap();
@@ -1033,13 +1293,12 @@ mod tests {
         std::fs::remove_file(&pf).ok();
         let shutdown = Shutdown::new();
         let cfg = ServeConfig {
+            port_file: Some(pf.clone()),
             drain: Duration::from_millis(200),
             ..Default::default()
         };
         std::thread::scope(|scope| {
-            let server = scope.spawn(|| {
-                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
-            });
+            let server = scope.spawn(|| serve_tcp(&packed, &cfg, &shutdown).unwrap());
             let mut conn = connect_via_port_file(&pf);
             conn.write_all(request_lines(&data, 3).as_bytes()).unwrap();
             let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -1068,6 +1327,39 @@ mod tests {
     }
 
     #[test]
+    fn metrics_file_dumps_final_exact_totals() {
+        let (packed, data) = packed_and_data();
+        let dir = std::env::temp_dir();
+        let pf = dir.join("soforest_serve_mfile_port");
+        let mf = dir.join("soforest_serve_mfile.json");
+        std::fs::remove_file(&pf).ok();
+        std::fs::remove_file(&mf).ok();
+        let cfg = ServeConfig::new()
+            .with_port_file(&pf)
+            .with_metrics_file(&mf)
+            .with_metrics_interval(Duration::from_millis(50));
+        let requests = request_lines(&data, 4);
+        std::thread::scope(|scope| {
+            let server = scope
+                .spawn(|| serve_tcp(&packed, &cfg, &Shutdown::with_budget(Some(4))).unwrap());
+            let mut conn = connect_via_port_file(&pf);
+            conn.write_all(requests.as_bytes()).unwrap();
+            conn.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut text = String::new();
+            BufReader::new(conn).read_to_string(&mut text).ok();
+            let stats = server.join().unwrap();
+            // The final dump (written after drain) holds the exact totals.
+            let dumped =
+                ServeStats::from_json_line(std::fs::read_to_string(&mf).unwrap().trim()).unwrap();
+            assert_eq!(dumped.requests, stats.requests);
+            assert_eq!(dumped.served, 4);
+            assert_eq!(dumped.latency.count, stats.latency.count);
+        });
+        std::fs::remove_file(&pf).ok();
+        std::fs::remove_file(&mf).ok();
+    }
+
+    #[test]
     fn panicking_handler_does_not_lose_stats() {
         // Regression for the poisoned-mutex stats loss: a handler panic
         // (injected via the fault hook) must cost only its own connection —
@@ -1082,14 +1374,13 @@ mod tests {
             ..Default::default()
         }));
         let cfg = ServeConfig {
+            port_file: Some(pf.clone()),
             max_wait: Duration::from_millis(1),
             fault: Some(fault),
             ..Default::default()
         };
         std::thread::scope(|scope| {
-            let server = scope.spawn(|| {
-                serve_tcp(&packed, &cfg, "127.0.0.1:0", Some(pf.as_path()), &shutdown).unwrap()
-            });
+            let server = scope.spawn(|| serve_tcp(&packed, &cfg, &shutdown).unwrap());
             let mut conn = connect_via_port_file(&pf);
             let one_row = request_lines(&data, 1);
             // First batch (batch #1) answers normally...
@@ -1142,7 +1433,10 @@ mod tests {
         let (correct, labeled) = report.correct.unwrap();
         assert_eq!(labeled, data.n_samples());
         assert_eq!(report.blocks, data.n_samples().div_ceil(64));
-        assert_eq!(report.block_ms.len(), report.blocks);
+        assert_eq!(
+            report.latency.count as usize, report.blocks,
+            "one latency sample per block"
+        );
         // Predictions identical to a one-shot batch over the same rows.
         let mut rows = vec![0f32; data.n_samples() * 8];
         for s in 0..data.n_samples() {
@@ -1168,6 +1462,35 @@ mod tests {
         assert!(
             score_csv_stream(&packed, &mut Cursor::new(bad.as_bytes()), 16, 1, false).is_err()
         );
+    }
+
+    #[test]
+    fn score_sources_agree_on_the_same_rows() {
+        // The unified entry point's contract: the CSV stream and the
+        // dataset walker produce identical predictions and accuracy for
+        // the same underlying rows.
+        let (packed, data) = packed_and_data();
+        let mut csv = String::new();
+        let mut row = Vec::new();
+        for s in 0..data.n_samples() {
+            data.row(s, &mut row);
+            for v in &row {
+                csv.push_str(&format!("{v},"));
+            }
+            csv.push_str(&format!("{}\n", data.label(s)));
+        }
+        let opts = ScoreOptions {
+            block_rows: 64,
+            n_threads: 2,
+            keep_predictions: true,
+        };
+        let from_csv =
+            score(&packed, ScoreSource::Csv(&mut Cursor::new(csv.as_bytes())), &opts).unwrap();
+        let from_data = score(&packed, ScoreSource::Dataset(&data), &opts).unwrap();
+        assert_eq!(from_csv.predictions, from_data.predictions);
+        assert_eq!(from_csv.correct, from_data.correct);
+        assert_eq!(from_csv.rows, from_data.rows);
+        assert_eq!(from_csv.blocks, from_data.blocks);
     }
 
     #[test]

@@ -75,6 +75,17 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Current occupancy — what the queue-depth gauge reads. Taken under
+    /// the same lock as push/pop, so it is exact at the instant of the
+    /// call (connection-rate, never on the per-request path).
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Close the queue: wake every blocked popper and return the
     /// undelivered backlog for explicit shedding.
     pub fn close(&self) -> Vec<T> {
@@ -148,6 +159,22 @@ mod tests {
         assert_eq!(q.try_push("c"), Err("c"));
         assert_eq!(q.pop(), Some("a"));
         q.try_push("c").unwrap();
+    }
+
+    #[test]
+    fn len_tracks_occupancy_through_the_lifecycle() {
+        let q = BoundedQueue::new(3);
+        assert_eq!(q.len(), 0);
+        assert!(q.is_empty());
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert!(!q.is_empty());
+        q.pop();
+        assert_eq!(q.len(), 1);
+        let leftover = q.close();
+        assert_eq!(leftover, vec![2]);
+        assert_eq!(q.len(), 0, "close drains the backlog");
     }
 
     #[test]

@@ -385,6 +385,90 @@ fn serve_answers_tcp_requests_end_to_end() {
 }
 
 #[test]
+fn top_once_and_metrics_file_against_a_live_server() {
+    // Observability e2e, all through the CLI: a server with --metrics-file,
+    // a `top --once` frame polled mid-session (which must not consume a
+    // request ticket), and the final exact metrics dump at drain.
+    use std::io::{BufRead, BufReader, Write};
+    let (model, csv) = train_model("top");
+    let port_file = tmp("soforest_e2e_top_port");
+    let metrics_file = tmp("soforest_e2e_top_metrics.json");
+    std::fs::remove_file(&port_file).ok();
+    std::fs::remove_file(&metrics_file).ok();
+    let model_arg = model.to_str().unwrap().to_string();
+    let pf_arg = port_file.to_str().unwrap().to_string();
+    let mf_arg = metrics_file.to_str().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        cli::run(&argv(&[
+            "serve",
+            "--model",
+            &model_arg,
+            "--tcp",
+            "127.0.0.1:0",
+            "--port-file",
+            &pf_arg,
+            "--max-requests",
+            "3",
+            "--metrics-file",
+            &mf_arg,
+            "--metrics-interval-ms",
+            "100",
+            "--log-spans",
+        ]))
+    });
+    let mut tries = 0;
+    loop {
+        match std::fs::read_to_string(&port_file) {
+            Ok(s) if !s.is_empty() => break,
+            _ => {
+                tries += 1;
+                assert!(tries < 2000, "serve never wrote the port file");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    let addr = std::fs::read_to_string(&port_file).unwrap();
+    let mut conn = std::net::TcpStream::connect(addr.trim()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    for _ in 0..2 {
+        conn.write_all(b"0,0,0,0,0,0,0,0\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.trim().parse::<usize>().is_ok(), "{line}");
+    }
+    // A single `top` frame against the live server. Its `!stats` poll must
+    // not eat into the request budget: the third real request below still
+    // gets its answer.
+    cli::run(&argv(&[
+        "top",
+        "--port-file",
+        port_file.to_str().unwrap(),
+        "--once",
+    ]))
+    .expect("top --once against a live server");
+    conn.write_all(b"0,0,0,0,0,0,0,0\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.trim().parse::<usize>().is_ok(), "{line}");
+    // Budget exhausted: the server drains and the CLI returns.
+    server.join().unwrap().unwrap();
+    // The final metrics dump holds the exact totals: 3 answered requests,
+    // and the top poll's connection counted but ticketless.
+    let dumped = soforest::serve::ServeStats::from_json_line(
+        std::fs::read_to_string(&metrics_file).unwrap().trim(),
+    )
+    .expect("metrics file JSON");
+    assert_eq!(dumped.served, 3);
+    assert_eq!(dumped.requests, 3);
+    assert!(dumped.conns >= 2, "client + top poll, got {}", dumped.conns);
+    assert_eq!(dumped.latency.count, 3);
+    for p in [model, csv, port_file, metrics_file] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
 fn migrate_upgrades_v1_models_that_still_load() {
     // Write a model in the legacy v1 layout, check every entry point still
     // reads it, then migrate to v2 and compare predictions.

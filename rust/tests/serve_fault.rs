@@ -68,10 +68,9 @@ fn with_server(
 ) -> ServeStats {
     let pf = std::env::temp_dir().join(pf_name);
     std::fs::remove_file(&pf).ok();
+    let cfg = cfg.clone().with_port_file(&pf);
     let stats = std::thread::scope(|scope| {
-        let server = scope.spawn(|| {
-            serve_tcp(packed, cfg, "127.0.0.1:0", Some(pf.as_path()), shutdown).unwrap()
-        });
+        let server = scope.spawn(|| serve_tcp(packed, &cfg, shutdown).unwrap());
         client(&pf);
         shutdown.request_stop();
         let t0 = Instant::now();
@@ -209,6 +208,7 @@ fn mid_line_disconnects_are_contained() {
     assert_eq!(stats.conns, 4);
     assert_eq!(stats.requests, 2);
     assert_eq!(stats.panics, 0, "a disconnect is not a panic");
+    assert_eq!(stats.disconnects, 2, "each cut wire counts once");
 }
 
 #[test]
@@ -291,4 +291,70 @@ fn fault_storm_preserves_aggregate_stats() {
     assert_eq!(stats.panics, 1);
     assert_eq!(stats.timeouts, 0);
     assert_eq!(stats.errors, 0);
+    assert_eq!(stats.disconnects, 4, "one per killed connection");
+}
+
+#[test]
+fn stats_line_is_an_exact_oracle_under_faults() {
+    // The live `!stats` snapshot — not just the drained aggregate — must
+    // exactly match client observations even while faults fire. Same storm
+    // plan as above; after the 12 serial connections, a 13th connection
+    // polls `!stats` and cross-checks every counter.
+    let (packed, line) = fixture();
+    let shutdown = Shutdown::new();
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        fault: Some(Arc::new(FaultState::new(FaultPlan {
+            seed: 3,
+            kill_conn_every: Some(3),
+            panic_every_batch: Some(5),
+            stall_every_batch: Some(7),
+            stall: Duration::from_millis(5),
+            ..Default::default()
+        }))),
+        ..Default::default()
+    };
+    let stats = with_server(&packed, &cfg, &shutdown, "soforest_fault_oracle_port", |pf| {
+        let mut answered = 0usize;
+        for k in 1..=12u64 {
+            if let Some(a) = one_shot(pf, &line) {
+                assert!(a.parse::<u16>().is_ok(), "conn {k}: {a}");
+                answered += 1;
+            } else {
+                assert!(k % 3 == 0 || k == 7, "conn {k} dropped unexpectedly");
+            }
+        }
+        assert_eq!(answered, 7);
+        // Poll the admin line. Every client-side event is already recorded
+        // server-side by the time the client observed it (counters bump
+        // before the response line is flushed, and a dropped connection is
+        // only visible to the client after the server closed it), so the
+        // snapshot is exact, not approximate. The poll connection is batch
+        // #9 of the fault plan — it fires on_batch but trips nothing.
+        let mut conn = connect(pf);
+        conn.write_all(b"!stats\n").unwrap();
+        let mut resp = String::new();
+        BufReader::new(conn.try_clone().unwrap())
+            .read_line(&mut resp)
+            .unwrap();
+        let snap = ServeStats::from_json_line(resp.trim()).expect("stats JSON");
+        assert_eq!(snap.served, answered, "served != client-observed answers");
+        assert_eq!(snap.requests, answered);
+        assert_eq!(snap.conns, 13, "12 storm conns + this poll conn");
+        assert_eq!(snap.panics, 1);
+        assert_eq!(snap.disconnects, 4);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.timeouts, 0);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(
+            snap.latency.count as usize, answered,
+            "one histogram sample per answered request"
+        );
+        conn.shutdown(std::net::Shutdown::Both).ok();
+    });
+    // The drained aggregate agrees with the live snapshot's view.
+    assert_eq!(stats.conns, 13);
+    assert_eq!(stats.requests, 7);
+    assert_eq!(stats.panics, 1);
+    assert_eq!(stats.disconnects, 4);
 }
