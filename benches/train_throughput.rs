@@ -1,8 +1,13 @@
 //! Training throughput: depth vs frontier growth at 1 and N threads,
-//! frontier with sibling-histogram subtraction on vs off, and the
+//! frontier with sibling-histogram subtraction on vs off, the
 //! storage backend sweep — in-memory float, memory-mapped float, and
 //! quantized (`storage=binned`, 255-bin u8 columns with the direct
-//! bin-id histogram fast path).
+//! bin-id histogram fast path) — and the shard-count sweep
+//! (`shards=1|2|4`): the same table split into contiguous row-range
+//! members and trained fill-local/merge-global, so the per-shard
+//! partial-fill + `merge_shard_tables` overhead is tracked as its own
+//! gated rows (the forests are byte-identical by construction, see
+//! tests/shard_equivalence.rs, so any delta is pure merge cost).
 //!
 //! The frontier scheduler's reason to exist is intra-tree parallelism: a
 //! **single large tree** should scale with cores, where the depth-first
@@ -29,7 +34,7 @@ use soforest::bench::Table;
 use soforest::config::{ForestConfig, GrowthMode};
 use soforest::coordinator::train_forest_with_source;
 use soforest::data::synth::trunk::TrunkConfig;
-use soforest::data::{colfile, Dataset};
+use soforest::data::{colfile, shards, Dataset};
 use soforest::forest::tree::ProjectionSource;
 use soforest::rng::Pcg64;
 use std::fmt::Write as _;
@@ -86,10 +91,28 @@ fn main() {
     // gate tracks its throughput trajectory, the eval e2e reports the
     // accuracy delta.
     let binned = data.quantized(255);
+    // Sharded twins of the float table (contiguous row-range members, the
+    // layout `gen-data --shards` writes): the shards=2|4 rows time the
+    // fill-local/merge-global histogram tier against the shards=1 `ram`
+    // row. Same forest bytes by construction, so the delta is the cost of
+    // per-shard partial fills + the tree-structured count-table merge.
+    let shard_k = |k: usize| -> Dataset {
+        let parts: Vec<Dataset> = (0..k)
+            .map(|i| {
+                let ids: Vec<u32> = (i * rows / k..(i + 1) * rows / k)
+                    .map(|r| r as u32)
+                    .collect();
+                data.subset(&ids)
+            })
+            .collect();
+        shards::from_parts(parts).expect("contiguous row-range members")
+    };
+    let sharded2 = shard_k(2);
+    let sharded4 = shard_k(4);
 
     println!("# single-tree training throughput, trunk:{rows}:{d}, to purity\n");
-    // Speedup is relative to each (growth, subtraction, storage) group's
-    // FIRST sweep entry (1 thread in the default sweep); a custom
+    // Speedup is relative to each (growth, subtraction, storage, shards)
+    // group's FIRST sweep entry (1 thread in the default sweep); a custom
     // SOFOREST_BENCH_TRAIN_THREADS changes the baseline accordingly, so
     // the field is named "vs_first", not "vs_1t". Depth growth has no
     // sibling pairs, so only the subtraction=on default is timed there;
@@ -98,6 +121,7 @@ fn main() {
         "growth",
         "subtraction",
         "storage",
+        "shards",
         "threads",
         "wall_s",
         "rows/s",
@@ -105,19 +129,21 @@ fn main() {
     ]);
     let mut json_rows = String::new();
     let mut first = true;
-    let configs: Vec<(GrowthMode, bool, &str, &Dataset)> = {
-        let mut c: Vec<(GrowthMode, bool, &str, &Dataset)> = vec![
-            (GrowthMode::Depth, true, "ram", &data),
-            (GrowthMode::Frontier, true, "ram", &data),
-            (GrowthMode::Frontier, false, "ram", &data),
+    let configs: Vec<(GrowthMode, bool, &str, usize, &Dataset)> = {
+        let mut c: Vec<(GrowthMode, bool, &str, usize, &Dataset)> = vec![
+            (GrowthMode::Depth, true, "ram", 1, &data),
+            (GrowthMode::Frontier, true, "ram", 1, &data),
+            (GrowthMode::Frontier, false, "ram", 1, &data),
         ];
         if let Some(m) = &mapped {
-            c.push((GrowthMode::Frontier, true, "mmap", m));
+            c.push((GrowthMode::Frontier, true, "mmap", 1, m));
         }
-        c.push((GrowthMode::Frontier, true, "binned", &binned));
+        c.push((GrowthMode::Frontier, true, "binned", 1, &binned));
+        c.push((GrowthMode::Frontier, true, "sharded", 2, &sharded2));
+        c.push((GrowthMode::Frontier, true, "sharded", 4, &sharded4));
         c
     };
-    for (growth, subtraction, storage, bench_data) in configs {
+    for (growth, subtraction, storage, shards, bench_data) in configs {
         let mut base_wall = f64::NAN;
         for &threads in &threads_sweep {
             let cfg = ForestConfig {
@@ -142,6 +168,7 @@ fn main() {
                 growth.name().to_string(),
                 if subtraction { "on" } else { "off" }.to_string(),
                 storage.to_string(),
+                shards.to_string(),
                 threads.to_string(),
                 format!("{:.3}", out.wall_s),
                 format!("{rows_per_s:.0}"),
@@ -154,9 +181,9 @@ fn main() {
             let _ = write!(
                 json_rows,
                 "    {{\"growth\": \"{}\", \"hist_subtraction\": {subtraction}, \
-                 \"storage\": \"{storage}\", \"threads\": {threads}, \"rows\": {rows}, \
-                 \"features\": {d}, \"wall_s\": {:.4}, \"rows_per_s\": {rows_per_s:.1}, \
-                 \"speedup_vs_first\": {speedup:.3}}}",
+                 \"storage\": \"{storage}\", \"shards\": {shards}, \"threads\": {threads}, \
+                 \"rows\": {rows}, \"features\": {d}, \"wall_s\": {:.4}, \
+                 \"rows_per_s\": {rows_per_s:.1}, \"speedup_vs_first\": {speedup:.3}}}",
                 growth.name(),
                 out.wall_s
             );

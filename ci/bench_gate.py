@@ -35,11 +35,14 @@ TOLERANCE = 0.15  # fail on >15% regression of the gated metric
 SPECS = {
     "BENCH_train.json": {
         # "storage" distinguishes the backends the trainer can read from
-        # (rows keyed `ram` | `mmap` | `binned` — the last is the
-        # quantized u8 bin-id store with the direct-accumulate fast
-        # path); older baselines without a row simply stop matching and
-        # are reported as dropped/new rows until re-recorded.
-        "keys": ("growth", "threads", "hist_subtraction", "storage"),
+        # (rows keyed `ram` | `mmap` | `binned` | `sharded` — `binned` is
+        # the quantized u8 bin-id store with the direct-accumulate fast
+        # path, `sharded` the multi-member row-range store); "shards" (1
+        # on single-store rows) keys the shard-count sweep so the
+        # fill-local/merge-global overhead gates per shard count. Older
+        # baselines without a row simply stop matching and are reported
+        # as dropped/new rows until re-recorded.
+        "keys": ("growth", "threads", "hist_subtraction", "storage", "shards"),
         "metrics": ("rows_per_s",),
         "higher_is_better": True,
     },

@@ -11,7 +11,7 @@
 
 use crate::config::ForestConfig;
 use crate::data::synth;
-use crate::data::{colfile, csv, Dataset};
+use crate::data::{colfile, csv, shards, Dataset};
 use crate::might::{metrics, train_might, MightConfig};
 use crate::rng::Pcg64;
 use crate::split::histogram::Routing;
@@ -149,8 +149,10 @@ COMMANDS:
   might      run the MIGHT honest-forest protocol, report AUC / S@98
   gen-data   materialize a synthetic dataset to CSV; --shards N instead
              writes N contiguous .sofc shards (--out is the name stem,
-             shard files are <stem>.shard<i>.sofc), built shard-by-shard;
-             --bins B makes the shards v2 quantized
+             shard files are <stem>.shard<i>.sofc), each stamped with its
+             global row range so the shard loader can verify the set is
+             complete; --bins B makes the shards v2 quantized through ONE
+             shared bin layout (fit over the whole table)
   pack       convert --data (CSV path, generator spec, or v1 .sofc) into
              a binary column file for out-of-core training: --out
              table.sofc [--label-first] [--no-header]; CSV input streams
@@ -168,7 +170,13 @@ COMMON FLAGS:
                     susy, epsilon, bank-marketing, ...), path to a CSV, or
                     path to a packed column file (`soforest pack` output) —
                     .sofc files are memory-mapped read-only and train
-                    out-of-core through the OS page cache
+                    out-of-core through the OS page cache. A quoted shard
+                    glob ('out.shard*.sofc') or a .sofm manifest (one
+                    member path per line) loads a sharded table: members
+                    validate as row-ranges of one logical table and train
+                    data-parallel (per-shard histogram fills, deterministic
+                    merge) — forests are byte-identical to training on the
+                    concatenated table
   --config <file>   key = value config file
   --seed <u64>      RNG seed (default 42)
   plus any config key, e.g. --trees 240 --strategy dynamic-vectorized
@@ -195,16 +203,26 @@ COMMON FLAGS:
                     `soforest calibrate --out <f>` (skips re-calibration)
 ";
 
-/// Load `--data`: a generator spec, a CSV path, or a packed `.sofc`
-/// column file (dispatched by magic sniff, not extension, so renamed
-/// files still route correctly). Column files come back on the
-/// memory-mapped backend — nothing is copied into RAM.
+/// Load `--data`: a generator spec, a CSV path, a packed `.sofc` column
+/// file (dispatched by magic sniff, not extension, so renamed files
+/// still route correctly), a quoted shard glob (`'out.shard*.sofc'`), or
+/// a `.sofm` shard manifest. Column files come back on the memory-mapped
+/// backend — nothing is copied into RAM; shard sets compose into one
+/// logical table ([`crate::data::shards`]) and train data-parallel.
 pub fn load_data(args: &Args, rng: &mut Pcg64) -> Result<Dataset> {
     let spec = args
         .get("data")
         .ok_or_else(|| anyhow!("--data is required"))?;
+    if spec.contains('*') {
+        // Shard glob (quote it so the shell doesn't pre-expand): every
+        // match is a member of one sharded table.
+        return shards::load_sharded(&shards::expand_glob(spec)?);
+    }
     let path = Path::new(spec);
     if path.exists() {
+        if spec.ends_with(".sofm") {
+            return shards::load_sharded(&shards::read_manifest(path)?);
+        }
         if colfile::sniff(path) {
             colfile::load_mapped(path)
         } else {
@@ -807,36 +825,53 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     let shards: usize = args.get_parse("shards", 0usize)?;
     if shards > 0 {
         // Sharded `.sofc` output: contiguous row ranges, one file per
-        // shard, each written in its own streaming pass (the shard subset
-        // is the only extra allocation and is dropped before the next
-        // shard starts). `--bins N` writes v2 quantized shards — layouts
-        // are fit per shard, exactly as packing each shard separately
-        // would.
+        // shard. Every shard is stamped with its global row offset and
+        // the total row count, so the shard loader can prove the set is
+        // complete (a missing middle shard is a hard error, not a
+        // silently smaller table). `--bins N` quantizes the WHOLE table
+        // once and writes each shard through the layout-preserving
+        // binned writer — every member carries identical bin layouts,
+        // which sharded training requires (and which per-shard fitting
+        // would silently violate).
         let bins: usize = args.get_parse("bins", 0usize)?;
         let n = data.n_samples();
         if shards > n {
             bail!("--shards {shards} exceeds the {n} generated samples");
         }
         let stem = out.strip_suffix(".sofc").unwrap_or(out);
+        let binned = if bins > 0 {
+            Some(data.quantized(bins))
+        } else {
+            None
+        };
+        let source = binned.as_ref().unwrap_or(&data);
         for i in 0..shards {
             let lo = i * n / shards;
             let hi = (i + 1) * n / shards;
             let idx: Vec<u32> = (lo as u32..hi as u32).collect();
-            let shard = data.subset(&idx);
+            let shard = source.subset(&idx);
             let shard_path = format!("{stem}.shard{i}.sofc");
             if bins > 0 {
-                colfile::write_dataset_v2(&shard, Path::new(&shard_path), bins)?;
+                colfile::write_dataset_binned(&shard, Path::new(&shard_path))?;
             } else {
                 colfile::write_dataset(&shard, Path::new(&shard_path))?;
             }
+            colfile::append_shard_stamp(
+                Path::new(&shard_path),
+                colfile::ShardStamp {
+                    row_offset: lo as u64,
+                    total_rows: n as u64,
+                },
+            )?;
             println!("  shard {i}: rows {lo}..{hi} -> {shard_path}");
         }
         println!(
-            "wrote {} samples x {} features as {shards} .sofc shards ({})",
+            "wrote {} samples x {} features as {shards} stamped .sofc shards ({}) — train \
+             with --data '{stem}.shard*.sofc'",
             data.n_samples(),
             data.n_features(),
             if bins > 0 {
-                format!("v2 quantized, <={bins} bins/feature")
+                format!("v2 quantized, <={bins} bins/feature, one shared layout")
             } else {
                 "v1 float".to_string()
             }

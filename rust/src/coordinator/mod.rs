@@ -10,6 +10,12 @@
 //! Hybrid (§4.3) note: PJRT clients are per-worker (created lazily inside
 //! the worker when the strategy is `Hybrid` and artifacts exist), matching
 //! the paper's "map each thread to a CUDA stream".
+//!
+//! The same `TaskQueue`/`LevelPool` machinery drains every intra-tree
+//! fan-out in `forest/tree.rs` — CPU split units, accel-tier prep, and the
+//! sharded store's per-(node, shard) partial fills + merges — all through
+//! `tree.rs::run_attributed`, so `--instrument`'s `cpu_ms`/`sched_ms`
+//! attribution covers each tier uniformly.
 
 use crate::accel::NodeSplitAccel;
 use crate::config::{ForestConfig, GrowthMode};

@@ -65,6 +65,57 @@ const HEADER_FIXED_V2: u64 = 56;
 const N_CLASSES_OFFSET: u64 = 32;
 /// Byte offset of the v2 `max_bins` u16.
 const MAX_BINS_OFFSET: u64 = 48;
+/// Magic of the optional 24-byte shard stamp trailer. `gen-data --shards`
+/// appends one to each member file so the shard manifest can prove the
+/// set is complete: `[magic 8][row_offset u64][total_rows u64]`, placed
+/// at **exactly** the layout's `file_len` (the loader tolerates trailing
+/// bytes, so stamped files keep loading as ordinary single tables, and
+/// the position-exact placement means arbitrary trailing junk can never
+/// be misread as a stamp).
+pub const SHARD_STAMP_MAGIC: [u8; 8] = *b"SOFSHARD";
+/// Total stamp trailer length in bytes.
+pub const SHARD_STAMP_LEN: u64 = 24;
+
+/// Provenance of one shard file within a sharded table: which global row
+/// this member starts at and how many rows the full logical table has.
+/// Both are validated by [`crate::data::shards::load_sharded`] — a
+/// missing middle shard shows up as a `row_offset` gap, a truncated set
+/// as a `total_rows` shortfall.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardStamp {
+    pub row_offset: u64,
+    pub total_rows: u64,
+}
+
+/// Append a shard stamp trailer to an already-written `.sofc` file. Must
+/// be called exactly once, immediately after the write — the stamp is
+/// only recognized at the layout's computed end-of-data offset.
+pub fn append_shard_stamp(path: &Path, stamp: ShardStamp) -> Result<()> {
+    let mut file = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open {path:?} for stamping"))?;
+    file.write_all(&SHARD_STAMP_MAGIC)?;
+    file.write_all(&stamp.row_offset.to_ne_bytes())?;
+    file.write_all(&stamp.total_rows.to_ne_bytes())?;
+    file.flush().with_context(|| format!("stamp {path:?}"))?;
+    Ok(())
+}
+
+/// Parse the shard stamp if one sits at exactly `data_end`.
+fn parse_stamp(b: &[u8], data_end: u64, file_len: u64) -> Option<ShardStamp> {
+    if file_len < data_end + SHARD_STAMP_LEN {
+        return None;
+    }
+    let at = data_end as usize;
+    if b[at..at + 8] != SHARD_STAMP_MAGIC {
+        return None;
+    }
+    Some(ShardStamp {
+        row_offset: read_u64(b, at + 8),
+        total_rows: read_u64(b, at + 16),
+    })
+}
 
 /// Derived section offsets of a file with the given shape.
 struct Layout {
@@ -325,6 +376,57 @@ pub fn write_dataset_v2(data: &Dataset, path: &Path, max_bins: usize) -> Result<
             bin_buf.clear();
             bin_buf.extend(chunk.iter().map(|&v| layout.bin_of(v)));
             w.write_all(&bin_buf)?;
+        }
+        write_zeros(&mut w, col_pad)?;
+    }
+    for (_, chunk) in data.labels_blocks(CHUNK_ROWS) {
+        w.write_all(label_bytes(chunk))?;
+    }
+    w.flush().with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Write an **already-binned** dataset as a v2 `.sofc` file, preserving
+/// its bin layouts verbatim (no refit — the whole point: `gen-data
+/// --shards --bins` quantizes the full table once and writes each shard
+/// through this, so every member carries byte-identical layout tables
+/// and sharded training bins rows exactly like single-file training).
+/// Contrast [`write_dataset_v2`], which fits fresh layouts from a float
+/// table and refuses binned input.
+pub fn write_dataset_binned(data: &Dataset, path: &Path) -> Result<()> {
+    let layouts = match data.bin_layouts() {
+        Some(l) => l,
+        None => bail!("dataset is not binned — use write_dataset or write_dataset_v2"),
+    };
+    let n = data.n_samples() as u64;
+    let d = data.n_features() as u64;
+    if n == 0 || d == 0 {
+        bail!("refusing to pack an empty dataset");
+    }
+    if n > u32::MAX as u64 {
+        bail!("column files cap at 2^32-1 samples (active sets index with u32)");
+    }
+    let max_bins = layouts.iter().map(|l| l.n_bins()).max().unwrap_or(2).max(2);
+    let names_block = encode_names(data.feature_names())?;
+    let lay = layout_v2(n, d, names_block.len() as u64, max_bins as u64, PAGE)?;
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    write_header_v2(&mut w, n, d, data.n_classes() as u64, max_bins as u16, &names_block)?;
+    write_zeros(
+        &mut w,
+        lay.layouts_offset - HEADER_FIXED_V2 - names_block.len() as u64,
+    )?;
+    for layout in layouts.iter() {
+        w.write_all(&layout_record_bytes(layout, lay.layout_stride as usize))?;
+    }
+    write_zeros(
+        &mut w,
+        lay.data_offset - lay.layouts_offset - d * lay.layout_stride,
+    )?;
+    let col_pad = lay.col_stride - n;
+    for f in 0..data.n_features() {
+        for (_, chunk) in data.bin_blocks(f, CHUNK_ROWS) {
+            w.write_all(chunk)?;
         }
         write_zeros(&mut w, col_pad)?;
     }
@@ -622,6 +724,13 @@ fn parse_names(
 /// range-checked — a sequential scan that doubles as readahead for the
 /// data the trainer is about to gather.
 pub fn load_mapped(path: &Path) -> Result<Dataset> {
+    Ok(load_mapped_with_stamp(path)?.0)
+}
+
+/// [`load_mapped`] plus the file's shard stamp, if it carries one. The
+/// shard manifest loader uses the stamp to validate coverage; plain
+/// single-file loads ignore it.
+pub fn load_mapped_with_stamp(path: &Path) -> Result<(Dataset, Option<ShardStamp>)> {
     let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
     let file_len = file
         .metadata()
@@ -678,7 +787,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
     }
     let names = parse_names(b, header_fixed, names_len, n_features, path)?;
 
-    let store = if binned {
+    let (store, stamp) = if binned {
         let max_bins = u16::from_ne_bytes(
             b[MAX_BINS_OFFSET as usize..MAX_BINS_OFFSET as usize + 2]
                 .try_into()
@@ -740,6 +849,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
             }
         }
 
+        let stamp = parse_stamp(b, lay.file_len, file_len);
         let map = Arc::new(map);
         let store = MappedBinnedColumns::new(
             Arc::clone(&map),
@@ -750,7 +860,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
             lay.labels_offset as usize,
             Arc::new(layouts),
         );
-        ColumnStore::MappedBinned(store)
+        (ColumnStore::MappedBinned(store), stamp)
     } else {
         let lay = layout(n_samples, n_features, names_len, page)
             .with_context(|| format!("{path:?}: header shape"))?;
@@ -760,6 +870,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
                 lay.file_len
             );
         }
+        let stamp = parse_stamp(b, lay.file_len, file_len);
         let map = Arc::new(map);
         let store = MappedColumns::new(
             Arc::clone(&map),
@@ -769,7 +880,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
             lay.col_stride as usize,
             lay.labels_offset as usize,
         );
-        ColumnStore::Mapped(store)
+        (ColumnStore::Mapped(store), stamp)
     };
 
     // One streaming pass over the labels: an out-of-range label would
@@ -780,7 +891,7 @@ pub fn load_mapped(path: &Path) -> Result<Dataset> {
         bail!("{path:?}: label {bad} out of range for {n_classes} classes");
     }
 
-    Ok(Dataset::from_store(store, n_classes as usize, names))
+    Ok((Dataset::from_store(store, n_classes as usize, names), stamp))
 }
 
 #[cfg(test)]
@@ -1092,6 +1203,69 @@ mod tests {
         std::fs::remove_file(&p1).ok();
         std::fs::remove_file(&p2).ok();
         std::fs::remove_file(&p3).ok();
+    }
+
+    #[test]
+    fn shard_stamp_roundtrips_and_is_invisible_to_plain_loads() {
+        let data = sample_data();
+        for (name, max_bins) in [("soforest_colfile_stamp_v1.sofc", 0usize),
+                                 ("soforest_colfile_stamp_v2.sofc", 16)] {
+            let path = tmp(name);
+            if max_bins == 0 {
+                write_dataset(&data, &path).unwrap();
+            } else {
+                write_dataset_v2(&data, &path, max_bins).unwrap();
+            }
+            // Unstamped: loads, no stamp.
+            let (_, stamp) = load_mapped_with_stamp(&path).unwrap();
+            assert_eq!(stamp, None);
+            // Stamped: the stamp reads back, and the plain loader still
+            // accepts the file as an ordinary single table.
+            let want = ShardStamp { row_offset: 1200, total_rows: 9000 };
+            append_shard_stamp(&path, want).unwrap();
+            let (mapped, stamp) = load_mapped_with_stamp(&path).unwrap();
+            assert_eq!(stamp, Some(want));
+            assert_eq!(mapped.n_samples(), data.n_samples());
+            assert!(load_mapped(&path).is_ok());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn trailing_junk_is_not_a_stamp() {
+        let data = sample_data();
+        let path = tmp("soforest_colfile_stamp_junk.sofc");
+        write_dataset(&data, &path).unwrap();
+        // 24 trailing bytes that don't start with the stamp magic.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xABu8; 24]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, stamp) = load_mapped_with_stamp(&path).unwrap();
+        assert_eq!(stamp, None);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binned_writer_preserves_layouts_verbatim() {
+        let data = sample_data();
+        let quantized = data.quantized(16);
+        let path = tmp("soforest_colfile_prebinned.sofc");
+        write_dataset_binned(&quantized, &path).unwrap();
+        let mapped = load_mapped(&path).unwrap();
+        assert_eq!(mapped.backend_name(), "mmap-binned");
+        assert_eq!(mapped.n_classes(), quantized.n_classes());
+        assert_eq!(mapped.labels(), quantized.labels());
+        let (la, lb) = (
+            quantized.bin_layouts().unwrap(),
+            mapped.bin_layouts().unwrap(),
+        );
+        assert_eq!(la, lb);
+        for f in 0..quantized.n_features() {
+            assert_eq!(mapped.bin_column(f), quantized.bin_column(f), "feature {f}");
+        }
+        // Float input is refused — that's write_dataset_v2's job.
+        assert!(write_dataset_binned(&data, &path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

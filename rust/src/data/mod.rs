@@ -22,6 +22,7 @@ pub mod colfile;
 pub mod csv;
 pub mod mmap;
 pub mod sampling;
+pub mod shards;
 pub mod store;
 pub mod synth;
 pub mod transform;
@@ -160,9 +161,23 @@ impl Dataset {
         self.store.column_chunk(f, range)
     }
 
+    /// End of the chunk starting at `start` with nominal size `block`:
+    /// clamped to the table end and, on a sharded store, to the shard
+    /// boundary — chunk borrows must never cross a member file.
+    #[inline]
+    fn chunk_end(&self, start: usize, block: usize) -> usize {
+        let end = (start + block).min(self.n_samples());
+        match &self.store {
+            ColumnStore::Sharded(s) => end.min(s.shard_bounds(start).end),
+            _ => end,
+        }
+    }
+
     /// Iterate feature `f` in blocks of `block` rows (`(start, chunk)`
     /// pairs, in order). The blocked twin of [`Dataset::column`] for
-    /// sequential scans.
+    /// sequential scans. On a sharded store, blocks additionally clamp
+    /// at shard boundaries (consumers see the same values in the same
+    /// order, just across more chunks).
     pub fn column_blocks(
         &self,
         f: usize,
@@ -170,9 +185,33 @@ impl Dataset {
     ) -> impl Iterator<Item = (usize, &[f32])> + '_ {
         let n = self.n_samples();
         let block = block.max(1);
-        (0..n).step_by(block).map(move |start| {
-            let end = (start + block).min(n);
-            (start, self.store.column_chunk(f, start..end))
+        let mut start = 0usize;
+        std::iter::from_fn(move || {
+            if start >= n {
+                return None;
+            }
+            let end = self.chunk_end(start, block);
+            let s = start;
+            start = end;
+            Some((s, self.store.column_chunk(f, s..end)))
+        })
+    }
+
+    /// Iterate feature `f`'s bin ids in blocks of `block` rows (binned
+    /// backends only), clamped at shard boundaries like
+    /// [`Dataset::column_blocks`].
+    pub fn bin_blocks(&self, f: usize, block: usize) -> impl Iterator<Item = (usize, &[u8])> + '_ {
+        let n = self.n_samples();
+        let block = block.max(1);
+        let mut start = 0usize;
+        std::iter::from_fn(move || {
+            if start >= n {
+                return None;
+            }
+            let end = self.chunk_end(start, block);
+            let s = start;
+            start = end;
+            Some((s, self.store.bin_chunk(f, s..end)))
         })
     }
 
@@ -223,14 +262,71 @@ impl Dataset {
     }
 
     /// True when columns live in a memory-mapped `.sofc` file (float or
-    /// binned) — the backends where [`Self::prefetch_rows`] has pages to
-    /// advise.
+    /// binned), directly or behind a shard composition — the backends
+    /// where [`Self::prefetch_rows`] has pages to advise.
     #[inline]
     pub fn is_mapped(&self) -> bool {
-        matches!(
-            self.store,
-            ColumnStore::Mapped(_) | ColumnStore::MappedBinned(_)
-        )
+        match &self.store {
+            ColumnStore::Mapped(_) | ColumnStore::MappedBinned(_) => true,
+            ColumnStore::Sharded(s) => s.is_mapped(),
+            _ => false,
+        }
+    }
+
+    /// True when the table is a shard composition of member stores
+    /// ([`shards::ShardedColumns`]).
+    #[inline]
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.store, ColumnStore::Sharded(_))
+    }
+
+    /// Number of shard members (1 on every non-sharded backend).
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        match &self.store {
+            ColumnStore::Sharded(s) => s.n_shards(),
+            _ => 1,
+        }
+    }
+
+    /// Index of the shard holding global row `row` (0 when unsharded).
+    #[inline]
+    pub fn shard_of(&self, row: usize) -> usize {
+        match &self.store {
+            ColumnStore::Sharded(s) => s.member_of(row),
+            _ => 0,
+        }
+    }
+
+    /// Global row range of the shard holding `row` (the whole table when
+    /// unsharded).
+    #[inline]
+    pub fn shard_bounds(&self, row: usize) -> Range<usize> {
+        match &self.store {
+            ColumnStore::Sharded(s) => s.shard_bounds(row),
+            _ => 0..self.n_samples(),
+        }
+    }
+
+    /// End (exclusive) of the maximal run of `active[start..]` whose
+    /// sample ids all live in the shard containing `active[start]`.
+    /// Returns `active.len()` on non-sharded backends, so a caller's
+    /// "walk runs, process each" loop degenerates to one full-slice pass
+    /// with a single predictable branch — the unsharded fast paths stay
+    /// untouched. Runs are maximal for **sorted** id sets (the trainer's
+    /// active sets are always ascending); for unsorted sets the walk is
+    /// still correct, just splits more often.
+    #[inline]
+    pub fn shard_run_end(&self, active: &[u32], start: usize) -> usize {
+        let ColumnStore::Sharded(s) = &self.store else {
+            return active.len();
+        };
+        let bounds = s.shard_bounds(active[start] as usize);
+        let mut end = start + 1;
+        while end < active.len() && bounds.contains(&(active[end] as usize)) {
+            end += 1;
+        }
+        end
     }
 
     /// Per-feature bin layouts; `Some` exactly when [`Self::is_binned`].
@@ -315,9 +411,8 @@ impl Dataset {
             .map(|f| {
                 let layout = &layouts[f];
                 let mut col = Vec::with_capacity(n);
-                for start in (0..n).step_by(CHUNK_ROWS) {
-                    let end = (start + CHUNK_ROWS).min(n);
-                    col.extend(self.store.bin_chunk(f, start..end).iter().map(|&b| layout.rep(b)));
+                for (_, chunk) in self.bin_blocks(f, CHUNK_ROWS) {
+                    col.extend(chunk.iter().map(|&b| layout.rep(b)));
                 }
                 col
             })
@@ -353,6 +448,7 @@ impl Dataset {
                     m.advise_rows(f, rows.clone());
                 }
             }
+            ColumnStore::Sharded(s) => s.advise_rows_all_features(rows),
         }
     }
 
@@ -383,14 +479,24 @@ impl Dataset {
     pub fn subset(&self, indices: &[u32]) -> Dataset {
         let full = self.labels();
         let labels: Vec<Label> = indices.iter().map(|&i| full[i as usize]).collect();
+        let sharded = self.is_sharded();
         let store = if let Some(layouts) = self.store.bin_layouts() {
             // Quantized tables subset to a RAM-binned twin: gathering
             // bin ids preserves the layouts, so training on the subset
             // stays on the binned fast path with identical quantization.
+            // Sharded stores have no whole-column chunk to borrow, so
+            // they gather per element instead.
             let bins: Vec<Vec<u8>> = (0..self.n_features())
                 .map(|f| {
-                    let col = self.bin_column(f);
-                    indices.iter().map(|&i| col[i as usize]).collect()
+                    if sharded {
+                        indices
+                            .iter()
+                            .map(|&i| self.store.bin_value(i as usize, f))
+                            .collect()
+                    } else {
+                        let col = self.bin_column(f);
+                        indices.iter().map(|&i| col[i as usize]).collect()
+                    }
                 })
                 .collect();
             ColumnStore::RamBinned(store::RamBinnedColumns {
@@ -401,8 +507,15 @@ impl Dataset {
         } else {
             let columns: Vec<Vec<f32>> = (0..self.n_features())
                 .map(|f| {
-                    let col = self.column(f);
-                    indices.iter().map(|&i| col[i as usize]).collect()
+                    if sharded {
+                        indices
+                            .iter()
+                            .map(|&i| self.store.value(i as usize, f))
+                            .collect()
+                    } else {
+                        let col = self.column(f);
+                        indices.iter().map(|&i| col[i as usize]).collect()
+                    }
                 })
                 .collect();
             ColumnStore::Ram(store::RamColumns { columns, labels })

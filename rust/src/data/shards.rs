@@ -1,0 +1,552 @@
+//! Sharded tables: N `.sofc` files acting as row-ranges of one logical
+//! table.
+//!
+//! `gen-data --shards k` splits a table into `k` column files, each
+//! carrying a [`super::colfile::ShardStamp`] trailer (global row offset
+//! + total row count). [`load_sharded`] maps every member, validates
+//! that the set really is one table — shared feature count, identical
+//! bin layouts, one shared label space, stamps covering `0..total_rows`
+//! exactly — and composes them into a [`ShardedColumns`] backend by row
+//! concatenation, member order fixed by row offset.
+//!
+//! The composition is deliberately thin: chunk requests must stay inside
+//! one member (consumers split their row runs at shard boundaries via
+//! [`super::Dataset::shard_run_end`]), labels are concatenated into RAM
+//! at load (2 bytes/row — negligible next to the mapped columns), and
+//! everything else — histogram fills, projection gathers, prediction —
+//! reads through the same chunk-view API as any other backend. The
+//! frontier trainer additionally exploits the shard structure directly:
+//! it fills per-shard partial count tables and merges them
+//! (`split/histogram.rs::merge_shard_tables`) in fixed shard-index
+//! order, which is exact over `u32` counts, so sharded training is
+//! byte-identical to training on the concatenated table
+//! (`tests/shard_equivalence.rs`).
+
+use super::binning::BinLayout;
+use super::colfile;
+use super::store::ColumnStore;
+use super::{Dataset, Label};
+use anyhow::{bail, Context, Result};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// N member stores composed into one logical table by row concatenation.
+/// Member `i` holds global rows `starts[i]..starts[i + 1]`.
+#[derive(Clone, Debug)]
+pub struct ShardedColumns {
+    pub(crate) members: Vec<ColumnStore>,
+    /// Prefix sums of member row counts; `len() == members.len() + 1`.
+    pub(crate) starts: Vec<usize>,
+    /// All labels, concatenated in shard order. RAM-resident so
+    /// whole-table label borrows (`Dataset::labels`) work unchanged.
+    pub(crate) labels: Arc<Vec<Label>>,
+    /// Shared bin layouts when every member is binned.
+    pub(crate) layouts: Option<Arc<Vec<BinLayout>>>,
+    pub(crate) n_features: usize,
+}
+
+impl ShardedColumns {
+    #[inline]
+    pub fn n_samples(&self) -> usize {
+        *self.starts.last().expect("starts always holds [0, ..]")
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Index of the member holding global row `row`.
+    #[inline]
+    pub(crate) fn member_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.n_samples());
+        self.starts.partition_point(|&s| s <= row) - 1
+    }
+
+    /// Global row range of the member holding `row`.
+    #[inline]
+    pub fn shard_bounds(&self, row: usize) -> Range<usize> {
+        let m = self.member_of(row);
+        self.starts[m]..self.starts[m + 1]
+    }
+
+    #[inline]
+    pub(crate) fn column_chunk(&self, f: usize, range: Range<usize>) -> &[f32] {
+        if range.is_empty() {
+            return &[];
+        }
+        let m = self.member_of(range.start);
+        let base = self.starts[m];
+        assert!(
+            range.end <= self.starts[m + 1],
+            "chunk {range:?} crosses the shard boundary at {}",
+            self.starts[m + 1]
+        );
+        self.members[m].column_chunk(f, range.start - base..range.end - base)
+    }
+
+    #[inline]
+    pub(crate) fn bin_chunk(&self, f: usize, range: Range<usize>) -> &[u8] {
+        if range.is_empty() {
+            return &[];
+        }
+        let m = self.member_of(range.start);
+        let base = self.starts[m];
+        assert!(
+            range.end <= self.starts[m + 1],
+            "chunk {range:?} crosses the shard boundary at {}",
+            self.starts[m + 1]
+        );
+        self.members[m].bin_chunk(f, range.start - base..range.end - base)
+    }
+
+    #[inline]
+    pub(crate) fn value(&self, s: usize, f: usize) -> f32 {
+        let m = self.member_of(s);
+        self.members[m].value(s - self.starts[m], f)
+    }
+
+    #[inline]
+    pub(crate) fn bin_value(&self, s: usize, f: usize) -> u8 {
+        let m = self.member_of(s);
+        self.members[m].bin_chunk(f, {
+            let l = s - self.starts[m];
+            l..l + 1
+        })[0]
+    }
+
+    /// True when any member serves chunks from a file mapping (the
+    /// backends where prefetch advice has pages to act on).
+    pub(crate) fn is_mapped(&self) -> bool {
+        self.members
+            .iter()
+            .any(|m| matches!(m, ColumnStore::Mapped(_) | ColumnStore::MappedBinned(_)))
+    }
+
+    /// Best-effort readahead advice for `rows` across every feature of
+    /// every mapped member overlapping the range.
+    pub(crate) fn advise_rows_all_features(&self, rows: Range<usize>) {
+        for (i, member) in self.members.iter().enumerate() {
+            let lo = rows.start.max(self.starts[i]);
+            let hi = rows.end.min(self.starts[i + 1]);
+            if lo >= hi {
+                continue;
+            }
+            let local = lo - self.starts[i]..hi - self.starts[i];
+            match member {
+                ColumnStore::Mapped(m) => {
+                    for f in 0..self.n_features {
+                        m.advise_rows(f, local.clone());
+                    }
+                }
+                ColumnStore::MappedBinned(m) => {
+                    for f in 0..self.n_features {
+                        m.advise_rows(f, local.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Compose already-loaded member datasets into one sharded [`Dataset`],
+/// validating that they are row-ranges of a single logical table. A
+/// one-member set is returned as-is (no sharding indirection). This is
+/// the assembly half of [`load_sharded`]; tests use it directly to build
+/// sharded twins of in-memory tables.
+pub fn from_parts(parts: Vec<Dataset>) -> Result<Dataset> {
+    if parts.is_empty() {
+        bail!("a sharded table needs at least one member");
+    }
+    if parts.len() == 1 {
+        return Ok(parts.into_iter().next().unwrap());
+    }
+    let n_features = parts[0].n_features();
+    let binned = parts[0].is_binned();
+    let names = parts[0].feature_names.clone();
+    let layouts: Option<Arc<Vec<BinLayout>>> = parts[0].store.bin_layouts().map(Arc::clone);
+    let mut n_classes = 0usize;
+    for (i, part) in parts.iter().enumerate() {
+        if part.n_samples() == 0 {
+            bail!("shard {i} is empty");
+        }
+        if part.n_features() != n_features {
+            bail!(
+                "shard {i} has {} features, shard 0 has {n_features} — not shards of one table",
+                part.n_features()
+            );
+        }
+        if part.is_binned() != binned {
+            bail!("shard {i} mixes binned and float storage with shard 0 — re-pack the set");
+        }
+        if let (Some(a), Some(b)) = (&layouts, part.store.bin_layouts()) {
+            if a.as_slice() != b.as_slice() {
+                bail!(
+                    "shard {i}: bin layouts differ from shard 0 — every member must be \
+                     quantized through one shared layout (re-run gen-data/pack with --shards)"
+                );
+            }
+        }
+        if part.feature_names != names {
+            bail!("shard {i}: feature names differ from shard 0");
+        }
+        n_classes = n_classes.max(part.n_classes());
+    }
+    let mut starts = Vec::with_capacity(parts.len() + 1);
+    starts.push(0usize);
+    let mut labels: Vec<Label> = Vec::new();
+    let mut members = Vec::with_capacity(parts.len());
+    for part in parts {
+        labels.extend_from_slice(part.labels());
+        starts.push(starts.last().unwrap() + part.n_samples());
+        members.push(part.store);
+    }
+    if *starts.last().unwrap() > u32::MAX as usize {
+        bail!("sharded table exceeds the u32 active-set range");
+    }
+    let sharded = ShardedColumns {
+        members,
+        starts,
+        labels: Arc::new(labels),
+        layouts,
+        n_features,
+    };
+    Ok(Dataset::from_store(
+        ColumnStore::Sharded(sharded),
+        n_classes,
+        names,
+    ))
+}
+
+/// Map every listed `.sofc` file and compose the set into one sharded
+/// [`Dataset`]. When the members carry shard stamps (`gen-data --shards`
+/// writes them), the set is ordered by stamped row offset and the stamps
+/// must tile `0..total_rows` exactly — a missing middle shard, an
+/// overlap, or a foreign set member is a hard error. Unstamped members
+/// are accepted in the given order (hand-assembled sets), with only the
+/// structural checks of [`from_parts`]. A single path loads as a plain
+/// mapped table.
+pub fn load_sharded(paths: &[PathBuf]) -> Result<Dataset> {
+    if paths.is_empty() {
+        bail!("no shard files to load");
+    }
+    if paths.len() == 1 {
+        return colfile::load_mapped(&paths[0]);
+    }
+    let mut loaded = Vec::with_capacity(paths.len());
+    for p in paths {
+        let (part, stamp) = colfile::load_mapped_with_stamp(p)
+            .with_context(|| format!("shard member {p:?}"))?;
+        loaded.push((p.clone(), part, stamp));
+    }
+    let stamped = loaded.iter().filter(|(_, _, s)| s.is_some()).count();
+    if stamped != 0 && stamped != loaded.len() {
+        bail!(
+            "mixed stamped and unstamped shard files — the set is not one \
+             gen-data/pack output ({stamped} of {} members carry a stamp)",
+            loaded.len()
+        );
+    }
+    if stamped == loaded.len() {
+        loaded.sort_by_key(|(_, _, s)| s.unwrap().row_offset);
+        let total: u64 = loaded.iter().map(|(_, d, _)| d.n_samples() as u64).sum();
+        let mut at = 0u64;
+        for (p, part, stamp) in &loaded {
+            let stamp = stamp.unwrap();
+            if stamp.total_rows != total {
+                bail!(
+                    "{p:?}: stamped for a {}-row table but the members sum to {total} rows — \
+                     a shard is missing or foreign to the set",
+                    stamp.total_rows
+                );
+            }
+            if stamp.row_offset != at {
+                bail!(
+                    "{p:?}: stamped at row offset {} but {at} rows precede it — \
+                     the shard set overlaps or skips rows",
+                    stamp.row_offset
+                );
+            }
+            at += part.n_samples() as u64;
+        }
+    }
+    from_parts(loaded.into_iter().map(|(_, d, _)| d).collect())
+}
+
+/// Read a `.sofm` shard manifest: a plain text file listing one member
+/// path per line (relative paths resolve against the manifest's
+/// directory; blank lines and `#` comments are skipped).
+pub fn read_manifest(path: &Path) -> Result<Vec<PathBuf>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read manifest {path:?}"))?;
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let p = PathBuf::from(line);
+        out.push(if p.is_absolute() { p } else { dir.join(p) });
+    }
+    if out.is_empty() {
+        bail!("{path:?}: manifest lists no shard files");
+    }
+    Ok(out)
+}
+
+/// Expand a `*` glob over the **filename component** of `spec` (the
+/// directory part is taken literally), returning matches in sorted
+/// order. Only `*` is special; it matches any run of characters,
+/// including none.
+pub fn expand_glob(spec: &str) -> Result<Vec<PathBuf>> {
+    let p = Path::new(spec);
+    let pat = p
+        .file_name()
+        .and_then(|f| f.to_str())
+        .ok_or_else(|| anyhow::anyhow!("bad glob {spec:?}"))?;
+    let dir = match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let mut out: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(&dir).with_context(|| format!("list {dir:?} for {spec:?}"))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if glob_match(pat.as_bytes(), name.as_bytes()) {
+            out.push(dir.join(name));
+        }
+    }
+    if out.is_empty() {
+        bail!("no files match {spec:?}");
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// `*`-only glob match (iterative, with star backtracking).
+fn glob_match(pat: &[u8], name: &[u8]) -> bool {
+    let (mut p, mut n) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while n < name.len() {
+        if p < pat.len() && pat[p] == b'*' {
+            star = p;
+            mark = n;
+            p += 1;
+        } else if p < pat.len() && pat[p] == name[n] {
+            p += 1;
+            n += 1;
+        } else if star != usize::MAX {
+            p = star + 1;
+            mark += 1;
+            n = mark;
+        } else {
+            return false;
+        }
+    }
+    while p < pat.len() && pat[p] == b'*' {
+        p += 1;
+    }
+    p == pat.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::colfile::{append_shard_stamp, write_dataset, ShardStamp, ENDIAN_MARK};
+    use crate::data::synth::trunk::TrunkConfig;
+    use crate::rng::Pcg64;
+
+    fn table(n: usize) -> Dataset {
+        TrunkConfig {
+            n_samples: n,
+            n_features: 5,
+            ..Default::default()
+        }
+        .generate(&mut Pcg64::new(11))
+    }
+
+    fn split_rows(data: &Dataset, k: usize) -> Vec<Dataset> {
+        let n = data.n_samples();
+        (0..k)
+            .map(|i| {
+                let ids: Vec<u32> = (i * n / k..(i + 1) * n / k).map(|r| r as u32).collect();
+                data.subset(&ids)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn from_parts_concatenates_rows_exactly() {
+        let data = table(300);
+        let sharded = from_parts(split_rows(&data, 3)).unwrap();
+        assert_eq!(sharded.backend_name(), "sharded");
+        assert_eq!(sharded.n_samples(), 300);
+        assert_eq!(sharded.n_shards(), 3);
+        assert_eq!(sharded.n_classes(), data.n_classes());
+        assert_eq!(sharded.labels(), data.labels());
+        for s in [0usize, 99, 100, 101, 199, 200, 299] {
+            for f in 0..data.n_features() {
+                assert_eq!(
+                    sharded.value(s, f).to_bits(),
+                    data.value(s, f).to_bits(),
+                    "s={s} f={f}"
+                );
+            }
+        }
+        assert_eq!(sharded.shard_bounds(0), 0..100);
+        assert_eq!(sharded.shard_bounds(99), 0..100);
+        assert_eq!(sharded.shard_bounds(100), 100..200);
+        assert_eq!(sharded.shard_bounds(299), 200..300);
+        // Chunk views work inside a member.
+        let mid = data.subset(&(100..200u32).collect::<Vec<_>>());
+        assert_eq!(sharded.column_chunk(2, 100..200), mid.column(2));
+        // Blocked iterators clamp at shard boundaries and cover all rows.
+        let mut rebuilt = Vec::new();
+        for (start, chunk) in sharded.column_blocks(1, 64) {
+            assert_eq!(start, rebuilt.len());
+            let bounds = sharded.shard_bounds(start);
+            assert!(start + chunk.len() <= bounds.end, "chunk crosses a shard");
+            rebuilt.extend_from_slice(chunk);
+        }
+        let whole: Vec<f32> = (0..300).map(|s| data.value(s, 1)).collect();
+        assert_eq!(rebuilt, whole);
+    }
+
+    #[test]
+    fn binned_parts_share_layouts_and_reject_mismatches() {
+        let data = table(240).quantized(16);
+        let sharded = from_parts(split_rows(&data, 2)).unwrap();
+        assert_eq!(sharded.backend_name(), "sharded-binned");
+        assert!(sharded.is_binned());
+        assert_eq!(sharded.bin_layouts().unwrap(), data.bin_layouts().unwrap());
+        for s in [0usize, 119, 120, 239] {
+            assert_eq!(sharded.store.bin_value(s, 3), data.bin_column(3)[s]);
+        }
+        // A member quantized with its own (different) layouts is rejected.
+        let parts = split_rows(&data, 2);
+        let foreign = parts[1].dequantized().quantized(8);
+        let err = from_parts(vec![parts.into_iter().next().unwrap(), foreign])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bin layouts differ"), "{err}");
+    }
+
+    #[test]
+    fn from_parts_rejects_structural_mismatches() {
+        let data = table(200);
+        let parts = split_rows(&data, 2);
+        // Mixed binned/float.
+        let err = from_parts(vec![parts[0].clone(), parts[1].quantized(8)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mixes binned and float"), "{err}");
+        // Feature-count mismatch.
+        let narrow = Dataset::from_columns(vec![vec![0.0; 100]], vec![0; 100]);
+        let err = from_parts(vec![parts[0].clone(), narrow]).unwrap_err().to_string();
+        assert!(err.contains("features"), "{err}");
+        // One member passes through unwrapped.
+        let one = from_parts(vec![parts[0].clone()]).unwrap();
+        assert_eq!(one.backend_name(), "ram");
+    }
+
+    #[test]
+    fn shard_run_end_splits_active_ids_at_boundaries() {
+        let data = table(300);
+        let sharded = from_parts(split_rows(&data, 3)).unwrap();
+        // Unsharded: one run regardless of content.
+        let ids = [5u32, 150, 250];
+        assert_eq!(data.shard_run_end(&ids, 0), 3);
+        // Sharded: runs stop at member boundaries.
+        let active = [0u32, 50, 99, 100, 101, 299];
+        assert_eq!(sharded.shard_run_end(&active, 0), 3);
+        assert_eq!(sharded.shard_run_end(&active, 3), 5);
+        assert_eq!(sharded.shard_run_end(&active, 5), 6);
+    }
+
+    #[test]
+    fn load_sharded_validates_stamps() {
+        let data = table(300);
+        let dir = std::env::temp_dir();
+        let paths: Vec<PathBuf> = (0..3)
+            .map(|i| dir.join(format!("soforest_shards_stamp{i}.sofc")))
+            .collect();
+        for (i, (part, path)) in split_rows(&data, 3).iter().zip(&paths).enumerate() {
+            write_dataset(part, path).unwrap();
+            append_shard_stamp(
+                path,
+                ShardStamp {
+                    row_offset: i as u64 * 100,
+                    total_rows: 300,
+                },
+            )
+            .unwrap();
+        }
+        // Full set loads, in any order, to the concatenated table.
+        let shuffled = vec![paths[2].clone(), paths[0].clone(), paths[1].clone()];
+        let sharded = load_sharded(&shuffled).unwrap();
+        assert_eq!(sharded.n_samples(), 300);
+        assert_eq!(sharded.labels(), data.labels());
+        assert_eq!(sharded.value(150, 2).to_bits(), data.value(150, 2).to_bits());
+
+        // Missing middle shard: detected via the stamped total.
+        let gap = vec![paths[0].clone(), paths[2].clone()];
+        let err = load_sharded(&gap).unwrap_err().to_string();
+        assert!(err.contains("missing or foreign"), "{err}");
+
+        // A repeated member overlaps.
+        let dup = vec![paths[0].clone(), paths[1].clone(), paths[1].clone()];
+        let err = load_sharded(&dup).unwrap_err().to_string();
+        assert!(
+            err.contains("overlaps or skips") || err.contains("missing or foreign"),
+            "{err}"
+        );
+
+        // Foreign-endian member: rejected by the per-member loader.
+        let mut bytes = std::fs::read(&paths[1]).unwrap();
+        bytes[8..12].copy_from_slice(&ENDIAN_MARK.swap_bytes().to_ne_bytes());
+        std::fs::write(&paths[1], &bytes).unwrap();
+        let err = load_sharded(&paths).unwrap_err().to_string();
+        assert!(err.contains("endianness"), "{err}");
+
+        for p in &paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn manifest_and_glob_resolve_members() {
+        let dir = std::env::temp_dir().join(format!("soforest_sofm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = table(200);
+        for (i, part) in split_rows(&data, 2).iter().enumerate() {
+            write_dataset(part, &dir.join(format!("t.shard{i}.sofc"))).unwrap();
+        }
+        let manifest = dir.join("t.sofm");
+        std::fs::write(&manifest, "# members\nt.shard0.sofc\nt.shard1.sofc\n").unwrap();
+        let listed = read_manifest(&manifest).unwrap();
+        assert_eq!(listed.len(), 2);
+        let via_manifest = load_sharded(&listed).unwrap();
+        assert_eq!(via_manifest.n_samples(), 200);
+        assert_eq!(via_manifest.labels(), data.labels());
+
+        let spec = dir.join("t.shard*.sofc");
+        let globbed = expand_glob(spec.to_str().unwrap()).unwrap();
+        assert_eq!(globbed, listed);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn glob_matching_semantics() {
+        assert!(glob_match(b"t.shard*.sofc", b"t.shard12.sofc"));
+        assert!(glob_match(b"t.shard*.sofc", b"t.shard.sofc"));
+        assert!(glob_match(b"*", b"anything"));
+        assert!(glob_match(b"a*b*c", b"axxbyyc"));
+        assert!(!glob_match(b"t.shard*.sofc", b"t.shard1.sofm"));
+        assert!(!glob_match(b"a*b", b"acb_tail"));
+    }
+}

@@ -22,6 +22,7 @@
 
 use super::binning::BinLayout;
 use super::mmap::Mmap;
+use super::shards::ShardedColumns;
 use super::Label;
 use std::ops::Range;
 use std::sync::Arc;
@@ -35,12 +36,19 @@ use std::sync::Arc;
 /// directly or dequantize through the layout); point lookups
 /// ([`ColumnStore::value`]) dequantize transparently so the predict
 /// path works unchanged.
+///
+/// [`ColumnStore::Sharded`] composes N member stores into one logical
+/// table by row concatenation ([`super::shards`]): chunk requests must
+/// stay inside one member (callers split work at shard boundaries via
+/// [`super::Dataset::shard_run_end`]); labels are concatenated into RAM
+/// at load so whole-table label reads keep working.
 #[derive(Clone, Debug)]
 pub enum ColumnStore {
     Ram(RamColumns),
     Mapped(MappedColumns),
     RamBinned(RamBinnedColumns),
     MappedBinned(MappedBinnedColumns),
+    Sharded(ShardedColumns),
 }
 
 /// Owned feature-major columns (the pre-backend representation).
@@ -211,6 +219,7 @@ impl ColumnStore {
             ColumnStore::Mapped(m) => m.n_samples,
             ColumnStore::RamBinned(r) => r.labels.len(),
             ColumnStore::MappedBinned(m) => m.n_samples,
+            ColumnStore::Sharded(s) => s.n_samples(),
         }
     }
 
@@ -221,6 +230,7 @@ impl ColumnStore {
             ColumnStore::Mapped(m) => m.n_features,
             ColumnStore::RamBinned(r) => r.bins.len(),
             ColumnStore::MappedBinned(m) => m.n_features,
+            ColumnStore::Sharded(s) => s.n_features,
         }
     }
 
@@ -235,6 +245,7 @@ impl ColumnStore {
         match self {
             ColumnStore::Ram(r) => &r.columns[f][range],
             ColumnStore::Mapped(m) => m.column_chunk(f, range),
+            ColumnStore::Sharded(s) => s.column_chunk(f, range),
             ColumnStore::RamBinned(_) | ColumnStore::MappedBinned(_) => {
                 panic!("column_chunk on a binned store — read bin_chunk + bin_layouts instead")
             }
@@ -248,6 +259,7 @@ impl ColumnStore {
         match self {
             ColumnStore::RamBinned(r) => &r.bins[f][range],
             ColumnStore::MappedBinned(m) => m.bin_chunk(f, range),
+            ColumnStore::Sharded(s) => s.bin_chunk(f, range),
             ColumnStore::Ram(_) | ColumnStore::Mapped(_) => {
                 panic!("bin_chunk on a float store — read column_chunk instead")
             }
@@ -260,6 +272,7 @@ impl ColumnStore {
         match self {
             ColumnStore::RamBinned(r) => Some(&r.layouts),
             ColumnStore::MappedBinned(m) => Some(&m.layouts),
+            ColumnStore::Sharded(s) => s.layouts.as_ref(),
             ColumnStore::Ram(_) | ColumnStore::Mapped(_) => None,
         }
     }
@@ -272,6 +285,7 @@ impl ColumnStore {
             ColumnStore::Mapped(m) => m.labels_chunk(range),
             ColumnStore::RamBinned(r) => &r.labels[range],
             ColumnStore::MappedBinned(m) => m.labels_chunk(range),
+            ColumnStore::Sharded(s) => &s.labels[range],
         }
     }
 
@@ -282,17 +296,37 @@ impl ColumnStore {
             ColumnStore::Mapped(m) => m.column_chunk(f, s..s + 1)[0],
             ColumnStore::RamBinned(r) => r.layouts[f].rep(r.bins[f][s]),
             ColumnStore::MappedBinned(m) => m.layouts[f].rep(m.bin_chunk(f, s..s + 1)[0]),
+            ColumnStore::Sharded(sh) => sh.value(s, f),
+        }
+    }
+
+    /// Point lookup of one stored bin id (binned backends only — panics
+    /// on float stores). The per-element twin of [`ColumnStore::bin_chunk`]
+    /// for paths that can't borrow a whole-column chunk (sharded subset
+    /// gathers).
+    #[inline]
+    pub fn bin_value(&self, s: usize, f: usize) -> u8 {
+        match self {
+            ColumnStore::RamBinned(r) => r.bins[f][s],
+            ColumnStore::MappedBinned(m) => m.bin_chunk(f, s..s + 1)[0],
+            ColumnStore::Sharded(sh) => sh.bin_value(s, f),
+            ColumnStore::Ram(_) | ColumnStore::Mapped(_) => {
+                panic!("bin_value on a float store — read value instead")
+            }
         }
     }
 
     /// Backend tag for logs/benches
-    /// (`ram` | `mmap` | `ram-binned` | `mmap-binned`).
+    /// (`ram` | `mmap` | `ram-binned` | `mmap-binned` | `sharded` |
+    /// `sharded-binned`).
     pub fn backend_name(&self) -> &'static str {
         match self {
             ColumnStore::Ram(_) => "ram",
             ColumnStore::Mapped(_) => "mmap",
             ColumnStore::RamBinned(_) => "ram-binned",
             ColumnStore::MappedBinned(_) => "mmap-binned",
+            ColumnStore::Sharded(s) if s.layouts.is_some() => "sharded-binned",
+            ColumnStore::Sharded(_) => "sharded",
         }
     }
 }

@@ -16,9 +16,26 @@
 //!   large tree saturates every core instead of one) and the accelerator
 //!   tier is submitted as **one** batched [`NodeAccel::split_nodes_batch`]
 //!   call per level. Determinism is a hard requirement: every node draws
-//!   from its own `Pcg64` stream keyed by (tree seed, node id), so the
-//!   trained forest is byte-identical regardless of thread count or
-//!   scheduling order.
+//!   from its own `Pcg64` stream keyed by (tree seed, root-to-node path)
+//!   — see [`crate::rng::child_stream`] — so the trained forest is
+//!   byte-identical regardless of thread count or scheduling order, and a
+//!   worker that finishes a small node's whole subtree locally (**tail
+//!   subtree completion**, [`CpuUnit::Tail`]) derives exactly the streams
+//!   the level scheduler would have.
+//!
+//! **Sharded stores** (`--data 'out-*.sofc'`) train fill-local /
+//! merge-global: a histogram-tier node big enough to amortize the merge is
+//! split into per-shard fill tasks — each fills a partial count table over
+//! only its shard's rows with the same fused/binned/SIMD fill paths —
+//! then the partials are reduced in fixed shard-index order
+//! ([`crate::split::histogram::merge_shard_tables`]) before the shared
+//! edge scan. Count tables are u32 sums over disjoint row partitions, so
+//! the merged tables equal a single-store fill bit-for-bit, and boundary
+//! sampling happens once per node *before* the fan-out on the node's own
+//! RNG stream ([`crate::split::fused::build_candidate_boundaries`]) — the
+//! per-node RNG never sees shard boundaries. Sort-tier and exact-tier
+//! nodes gather through the shard-aware chunk views in
+//! `projection::apply`, so every strategy trains sharded.
 //!
 //! Scratch buffers are leased per worker from a [`ScratchPool`] (instead of
 //! one set per tree), so the CPU node loop performs **no heap allocation**
@@ -50,8 +67,8 @@ use crate::data::{ActiveSet, Dataset};
 use crate::metrics::{Component, LevelStats, TrainStats};
 use crate::projection::apply::{active_span, apply_projection, gather_labels};
 use crate::projection::{self, Projection, ProjectionMatrix};
-use crate::rng::Pcg64;
-use crate::split::histogram::{best_edge_over_tables, subtract_tables, Routing};
+use crate::rng::{child_stream, Pcg64};
+use crate::split::histogram::{best_edge_over_tables, merge_shard_tables, subtract_tables, Routing};
 use crate::split::vectorized::TwoLevelLayout;
 use crate::split::{
     best_split, best_split_fused, DynamicSplitter, Split, SplitMethod, SplitScratch,
@@ -278,12 +295,15 @@ struct WorkItem {
     link: Option<(usize, bool)>,
 }
 
-/// Frontier-mode work item: the node id is pre-assigned (BFS order), which
-/// keys the node's private RNG stream.
+/// Frontier-mode work item: the node id is pre-assigned (BFS order); the
+/// node's private RNG stream is keyed by its root-to-node `stream` path key
+/// (see [`child_stream`]), a pure function of the tree shape above it.
 struct FrontierItem {
     node_id: usize,
     active: ActiveSet,
     depth: usize,
+    /// Path-derived RNG stream id (root = 0).
+    stream: u64,
     /// Sibling-subtraction pairing, set at creation time when this node
     /// and its sibling were judged an eligible pair.
     pair: Option<PairState>,
@@ -372,6 +392,10 @@ struct NodeSplit {
 enum NodeOutcome {
     Split(NodeSplit),
     Leaf(Node),
+    /// Tail subtree completion: the claiming worker grew the node's whole
+    /// subtree locally. Local indices (node 0 is the subtree root, every
+    /// child above its parent) are rebased when spliced into the tree.
+    Subtree(Vec<Node>),
 }
 
 /// How a frontier node's histogram tables were obtained (instrumentation:
@@ -392,7 +416,17 @@ enum CpuUnit {
     One(usize),
     /// `frontier[i]` is a pair `Lead`; `frontier[i + 1]` is its `Follow`.
     Pair(usize),
+    /// Tail subtree completion: `frontier[i]` is small enough that the
+    /// claiming worker grows its whole subtree depth-first instead of
+    /// re-enqueueing children — the tree tail stops paying one
+    /// level-scheduling round per depth step. Byte-identity holds because
+    /// per-node streams are path-keyed, not order-keyed.
+    Tail(usize),
 }
+
+/// Tail-completion sample ceiling: above this, a subtree is large enough
+/// that keeping its nodes on the level scheduler (and its pool) wins.
+const TAIL_COMPLETE_MAX: usize = 4096;
 
 /// The immutable per-tree context shared by every node worker.
 struct NodeEnv<'a> {
@@ -543,9 +577,11 @@ impl<'a> TreeTrainer<'a> {
 
     /// Level-wise frontier growth with intra-tree parallelism and per-level
     /// accelerator batching. Node ids are assigned in BFS order as nodes
-    /// are opened, and each node's RNG is `Pcg64::with_stream(node_seed,
-    /// node_id)` — a pure function of (seed, tree index, node id) — so the
-    /// result is independent of worker count and completion order.
+    /// are opened; each node's RNG is `Pcg64::with_stream(node_seed,
+    /// stream)` where `stream` is the node's root-to-node path key — a pure
+    /// function of (seed, tree index, tree shape above the node) — so the
+    /// result is independent of worker count, completion order, and of
+    /// whether a subtree was grown level-wise or tail-completed locally.
     fn train_frontier(&mut self, root_active: ActiveSet) -> Tree {
         let t0 = Instant::now();
         let env = self.env();
@@ -557,6 +593,7 @@ impl<'a> TreeTrainer<'a> {
             node_id: 0,
             active: root_active,
             depth: 0,
+            stream: 0,
             pair: None,
         }];
         let mut level = 0usize;
@@ -572,6 +609,24 @@ impl<'a> TreeTrainer<'a> {
             for (item, outcome) in frontier.drain(..).zip(outcomes) {
                 match outcome {
                     NodeOutcome::Leaf(node) => nodes[item.node_id] = node,
+                    NodeOutcome::Subtree(mut sub) => {
+                        // Rebase the locally grown subtree: local node 0
+                        // replaces the claimed slot, locals 1.. append at
+                        // the tree's tail (every child index stays above
+                        // its parent's).
+                        let base = nodes.len();
+                        for n in sub.iter_mut() {
+                            if let Node::Split { left, right, .. } = n {
+                                debug_assert!(*left > 0 && *right > 0);
+                                *left = (base + *left as usize - 1) as u32;
+                                *right = (base + *right as usize - 1) as u32;
+                            }
+                        }
+                        let mut sub = sub.into_iter();
+                        nodes[item.node_id] =
+                            sub.next().expect("tail subtree without a root");
+                        nodes.extend(sub);
+                    }
                     NodeOutcome::Split(s) => {
                         let NodeSplit {
                             projection,
@@ -615,12 +670,14 @@ impl<'a> TreeTrainer<'a> {
                             node_id: li,
                             active: left,
                             depth: child_depth,
+                            stream: child_stream(item.stream, false),
                             pair: lead,
                         });
                         next.push(FrontierItem {
                             node_id: li + 1,
                             active: right,
                             depth: child_depth,
+                            stream: child_stream(item.stream, true),
                             pair: follow,
                         });
                     }
@@ -666,6 +723,7 @@ impl<'a> TreeTrainer<'a> {
         }
         let mut units: Vec<CpuUnit> = Vec::new();
         let mut accel_tier: Vec<usize> = Vec::new();
+        let mut shard_tier: Vec<usize> = Vec::new();
         for (i, item) in frontier.iter().enumerate() {
             match &item.pair {
                 // A Follow is claimed by the worker that claims its Lead.
@@ -694,13 +752,37 @@ impl<'a> TreeTrainer<'a> {
                     lstats.accel_nodes += 1;
                     accel_tier.push(i);
                 }
-                SplitMethod::Exact => {
-                    lstats.sort_nodes += 1;
-                    units.push(CpuUnit::One(i));
-                }
-                _ => {
-                    lstats.hist_nodes += 1;
-                    units.push(CpuUnit::One(i));
+                method => {
+                    if matches!(method, SplitMethod::Exact) {
+                        lstats.sort_nodes += 1;
+                    } else {
+                        lstats.hist_nodes += 1;
+                    }
+                    // Tail subtree completion: a node too small to ever
+                    // pair or retain (n < 2·n_bins) — and safely below any
+                    // accelerator band — is grown to completion by its
+                    // claiming worker instead of re-crossing the level
+                    // scheduler each depth step. Path-keyed RNG streams
+                    // make the locally grown subtree byte-identical to the
+                    // level-wise one.
+                    if n < 2 * cfg.n_bins
+                        && n <= TAIL_COMPLETE_MAX
+                        && (self.accel.is_none() || n < cfg.thresholds.accel_above)
+                    {
+                        units.push(CpuUnit::Tail(i));
+                    } else if matches!(
+                        method,
+                        SplitMethod::Histogram | SplitMethod::VectorizedHistogram
+                    ) && self.data.n_shards() > 1
+                        && n >= 4 * cfg.n_bins
+                    {
+                        // Sharded fill-local/merge-global tier: big enough
+                        // that per-shard fills amortize the
+                        // O(shards·bins·classes) merge.
+                        shard_tier.push(i);
+                    } else {
+                        units.push(CpuUnit::One(i));
+                    }
                 }
             }
         }
@@ -735,19 +817,12 @@ impl<'a> TreeTrainer<'a> {
             let unit_samples: usize = units
                 .iter()
                 .map(|u| match *u {
-                    CpuUnit::One(i) => frontier[i].active.len(),
+                    CpuUnit::One(i) | CpuUnit::Tail(i) => frontier[i].active.len(),
                     CpuUnit::Pair(i) => frontier[i].active.len() + frontier[i + 1].active.len(),
                 })
                 .sum();
             let block = claim_block_size(unit_samples, units.len(), workers);
-            // Scheduling-vs-compute attribution for the `--instrument`
-            // frontier table: `busy_max` is the longest any worker spent
-            // inside the job; the rest of the parallel wall time is
-            // spawn/wake/park/join overhead.
-            let busy_max = AtomicU64::new(0);
-            let busy_ref = &busy_max;
             let body = |queue: &TaskQueue| {
-                let w0 = instrument.then(Instant::now);
                 let mut ns = pool.lease();
                 let mut local_stats = TrainStats::new(instrument);
                 let mut local: Vec<(usize, NodeOutcome, FillTag)> = Vec::new();
@@ -767,21 +842,15 @@ impl<'a> TreeTrainer<'a> {
                 pool.release(ns);
                 results.lock().unwrap().extend(local);
                 worker_stats.lock().unwrap().push(local_stats);
-                if let Some(t) = w0 {
-                    busy_ref.fetch_max(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                }
             };
-            let pt0 = Instant::now();
-            match self.level_pool {
-                Some(lp) => lp.run(units.len(), &body),
-                None => run_pool(workers, units.len(), body),
-            }
-            if instrument {
-                let wall = pt0.elapsed().as_nanos() as u64;
-                let busy = busy_max.load(Ordering::Relaxed).min(wall);
-                lstats.compute_ns += busy;
-                lstats.sched_ns += wall - busy;
-            }
+            run_attributed(
+                self.level_pool,
+                workers,
+                units.len(),
+                instrument,
+                &mut lstats,
+                &body,
+            );
             for s in worker_stats.into_inner().unwrap() {
                 self.stats.merge(&s);
             }
@@ -793,12 +862,32 @@ impl<'a> TreeTrainer<'a> {
                 FillTag::InheritedFill => lstats.inherit_fill_nodes += 1,
                 FillTag::Fresh => {}
             }
+            if let NodeOutcome::Subtree(sub) = &o {
+                lstats.tail_nodes += (sub.len() - 1) as u64;
+            }
             outcomes[i] = Some(o);
         }
 
+        if !shard_tier.is_empty() {
+            self.process_shard_tier(
+                env,
+                node_seed,
+                frontier,
+                &shard_tier,
+                &mut outcomes,
+                &mut lstats,
+            );
+        }
+
         if !accel_tier.is_empty() {
-            lstats.accel_batches +=
-                self.process_accel_tier(env, node_seed, frontier, &accel_tier, &mut outcomes);
+            lstats.accel_batches += self.process_accel_tier(
+                env,
+                node_seed,
+                frontier,
+                &accel_tier,
+                &mut outcomes,
+                &mut lstats,
+            );
         }
 
         let outcomes: Vec<NodeOutcome> = outcomes
@@ -816,7 +905,7 @@ impl<'a> TreeTrainer<'a> {
     ///
     /// Request **materialization** (projection apply + boundary build per
     /// node) fans out over the intra-tree pool exactly like the CPU tiers:
-    /// each node's prep consumes only its own `(node_seed, node_id)` RNG
+    /// each node's prep consumes only its own `(node_seed, path stream)` RNG
     /// stream and its own leased scratch, so the prepared requests are
     /// independent of worker count; restoring tier order before the batch
     /// submission keeps the device call (and the response pairing)
@@ -828,6 +917,7 @@ impl<'a> TreeTrainer<'a> {
         frontier: &[FrontierItem],
         tier: &[usize],
         outcomes: &mut [Option<NodeOutcome>],
+        lstats: &mut LevelStats,
     ) -> u64 {
         let workers = self.intra_threads.min(tier.len()).max(1);
         let prepped: Vec<AccelPrep> = if workers <= 1 {
@@ -864,10 +954,14 @@ impl<'a> TreeTrainer<'a> {
                 results.lock().unwrap().extend(local);
                 worker_stats.lock().unwrap().push(local_stats);
             };
-            match self.level_pool {
-                Some(lp) => lp.run(tier.len(), &body),
-                None => run_pool(workers, tier.len(), body),
-            }
+            run_attributed(
+                self.level_pool,
+                workers,
+                tier.len(),
+                instrument,
+                lstats,
+                &body,
+            );
             for s in worker_stats.into_inner().unwrap() {
                 self.stats.merge(&s);
             }
@@ -949,6 +1043,442 @@ impl<'a> TreeTrainer<'a> {
         self.pool.release(ns);
         batches
     }
+
+    /// Process the sharded histogram tier fill-local / merge-global, in
+    /// three parallel stages:
+    ///
+    /// * **A (per node)** — projection + boundary sampling on the node's
+    ///   own path-keyed stream ([`build_candidate_boundaries`], the fused
+    ///   engine's phase 1, shared RNG contract with both fresh-search
+    ///   engines), then the active set is segmented by shard.
+    /// * **B (per node × shard)** — each segment direct-fills a *partial*
+    ///   count table over only its shard's rows with the same
+    ///   fused/binned/SIMD fill paths ([`fill_tables_blocked`]); a fill
+    ///   task never crosses a shard boundary, so its gathers stay within
+    ///   one shard's columns.
+    /// * **C (per node)** — partials are reduced tree-structured in fixed
+    ///   shard-index order ([`merge_shard_tables`]) and the merged tables
+    ///   feed the same [`best_edge_over_tables`] scan, partition and
+    ///   retention the single-store path uses.
+    ///
+    /// Count tables are u32 sums over disjoint row partitions, so the
+    /// merged tables — and everything downstream — are bit-identical to a
+    /// single-store fill at any shard count, worker count or stage
+    /// interleaving. Outcomes are keyed by frontier index and applied in
+    /// frontier order like every other tier.
+    #[allow(clippy::too_many_arguments)]
+    fn process_shard_tier(
+        &mut self,
+        env: &NodeEnv<'a>,
+        node_seed: u64,
+        frontier: &[FrontierItem],
+        tier: &[usize],
+        outcomes: &mut [Option<NodeOutcome>],
+        lstats: &mut LevelStats,
+    ) {
+        let instrument = env.config.instrument;
+
+        // ---- Stage A: per-node prep ----
+        let workers = self.intra_threads.min(tier.len()).max(1);
+        let mut fills: Vec<ShardPrep> = if workers <= 1 {
+            let mut ns = self.pool.lease();
+            let mut fills = Vec::new();
+            for &i in tier {
+                match prep_shard_node(env, node_seed, &frontier[i], i, &mut self.stats, &mut ns)
+                {
+                    ShardStage::Done(i, o) => outcomes[i] = Some(o),
+                    ShardStage::Fill(p) => fills.push(p),
+                }
+            }
+            self.pool.release(ns);
+            fills
+        } else {
+            let pool = &self.pool;
+            let results: Mutex<Vec<(usize, ShardStage)>> =
+                Mutex::new(Vec::with_capacity(tier.len()));
+            let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
+            let body = |queue: &TaskQueue| {
+                let mut ns = pool.lease();
+                let mut local_stats = TrainStats::new(instrument);
+                let mut local: Vec<(usize, ShardStage)> = Vec::new();
+                while let Some(k) = queue.claim() {
+                    let i = tier[k];
+                    local.push((
+                        k,
+                        prep_shard_node(
+                            env,
+                            node_seed,
+                            &frontier[i],
+                            i,
+                            &mut local_stats,
+                            &mut ns,
+                        ),
+                    ));
+                }
+                pool.release(ns);
+                results.lock().unwrap().extend(local);
+                worker_stats.lock().unwrap().push(local_stats);
+            };
+            run_attributed(self.level_pool, workers, tier.len(), instrument, lstats, &body);
+            for s in worker_stats.into_inner().unwrap() {
+                self.stats.merge(&s);
+            }
+            let mut collected = results.into_inner().unwrap();
+            // Tier order (purely cosmetic here — every downstream use is
+            // keyed — but it keeps Stage B's task list deterministic for
+            // the instrumented shard_fills accounting).
+            collected.sort_by_key(|(k, _)| *k);
+            let mut fills = Vec::new();
+            for (_, stage) in collected {
+                match stage {
+                    ShardStage::Done(i, o) => outcomes[i] = Some(o),
+                    ShardStage::Fill(p) => fills.push(p),
+                }
+            }
+            fills
+        };
+
+        // ---- Stage B: per (node, shard) partial fills ----
+        let tasks: Vec<(usize, usize)> = fills
+            .iter()
+            .enumerate()
+            .flat_map(|(k, p)| (0..p.segments.len()).map(move |s| (k, s)))
+            .collect();
+        lstats.shard_fills += tasks.len() as u64;
+        let workers = self.intra_threads.min(tasks.len()).max(1);
+        if workers <= 1 {
+            let mut ns = self.pool.lease();
+            for &(k, s) in &tasks {
+                let tbl = fill_shard_partial(env, &fills[k], s, &mut self.stats, &mut ns);
+                fills[k].partials[s] = tbl;
+            }
+            self.pool.release(ns);
+        } else {
+            let pool = &self.pool;
+            let fills_ref = &fills;
+            let tasks_ref = &tasks;
+            let results: Mutex<Vec<(usize, usize, Vec<u32>)>> =
+                Mutex::new(Vec::with_capacity(tasks.len()));
+            let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
+            let body = |queue: &TaskQueue| {
+                let mut ns = pool.lease();
+                let mut local_stats = TrainStats::new(instrument);
+                let mut local: Vec<(usize, usize, Vec<u32>)> = Vec::new();
+                while let Some(t) = queue.claim() {
+                    let (k, s) = tasks_ref[t];
+                    local.push((
+                        k,
+                        s,
+                        fill_shard_partial(env, &fills_ref[k], s, &mut local_stats, &mut ns),
+                    ));
+                }
+                pool.release(ns);
+                results.lock().unwrap().extend(local);
+                worker_stats.lock().unwrap().push(local_stats);
+            };
+            run_attributed(self.level_pool, workers, tasks.len(), instrument, lstats, &body);
+            for s in worker_stats.into_inner().unwrap() {
+                self.stats.merge(&s);
+            }
+            for (k, s, tbl) in results.into_inner().unwrap() {
+                fills[k].partials[s] = tbl;
+            }
+        }
+
+        // ---- Stage C: merge, scan, partition per node ----
+        let workers = self.intra_threads.min(fills.len()).max(1);
+        if workers <= 1 {
+            let mut ns = self.pool.lease();
+            for prep in fills {
+                let (i, o) = finish_shard_node(env, &mut self.stats, &mut ns, frontier, prep);
+                outcomes[i] = Some(o);
+            }
+            self.pool.release(ns);
+        } else {
+            let pool = &self.pool;
+            let slots: Vec<Mutex<Option<ShardPrep>>> =
+                fills.into_iter().map(|p| Mutex::new(Some(p))).collect();
+            let slots_ref = &slots;
+            let results: Mutex<Vec<(usize, NodeOutcome)>> =
+                Mutex::new(Vec::with_capacity(slots.len()));
+            let worker_stats: Mutex<Vec<TrainStats>> = Mutex::new(Vec::new());
+            let body = |queue: &TaskQueue| {
+                let mut ns = pool.lease();
+                let mut local_stats = TrainStats::new(instrument);
+                let mut local: Vec<(usize, NodeOutcome)> = Vec::new();
+                while let Some(k) = queue.claim() {
+                    let prep = slots_ref[k]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("shard prep claimed twice");
+                    local.push(finish_shard_node(env, &mut local_stats, &mut ns, frontier, prep));
+                }
+                pool.release(ns);
+                results.lock().unwrap().extend(local);
+                worker_stats.lock().unwrap().push(local_stats);
+            };
+            run_attributed(self.level_pool, workers, slots.len(), instrument, lstats, &body);
+            for s in worker_stats.into_inner().unwrap() {
+                self.stats.merge(&s);
+            }
+            for (i, o) in results.into_inner().unwrap() {
+                outcomes[i] = Some(o);
+            }
+        }
+    }
+}
+
+/// A shard-tier node between Stage A (prep) and Stage C (merge + scan):
+/// everything the per-shard fill tasks and the finisher need, detached from
+/// the worker scratch that produced it.
+struct ShardPrep {
+    /// Frontier index (outcome key).
+    idx: usize,
+    depth: usize,
+    parent_counts: Vec<usize>,
+    projections: Vec<Projection>,
+    /// Per-projection usable flag from boundary building.
+    ok: Vec<bool>,
+    /// `p × n_bins` boundaries, +∞-padded.
+    boundaries: Vec<f32>,
+    /// `p × groups` coarse vectors for two-level routing.
+    coarse: Vec<f32>,
+    routing: Routing,
+    /// Keep the merged tables for the sibling-subtraction pairing (same
+    /// decision the single-store search makes).
+    retain: bool,
+    /// Active indices segmented by shard (empty shards dropped), in shard
+    /// index order.
+    segments: Vec<Vec<u32>>,
+    /// One partial count table per segment, filled by Stage B.
+    partials: Vec<Vec<u32>>,
+}
+
+/// Stage A result for one shard-tier node.
+enum ShardStage {
+    /// Resolved without filling (pure node) — `(frontier index, outcome)`.
+    Done(usize, NodeOutcome),
+    /// Needs the per-shard fills + merge.
+    Fill(ShardPrep),
+}
+
+/// Stage A: sample projections and candidate boundaries on the node's own
+/// path-keyed stream — consuming the RNG exactly as both single-store
+/// fresh-search engines would — then segment the active set by shard.
+fn prep_shard_node(
+    env: &NodeEnv,
+    node_seed: u64,
+    item: &FrontierItem,
+    i: usize,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+) -> ShardStage {
+    let mut rng = Pcg64::with_stream(node_seed, item.stream);
+    if item.active.is_pure(env.data) {
+        stats.record_leaf();
+        return ShardStage::Done(i, NodeOutcome::Leaf(make_leaf(env.data, &item.active)));
+    }
+    let cfg = env.config;
+    let parent_counts = item.active.class_counts(env.data);
+    let method = env.splitter.choose(item.active.len());
+    stats.record_node(item.depth, method, item.active.len());
+    {
+        let matrix = &mut ns.matrix;
+        let n_features = env.data.n_features();
+        let source = env.source;
+        let rng = &mut rng;
+        stats.time(item.depth, Component::SampleProjections, || {
+            sample_projections(matrix, rng, n_features, source, cfg)
+        });
+    }
+    {
+        let data = env.data;
+        let projections = &ns.matrix.projections;
+        let indices = &item.active.indices;
+        let scratch = &mut ns.scratch;
+        let rng = &mut rng;
+        stats.time(item.depth, Component::FusedSplit, || {
+            crate::split::fused::build_candidate_boundaries(
+                data,
+                projections,
+                indices,
+                cfg.n_bins,
+                rng,
+                scratch,
+            )
+        });
+    }
+    // The node's RNG is never consumed again (fill + scan are
+    // draw-free on every engine), so it can be dropped here.
+    let routing = match method {
+        SplitMethod::Histogram => Routing::BinarySearch,
+        _ => Routing::TwoLevel,
+    };
+    let retain = retention_worthwhile(cfg, &env.splitter, item.active.len());
+    // Segment the active set by shard. Rows within a segment keep their
+    // relative (ascending) order; segments are in shard-index order, so
+    // Stage C's merge order is fixed. Empty segments are dropped — a
+    // node deep in the tree often touches a subset of shards.
+    let mut segments: Vec<Vec<u32>> = vec![Vec::new(); env.data.n_shards()];
+    for &r in &item.active.indices {
+        segments[env.data.shard_of(r as usize)].push(r);
+    }
+    segments.retain(|s| !s.is_empty());
+    let partials = vec![Vec::new(); segments.len()];
+    ShardStage::Fill(ShardPrep {
+        idx: i,
+        depth: item.depth,
+        parent_counts,
+        projections: ns.matrix.projections.clone(),
+        ok: ns.scratch.fused_ok.clone(),
+        boundaries: ns.scratch.fused_boundaries.clone(),
+        coarse: ns.scratch.fused_coarse.clone(),
+        routing,
+        retain,
+        segments,
+        partials,
+    })
+}
+
+/// Stage B: direct-fill one shard segment's partial count table over the
+/// node's prepped boundaries. Draw-free; every gather stays inside the
+/// segment's shard.
+fn fill_shard_partial(
+    env: &NodeEnv,
+    prep: &ShardPrep,
+    s: usize,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+) -> Vec<u32> {
+    let NodeScratch {
+        labels, scratch, ..
+    } = ns;
+    let seg: &[u32] = &prep.segments[s];
+    gather_labels(env.data, seg, labels);
+    let labels: &[u16] = labels;
+    let mut tbl = Vec::new();
+    stats.time(prep.depth, Component::BuildHistogram, || {
+        crate::split::fused::fill_tables_blocked(
+            env.data,
+            &prep.projections,
+            &prep.ok,
+            seg,
+            labels,
+            &prep.boundaries,
+            &prep.coarse,
+            env.config.n_bins,
+            prep.parent_counts.len(),
+            prep.routing,
+            &mut scratch.block,
+            &mut tbl,
+        )
+    });
+    tbl
+}
+
+/// Stage C: reduce the partial tables in shard-index order, scan the
+/// merged tables for the winning edge, partition — or leaf when no
+/// candidate splits, exactly like the single-store search.
+fn finish_shard_node(
+    env: &NodeEnv,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+    frontier: &[FrontierItem],
+    mut prep: ShardPrep,
+) -> (usize, NodeOutcome) {
+    let cfg = env.config;
+    let item = &frontier[prep.idx];
+    let partials = std::mem::take(&mut prep.partials);
+    let merged = stats.time(item.depth, Component::BuildHistogram, || {
+        merge_shard_tables(partials)
+    });
+    let best = stats.time(item.depth, Component::EvaluateSplit, || {
+        best_edge_over_tables(
+            &prep.parent_counts,
+            cfg.criterion,
+            cfg.n_bins,
+            cfg.min_leaf,
+            &prep.ok,
+            &merged,
+            &prep.boundaries,
+        )
+    });
+    match best {
+        Some((pi, split)) => {
+            let proj = prep.projections[pi].clone();
+            let (l, r) = partition_reapply(
+                env,
+                stats,
+                ns,
+                &item.active,
+                &proj,
+                split.threshold,
+                item.depth,
+            );
+            debug_assert_eq!(l.len(), split.n_left);
+            debug_assert_eq!(r.len(), split.n_right);
+            let retained = prep.retain.then(|| RetainedTables {
+                n_classes: prep.parent_counts.len(),
+                projections: prep.projections,
+                ok: prep.ok,
+                boundaries: prep.boundaries,
+                counts: merged,
+                n_bins: cfg.n_bins,
+            });
+            (
+                prep.idx,
+                NodeOutcome::Split(NodeSplit {
+                    projection: proj,
+                    split,
+                    left: l,
+                    right: r,
+                    retained,
+                }),
+            )
+        }
+        None => {
+            stats.record_leaf();
+            (prep.idx, NodeOutcome::Leaf(make_leaf(env.data, &item.active)))
+        }
+    }
+}
+
+/// Run a parallel stage over the level pool (or a spawn-per-level pool)
+/// with scheduling-vs-compute attribution for the `--instrument` frontier
+/// table: `busy_max` is the longest any worker spent inside the job; the
+/// rest of the stage's wall time is spawn/wake/park/join overhead,
+/// credited to `sched_ns`. Shared by the CPU tier, the accelerator prep
+/// fan-out and the three shard-tier stages so the cpu_ms/sched_ms columns
+/// attribute every parallel region the same way.
+fn run_attributed(
+    level_pool: Option<&LevelPool>,
+    workers: usize,
+    n_tasks: usize,
+    instrument: bool,
+    lstats: &mut LevelStats,
+    body: &(dyn Fn(&TaskQueue) + Sync),
+) {
+    let busy_max = AtomicU64::new(0);
+    let busy_ref = &busy_max;
+    let timed = |queue: &TaskQueue| {
+        let t0 = instrument.then(Instant::now);
+        body(queue);
+        if let Some(t) = t0 {
+            busy_ref.fetch_max(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    };
+    let t0 = Instant::now();
+    match level_pool {
+        Some(lp) => lp.run(n_tasks, &timed),
+        None => run_pool(workers, n_tasks, timed),
+    }
+    if instrument {
+        let wall = t0.elapsed().as_nanos() as u64;
+        let busy = busy_max.load(Ordering::Relaxed).min(wall);
+        lstats.compute_ns += busy;
+        lstats.sched_ns += wall - busy;
+    }
 }
 
 /// Tail block-claim policy: how many CPU work units a pool worker grabs
@@ -993,7 +1523,7 @@ enum AccelPrep {
 /// Materialize one accelerator-tier node's request (projection sampling,
 /// label gather, projection apply + boundary build), or resolve the node
 /// on the CPU when no request is possible. Consumes only the node's own
-/// `(node_seed, node_id)` RNG stream and the worker's leased scratch, so
+/// `(node_seed, path stream)` RNG stream and the worker's leased scratch, so
 /// the intra-tree pool can run preps concurrently without affecting the
 /// trained tree.
 fn prep_accel_node(
@@ -1004,7 +1534,7 @@ fn prep_accel_node(
     stats: &mut TrainStats,
     ns: &mut NodeScratch,
 ) -> AccelPrep {
-    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+    let mut rng = Pcg64::with_stream(node_seed, item.stream);
     if item.active.is_pure(env.data) {
         stats.record_leaf();
         return AccelPrep::Done(i, NodeOutcome::Leaf(make_leaf(env.data, &item.active)));
@@ -1116,12 +1646,115 @@ fn process_cpu_unit(
     match unit {
         CpuUnit::One(i) => {
             let item = &frontier[i];
-            let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+            let mut rng = Pcg64::with_stream(node_seed, item.stream);
             let o = process_cpu_node(env, &mut rng, stats, ns, item);
+            out.push((i, o, FillTag::Fresh));
+        }
+        CpuUnit::Tail(i) => {
+            let o = process_tail_subtree(env, node_seed, &frontier[i], stats, ns);
             out.push((i, o, FillTag::Fresh));
         }
         CpuUnit::Pair(lead) => process_pair(env, node_seed, frontier, lead, stats, ns, out),
     }
+}
+
+/// A pending node of a locally grown tail subtree.
+struct TailWork {
+    active: ActiveSet,
+    depth: usize,
+    /// Path-derived RNG stream id — the same keying the level scheduler
+    /// would have assigned this node.
+    stream: u64,
+    /// (local parent index, is_left) link to patch.
+    link: (usize, bool),
+}
+
+/// Grow a small frontier node's whole subtree locally (depth-first, right
+/// pushed first so left children get lower local indices, matching the
+/// parent-before-children invariant). Every node draws from its own
+/// path-keyed stream, so the grown subtree is bit-identical to what the
+/// level scheduler would have produced — only the flat-vec layout differs
+/// (subtree-contiguous instead of level-interleaved), and that layout is
+/// itself a pure function of deterministic per-node state, hence
+/// identical for any thread count, shard count or engine flag.
+fn process_tail_subtree(
+    env: &NodeEnv,
+    node_seed: u64,
+    item: &FrontierItem,
+    stats: &mut TrainStats,
+    ns: &mut NodeScratch,
+) -> NodeOutcome {
+    let mut rng = Pcg64::with_stream(node_seed, item.stream);
+    // Tail nodes sit below 2·n_bins samples, so retention could never pay
+    // (`retention_worthwhile` is false for them and all descendants) —
+    // pass retain=false and skip the copies the level path would skip too.
+    let root = split_node(env, &mut rng, stats, ns, None, &item.active, item.depth, false);
+    let s = match root {
+        None => {
+            stats.record_leaf();
+            return NodeOutcome::Leaf(make_leaf(env.data, &item.active));
+        }
+        Some(s) => s,
+    };
+    let mut nodes: Vec<Node> = vec![Node::Split {
+        projection: s.projection,
+        threshold: s.split.threshold,
+        left: u32::MAX,
+        right: u32::MAX,
+    }];
+    let mut stack = vec![
+        TailWork {
+            active: s.right,
+            depth: item.depth + 1,
+            stream: child_stream(item.stream, true),
+            link: (0, false),
+        },
+        TailWork {
+            active: s.left,
+            depth: item.depth + 1,
+            stream: child_stream(item.stream, false),
+            link: (0, true),
+        },
+    ];
+    while let Some(w) = stack.pop() {
+        let idx = nodes.len();
+        let (parent, is_left) = w.link;
+        if let Node::Split { left, right, .. } = &mut nodes[parent] {
+            if is_left {
+                *left = idx as u32;
+            } else {
+                *right = idx as u32;
+            }
+        }
+        let mut rng = Pcg64::with_stream(node_seed, w.stream);
+        match split_node(env, &mut rng, stats, ns, None, &w.active, w.depth, false) {
+            Some(s) => {
+                nodes.push(Node::Split {
+                    projection: s.projection,
+                    threshold: s.split.threshold,
+                    left: u32::MAX,
+                    right: u32::MAX,
+                });
+                stack.push(TailWork {
+                    active: s.right,
+                    depth: w.depth + 1,
+                    stream: child_stream(w.stream, true),
+                    link: (idx, false),
+                });
+                stack.push(TailWork {
+                    active: s.left,
+                    depth: w.depth + 1,
+                    stream: child_stream(w.stream, false),
+                    link: (idx, true),
+                });
+            }
+            None => {
+                nodes.push(make_leaf(env.data, &w.active));
+                stats.record_leaf();
+            }
+        }
+    }
+    NodeOutcome::Subtree(nodes)
 }
 
 /// Process one CPU-tier frontier node end to end.
@@ -1413,7 +2046,7 @@ fn finish_inherited(
             tag,
         );
     }
-    let mut rng = Pcg64::with_stream(node_seed, item.node_id as u64);
+    let mut rng = Pcg64::with_stream(node_seed, item.stream);
     match split_node(env, &mut rng, stats, ns, None, &item.active, item.depth, true) {
         Some(s) => (NodeOutcome::Split(s), FillTag::Fresh),
         None => {
@@ -2320,13 +2953,41 @@ mod tests {
         assert_eq!(t.stats.n_leaves as usize, tree.n_leaves());
         assert!(t.stats.wall_ns > 0);
         assert!(!t.stats.by_depth.is_empty());
-        // Frontier growth (the default) also records per-level stats: one
-        // entry per level, level 0 has width 1 (the root).
-        assert_eq!(t.stats.by_level.len(), tree.depth() + 1);
+        // Frontier growth (the default) also records per-level stats;
+        // level 0 has width 1 (the root). Tail subtree completion grows
+        // small subtrees off-frontier, so the scheduler can finish in
+        // fewer levels than the tree is deep, and frontier widths plus
+        // tail-completed nodes account for every node exactly once.
+        assert!(t.stats.by_level.len() <= tree.depth() + 1);
         assert_eq!(t.stats.by_level[0].width, 1);
         let widths: u64 = t.stats.by_level.iter().map(|l| l.width).sum();
-        assert_eq!(widths as usize, tree.nodes.len());
+        let tail: u64 = t.stats.by_level.iter().map(|l| l.tail_nodes).sum();
+        assert_eq!((widths + tail) as usize, tree.nodes.len());
         assert!(!t.stats.frontier_table().is_empty());
+    }
+
+    #[test]
+    fn tail_completion_engages_and_is_thread_invariant() {
+        // Deep-ish tree with plenty of sub-2·n_bins nodes: the tail tier
+        // must take over the narrow end of the frontier.
+        let data = trunk(1200, 8, 51);
+        let cfg = ForestConfig {
+            instrument: true,
+            ..Default::default()
+        };
+        let train_with = |threads: usize| {
+            let mut t =
+                TreeTrainer::new(&data, &cfg, ProjectionSource::SparseOblique, Pcg64::new(52))
+                    .with_intra_threads(threads);
+            let tree = t.train(ActiveSet::full(data.n_samples()));
+            let tail: u64 = t.stats.by_level.iter().map(|l| l.tail_nodes).sum();
+            (tree, tail)
+        };
+        let (a, tail) = train_with(1);
+        assert!(tail > 0, "tail completion never engaged");
+        assert!(a.is_pure());
+        let (b, _) = train_with(4);
+        assert_trees_equal(&a, &b, "tail completion x4 threads");
     }
 
     /// A mock accelerator that replays the CPU vectorized path, letting us

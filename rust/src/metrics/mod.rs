@@ -135,6 +135,15 @@ pub struct LevelStats {
     pub inherit_fill_nodes: u64,
     /// Batched accelerator submissions (0 or 1 per level per tree).
     pub accel_batches: u64,
+    /// Extra nodes produced by tail subtree completion: a worker claiming a
+    /// small frontier node finishes its whole subtree locally instead of
+    /// re-enqueueing children, so those descendants never appear in any
+    /// level's `width`. Counted on the level whose node was claimed.
+    pub tail_nodes: u64,
+    /// Per-shard partial histogram fills issued by the sharded
+    /// fill-local/merge-global pipeline (≥ 2 per node it engages for; 0 on
+    /// single-store training).
+    pub shard_fills: u64,
     /// Wall-clock nanoseconds spent on the level.
     pub wall_ns: u64,
     /// Nanoseconds the slowest worker spent *inside* the parallel CPU-tier
@@ -149,6 +158,26 @@ pub struct LevelStats {
 }
 
 impl LevelStats {
+    /// The tier that processed most of this level's nodes — the `tier`
+    /// column of the frontier table. Accelerator and sharded levels are
+    /// called out whenever they engaged at all (they dominate wall time
+    /// long before they dominate node counts).
+    pub fn dominant_tier(&self) -> &'static str {
+        if self.accel_nodes > 0 {
+            "accel"
+        } else if self.shard_fills > 0 {
+            "shard"
+        } else if self.tail_nodes > 0 {
+            "tail"
+        } else if self.hist_nodes >= self.sort_nodes && self.hist_nodes > 0 {
+            "hist"
+        } else if self.sort_nodes > 0 {
+            "sort"
+        } else {
+            "leaf"
+        }
+    }
+
     fn merge(&mut self, other: &LevelStats) {
         self.width += other.width;
         self.sort_nodes += other.sort_nodes;
@@ -158,6 +187,8 @@ impl LevelStats {
         self.sub_nodes += other.sub_nodes;
         self.inherit_fill_nodes += other.inherit_fill_nodes;
         self.accel_batches += other.accel_batches;
+        self.tail_nodes += other.tail_nodes;
+        self.shard_fills += other.shard_fills;
         self.wall_ns += other.wall_ns;
         self.compute_ns += other.compute_ns;
         self.sched_ns += other.sched_ns;
@@ -289,11 +320,11 @@ impl TrainStats {
             return String::new();
         }
         let mut out = String::from(
-            "level  width     sort/hist/accel/leaf          sub/ifill    batches   wall_ms    cpu_ms  sched_ms\n",
+            "level  width     sort/hist/accel/leaf          sub/ifill     tail  sfills    batches  tier    wall_ms    cpu_ms  sched_ms\n",
         );
         for (level, l) in self.by_level.iter().enumerate() {
             out.push_str(&format!(
-                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>6}/{:<6} {:>7}  {:>9.3} {:>9.3} {:>9.3}\n",
+                "{level:>5}  {:>8} {:>7}/{:<7}/{:<6}/{:<7} {:>6}/{:<6} {:>6}  {:>6} {:>8}  {:<5} {:>9.3} {:>9.3} {:>9.3}\n",
                 l.width,
                 l.sort_nodes,
                 l.hist_nodes,
@@ -301,7 +332,10 @@ impl TrainStats {
                 l.leaf_nodes,
                 l.sub_nodes,
                 l.inherit_fill_nodes,
+                l.tail_nodes,
+                l.shard_fills,
                 l.accel_batches,
+                l.dominant_tier(),
                 l.wall_ns as f64 / 1e6,
                 l.compute_ns as f64 / 1e6,
                 l.sched_ns as f64 / 1e6,
@@ -402,6 +436,8 @@ mod tests {
                 accel_batches: 1,
                 sub_nodes: 3,
                 inherit_fill_nodes: 4,
+                tail_nodes: 5,
+                shard_fills: 6,
                 ..Default::default()
             },
         );
@@ -411,12 +447,19 @@ mod tests {
         assert_eq!(a.by_level[0].accel_batches, 1);
         assert_eq!(a.by_level[0].sub_nodes, 3);
         assert_eq!(a.by_level[0].inherit_fill_nodes, 4);
+        assert_eq!(a.by_level[0].tail_nodes, 5);
+        assert_eq!(a.by_level[0].shard_fills, 6);
         assert_eq!(a.by_level[1].sort_nodes, 2);
         assert_eq!(a.by_level[1].compute_ns, 3);
         assert_eq!(a.by_level[1].sched_ns, 2);
+        assert_eq!(a.by_level[0].dominant_tier(), "accel");
+        assert_eq!(a.by_level[1].dominant_tier(), "sort");
+        assert_eq!(LevelStats::default().dominant_tier(), "leaf");
         let table = a.frontier_table();
         assert!(!table.is_empty());
         assert!(table.contains("sched_ms"), "table gained the scheduling column");
+        assert!(table.contains("tier"), "table gained the tier column");
+        assert!(table.contains("tail"), "table gained the tail column");
         // Disabled stats skip level recording entirely.
         let mut c = TrainStats::new(false);
         c.record_level(0, LevelStats::default());

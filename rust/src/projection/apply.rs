@@ -75,6 +75,21 @@ pub fn apply_projection_into_span(
 ) {
     debug_assert_eq!(active.len(), out.len());
     debug_assert!(active.iter().all(|&i| span.contains(&(i as usize))));
+    if !span.is_empty() && data.shard_bounds(span.start).end < span.end {
+        // Sharded store and the span crosses a member boundary: no single
+        // column chunk covers it, so split the ids into maximal same-shard
+        // runs and gather each run against its member-local span. Element
+        // arithmetic and order are unchanged, so the fused/classic and
+        // sharded/concatenated bit-equivalence contracts both hold.
+        let mut s = 0usize;
+        while s < active.len() {
+            let e = data.shard_run_end(active, s);
+            let run = &active[s..e];
+            apply_projection_into_span(data, proj, run, active_span(run), &mut out[s..e]);
+            s = e;
+        }
+        return;
+    }
     if data.is_binned() {
         return apply_projection_binned_span(data, proj, active, span, out);
     }
@@ -317,6 +332,39 @@ mod tests {
                     "project_row vs span kernel on binned data, {p:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sharded_gathers_match_unsharded_bitwise() {
+        let d = data();
+        let q = d.quantized(8);
+        let p = Projection {
+            terms: vec![(0, 1.0), (1, 0.5), (2, -2.0)],
+        };
+        let projections = [Projection::axis(1), p];
+        // Active ids straddle the member boundary (rows 0-1 | 2-3).
+        let active = [0u32, 1, 2, 3];
+        for (whole, tag) in [(&d, "float"), (&q, "binned")] {
+            let sharded = crate::data::shards::from_parts(vec![
+                whole.subset(&[0, 1]),
+                whole.subset(&[2, 3]),
+            ])
+            .unwrap();
+            assert!(sharded.is_sharded(), "{tag}");
+            for p in &projections {
+                let mut want = Vec::new();
+                apply_projection(whole, p, &active, &mut want);
+                let mut got = Vec::new();
+                apply_projection(&sharded, p, &active, &mut got);
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag} {p:?}");
+                }
+            }
+            let mut l = Vec::new();
+            gather_labels(&sharded, &active, &mut l);
+            assert_eq!(l, whole.labels(), "{tag}");
         }
     }
 

@@ -74,11 +74,10 @@ pub fn best_split_fused(
     if n < 2 {
         return None;
     }
-    let p = projections.len();
     let n_classes = parent_counts.len();
-    let n_real = n_bins - 1;
-    let layout = TwoLevelLayout::for_bins(n_bins);
-    let groups = layout.map_or(0, |l| l.groups);
+
+    // ---- Phase 1: per-projection bin boundaries, without materializing ----
+    build_candidate_boundaries(data, projections, active, n_bins, rng, scratch);
 
     let SplitScratch {
         block,
@@ -89,12 +88,69 @@ pub fn best_split_fused(
         ..
     } = scratch;
 
-    // ---- Phase 1: per-projection bin boundaries, without materializing ----
-    // Boundary *positions* are drawn with the same `rng.index(n)` sequence
-    // as `histogram::build_boundaries` on a materialized vector, and the
-    // sampled values are computed with the same per-element arithmetic
-    // (`project_row` ≡ `apply_projection`), so the boundaries — and the RNG
-    // state left behind — are bit-identical to the classic path's.
+    // ---- Phase 2: block-major gather + route + accumulate ----
+    fill_tables_blocked(
+        data,
+        projections,
+        &*fused_ok,
+        active,
+        labels,
+        &*fused_boundaries,
+        &*fused_coarse,
+        n_bins,
+        n_classes,
+        routing,
+        block,
+        fused_counts,
+    );
+
+    // ---- Phase 3: edge scan per projection, same tie-breaking as the ----
+    // classic projection loop (first strictly-greater gain wins). Shared
+    // with the sibling-subtraction path.
+    best_edge_over_tables(
+        parent_counts,
+        criterion,
+        n_bins,
+        min_leaf,
+        &*fused_ok,
+        &*fused_counts,
+        &*fused_boundaries,
+    )
+}
+
+/// Phase 1 of the fused engine, exposed on its own for the sharded
+/// fill-local/merge-global pipeline: build every candidate projection's bin
+/// boundaries (into `scratch.fused_boundaries` / `fused_coarse` /
+/// `fused_ok`) without materializing any projection vector.
+///
+/// Boundary *positions* are drawn with the same `rng.index(n)` sequence as
+/// `histogram::build_boundaries` on a materialized vector, and the sampled
+/// values are computed with the same per-element arithmetic (`project_row`
+/// ≡ `apply_projection`), so the boundaries — and the RNG state left behind
+/// — are bit-identical to the classic path's. Callers that fill count
+/// tables elsewhere (per shard, say) therefore keep the node's RNG stream
+/// aligned with BOTH fresh-search engines, which is what lets a sharded
+/// fill + merge reproduce single-store training byte-for-byte.
+pub fn build_candidate_boundaries(
+    data: &Dataset,
+    projections: &[Projection],
+    active: &[u32],
+    n_bins: usize,
+    rng: &mut Pcg64,
+    scratch: &mut SplitScratch,
+) {
+    let n = active.len();
+    let p = projections.len();
+    let n_real = n_bins - 1;
+    let layout = TwoLevelLayout::for_bins(n_bins);
+    let groups = layout.map_or(0, |l| l.groups);
+    let SplitScratch {
+        block,
+        fused_boundaries,
+        fused_coarse,
+        fused_ok,
+        ..
+    } = scratch;
     fused_boundaries.clear();
     fused_boundaries.resize(p * n_bins, f32::INFINITY);
     fused_coarse.clear();
@@ -140,35 +196,6 @@ pub fn best_split_fused(
         }
         fused_ok[pi] = true;
     }
-
-    // ---- Phase 2: block-major gather + route + accumulate ----
-    fill_tables_blocked(
-        data,
-        projections,
-        &*fused_ok,
-        active,
-        labels,
-        &*fused_boundaries,
-        &*fused_coarse,
-        n_bins,
-        n_classes,
-        routing,
-        block,
-        fused_counts,
-    );
-
-    // ---- Phase 3: edge scan per projection, same tie-breaking as the ----
-    // classic projection loop (first strictly-greater gain wins). Shared
-    // with the sibling-subtraction path.
-    best_edge_over_tables(
-        parent_counts,
-        criterion,
-        n_bins,
-        min_leaf,
-        &*fused_ok,
-        &*fused_counts,
-        &*fused_boundaries,
-    )
 }
 
 /// Fill a `p × n_bins × n_classes` stack of count tables over `active`

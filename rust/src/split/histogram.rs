@@ -281,6 +281,37 @@ pub fn subtract_tables(parent: &[u32], child: &[u32], out: &mut Vec<u32>) {
     simd::subtract_saturating(parent, child, out);
 }
 
+/// Sharded-histogram merge: add one shard's partial count tables into the
+/// accumulator, element-wise. Exact — shards partition the node's active
+/// rows, every table cell is a u32 sum of disjoint contributions, so any
+/// merge order reproduces the single-store fill bit-for-bit. The SIMD
+/// `add_u32` lane kernel is the mirror image of [`subtract_tables`]'s
+/// `subtract_u32`.
+pub fn merge_tables(acc: &mut [u32], other: &[u32]) {
+    debug_assert_eq!(acc.len(), other.len());
+    simd::add_in_place(acc, other);
+}
+
+/// Reduce per-shard partial tables tree-structured (pairwise by shard
+/// index: 0+1, 2+3, … then halves again) into `partials[0]`, returning it.
+/// The pairing order is fixed by shard index so the reduction shape is
+/// deterministic; bitwise the result is order-independent anyway (u32 adds
+/// commute exactly). Empty input yields an empty table.
+pub fn merge_shard_tables(mut partials: Vec<Vec<u32>>) -> Vec<u32> {
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+        let mut it = partials.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                merge_tables(&mut left, &right);
+            }
+            next.push(left);
+        }
+        partials = next;
+    }
+    partials.pop().unwrap_or_default()
+}
+
 /// Full histogram split search (boundaries → fill → scan).
 #[allow(clippy::too_many_arguments)]
 pub fn best_split_histogram(
@@ -375,9 +406,6 @@ pub(super) fn accumulate_bin_ids(
     n_classes: usize,
     counts: &mut [u32],
 ) {
-    let span = active_span(active);
-    let lo = span.start as u32;
-    let bins = data.bin_chunk(feature, span);
     // One loop for both orientations: bin = off + sign·id, with
     // (off, sign) = (l−1, −1) when negated and (0, +1) otherwise. This is
     // the single scalar reference the SIMD routing kernels pin against;
@@ -389,9 +417,22 @@ pub(super) fn accumulate_bin_ids(
     } else {
         (0, 1)
     };
-    for (&i, &lab) in active.iter().zip(labels) {
-        let bin = (off + sign * bins[(i - lo) as usize] as isize) as usize;
-        counts[bin * n_classes + lab as usize] += 1;
+    // Chunk views never cross shard members, so walk maximal same-shard
+    // runs of the active set (one run — the whole set — on unsharded
+    // stores). Counts are order-invariant u32 adds, so the run walk is
+    // bit-identical to the single-span loop.
+    let mut s = 0usize;
+    while s < active.len() {
+        let e = data.shard_run_end(active, s);
+        let run = &active[s..e];
+        let span = active_span(run);
+        let lo = span.start as u32;
+        let bins = data.bin_chunk(feature, span);
+        for (&i, &lab) in run.iter().zip(&labels[s..e]) {
+            let bin = (off + sign * bins[(i - lo) as usize] as isize) as usize;
+            counts[bin * n_classes + lab as usize] += 1;
+        }
+        s = e;
     }
 }
 
@@ -709,6 +750,34 @@ mod tests {
         corrupt[0] = 0;
         subtract_tables(&corrupt, &left_table, &mut derived);
         assert_eq!(derived[0], 0);
+    }
+
+    #[test]
+    fn merge_equals_single_fill() {
+        // Per-shard partial tables merged (in any tree shape) must equal
+        // the single fill over the concatenated rows bit-for-bit — the
+        // exactness that makes sharded training byte-identical.
+        let n_bins = 4;
+        let mut scratch = scratch_with_boundaries(&[0.0, 1.0, 2.0], n_bins);
+        let vals_a = [-1.0f32, 0.5, 1.5, 2.5];
+        let labs_a = [0u16, 1, 0, 1];
+        let vals_b = [0.5f32, 0.5, 3.5];
+        let labs_b = [1u16, 0, 0];
+        let all_vals: Vec<f32> = vals_a.iter().chain(&vals_b).copied().collect();
+        let all_labs: Vec<u16> = labs_a.iter().chain(&labs_b).copied().collect();
+        fill_histogram(&all_vals, &all_labs, n_bins, 2, Routing::BinarySearch, &mut scratch);
+        let whole = scratch.counts.clone();
+        fill_histogram(&vals_a, &labs_a, n_bins, 2, Routing::BinarySearch, &mut scratch);
+        let pa = scratch.counts.clone();
+        fill_histogram(&vals_b, &labs_b, n_bins, 2, Routing::BinarySearch, &mut scratch);
+        let pb = scratch.counts.clone();
+        let merged = merge_shard_tables(vec![pa.clone(), pb.clone()]);
+        assert_eq!(merged, whole);
+        // Odd shard counts and empty shards reduce to the same table.
+        let zero = vec![0u32; whole.len()];
+        let merged4 = merge_shard_tables(vec![pa, zero, pb]);
+        assert_eq!(merged4, whole);
+        assert!(merge_shard_tables(Vec::new()).is_empty());
     }
 
     #[test]

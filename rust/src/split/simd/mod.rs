@@ -85,6 +85,9 @@ pub struct Kernels {
     pub lower_bound: fn(&[f32], &[f32], usize, &mut [u32]),
     /// Saturating element-wise `out[i] = parent[i] - child[i]` over u32.
     pub subtract_u32: fn(&[u32], &[u32], &mut [u32]),
+    /// In-place element-wise `acc[i] += other[i]` over u32 (wrapping — count
+    /// tables never approach 2^32). The shard-merge twin of `subtract_u32`.
+    pub add_u32: fn(&mut [u32], &[u32]),
     /// Projection gather, 1 term: `out[k] = w * col[(ids[k] - lo)]`.
     pub gather1: fn(&[u32], u32, &[f32], f32, &mut [f32]),
     /// Projection gather, 2 terms:
@@ -100,6 +103,7 @@ pub static SCALAR: Kernels = Kernels {
     route8: scalar::route8,
     lower_bound: scalar::lower_bound,
     subtract_u32: scalar::subtract_u32,
+    add_u32: scalar::add_u32,
     gather1: scalar::gather1,
     gather2: scalar::gather2,
 };
@@ -264,6 +268,14 @@ pub fn subtract_saturating(parent: &[u32], child: &[u32], out: &mut [u32]) {
     (kernels().subtract_u32)(parent, child, out)
 }
 
+/// In-place u32 table addition (`acc[i] += other[i]`) with the active
+/// kernel — the reduction step of the sharded histogram merge.
+#[inline]
+pub fn add_in_place(acc: &mut [u32], other: &[u32]) {
+    debug_assert_eq!(acc.len(), other.len());
+    (kernels().add_u32)(acc, other)
+}
+
 /// 1-term projection gather with the active kernel.
 #[inline]
 pub fn gather_axis(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
@@ -424,6 +436,26 @@ mod tests {
                 let mut got = vec![u32::MAX; len];
                 (t.subtract_u32)(&parent, &child, &mut got);
                 assert_eq!(got, want, "subtract {} len={len}", t.isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_table_matches_scalar_add() {
+        let mut rng = Pcg64::new(0x51D5);
+        let tables = available();
+        for len in (0..=33).chain([1024]) {
+            let acc0: Vec<u32> = (0..len).map(|_| rng.index(1_000_000) as u32).collect();
+            let other: Vec<u32> = (0..len).map(|_| rng.index(1_000_000) as u32).collect();
+            let mut want = acc0.clone();
+            (SCALAR.add_u32)(&mut want, &other);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(*w, acc0[i] + other[i]);
+            }
+            for t in &tables {
+                let mut got = acc0.clone();
+                (t.add_u32)(&mut got, &other);
+                assert_eq!(got, want, "add {} len={len}", t.isa.name());
             }
         }
     }

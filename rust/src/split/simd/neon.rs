@@ -18,6 +18,7 @@ pub(super) static NEON: Kernels = Kernels {
     route8: route8_neon,
     lower_bound: scalar::lower_bound,
     subtract_u32: subtract_neon,
+    add_u32: add_neon,
     gather1: scalar::gather1,
     gather2: scalar::gather2,
 };
@@ -62,6 +63,25 @@ fn route8_neon(values: &[f32], coarse: &[f32], fine: &[f32], out: &mut [u32]) {
             let k = count_le(fine.as_ptr().add(base), 2, vv) as usize;
             *o = ((base + k).min(63)) as u32;
         }
+    }
+}
+
+/// `vaddq_u32` is exactly per-lane `wrapping_add`.
+fn add_neon(acc: &mut [u32], other: &[u32]) {
+    let n = acc.len();
+    debug_assert!(other.len() == n);
+    let mut i = 0usize;
+    // SAFETY: all loads/stores stay within the first `n - n % 4` elements.
+    unsafe {
+        while i + 4 <= n {
+            let a = vld1q_u32(acc.as_ptr().add(i));
+            let o = vld1q_u32(other.as_ptr().add(i));
+            vst1q_u32(acc.as_mut_ptr().add(i), vaddq_u32(a, o));
+            i += 4;
+        }
+    }
+    for k in i..n {
+        acc[k] = acc[k].wrapping_add(other[k]);
     }
 }
 

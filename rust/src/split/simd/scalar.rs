@@ -32,6 +32,12 @@ pub(super) fn subtract_u32(parent: &[u32], child: &[u32], out: &mut [u32]) {
     }
 }
 
+pub(super) fn add_u32(acc: &mut [u32], other: &[u32]) {
+    for (a, &o) in acc.iter_mut().zip(other) {
+        *a = a.wrapping_add(o);
+    }
+}
+
 pub(super) fn gather1(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
     for (o, &i) in out.iter_mut().zip(ids) {
         *o = w * col[(i - lo) as usize];

@@ -29,6 +29,7 @@ pub(super) static AVX2: Kernels = Kernels {
     route8: route8_avx2_entry,
     lower_bound: lower_bound_avx2_entry,
     subtract_u32: subtract_avx2_entry,
+    add_u32: add_avx2_entry,
     gather1: gather1_avx2_entry,
     gather2: gather2_avx2_entry,
 };
@@ -39,6 +40,7 @@ pub(super) static AVX512: Kernels = Kernels {
     route8: route8_avx512_entry,
     lower_bound: lower_bound_avx2_entry,
     subtract_u32: subtract_avx2_entry,
+    add_u32: add_avx2_entry,
     gather1: gather1_avx2_entry,
     gather2: gather2_avx2_entry,
 };
@@ -61,6 +63,11 @@ fn lower_bound_avx2_entry(values: &[f32], table: &[f32], n_real: usize, out: &mu
 fn subtract_avx2_entry(parent: &[u32], child: &[u32], out: &mut [u32]) {
     // SAFETY: as above.
     unsafe { subtract_avx2(parent, child, out) }
+}
+
+fn add_avx2_entry(acc: &mut [u32], other: &[u32]) {
+    // SAFETY: as above.
+    unsafe { add_avx2(acc, other) }
 }
 
 fn gather1_avx2_entry(ids: &[u32], lo: u32, col: &[f32], w: f32, out: &mut [f32]) {
@@ -218,6 +225,23 @@ unsafe fn subtract_avx2(parent: &[u32], child: &[u32], out: &mut [u32]) {
     }
     for k in i..n {
         out[k] = parent[k].saturating_sub(child[k]);
+    }
+}
+
+/// In-place u32 add: `add_epi32` is exactly per-lane `wrapping_add`.
+#[target_feature(enable = "avx2")]
+unsafe fn add_avx2(acc: &mut [u32], other: &[u32]) {
+    let n = acc.len();
+    debug_assert!(other.len() == n);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        let o = _mm256_loadu_si256(other.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi32(a, o));
+        i += 8;
+    }
+    for k in i..n {
+        acc[k] = acc[k].wrapping_add(other[k]);
     }
 }
 

@@ -1,0 +1,181 @@
+//! Sharded-training equivalence (in the style of `frontier_equivalence.rs`):
+//! training on a [`ShardedColumns`] store — per-shard partial histogram
+//! fills merged in fixed shard-index order — must produce **byte-identical**
+//! forests (same v2 serialization) to training on the concatenated
+//! single-store table, at any shard count × thread count × engine flag
+//! (`fused`, `hist_subtraction`, `simd`). Plus an engagement guard (the
+//! shard tier must actually run, not pass vacuously) and a file-backed leg
+//! through stamped `.sofc` members.
+
+use soforest::config::ForestConfig;
+use soforest::coordinator::{train_forest, train_forest_with_source};
+use soforest::data::shards::{from_parts, load_sharded};
+use soforest::data::synth::trunk::TrunkConfig;
+use soforest::data::Dataset;
+use soforest::forest::serialize::write_packed;
+use soforest::forest::tree::ProjectionSource;
+use soforest::forest::{Forest, PackedForest};
+use soforest::rng::Pcg64;
+
+fn trunk(n: usize, d: usize, seed: u64) -> Dataset {
+    TrunkConfig {
+        n_samples: n,
+        n_features: d,
+        ..Default::default()
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+/// Split a table into `k` row-range members (the layout `gen-data
+/// --shards k` produces) and compose them into a sharded store.
+fn shard(data: &Dataset, k: usize) -> Dataset {
+    let n = data.n_samples();
+    let parts: Vec<Dataset> = (0..k)
+        .map(|i| {
+            let ids: Vec<u32> = (i * n / k..(i + 1) * n / k).map(|r| r as u32).collect();
+            data.subset(&ids)
+        })
+        .collect();
+    from_parts(parts).expect("valid shard set")
+}
+
+/// Canonical v2 bytes of a forest (the serving format the acceptance bar
+/// is stated in).
+fn v2_bytes(forest: &Forest) -> Vec<u8> {
+    let packed = PackedForest::from_forest(forest).expect("packable forest");
+    let mut bytes = Vec::new();
+    write_packed(&packed, &mut bytes).expect("in-memory serialization");
+    bytes
+}
+
+/// A config whose histogram tier (and therefore the shard tier) is
+/// reachable on a few-thousand-row table: small bins, low sort crossover.
+fn shard_cfg(threads: usize) -> ForestConfig {
+    let mut cfg = ForestConfig {
+        n_trees: 2,
+        n_threads: threads,
+        n_bins: 32,
+        ..Default::default()
+    };
+    cfg.thresholds.sort_below = 64;
+    cfg
+}
+
+#[test]
+fn sharded_forests_match_single_store_bytes_across_shards_and_threads() {
+    let data = trunk(2400, 10, 0x5A);
+    let reference = v2_bytes(&train_forest(&data, &shard_cfg(1), 0xCAFE));
+    for shards in [1usize, 2, 4] {
+        let sharded = shard(&data, shards);
+        assert_eq!(sharded.n_shards(), if shards == 1 { 1 } else { shards });
+        for threads in [1usize, 2, 8] {
+            let bytes = v2_bytes(&train_forest(&sharded, &shard_cfg(threads), 0xCAFE));
+            assert_eq!(
+                reference, bytes,
+                "forest bytes differ for {shards} shards at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_forests_match_across_engine_flags() {
+    // The shard tier always fills through the fused/binned/SIMD fill
+    // paths; the single-store run flips every engine flag. Byte-identity
+    // across the full cross-product pins the shard pipeline to BOTH
+    // fresh-search engines' RNG and arithmetic contracts.
+    let data = trunk(2000, 8, 0x5B);
+    let train_with = |data: &Dataset, fused: bool, sub: bool, simd: bool| {
+        let mut cfg = shard_cfg(2);
+        cfg.fused = fused;
+        cfg.hist_subtraction = sub;
+        cfg.simd = simd;
+        v2_bytes(&train_forest(data, &cfg, 0xD0D))
+    };
+    let reference = train_with(&data, true, true, true);
+    let sharded = shard(&data, 3);
+    for fused in [true, false] {
+        for sub in [true, false] {
+            for simd in [true, false] {
+                assert_eq!(
+                    reference,
+                    train_with(&sharded, fused, sub, simd),
+                    "sharded forest bytes differ for fused={fused} \
+                     hist_subtraction={sub} simd={simd}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_tier_engages_on_this_workload() {
+    // Guard against the equivalence tests passing vacuously: the same
+    // workload must actually route nodes through the per-shard fill +
+    // merge pipeline (visible as shard_fills in the per-level stats).
+    let data = trunk(2400, 10, 0x5A);
+    let sharded = shard(&data, 4);
+    let mut cfg = shard_cfg(2);
+    cfg.n_trees = 1;
+    cfg.instrument = true;
+    let out = train_forest_with_source(&sharded, &cfg, 0xCAFE, ProjectionSource::SparseOblique);
+    let fills: u64 = out.stats.by_level.iter().map(|l| l.shard_fills).sum();
+    assert!(
+        fills > 0,
+        "no node ever took the per-shard fill + merge path"
+    );
+    // Partial fills outnumber shard-tier merges only if nodes really
+    // fan out over > 1 shard; require at least one 2+-shard node.
+    let tails: u64 = out.stats.by_level.iter().map(|l| l.tail_nodes).sum();
+    assert!(tails > 0, "tail completion never engaged on sharded data");
+}
+
+#[test]
+fn quantized_shards_match_single_store_bytes() {
+    // Binned members share one global layout (what `gen-data --shards`
+    // guarantees by quantizing before splitting); the direct bin-id fill
+    // path must survive the per-shard fan-out bit-for-bit.
+    let data = trunk(2000, 8, 0x5C).quantized(32);
+    let reference = v2_bytes(&train_forest(&data, &shard_cfg(2), 0xB1));
+    let sharded = shard(&data, 3);
+    assert_eq!(sharded.backend_name(), "sharded-binned");
+    let bytes = v2_bytes(&train_forest(&sharded, &shard_cfg(2), 0xB1));
+    assert_eq!(reference, bytes, "binned sharded forest bytes differ");
+}
+
+#[test]
+fn file_backed_shards_match_in_memory_training() {
+    // End-to-end through the on-disk format: write stamped members,
+    // reload through the manifest loader, train, compare bytes against
+    // the in-memory concatenated table.
+    use soforest::data::colfile::{append_shard_stamp, write_dataset, ShardStamp};
+    let data = trunk(1200, 6, 0x5D);
+    let dir = std::env::temp_dir().join(format!("soforest_shard_eq_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let n = data.n_samples();
+    let k = 3usize;
+    let mut paths = Vec::new();
+    let mut at = 0u64;
+    for i in 0..k {
+        let ids: Vec<u32> = (i * n / k..(i + 1) * n / k).map(|r| r as u32).collect();
+        let part = data.subset(&ids);
+        let path = dir.join(format!("t.shard{i}.sofc"));
+        write_dataset(&part, &path).unwrap();
+        append_shard_stamp(
+            &path,
+            ShardStamp {
+                row_offset: at,
+                total_rows: n as u64,
+            },
+        )
+        .unwrap();
+        at += part.n_samples() as u64;
+        paths.push(path);
+    }
+    let sharded = load_sharded(&paths).unwrap();
+    assert_eq!(sharded.n_shards(), k);
+    let reference = v2_bytes(&train_forest(&data, &shard_cfg(2), 0x11F));
+    let bytes = v2_bytes(&train_forest(&sharded, &shard_cfg(2), 0x11F));
+    assert_eq!(reference, bytes, "file-backed sharded forest bytes differ");
+    std::fs::remove_dir_all(&dir).ok();
+}
